@@ -1,0 +1,63 @@
+//! Quickstart: train a small classifier with WAGMA-SGD on 4 in-process
+//! workers through the full three-layer stack (Rust coordinator → AOT HLO
+//! artifact → Pallas kernels).
+//!
+//! Build artifacts first: `make artifacts`
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use wagma::optim::engine::EngineFactory;
+use wagma::optim::pjrt_engine::PjrtEngine;
+use wagma::optim::{run_training, Algorithm, TrainConfig};
+use wagma::runtime::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let model = "mlp_tiny";
+    let rt = ModelRuntime::load("artifacts", model)?;
+    println!(
+        "loaded {model}: {} params, batch {}, kind {}",
+        rt.meta.param_count, rt.meta.batch, rt.meta.kind
+    );
+    let init = rt.init_params()?;
+    let batch = rt.meta.batch;
+    drop(rt);
+
+    let factory: EngineFactory =
+        Arc::new(|rank| Box::new(PjrtEngine::new("artifacts", "mlp_tiny", rank, 42).unwrap()));
+
+    let cfg = TrainConfig {
+        algo: Algorithm::Wagma,
+        p: 4,
+        steps: 120,
+        lr: 0.05,
+        tau: 10,       // global model sync every 10 iterations
+        group_size: 2, // √P
+        eval_every: 20,
+        init,
+        ..Default::default()
+    };
+    println!(
+        "training with WAGMA-SGD: P={}, S={}, tau={} ...",
+        cfg.p,
+        cfg.resolved_group_size(),
+        cfg.tau
+    );
+    let r = run_training(&cfg, factory);
+
+    println!("\naccuracy over training:");
+    for (step, acc) in r.eval_curve() {
+        println!("  step {step:>4}: {:.1}%", acc * 100.0);
+    }
+    println!(
+        "\ndone in {:.1}s — {:.0} samples/s, mean staleness {:.2}, final divergence {:.1e}",
+        r.wall_seconds,
+        r.throughput(batch),
+        r.mean_staleness(),
+        r.model_divergence()
+    );
+    let final_acc = r.eval_curve().last().map(|(_, a)| *a).unwrap_or(0.0);
+    anyhow::ensure!(final_acc > 0.6, "training failed to reach 60% accuracy");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX models (L2) + Pallas kernels (L1) lowered
+once to HLO text artifacts executed by the Rust coordinator (L3).
+
+Nothing in this package runs at training time.
+"""

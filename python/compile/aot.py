@@ -1,0 +1,165 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the Rust side's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model config this writes:
+    artifacts/<name>.step.hlo.txt   step(params, mom, *data, lr)
+    artifacts/<name>.grad.hlo.txt   grad(params, *data)
+    artifacts/<name>.eval.hlo.txt   task metric / policy forward
+    artifacts/<name>.params.bin     initial flat f32 params (little-endian)
+plus artifacts/group_average.hlo.txt (the Pallas averaging kernel as a
+standalone artifact) and artifacts/manifest.json describing every artifact's
+ABI for the Rust loader.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+        [--models mlp_tiny,lm_small] [--force]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import group_average
+from .model import CONFIGS, ModelSpec, flat_init, make_eval_fn, make_grad_fn, make_step_fn
+
+#: Models built by default (lm_medium is opt-in: large artifact, slow init).
+DEFAULT_MODELS = ["mlp_tiny", "mlp_small", "lm_tiny", "lm_small", "policy_tiny"]
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text via StableHLO."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_meta(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_model(spec: ModelSpec, out_dir: str) -> dict:
+    """Lower one model's step/grad/eval and write its artifacts."""
+    flat, _ = flat_init(spec)
+    n = int(flat.shape[0])
+    pshape = jax.ShapeDtypeStruct((n,), jnp.float32)
+    data_shapes = spec.data_shapes()
+    lr_shape = jax.ShapeDtypeStruct((), jnp.float32)
+
+    step = jax.jit(make_step_fn(spec))
+    grad = jax.jit(make_grad_fn(spec))
+    ev = jax.jit(make_eval_fn(spec))
+
+    files = {}
+
+    step_lowered = step.lower(pshape, pshape, *data_shapes, lr_shape)
+    files["step"] = f"{spec.name}.step.hlo.txt"
+    write_text(out_dir, files["step"], to_hlo_text(step_lowered))
+
+    grad_lowered = grad.lower(pshape, *data_shapes)
+    files["grad"] = f"{spec.name}.grad.hlo.txt"
+    write_text(out_dir, files["grad"], to_hlo_text(grad_lowered))
+
+    if spec.kind == "policy":
+        eval_shapes = [data_shapes[0]]  # obs only
+    else:
+        eval_shapes = data_shapes
+    eval_lowered = ev.lower(pshape, *eval_shapes)
+    files["eval"] = f"{spec.name}.eval.hlo.txt"
+    write_text(out_dir, files["eval"], to_hlo_text(eval_lowered))
+
+    files["params"] = f"{spec.name}.params.bin"
+    with open(os.path.join(out_dir, files["params"]), "wb") as f:
+        f.write(np.asarray(flat, dtype="<f4").tobytes())
+
+    return {
+        "name": spec.name,
+        "kind": spec.kind,
+        "batch": spec.batch,
+        "dims": spec.dims,
+        "param_count": n,
+        "use_pallas_ffn": spec.use_pallas_ffn,
+        "data_args": [shape_meta(s) for s in data_shapes],
+        "eval_args": [shape_meta(s) for s in eval_shapes],
+        "step_outputs": 3,  # params', mom', loss
+        "grad_outputs": 2,  # grads, loss
+        "files": files,
+    }
+
+
+def lower_group_average(out_dir: str, s: int = 4, n: int = 65536) -> dict:
+    """The Pallas group-averaging kernel as a standalone artifact."""
+    fn = jax.jit(lambda stacked: (group_average(stacked),))
+    lowered = fn.lower(jax.ShapeDtypeStruct((s, n), jnp.float32))
+    fname = "group_average.hlo.txt"
+    write_text(out_dir, fname, to_hlo_text(lowered))
+    return {"name": "group_average", "kind": "kernel", "s": s, "n": n, "files": {"hlo": fname}}
+
+
+def write_text(out_dir: str, fname: str, text: str) -> None:
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  wrote {fname} ({len(text)} chars)", flush=True)
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources, for artifact staleness checks."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, names in sorted(os.walk(base)):
+        for fn in sorted(names):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--force", action="store_true", help="rebuild even if up to date")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [m for m in args.models.split(",") if m]
+    for m in names:
+        if m not in CONFIGS:
+            print(f"unknown model {m!r}; available: {list(CONFIGS)}", file=sys.stderr)
+            return 1
+
+    fp = source_fingerprint()
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fp and set(old.get("built", [])) >= set(names):
+            print(f"artifacts up to date (fingerprint {fp}); use --force to rebuild")
+            return 0
+
+    manifest = {"fingerprint": fp, "built": names, "models": {}, "kernels": {}}
+    for m in names:
+        print(f"lowering {m} ...", flush=True)
+        manifest["models"][m] = lower_model(CONFIGS[m], args.out_dir)
+    print("lowering group_average kernel ...", flush=True)
+    manifest["kernels"]["group_average"] = lower_group_average(args.out_dir)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest.json (fingerprint {fp})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

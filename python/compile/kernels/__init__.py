@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the WAGMA-SGD model stack.
+
+All kernels run under ``interpret=True`` so they lower to plain HLO that the
+CPU PJRT client (and therefore the Rust runtime) can execute. On a real TPU
+the same BlockSpecs tile for VMEM and target the MXU; DESIGN.md
+§Hardware-Adaptation documents the mapping and EXPERIMENTS.md §Perf the
+estimated utilization.
+"""
+
+from .matmul_gelu import matmul_bias_gelu, matmul_pallas
+from .sgd_momentum import sgd_momentum
+from .group_average import group_average
+
+__all__ = [
+    "matmul_bias_gelu",
+    "matmul_pallas",
+    "sgd_momentum",
+    "group_average",
+]

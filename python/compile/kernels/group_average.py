@@ -1,0 +1,35 @@
+"""Group model averaging as a Pallas kernel: mean over S stacked models.
+
+The Rust coordinator performs averaging natively on flat buffers during
+collectives; this kernel provides the same operation as an AOT artifact so
+deployments can offload the blend to the accelerator (and so the averaging
+math itself is covered by the L1 test suite).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+
+
+def _avg_kernel(x_ref, o_ref):
+    s = x_ref.shape[0]
+    o_ref[...] = jnp.sum(x_ref[...], axis=0) * (1.0 / s)
+
+
+def group_average(stacked, *, block: int = BLOCK):
+    """Mean over the leading axis: [S, N] -> [N], tiled over N."""
+    s, n = stacked.shape
+    padded = ((n + block - 1) // block) * block
+    if padded != n:
+        stacked = jnp.pad(stacked, [(0, 0), (0, padded - n)])
+    out = pl.pallas_call(
+        _avg_kernel,
+        grid=(padded // block,),
+        in_specs=[pl.BlockSpec((s, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), stacked.dtype),
+        interpret=True,
+    )(stacked)
+    return out[:n]

@@ -1,0 +1,128 @@
+"""Fused matmul(+bias+GELU) Pallas kernels — the transformer FFN hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's workloads
+run cuBLAS/cuDNN kernels on P100s. On TPU the equivalent hot-spot is an MXU
+matmul; we tile with BlockSpecs sized for 128x128 MXU passes, keeping one
+(bm, K) LHS stripe and one (K, bn) RHS stripe resident in VMEM per grid
+step. Under ``interpret=True`` the same kernels execute as plain HLO on CPU.
+
+``matmul_bias_gelu`` is differentiable via a custom VJP whose backward pass
+is built from the same Pallas matmul kernel, so the L1 kernels stay on the
+hot path for both forward and backward.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default block sizes: one MXU tile per grid step.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest power-of-two divisor of `dim` that is <= target."""
+    b = 1
+    while b * 2 <= target and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def _gelu(x):
+    # tanh-approximate GELU (matches jax.nn.gelu(approximate=True)).
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _matmul_bias_gelu_kernel(x_ref, w_ref, b_ref, o_ref):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :].astype(jnp.float32)
+    o_ref[...] = _gelu(acc).astype(o_ref.dtype)
+
+
+def matmul_pallas(x, w, *, bm: int = BLOCK_M, bn: int = BLOCK_N):
+    """Tiled Pallas matmul: [M, K] @ [K, N] -> [M, N].
+
+    The grid is (M/bm, N/bn); the full K dimension stays resident per tile
+    (our FFN K = d_model fits VMEM comfortably; see EXPERIMENTS.md §Perf for
+    the footprint budget).
+    """
+    (m, k), (k2, n) = x.shape, w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _matmul_bias_gelu_fwd_impl(x, w, b, bm, bn):
+    (m, k), (_, n) = x.shape, w.shape
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return pl.pallas_call(
+        _matmul_bias_gelu_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def _gelu_grad(z):
+    """d gelu(z) / dz for the tanh approximation."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+    u = c * (z + 0.044715 * z * z * z)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3.0 * 0.044715 * z * z)
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def matmul_bias_gelu(x, w, b, bm: int = BLOCK_M, bn: int = BLOCK_N):
+    """Fused `gelu(x @ w + b)` with Pallas forward AND backward.
+
+    Differentiable: the VJP recomputes the pre-activation with the Pallas
+    matmul (rematerialization — trades one extra MXU pass for not storing
+    the [M, N] pre-activation, exactly the standard TPU FFN recipe).
+    """
+    return _matmul_bias_gelu_fwd_impl(x, w, b, bm, bn)
+
+
+def _mbg_fwd(x, w, b, bm, bn):
+    return _matmul_bias_gelu_fwd_impl(x, w, b, bm, bn), (x, w, b)
+
+
+def _mbg_bwd(bm, bn, res, g):
+    x, w, b = res
+    # Recompute pre-activation z = x @ w + b with the Pallas matmul.
+    z = matmul_pallas(x, w, bm=bm, bn=bn) + b[None, :]
+    dz = (g * _gelu_grad(z)).astype(x.dtype)
+    dx = matmul_pallas(dz, w.T, bm=bm, bn=bn)
+    dw = matmul_pallas(x.T, dz, bm=bm, bn=bn)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+matmul_bias_gelu.defvjp(_mbg_fwd, _mbg_bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest sweeps shapes and dtypes with
+hypothesis and asserts `assert_allclose(kernel(...), ref(...))`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+#: Momentum coefficient baked into the fused optimizer kernel (the paper's
+#: experiments use SGD with momentum 0.9 throughout).
+MOMENTUM = 0.9
+
+
+def gelu_ref(x):
+    """tanh-approximate GELU, matching `jax.nn.gelu(approximate=True)`."""
+    return jax.nn.gelu(x, approximate=True)
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def matmul_bias_gelu_ref(x, w, b):
+    """Fused FFN input projection: gelu(x @ w + b)."""
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    return gelu_ref(z).astype(x.dtype)
+
+
+def sgd_momentum_ref(params, grads, mom, lr):
+    """Heavy-ball SGD: m' = MOMENTUM * m + g; p' = p - lr * m'."""
+    mom_new = MOMENTUM * mom + grads
+    return params - lr * mom_new, mom_new
+
+
+def group_average_ref(stacked):
+    """Mean over the leading (group) axis: [S, N] -> [N]."""
+    return jnp.mean(stacked, axis=0)

@@ -1,0 +1,61 @@
+"""Fused heavy-ball SGD update as a Pallas kernel.
+
+This kernel sits on the optimizer step of *every* model artifact: the whole
+flat parameter vector is updated in VMEM-sized blocks, fusing the momentum
+accumulation and the parameter update into one pass (two reads, two writes
+per element instead of four reads / two writes for the unfused pair).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MOMENTUM
+
+#: Elements per grid step. 64k f32 = 256 KiB per operand; with four
+#: operands resident this stays well inside a TPU core's ~16 MiB VMEM.
+BLOCK = 65536
+
+
+def _sgd_kernel(p_ref, g_ref, m_ref, lr_ref, po_ref, mo_ref):
+    lr = lr_ref[0]
+    m_new = MOMENTUM * m_ref[...] + g_ref[...]
+    mo_ref[...] = m_new
+    po_ref[...] = p_ref[...] - lr * m_new
+
+
+def sgd_momentum(params, grads, mom, lr, *, block: int = BLOCK):
+    """`m' = MOMENTUM*m + g; p' = p - lr*m'` over flat f32 vectors.
+
+    `lr` may be a python float or a scalar array. Vectors of arbitrary
+    length are zero-padded up to the block size and sliced back (the pad
+    lanes compute garbage that is discarded).
+    """
+    n = params.shape[0]
+    lr_arr = jnp.asarray(lr, dtype=params.dtype).reshape((1,))
+    padded = ((n + block - 1) // block) * block
+    if padded != n:
+        pad = [(0, padded - n)]
+        params = jnp.pad(params, pad)
+        grads = jnp.pad(grads, pad)
+        mom = jnp.pad(mom, pad)
+    p_new, m_new = pl.pallas_call(
+        _sgd_kernel,
+        grid=(padded // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), params.dtype),
+            jax.ShapeDtypeStruct((padded,), params.dtype),
+        ],
+        interpret=True,
+    )(params, grads, mom, lr_arr)
+    return p_new[:n], m_new[:n]

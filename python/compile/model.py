@@ -1,0 +1,381 @@
+"""Layer-2 JAX model zoo with a flat-parameter ABI.
+
+Every model exposes two jittable functions that the Rust coordinator calls
+through PJRT:
+
+  step(params_flat, mom_flat, *data, lr) -> (params_flat', mom_flat', loss)
+  grad(params_flat, *data)               -> (grads_flat, loss)
+
+Parameters travel as a single flat f32 vector (unflattened inside the traced
+function), so the coordinator's model-averaging collectives are plain
+elementwise arithmetic on contiguous buffers — exactly where WAGMA-SGD does
+its averaging. `step` performs local SGD-with-momentum using the fused
+Pallas kernel (L1); `grad` supports the gradient-averaging baselines
+(Allreduce-SGD, eager-SGD).
+
+Models:
+  * decoder-only transformer LM  (machine-translation/V-C analogue)
+  * MLP classifier               (image-classification/V-B analogue)
+  * PPO policy+value net         (reinforcement-learning/V-D analogue)
+"""
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import matmul_bias_gelu, sgd_momentum
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one AOT model artifact."""
+
+    name: str
+    kind: str  # 'lm' | 'classifier' | 'policy'
+    batch: int
+    dims: Dict[str, int]
+    use_pallas_ffn: bool = True
+    seed: int = 0
+
+    def data_shapes(self) -> List[jax.ShapeDtypeStruct]:
+        """Shapes/dtypes of the per-step data arguments, in ABI order."""
+        d = self.dims
+        b = self.batch
+        if self.kind == "lm":
+            return [
+                jax.ShapeDtypeStruct((b, d["seq_len"]), jnp.int32),  # tokens
+                jax.ShapeDtypeStruct((b, d["seq_len"]), jnp.int32),  # labels
+            ]
+        if self.kind == "classifier":
+            return [
+                jax.ShapeDtypeStruct((b, d["input_dim"]), jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+            ]
+        if self.kind == "policy":
+            return [
+                jax.ShapeDtypeStruct((b, d["obs_dim"]), jnp.float32),  # obs
+                jax.ShapeDtypeStruct((b,), jnp.int32),  # actions
+                jax.ShapeDtypeStruct((b,), jnp.float32),  # advantages
+                jax.ShapeDtypeStruct((b,), jnp.float32),  # returns
+                jax.ShapeDtypeStruct((b,), jnp.float32),  # old log-probs
+            ]
+        raise ValueError(f"unknown kind {self.kind}")
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out, scale=1.0):
+    std = scale / jnp.sqrt(fan_in)
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * std
+
+
+def init_params(spec: ModelSpec) -> Any:
+    key = jax.random.PRNGKey(spec.seed)
+    d = spec.dims
+    if spec.kind == "lm":
+        dm, v, L, n_layers = d["d_model"], d["vocab"], d["seq_len"], d["layers"]
+        keys = jax.random.split(key, 2 + 8 * n_layers)
+        params = {
+            "emb": jax.random.normal(keys[0], (v, dm), jnp.float32) * 0.02,
+            "pos": jax.random.normal(keys[1], (L, dm), jnp.float32) * 0.02,
+            "layers": [],
+            "ln_f": {"g": jnp.ones((dm,)), "b": jnp.zeros((dm,))},
+        }
+        ff = d.get("d_ff", 4 * dm)
+        for i in range(n_layers):
+            k = keys[2 + 8 * i : 2 + 8 * (i + 1)]
+            params["layers"].append(
+                {
+                    "ln1": {"g": jnp.ones((dm,)), "b": jnp.zeros((dm,))},
+                    "wqkv": _dense_init(k[0], dm, 3 * dm),
+                    "bqkv": jnp.zeros((3 * dm,)),
+                    "wo": _dense_init(k[1], dm, dm, scale=1.0 / jnp.sqrt(2.0 * n_layers)),
+                    "bo": jnp.zeros((dm,)),
+                    "ln2": {"g": jnp.ones((dm,)), "b": jnp.zeros((dm,))},
+                    "w1": _dense_init(k[2], dm, ff),
+                    "b1": jnp.zeros((ff,)),
+                    "w2": _dense_init(k[3], ff, dm, scale=1.0 / jnp.sqrt(2.0 * n_layers)),
+                    "b2": jnp.zeros((dm,)),
+                }
+            )
+        return params
+    if spec.kind == "classifier":
+        di, h, c = d["input_dim"], d["hidden"], d["classes"]
+        k = jax.random.split(key, 3)
+        return {
+            "w1": _dense_init(k[0], di, h),
+            "b1": jnp.zeros((h,)),
+            "w2": _dense_init(k[1], h, h),
+            "b2": jnp.zeros((h,)),
+            "w3": _dense_init(k[2], h, c),
+            "b3": jnp.zeros((c,)),
+        }
+    if spec.kind == "policy":
+        o, h, a = d["obs_dim"], d["hidden"], d["actions"]
+        k = jax.random.split(key, 4)
+        return {
+            "w1": _dense_init(k[0], o, h),
+            "b1": jnp.zeros((h,)),
+            "w2": _dense_init(k[1], h, h),
+            "b2": jnp.zeros((h,)),
+            "w_pi": _dense_init(k[2], h, a, scale=0.01),
+            "b_pi": jnp.zeros((a,)),
+            "w_v": _dense_init(k[3], h, 1, scale=1.0),
+            "b_v": jnp.zeros((1,)),
+        }
+    raise ValueError(spec.kind)
+
+
+# --------------------------------------------------------------------------
+# Forward passes / losses
+# --------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _ffn(x2d, w1, b1, w2, b2, use_pallas: bool):
+    if use_pallas:
+        h = matmul_bias_gelu(x2d, w1, b1)
+    else:
+        h = jax.nn.gelu(x2d @ w1 + b1[None, :], approximate=True)
+    return h @ w2 + b2[None, :]
+
+
+def _attention(h, layer, n_heads):
+    B, L, dm = h.shape
+    hd = dm // n_heads
+    qkv = h @ layer["wqkv"] + layer["bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(x):
+        return x.reshape(B, L, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd).astype(h.dtype)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, L, dm)
+    return out @ layer["wo"] + layer["bo"]
+
+
+def lm_loss(spec: ModelSpec, params, tokens, labels):
+    d = spec.dims
+    B, L = tokens.shape
+    h = params["emb"][tokens] + params["pos"][None, :L]
+    for layer in params["layers"]:
+        h = h + _attention(_layer_norm(h, layer["ln1"]["g"], layer["ln1"]["b"]), layer, d["heads"])
+        x2d = _layer_norm(h, layer["ln2"]["g"], layer["ln2"]["b"]).reshape(B * L, -1)
+        h = h + _ffn(
+            x2d, layer["w1"], layer["b1"], layer["w2"], layer["b2"], spec.use_pallas_ffn
+        ).reshape(B, L, -1)
+    h = _layer_norm(h, params["ln_f"]["g"], params["ln_f"]["b"])
+    logits = h @ params["emb"].T  # weight tying
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def classifier_loss(spec: ModelSpec, params, x, y):
+    if spec.use_pallas_ffn:
+        h = matmul_bias_gelu(x, params["w1"], params["b1"])
+        h = matmul_bias_gelu(h, params["w2"], params["b2"])
+    else:
+        h = jax.nn.gelu(x @ params["w1"] + params["b1"], approximate=True)
+        h = jax.nn.gelu(h @ params["w2"] + params["b2"], approximate=True)
+    logits = h @ params["w3"] + params["b3"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def classifier_logits(spec: ModelSpec, params, x):
+    if spec.use_pallas_ffn:
+        h = matmul_bias_gelu(x, params["w1"], params["b1"])
+        h = matmul_bias_gelu(h, params["w2"], params["b2"])
+    else:
+        h = jax.nn.gelu(x @ params["w1"] + params["b1"], approximate=True)
+        h = jax.nn.gelu(h @ params["w2"] + params["b2"], approximate=True)
+    return h @ params["w3"] + params["b3"]
+
+
+PPO_CLIP = 0.2
+PPO_VALUE_COEF = 0.5
+PPO_ENTROPY_COEF = 0.01
+
+
+def policy_forward(spec: ModelSpec, params, obs):
+    if spec.use_pallas_ffn:
+        h = matmul_bias_gelu(obs, params["w1"], params["b1"])
+        h = matmul_bias_gelu(h, params["w2"], params["b2"])
+    else:
+        h = jax.nn.gelu(obs @ params["w1"] + params["b1"], approximate=True)
+        h = jax.nn.gelu(h @ params["w2"] + params["b2"], approximate=True)
+    logits = h @ params["w_pi"] + params["b_pi"]
+    value = (h @ params["w_v"] + params["b_v"])[:, 0]
+    return logits, value
+
+
+def ppo_loss(spec: ModelSpec, params, obs, actions, adv, ret, old_logp):
+    logits, value = policy_forward(spec, params, obs)
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    logp = jnp.take_along_axis(logp_all, actions[:, None], axis=-1)[:, 0]
+    ratio = jnp.exp(logp - old_logp)
+    surr = jnp.minimum(ratio * adv, jnp.clip(ratio, 1 - PPO_CLIP, 1 + PPO_CLIP) * adv)
+    pi_loss = -jnp.mean(surr)
+    v_loss = jnp.mean((value - ret) ** 2)
+    entropy = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+    return pi_loss + PPO_VALUE_COEF * v_loss - PPO_ENTROPY_COEF * entropy
+
+
+def loss_fn(spec: ModelSpec, params, *data):
+    if spec.kind == "lm":
+        return lm_loss(spec, params, *data)
+    if spec.kind == "classifier":
+        return classifier_loss(spec, params, *data)
+    if spec.kind == "policy":
+        return ppo_loss(spec, params, *data)
+    raise ValueError(spec.kind)
+
+
+# --------------------------------------------------------------------------
+# Flat ABI
+# --------------------------------------------------------------------------
+
+
+def flat_init(spec: ModelSpec) -> Tuple[jnp.ndarray, Any]:
+    """Initial flat parameter vector + the unflatten function."""
+    params = init_params(spec)
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+def make_grad_fn(spec: ModelSpec):
+    """grad(params_flat, *data) -> (grads_flat, loss)."""
+    _, unravel = flat_init(spec)
+
+    def grad_fn(params_flat, *data):
+        def scalar_loss(pf):
+            return loss_fn(spec, unravel(pf), *data)
+
+        loss, g = jax.value_and_grad(scalar_loss)(params_flat)
+        return g, loss
+
+    return grad_fn
+
+
+def make_step_fn(spec: ModelSpec):
+    """step(params_flat, mom_flat, *data, lr) -> (params', mom', loss).
+
+    The local update rule U of Algorithm 2: heavy-ball SGD executed by the
+    fused Pallas kernel over the whole flat vector.
+    """
+    grad_fn = make_grad_fn(spec)
+
+    def step_fn(params_flat, mom_flat, *data_and_lr):
+        *data, lr = data_and_lr
+        g, loss = grad_fn(params_flat, *data)
+        p_new, m_new = sgd_momentum(params_flat, g, mom_flat, lr)
+        return p_new, m_new, loss
+
+    return step_fn
+
+
+def make_eval_fn(spec: ModelSpec):
+    """eval(params_flat, *data) -> task metric (accuracy / loss / logits)."""
+    _, unravel = flat_init(spec)
+
+    if spec.kind == "classifier":
+
+        def eval_fn(params_flat, x, y):
+            logits = classifier_logits(spec, unravel(params_flat), x)
+            acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+            return acc
+
+        return eval_fn
+
+    if spec.kind == "lm":
+
+        def eval_fn(params_flat, x, y):
+            return lm_loss(spec, unravel(params_flat), x, y)
+
+        return eval_fn
+
+    if spec.kind == "policy":
+
+        def eval_fn(params_flat, obs):
+            logits, value = policy_forward(spec, unravel(params_flat), obs)
+            # Per-sample action log-probs + values, used by the Rust rollout
+            # machinery for sampling and GAE.
+            return jax.nn.log_softmax(logits, axis=-1), value
+
+        return eval_fn
+
+    raise ValueError(spec.kind)
+
+
+# --------------------------------------------------------------------------
+# Model registry (one entry per AOT artifact)
+# --------------------------------------------------------------------------
+
+CONFIGS: Dict[str, ModelSpec] = {
+    # Quickstart / unit-test scale; Pallas FFN end to end.
+    "mlp_tiny": ModelSpec(
+        name="mlp_tiny",
+        kind="classifier",
+        batch=32,
+        dims={"input_dim": 64, "hidden": 128, "classes": 10},
+        use_pallas_ffn=True,
+    ),
+    # Fig. 5 analogue (image classification, real convergence runs).
+    "mlp_small": ModelSpec(
+        name="mlp_small",
+        kind="classifier",
+        batch=64,
+        dims={"input_dim": 256, "hidden": 512, "classes": 16},
+        use_pallas_ffn=True,
+    ),
+    # LM test scale, Pallas FFN in the transformer.
+    "lm_tiny": ModelSpec(
+        name="lm_tiny",
+        kind="lm",
+        batch=8,
+        dims={"vocab": 256, "d_model": 64, "seq_len": 32, "layers": 2, "heads": 2},
+        use_pallas_ffn=True,
+    ),
+    # Fig. 7/8 analogue + end-to-end training driver (~3.2M params).
+    "lm_small": ModelSpec(
+        name="lm_small",
+        kind="lm",
+        batch=16,
+        dims={"vocab": 1024, "d_model": 256, "seq_len": 64, "layers": 4, "heads": 4},
+        use_pallas_ffn=False,  # jnp FFN: interpret-mode Pallas is CPU-slow at this size
+    ),
+    # Larger end-to-end driver config (~27M params); build on demand.
+    "lm_medium": ModelSpec(
+        name="lm_medium",
+        kind="lm",
+        batch=8,
+        dims={"vocab": 4096, "d_model": 512, "seq_len": 128, "layers": 8, "heads": 8},
+        use_pallas_ffn=False,
+    ),
+    # Fig. 10/11 analogue: PPO policy for gridworld navigation.
+    "policy_tiny": ModelSpec(
+        name="policy_tiny",
+        kind="policy",
+        batch=256,
+        dims={"obs_dim": 32, "hidden": 128, "actions": 4},
+        use_pallas_ffn=True,
+    ),
+}

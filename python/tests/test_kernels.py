@@ -1,0 +1,175 @@
+"""L1 correctness: every Pallas kernel vs. its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against ref.py is
+the core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import group_average, matmul_bias_gelu, matmul_pallas, sgd_momentum
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Hypothesis strategies: dims as small powers of two times odd factors so we
+# exercise both the divisible fast path and the padded path.
+dims = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 32, 64, 96, 128, 160, 256])
+small_dims = st.sampled_from([1, 2, 3, 5, 8, 13, 16, 32])
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------- matmul --
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=small_dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_pallas_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    got = matmul_pallas(x, w)
+    want = ref.matmul_ref(x, w)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=small_dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_bias_gelu_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    b = rand(seed + 2, (n,))
+    got = matmul_bias_gelu(x, w, b)
+    want = ref.matmul_bias_gelu_ref(x, w, b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_bias_gelu_block_boundaries():
+    # Shapes exactly at and straddling the default 128 blocks.
+    for m, n in [(128, 128), (256, 128), (129, 127), (1, 1), (257, 384)]:
+        x = rand(7, (m, 32))
+        w = rand(8, (32, n))
+        b = rand(9, (n,))
+        assert_allclose(
+            np.asarray(matmul_bias_gelu(x, w, b)),
+            np.asarray(ref.matmul_bias_gelu_ref(x, w, b)),
+            rtol=2e-5,
+            atol=2e-5,
+        )
+
+
+def test_matmul_bias_gelu_gradients_match_jnp():
+    """The custom VJP (Pallas backward) must agree with jnp autodiff."""
+    x = rand(1, (16, 8))
+    w = rand(2, (8, 24))
+    b = rand(3, (24,))
+
+    def f_pallas(x, w, b):
+        return jnp.sum(jnp.sin(matmul_bias_gelu(x, w, b)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.matmul_bias_gelu_ref(x, w, b)))
+
+    g_pallas = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for gp, gr in zip(g_pallas, g_ref):
+        assert_allclose(np.asarray(gp), np.asarray(gr), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- sgd_momentum --
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 7, 128, 1000, 65536, 65537, 200_000]),
+    lr=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_momentum_matches_ref(n, lr, seed):
+    p = rand(seed, (n,))
+    g = rand(seed + 1, (n,))
+    m = rand(seed + 2, (n,), scale=0.1)
+    p2, m2 = sgd_momentum(p, g, m, lr)
+    p2r, m2r = ref.sgd_momentum_ref(p, g, m, lr)
+    assert_allclose(np.asarray(p2), np.asarray(p2r), rtol=1e-6, atol=1e-6)
+    assert_allclose(np.asarray(m2), np.asarray(m2r), rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_momentum_zero_grad_decays_momentum():
+    p = jnp.ones((100,))
+    m = jnp.ones((100,))
+    p2, m2 = sgd_momentum(p, jnp.zeros((100,)), m, 0.1)
+    assert_allclose(np.asarray(m2), 0.9 * np.ones(100), rtol=1e-6)
+    assert_allclose(np.asarray(p2), 1.0 - 0.1 * 0.9 * np.ones(100), rtol=1e-6)
+
+
+def test_sgd_momentum_jit_and_scalar_array_lr():
+    p, g, m = rand(1, (500,)), rand(2, (500,)), rand(3, (500,))
+    f = jax.jit(lambda p, g, m, lr: sgd_momentum(p, g, m, lr))
+    p2, m2 = f(p, g, m, jnp.float32(0.05))
+    p2r, m2r = ref.sgd_momentum_ref(p, g, m, 0.05)
+    assert_allclose(np.asarray(p2), np.asarray(p2r), rtol=1e-6, atol=1e-6)
+
+
+# -------------------------------------------------------- group_average --
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([1, 2, 4, 8, 16]),
+    n=st.sampled_from([1, 5, 1024, 65536, 70000]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_group_average_matches_ref(s, n, seed):
+    stacked = rand(seed, (s, n))
+    got = group_average(stacked)
+    want = ref.group_average_ref(stacked)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_group_average_of_identical_models_is_identity():
+    w = rand(11, (1, 1000))
+    stacked = jnp.tile(w, (4, 1))
+    assert_allclose(np.asarray(group_average(stacked)), np.asarray(w[0]), rtol=1e-6)
+
+
+# ------------------------------------------------------------- lowering --
+
+
+def test_kernels_lower_to_hlo_text():
+    """Every kernel must survive the StableHLO -> XLA-computation -> HLO
+    text conversion used by the AOT pipeline."""
+    from jax._src.lib import xla_client as xc
+
+    fns = {
+        "mbg": (
+            lambda x, w, b: (matmul_bias_gelu(x, w, b),),
+            [
+                jax.ShapeDtypeStruct((32, 16), jnp.float32),
+                jax.ShapeDtypeStruct((16, 64), jnp.float32),
+                jax.ShapeDtypeStruct((64,), jnp.float32),
+            ],
+        ),
+        "sgd": (
+            lambda p, g, m: sgd_momentum(p, g, m, 0.1),
+            [jax.ShapeDtypeStruct((1000,), jnp.float32)] * 3,
+        ),
+        "avg": (
+            lambda s: (group_average(s),),
+            [jax.ShapeDtypeStruct((4, 1000), jnp.float32)],
+        ),
+    }
+    for name, (fn, shapes) in fns.items():
+        lowered = jax.jit(fn).lower(*shapes)
+        mod = lowered.compiler_ir("stablehlo")
+        comp = xc._xla.mlir.mlir_module_to_xla_computation(
+            str(mod), use_tuple_args=False, return_tuple=True
+        )
+        text = comp.as_hlo_text()
+        assert "ENTRY" in text, f"{name}: no ENTRY in HLO text"

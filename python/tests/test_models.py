@@ -1,0 +1,153 @@
+"""L2 model checks: shapes, ABI contracts, and trainability of every model
+in the registry."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CONFIGS,
+    ModelSpec,
+    flat_init,
+    init_params,
+    loss_fn,
+    make_eval_fn,
+    make_grad_fn,
+    make_step_fn,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = ["mlp_tiny", "lm_tiny", "policy_tiny"]
+
+
+def fake_data(spec: ModelSpec, seed=0):
+    out = []
+    key = jax.random.PRNGKey(seed)
+    for s in spec.data_shapes():
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            hi = spec.dims.get("vocab", spec.dims.get("classes", spec.dims.get("actions", 4)))
+            out.append(jax.random.randint(sub, s.shape, 0, hi, jnp.int32))
+        else:
+            out.append(jax.random.normal(sub, s.shape, jnp.float32))
+    # PPO: old_logp must be a plausible log-prob.
+    if spec.kind == "policy":
+        out[4] = -jnp.abs(out[4]) - 0.1
+    return out
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_flat_roundtrip(name):
+    spec = CONFIGS[name]
+    flat, unravel = flat_init(spec)
+    params = unravel(flat)
+    flat2, _ = jax.flatten_util.ravel_pytree(params)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(flat2))
+    assert flat.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_loss_finite_and_scalar(name):
+    spec = CONFIGS[name]
+    params = init_params(spec)
+    loss = loss_fn(spec, params, *fake_data(spec))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_grad_abi(name):
+    spec = CONFIGS[name]
+    flat, _ = flat_init(spec)
+    g, loss = jax.jit(make_grad_fn(spec))(flat, *fake_data(spec))
+    assert g.shape == flat.shape
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(g).max()) > 0, "gradient must be nonzero"
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_step_decreases_loss(name):
+    """A few local SGD steps on a FIXED batch must reduce the loss — the
+    core trainability signal for every artifact."""
+    spec = CONFIGS[name]
+    flat, _ = flat_init(spec)
+    mom = jnp.zeros_like(flat)
+    data = fake_data(spec)
+    step = jax.jit(make_step_fn(spec))
+    losses = []
+    for _ in range(8):
+        flat, mom, loss = step(flat, mom, *data, 0.05)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"{name}: loss did not decrease: {losses}"
+    assert all(np.isfinite(losses))
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_step_deterministic(name):
+    spec = CONFIGS[name]
+    flat, _ = flat_init(spec)
+    mom = jnp.zeros_like(flat)
+    data = fake_data(spec)
+    step = jax.jit(make_step_fn(spec))
+    a = step(flat, mom, *data, 0.01)
+    b = step(flat, mom, *data, 0.01)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert float(a[2]) == float(b[2])
+
+
+def test_lm_initial_loss_near_uniform():
+    """Initial LM loss should be close to ln(vocab): a sanity anchor that
+    the logits/xent wiring is right."""
+    spec = CONFIGS["lm_tiny"]
+    params = init_params(spec)
+    data = fake_data(spec)
+    loss = float(loss_fn(spec, params, *data))
+    expected = np.log(spec.dims["vocab"])
+    assert abs(loss - expected) < 1.0, f"loss {loss} vs ln(V) {expected}"
+
+
+def test_classifier_eval_accuracy_bounds():
+    spec = CONFIGS["mlp_tiny"]
+    flat, _ = flat_init(spec)
+    ev = jax.jit(make_eval_fn(spec))
+    x, y = fake_data(spec)
+    acc = float(ev(flat, x, y))
+    assert 0.0 <= acc <= 1.0
+
+
+def test_policy_eval_returns_logp_and_value():
+    spec = CONFIGS["policy_tiny"]
+    flat, _ = flat_init(spec)
+    ev = jax.jit(make_eval_fn(spec))
+    obs = fake_data(spec)[0]
+    logp, value = ev(flat, obs)
+    assert logp.shape == (spec.batch, spec.dims["actions"])
+    assert value.shape == (spec.batch,)
+    # log-probs normalize.
+    np.testing.assert_allclose(np.exp(np.asarray(logp)).sum(-1), 1.0, rtol=1e-5)
+
+
+def test_pallas_and_jnp_ffn_agree():
+    """The same LM spec with/without the Pallas FFN must produce nearly
+    identical losses — proving the kernel is a drop-in for the jnp path."""
+    import dataclasses
+
+    spec_p = CONFIGS["lm_tiny"]
+    spec_j = dataclasses.replace(spec_p, use_pallas_ffn=False)
+    params = init_params(spec_p)
+    data = fake_data(spec_p)
+    lp = float(loss_fn(spec_p, params, *data))
+    lj = float(loss_fn(spec_j, params, *data))
+    assert abs(lp - lj) < 1e-3, f"pallas {lp} vs jnp {lj}"
+
+
+def test_all_registry_entries_have_valid_shapes():
+    for name, spec in CONFIGS.items():
+        shapes = spec.data_shapes()
+        assert len(shapes) >= 2
+        assert spec.batch >= 1
+        if spec.kind == "lm":
+            assert spec.dims["d_model"] % spec.dims["heads"] == 0

@@ -1,0 +1,44 @@
+//! Ablation bench (paper §V-B ❷–❹): group size sweep and dynamic-vs-fixed
+//! grouping, on the Fig. 4 workload at P=64.
+
+use wagma::bench::Bencher;
+use wagma::config::preset;
+use wagma::simulator::simulate;
+
+fn main() {
+    let p = preset("fig4").unwrap();
+    let mut b = Bencher::quick();
+    println!("Ablation — WAGMA group size & grouping mode (P=64, Fig. 4 workload)");
+    println!("{:<28} {:>14} {:>8}", "variant", "samples/s", "eff%");
+    for &s in &[2usize, 4, 8, 16, 32, 64] {
+        let mut cfg = p.sim_config(wagma::optim::Algorithm::Wagma, 64, 42);
+        cfg.group_size = s;
+        let mut result = None;
+        b.bench(&format!("ablation/S{s}"), |_| {
+            result = Some(simulate(&cfg));
+        });
+        let r = result.unwrap();
+        println!(
+            "{:<28} {:>14.0} {:>7.1}%",
+            format!("S={s}{}", if s == 8 { " (=sqrtP, paper)" } else { "" }),
+            r.throughput(p.batch),
+            100.0 * r.throughput(p.batch) / r.ideal_throughput(p.batch)
+        );
+    }
+    for dynamic in [true, false] {
+        let mut cfg = p.sim_config(wagma::optim::Algorithm::Wagma, 64, 42);
+        cfg.dynamic_groups = dynamic;
+        let mut result = None;
+        b.bench(&format!("ablation/dynamic_{dynamic}"), |_| {
+            result = Some(simulate(&cfg));
+        });
+        let r = result.unwrap();
+        println!(
+            "{:<28} {:>14.0} {:>7.1}%",
+            format!("{}_groups", if dynamic { "dynamic" } else { "fixed" }),
+            r.throughput(p.batch),
+            100.0 * r.throughput(p.batch) / r.ideal_throughput(p.batch)
+        );
+    }
+    b.finish("ablation_group_size");
+}

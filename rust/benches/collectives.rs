@@ -1,0 +1,112 @@
+//! Collective latency microbenchmarks (the L3 hot path):
+//! synchronous allreduce (recursive doubling vs ring), the wait-avoiding
+//! group allreduce end to end, and the averaging blend (native Rust vs the
+//! Pallas AOT kernel when artifacts are present).
+
+use std::thread;
+
+use wagma::bench::Bencher;
+use wagma::collectives::allreduce::{allreduce_sum, allreduce_sum_ring};
+use wagma::collectives::engine::{ActivationMode, CollectiveEngine, EngineConfig};
+use wagma::collectives::AllreduceAlgo;
+use wagma::comm::world;
+
+fn bench_sync_allreduce(b: &mut Bencher, p: usize, n: usize, ring: bool) {
+    let name = format!(
+        "allreduce/{}/P{p}/{}k",
+        if ring { "ring" } else { "rdouble" },
+        n / 1000
+    );
+    b.bench(&name, |_| {
+        let eps = world(p);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || {
+                    let mut buf = vec![1.0f32; n];
+                    if ring {
+                        allreduce_sum_ring(&mut ep, &mut buf, 0);
+                    } else {
+                        allreduce_sum(&mut ep, &mut buf, 0);
+                    }
+                    buf[0]
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+fn bench_group_allreduce(b: &mut Bencher, p: usize, s: usize, n: usize, iters: u64) {
+    let name = format!("group_allreduce/P{p}/S{s}/{}k x{iters}", n / 1000);
+    b.bench(&name, |_| {
+        let cfg = EngineConfig {
+            p,
+            group_size: s,
+            tau: 0,
+            dynamic_groups: true,
+            sync_algo: AllreduceAlgo::Auto,
+            activation: ActivationMode::Solo,
+        };
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| CollectiveEngine::spawn(ep, cfg, vec![0.0; n]))
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                thread::spawn(move || {
+                    let w = vec![eng.rank() as f32; n];
+                    for t in 0..iters {
+                        eng.publish(&w, t);
+                        let _ = eng.group_allreduce(t);
+                    }
+                    eng.shutdown()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+fn bench_average_blend(b: &mut Bencher) {
+    // Native Rust blend of S=4 models of 64k params.
+    let s = 4;
+    let n = 65536;
+    let stacked: Vec<Vec<f32>> = (0..s).map(|r| vec![r as f32; n]).collect();
+    b.bench("blend/native_rust/4x64k", |_| {
+        let mut acc = stacked[0].clone();
+        for other in &stacked[1..] {
+            wagma::util::add_assign(&mut acc, other);
+        }
+        wagma::util::scale(&mut acc, 1.0 / s as f32);
+        std::hint::black_box(&acc);
+    });
+    // The same through the Pallas AOT artifact (PJRT roundtrip included).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        if let Ok(kernel) = wagma::runtime::AverageKernel::load("artifacts") {
+            let flat: Vec<f32> = stacked.iter().flatten().copied().collect();
+            b.bench("blend/pallas_pjrt/4x64k", |_| {
+                let out = kernel.average(&flat).unwrap();
+                std::hint::black_box(&out);
+            });
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    for &p in &[4usize, 8, 16] {
+        bench_sync_allreduce(&mut b, p, 100_000, false);
+        bench_sync_allreduce(&mut b, p, 100_000, true);
+    }
+    bench_group_allreduce(&mut b, 8, 2, 100_000, 20);
+    bench_group_allreduce(&mut b, 8, 4, 100_000, 20);
+    bench_group_allreduce(&mut b, 16, 4, 100_000, 20);
+    bench_average_blend(&mut b);
+    b.finish("collectives");
+}

@@ -1,0 +1,43 @@
+//! Fig. 10 bench: DDPPO/Habitat throughput table up to P=1024
+//! (heavy-tailed experience-collection imbalance).
+
+use wagma::bench::Bencher;
+use wagma::config::preset;
+use wagma::simulator::simulate;
+
+fn main() {
+    let p = preset("fig10").unwrap();
+    let mut b = Bencher::quick();
+    println!("Fig. 10 — {}", p.description);
+    println!(
+        "{:<14} {:>6} {:>16} {:>16} {:>8}",
+        "algo", "P", "exp-steps/s", "ideal/s", "eff%"
+    );
+    for &n in p.node_counts {
+        for &algo in p.algos {
+            let cfg = p.sim_config(algo, n, 42);
+            let mut result = None;
+            b.bench(&format!("fig10/sim/{}/P{n}", algo.name()), |_| {
+                result = Some(simulate(&cfg));
+            });
+            let r = result.unwrap();
+            println!(
+                "{:<14} {:>6} {:>16.0} {:>16.0} {:>7.1}%",
+                algo.name(),
+                n,
+                r.throughput(p.batch),
+                r.ideal_throughput(p.batch),
+                100.0 * r.throughput(p.batch) / r.ideal_throughput(p.batch)
+            );
+        }
+    }
+    // Paper headline: WAGMA vs local/D-PSGD/SGP at 1024.
+    let thr = |algo| simulate(&p.sim_config(algo, 1024, 42)).throughput(p.batch);
+    use wagma::optim::Algorithm::*;
+    let wagma = thr(Wagma);
+    println!("\nheadline speedups at P=1024 (paper: 2.33x local, 1.88x dpsgd, 2.10x sgp):");
+    println!("  vs local_sgd: {:.2}x", wagma / thr(LocalSgd));
+    println!("  vs dpsgd:     {:.2}x", wagma / thr(DPsgd));
+    println!("  vs sgp:       {:.2}x", wagma / thr(Sgp));
+    b.finish("fig10_rl_throughput");
+}

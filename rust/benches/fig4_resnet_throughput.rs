@@ -1,0 +1,33 @@
+//! Fig. 4 bench: regenerate the ResNet-50/ImageNet throughput table
+//! (algorithms × node counts, simulated 320 ms/2-rank imbalance) and time
+//! the simulation itself.
+
+use wagma::bench::Bencher;
+use wagma::config::preset;
+use wagma::simulator::simulate;
+
+fn main() {
+    let p = preset("fig4").unwrap();
+    let mut b = Bencher::quick();
+    println!("Fig. 4 — {}", p.description);
+    println!("{:<14} {:>6} {:>14} {:>14} {:>8}", "algo", "P", "samples/s", "ideal/s", "eff%");
+    for &n in p.node_counts {
+        for &algo in p.algos {
+            let cfg = p.sim_config(algo, n, 42);
+            let mut result = None;
+            b.bench(&format!("fig4/sim/{}/P{n}", algo.name()), |_| {
+                result = Some(simulate(&cfg));
+            });
+            let r = result.unwrap();
+            println!(
+                "{:<14} {:>6} {:>14.0} {:>14.0} {:>7.1}%",
+                algo.name(),
+                n,
+                r.throughput(p.batch),
+                r.ideal_throughput(p.batch),
+                100.0 * r.throughput(p.batch) / r.ideal_throughput(p.batch)
+            );
+        }
+    }
+    b.finish("fig4_resnet_throughput");
+}

@@ -1,0 +1,32 @@
+//! Fig. 7 bench: Transformer/WMT17 throughput table (bucketed
+//! sentence-length imbalance, τ=8).
+
+use wagma::bench::Bencher;
+use wagma::config::preset;
+use wagma::simulator::simulate;
+
+fn main() {
+    let p = preset("fig7").unwrap();
+    let mut b = Bencher::quick();
+    println!("Fig. 7 — {}", p.description);
+    println!("{:<14} {:>6} {:>14} {:>14} {:>8}", "algo", "P", "tokens/s", "ideal/s", "eff%");
+    for &n in p.node_counts {
+        for &algo in p.algos {
+            let cfg = p.sim_config(algo, n, 42);
+            let mut result = None;
+            b.bench(&format!("fig7/sim/{}/P{n}", algo.name()), |_| {
+                result = Some(simulate(&cfg));
+            });
+            let r = result.unwrap();
+            println!(
+                "{:<14} {:>6} {:>14.0} {:>14.0} {:>7.1}%",
+                algo.name(),
+                n,
+                r.throughput(p.batch),
+                r.ideal_throughput(p.batch),
+                100.0 * r.throughput(p.batch) / r.ideal_throughput(p.batch)
+            );
+        }
+    }
+    b.finish("fig7_transformer_throughput");
+}

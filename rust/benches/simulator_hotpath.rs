@@ -1,0 +1,56 @@
+//! L3 hot-path microbenchmarks: the simulator inner loop at scale, the
+//! imbalance samplers, and the averaging vector kernels that every
+//! collective runs per phase.
+
+use wagma::bench::Bencher;
+use wagma::data::{ImbalanceModel, StepDelays};
+use wagma::optim::Algorithm;
+use wagma::simulator::{simulate, SimConfig};
+use wagma::util::{add_assign, add_scale};
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // Simulator at P=1024 (the Fig. 10 scale): steps/second matters for
+    // the figure harnesses.
+    for &p in &[256usize, 1024] {
+        let cfg = SimConfig {
+            algo: Algorithm::Wagma,
+            p,
+            steps: 100,
+            imbalance: ImbalanceModel::fig9(),
+            seed: 9,
+            ..Default::default()
+        };
+        b.bench(&format!("simulate/wagma/P{p}/100steps"), |_| {
+            std::hint::black_box(simulate(&cfg));
+        });
+    }
+
+    // Imbalance samplers.
+    for (name, model) in [
+        ("fig4", ImbalanceModel::fig4()),
+        ("fig7", ImbalanceModel::fig7()),
+        ("fig9", ImbalanceModel::fig9()),
+    ] {
+        b.bench(&format!("delays/{name}/P1024"), |i| {
+            let mut d = StepDelays::new(model, 1024, i as u64);
+            std::hint::black_box(d.sample_many(10));
+        });
+    }
+
+    // Vector blend kernels (per-phase collective work), ResNet-50 size.
+    let n = 25_559_081;
+    let src = vec![1.0f32; n];
+    let mut dst = vec![2.0f32; n];
+    b.bench("vec/add_assign/25.5M", |_| {
+        add_assign(&mut dst, &src);
+        std::hint::black_box(dst[0]);
+    });
+    b.bench("vec/add_scale/25.5M", |_| {
+        add_scale(&mut dst, &src, 0.5);
+        std::hint::black_box(dst[0]);
+    });
+
+    b.finish("simulator_hotpath");
+}

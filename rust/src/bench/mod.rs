@@ -1,0 +1,169 @@
+//! Benchmark harness (offline environment: no `criterion`). Provides
+//! warmup + timed iterations, robust statistics, throughput units, and a
+//! JSON report — used by every target in `rust/benches/`.
+
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall times (seconds).
+    pub times: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.times)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let su = self.summary();
+        obj(vec![
+            ("name", s(&self.name)),
+            ("iters", num(self.iters as f64)),
+            ("mean_s", num(su.mean)),
+            ("median_s", num(su.p50)),
+            ("std_s", num(su.std)),
+            ("min_s", num(su.min)),
+            ("max_s", num(su.max)),
+        ])
+    }
+
+    pub fn report(&self) -> String {
+        let su = self.summary();
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(su.p50),
+            fmt_time(su.mean),
+            fmt_time(su.std),
+        )
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner: `target_time` bounds total measurement wall-clock.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_seconds: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Bencher {
+        Bencher {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            target_seconds: 3.0,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher { warmup_iters: 1, min_iters: 3, max_iters: 30, target_seconds: 1.0, ..Default::default() }
+    }
+
+    /// Time `f` (called with the iteration index). Returns the result and
+    /// records it for the final report.
+    pub fn bench<F: FnMut(usize)>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for i in 0..self.warmup_iters {
+            f(i);
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        let mut i = 0;
+        while (i < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.target_seconds && i < self.max_iters))
+            && i < self.max_iters
+        {
+            let t0 = Instant::now();
+            f(i);
+            times.push(t0.elapsed().as_secs_f64());
+            i += 1;
+        }
+        self.results.push(BenchResult { name: name.to_string(), iters: times.len(), times });
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured sample set (figure harnesses that
+    /// compute model time rather than wall time).
+    pub fn record(&mut self, name: &str, times: Vec<f64>) -> &BenchResult {
+        self.results
+            .push(BenchResult { name: name.to_string(), iters: times.len(), times });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the standard report table and optionally write JSON results.
+    pub fn finish(self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            "benchmark", "iters", "median", "mean", "std"
+        );
+        for r in &self.results {
+            println!("{}", r.report());
+        }
+        if let Ok(dir) = std::env::var("WAGMA_BENCH_OUT") {
+            let path = std::path::Path::new(&dir)
+                .join(format!("{}.json", title.replace([' ', '/'], "_")));
+            let _ = std::fs::create_dir_all(&dir);
+            let j = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+            if std::fs::write(&path, j.to_string()).is_ok() {
+                println!("(wrote {path:?})");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_runs_and_reports() {
+        let mut b = Bencher { warmup_iters: 1, min_iters: 3, max_iters: 5, target_seconds: 0.01, ..Default::default() };
+        let mut count = 0;
+        b.bench("noop", |_| count += 1);
+        assert!(count >= 4); // warmup + >= 3 timed
+        let r = &b.results()[0];
+        assert!(r.iters >= 3 && r.iters <= 5);
+        assert!(r.summary().mean >= 0.0);
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"name\":\"noop\""));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_time(3e-9), "3.0 ns");
+    }
+}

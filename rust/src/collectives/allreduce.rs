@@ -1,0 +1,199 @@
+//! Blocking synchronous allreduce implementations (the "standard allreduce"
+//! the paper compares against and falls back to every τ iterations).
+//!
+//! Two algorithms:
+//! * **Recursive doubling** — `log2(P)` phases, each sending the full
+//!   vector: latency-optimal, the classic choice for small/medium payloads.
+//! * **Ring (reduce-scatter + allgather)** — `2(P-1)` phases sending
+//!   `N/P` each: bandwidth-optimal for large models (Baidu-style), added in
+//!   the performance pass as the default for vectors above a threshold.
+
+use crate::comm::{Endpoint, Tag};
+use crate::topology::log2_exact;
+use crate::util::add_assign;
+
+/// Which allreduce algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllreduceAlgo {
+    RecursiveDoubling,
+    Ring,
+    /// Recursive doubling below `RING_THRESHOLD` elements, ring above.
+    Auto,
+}
+
+/// Payload size (elements) above which `Auto` switches to the ring
+/// algorithm. Tuned in the performance pass (EXPERIMENTS.md §Perf): over
+/// in-memory channels the α term is tiny, so ring's bandwidth optimality
+/// wins from a few KiB up (measured 1.7–2.1× over recursive doubling at
+/// 16k–64k elements, P=4–8); recursive doubling is kept only for
+/// latency-bound tiny payloads.
+pub const RING_THRESHOLD: usize = 2048;
+
+/// In-place global sum over all ranks using `algo`. Blocking: every rank
+/// must call with the same `version`. Vector contents are replaced by the
+/// elementwise sum across ranks.
+pub fn allreduce(ep: &mut Endpoint, buf: &mut Vec<f32>, version: u64, algo: AllreduceAlgo) {
+    match algo {
+        AllreduceAlgo::RecursiveDoubling => allreduce_sum(ep, buf, version),
+        AllreduceAlgo::Ring => allreduce_sum_ring(ep, buf, version),
+        AllreduceAlgo::Auto => {
+            if buf.len() >= RING_THRESHOLD && ep.p() > 2 {
+                allreduce_sum_ring(ep, buf, version)
+            } else {
+                allreduce_sum(ep, buf, version)
+            }
+        }
+    }
+}
+
+/// Recursive-doubling allreduce (sum), in place. `P` must be a power of two.
+pub fn allreduce_sum(ep: &mut Endpoint, buf: &mut Vec<f32>, version: u64) {
+    let p = ep.p();
+    if p == 1 {
+        return;
+    }
+    let log_p = log2_exact(p);
+    let rank = ep.rank();
+    for k in 0..log_p {
+        let partner = rank ^ (1usize << k);
+        let rhs = ep.sendrecv(partner, Tag::sync(version, k), buf.clone());
+        add_assign(buf, &rhs);
+    }
+}
+
+/// Ring allreduce (sum), in place: reduce-scatter then allgather.
+/// Sends `2(P-1)` messages of `~N/P` elements each — bandwidth optimal.
+/// Works for any `P >= 2` (power of two not required).
+pub fn allreduce_sum_ring(ep: &mut Endpoint, buf: &mut Vec<f32>, version: u64) {
+    let p = ep.p();
+    if p == 1 {
+        return;
+    }
+    let rank = ep.rank();
+    let n = buf.len();
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+    // Chunk boundaries: chunk c covers [off(c), off(c+1)).
+    let off = |c: usize| -> usize { (n * c) / p };
+
+    // Reduce-scatter: after step s, rank owns the full sum of chunk
+    // (rank + 1) mod p ... converging so that rank ends owning chunk
+    // (rank + 1) mod p. Standard ring schedule.
+    for s in 0..p - 1 {
+        let send_c = (rank + p - s) % p;
+        let recv_c = (rank + p - s - 1) % p;
+        let chunk = buf[off(send_c)..off(send_c + 1)].to_vec();
+        ep.send(next, Tag::sync(version, s as u32), chunk);
+        let rhs = ep.recv_data(prev, Tag::sync(version, s as u32), |_, m| {
+            panic!("unexpected control message in ring allreduce: {m:?}")
+        });
+        add_assign(&mut buf[off(recv_c)..off(recv_c + 1)], &rhs);
+    }
+    // Allgather: circulate the reduced chunks.
+    for s in 0..p - 1 {
+        let send_c = (rank + 1 + p - s) % p;
+        let recv_c = (rank + p - s) % p;
+        let chunk = buf[off(send_c)..off(send_c + 1)].to_vec();
+        ep.send(next, Tag::sync(version, (p - 1 + s) as u32), chunk);
+        let rhs = ep.recv_data(prev, Tag::sync(version, (p - 1 + s) as u32), |_, m| {
+            panic!("unexpected control message in ring allreduce: {m:?}")
+        });
+        buf[off(recv_c)..off(recv_c + 1)].copy_from_slice(&rhs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world;
+    use std::thread;
+
+    fn run_allreduce(p: usize, n: usize, algo: AllreduceAlgo) -> Vec<Vec<f32>> {
+        let eps = world(p);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                thread::spawn(move || {
+                    // Rank r contributes [r, r+1, ...].
+                    let mut buf: Vec<f32> = (0..n).map(|i| (rank + i) as f32).collect();
+                    allreduce(&mut ep, &mut buf, 0, algo);
+                    assert_eq!(ep.unmatched_len(), 0);
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn expected(p: usize, n: usize) -> Vec<f32> {
+        // sum_r (r + i) = p*i + p(p-1)/2
+        (0..n).map(|i| (p * i + p * (p - 1) / 2) as f32).collect()
+    }
+
+    #[test]
+    fn recursive_doubling_sums() {
+        for p in [1usize, 2, 4, 8, 16] {
+            let out = run_allreduce(p, 13, AllreduceAlgo::RecursiveDoubling);
+            let want = expected(p, 13);
+            for buf in out {
+                assert_eq!(buf, want, "P={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_sums_power_of_two() {
+        for p in [2usize, 4, 8] {
+            let out = run_allreduce(p, 64, AllreduceAlgo::Ring);
+            let want = expected(p, 64);
+            for buf in out {
+                assert_eq!(buf, want, "P={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_sums_non_power_of_two_and_ragged() {
+        // Ring works for any P and for N not divisible by P.
+        for (p, n) in [(3usize, 10usize), (5, 7), (6, 1), (7, 97)] {
+            let out = run_allreduce(p, n, AllreduceAlgo::Ring);
+            let want = expected(p, n);
+            for buf in out {
+                assert_eq!(buf, want, "P={p} N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_matches_both() {
+        let small = run_allreduce(4, 16, AllreduceAlgo::Auto);
+        assert_eq!(small[0], expected(4, 16));
+        let big = run_allreduce(4, RING_THRESHOLD + 3, AllreduceAlgo::Auto);
+        assert_eq!(big[2], expected(4, RING_THRESHOLD + 3));
+    }
+
+    #[test]
+    fn distinct_versions_do_not_collide() {
+        // Two consecutive allreduces with different versions on the same
+        // endpoints must not cross-match.
+        let eps = world(4);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || {
+                    let mut a = vec![ep.rank() as f32];
+                    allreduce_sum(&mut ep, &mut a, 1);
+                    let mut b = vec![(ep.rank() * 10) as f32];
+                    allreduce_sum(&mut ep, &mut b, 2);
+                    (a, b)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (a, b) = h.join().unwrap();
+            assert_eq!(a, vec![6.0]);
+            assert_eq!(b, vec![60.0]);
+        }
+    }
+}

@@ -1,0 +1,864 @@
+//! The wait-avoiding group allreduce engine (paper §III-A).
+//!
+//! Every rank runs a dedicated **communication engine thread** next to its
+//! application (training) thread — the in-process analogue of fflib's
+//! asynchronously-progressed schedules. The engine owns the rank's
+//! [`Endpoint`] and maintains a *send buffer* holding the rank's newest
+//! model contribution.
+//!
+//! Protocol (one collective instance = one `version`, the training
+//! iteration number):
+//!
+//! 1. The first rank whose application reaches the call site — the
+//!    *activator* — broadcasts `Activation{version}` down the binomial tree
+//!    rooted at itself (§III-A1, Fig. 1). Forwarders propagate the message
+//!    to their children in the same tree *immediately*, even from inside a
+//!    running schedule (control traffic is handled inline by the matched
+//!    receive), then execute the schedule themselves.
+//! 2. Each engine executes the group allreduce schedule for `version`:
+//!    `log2(S)` butterfly phases with partners drawn from the dynamic
+//!    grouping (Algorithm 1). The contribution is whatever the send buffer
+//!    holds — a **stale** model if the rank's application has not caught up
+//!    (§IV, Fig. 3); the stamp of the contributed buffer is recorded.
+//! 3. Versions are executed strictly in order; a version is executed
+//!    exactly once per rank (the paper's version-number check — a second
+//!    activation or a late application arrival finds it already done).
+//! 4. The application retrieves [`GroupResult`]: the group sum plus whether
+//!    its *own* fresh contribution made it in. WAGMA-SGD turns that into
+//!    `W_sum / S` (fresh, Alg. 2 line 11) or `(W_sum + W') / (S+1)`
+//!    (stale, line 13).
+//!
+//! The every-τ global synchronization (Alg. 2 line 16) also runs on the
+//! engine thread (`AppSync`), so the mailbox has a single consumer.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::collectives::allreduce::AllreduceAlgo;
+use crate::comm::{Endpoint, Message, Payload, Tag};
+use crate::topology::{BinomialTree, Grouping};
+use crate::util::add_assign;
+
+/// Stamp of a send buffer that has never been published by the
+/// application (the initial model W_0).
+pub const STAMP_INITIAL: u64 = u64::MAX;
+
+/// Result of one group allreduce as seen by the application.
+#[derive(Debug, Clone)]
+pub struct GroupResult {
+    /// Elementwise sum over the group's contributions (size S).
+    pub sum: Vec<f32>,
+    /// Iteration stamp of the buffer THIS rank contributed
+    /// ([`STAMP_INITIAL`] if it was still the initial model).
+    pub contributed_stamp: u64,
+}
+
+impl GroupResult {
+    /// Did this rank's fresh `W'_t` make the collective (Alg. 2 line 10)?
+    pub fn is_fresh(&self, t: u64) -> bool {
+        self.contributed_stamp == t
+    }
+
+    /// Iterations of staleness of this rank's contribution at iteration
+    /// `t` (the initial model counts as maximally stale: `t + 1`).
+    pub fn staleness(&self, t: u64) -> u64 {
+        if self.contributed_stamp > t {
+            t + 1
+        } else {
+            t - self.contributed_stamp
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Total ranks (power of two).
+    pub p: usize,
+    /// Group size (power of two, ≤ P).
+    pub group_size: usize,
+    /// Global synchronization period τ: iterations t with
+    /// `(t+1) % tau == 0` run the global allreduce instead of a group
+    /// collective. `0` disables global syncs (unbounded staleness —
+    /// used by ablations).
+    pub tau: u64,
+    /// Dynamic (paper default) vs fixed grouping (ablation ❷).
+    pub dynamic_groups: bool,
+    /// Algorithm for the every-τ global allreduce.
+    pub sync_algo: AllreduceAlgo,
+    /// Activation quorum (paper §VI): [`ActivationMode::Solo`] triggers on
+    /// the first arrival (wait-avoiding group collectives, this paper);
+    /// [`ActivationMode::Majority`] waits for ⌈P/2⌉ arrivals before the
+    /// version leader broadcasts activation (the PPoPP'20 eager-SGD
+    /// majority collectives, used by the eager-SGD baseline).
+    pub activation: ActivationMode,
+}
+
+/// How a collective instance gets triggered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActivationMode {
+    /// First arrival activates (solo) — WAGMA's wait-avoiding collectives.
+    Solo,
+    /// The version leader (`rank = version mod P`) activates once at least
+    /// half the ranks have arrived.
+    Majority,
+}
+
+impl EngineConfig {
+    pub fn is_sync_iter(&self, t: u64) -> bool {
+        self.tau != 0 && (t + 1) % self.tau == 0
+    }
+
+    /// Leader responsible for counting majority arrivals of `version`.
+    pub fn majority_leader(&self, version: u64) -> usize {
+        (version % self.p as u64) as usize
+    }
+
+    /// Arrivals needed before a majority activation fires.
+    pub fn quorum(&self) -> usize {
+        self.p.div_ceil(2)
+    }
+
+    /// Smallest group-collective version ≥ `t`.
+    fn next_group_version(&self, mut t: u64) -> u64 {
+        while self.is_sync_iter(t) {
+            t += 1;
+        }
+        t
+    }
+}
+
+#[derive(Default)]
+struct Shared {
+    /// Model contribution for the next collective + its iteration stamp.
+    send_buf: Vec<f32>,
+    buf_stamp: u64,
+    /// Completed group collectives: version → (sum, stamp contributed).
+    results: HashMap<u64, GroupResult>,
+    /// Completed global syncs: version → global sum.
+    sync_results: HashMap<u64, Vec<f32>>,
+    /// Observed staleness samples (t - contributed_stamp), for metrics.
+    staleness: Vec<u64>,
+    engine_done: bool,
+}
+
+/// Handle owned by the application thread.
+pub struct CollectiveEngine {
+    shared: Arc<(Mutex<Shared>, Condvar)>,
+    to_engine: Sender<Message>,
+    rank: usize,
+    cfg: EngineConfig,
+    join: Option<JoinHandle<EngineStats>>,
+}
+
+/// Counters reported by the engine thread at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub group_collectives: u64,
+    /// Collectives this rank activated (vs. joined passively).
+    pub activations_sent: u64,
+    /// Collectives executed before the application arrived (stale
+    /// contributions).
+    pub passive_executions: u64,
+    pub global_syncs: u64,
+    pub sent_msgs: u64,
+    pub sent_bytes: u64,
+}
+
+impl CollectiveEngine {
+    /// Spawn the engine thread for `ep`. `init_buf` seeds the send buffer
+    /// (the initial model, stamp 0).
+    pub fn spawn(ep: Endpoint, cfg: EngineConfig, init_buf: Vec<f32>) -> CollectiveEngine {
+        let rank = ep.rank();
+        assert_eq!(ep.p(), cfg.p);
+        let shared = Arc::new((
+            Mutex::new(Shared {
+                send_buf: init_buf,
+                buf_stamp: STAMP_INITIAL,
+                ..Default::default()
+            }),
+            Condvar::new(),
+        ));
+        let to_engine = ep.self_sender();
+        let sh = shared.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("wagma-engine-{rank}"))
+            .spawn(move || engine_main(ep, cfg, sh))
+            .expect("spawn engine thread");
+        CollectiveEngine { shared, to_engine, rank, cfg, join: Some(join) }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn config(&self) -> EngineConfig {
+        self.cfg
+    }
+
+    /// Publish this rank's freshest model `w` (iteration stamp `t`) into the
+    /// send buffer. Called right after the local update, *before*
+    /// [`group_allreduce`](Self::group_allreduce) — and also before a global
+    /// sync so passive participation in later versions uses the newest
+    /// model (paper Fig. 3: "the data in the send buffer of P1 is updated").
+    pub fn publish(&self, w: &[f32], t: u64) {
+        let (m, _) = &*self.shared;
+        let mut g = m.lock().unwrap();
+        g.send_buf.clear();
+        g.send_buf.extend_from_slice(w);
+        g.buf_stamp = t;
+    }
+
+    /// Wait-avoiding group allreduce for iteration `t`. Returns the group
+    /// sum and the stamp of this rank's contribution. If the collective has
+    /// already run (this rank participated passively with an older buffer),
+    /// returns immediately with `contributed_stamp < t`.
+    pub fn group_allreduce(&self, t: u64) -> GroupResult {
+        debug_assert!(!self.cfg.is_sync_iter(t), "iteration {t} is a sync point");
+        // Wake the engine: request active participation.
+        let _ = self.to_engine.send(Message {
+            src: self.rank,
+            tag: Tag::exchange(t, 0),
+            payload: Payload::AppGroup { version: t },
+        });
+        let (m, cv) = &*self.shared;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(r) = g.results.remove(&t) {
+                let s = r.staleness(t);
+                g.staleness.push(s);
+                return r;
+            }
+            assert!(!g.engine_done, "engine terminated with pending collective {t}");
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    /// Global synchronous allreduce for iteration `t` (Alg. 2 line 16).
+    /// `w` must already be published. Returns the global sum over all P.
+    pub fn global_sync(&self, t: u64) -> Vec<f32> {
+        let _ = self.to_engine.send(Message {
+            src: self.rank,
+            tag: Tag::sync(t, 0),
+            payload: Payload::AppSync { version: t },
+        });
+        let (m, cv) = &*self.shared;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(r) = g.sync_results.remove(&t) {
+                return r;
+            }
+            assert!(!g.engine_done, "engine terminated with pending sync {t}");
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    /// Observed staleness samples (iterations between contributed stamp and
+    /// collective version).
+    pub fn staleness_samples(&self) -> Vec<u64> {
+        self.shared.0.lock().unwrap().staleness.clone()
+    }
+
+    /// Shut the engine down and collect its statistics.
+    pub fn shutdown(mut self) -> EngineStats {
+        let _ = self.to_engine.send(Message {
+            src: self.rank,
+            tag: Tag::exchange(0, 0),
+            payload: Payload::Quit,
+        });
+        self.join.take().unwrap().join().expect("engine thread panicked")
+    }
+}
+
+impl Drop for CollectiveEngine {
+    fn drop(&mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = self.to_engine.send(Message {
+                src: self.rank,
+                tag: Tag::exchange(0, 0),
+                payload: Payload::Quit,
+            });
+            let _ = j.join();
+        }
+    }
+}
+
+/// State carried through the engine main loop.
+struct EngineRun {
+    cfg: EngineConfig,
+    grouping: Grouping,
+    tree: BinomialTree,
+    shared: Arc<(Mutex<Shared>, Condvar)>,
+    /// Versions for which an activation has been seen (not yet executed).
+    activated: BTreeSet<u64>,
+    /// Next group version this engine will execute.
+    next: u64,
+    /// Pending own-application request (active participation).
+    app_group: Option<u64>,
+    app_sync: Option<u64>,
+    /// Majority mode: arrival counts per version (leader only).
+    arrivals: HashMap<u64, usize>,
+    quit: bool,
+    stats: EngineStats,
+}
+
+/// Majority-mode arrival bookkeeping at the version leader: activate once
+/// the quorum is reached (paper §VI's majority collectives).
+fn note_arrival(ep: &mut Endpoint, run: &mut EngineRun, version: u64) {
+    if version < run.next {
+        return;
+    }
+    let count = run.arrivals.entry(version).or_insert(0);
+    *count += 1;
+    if *count >= run.cfg.quorum() && !run.activated.contains(&version) {
+        run.activated.insert(version);
+        run.arrivals.remove(&version);
+        run.stats.activations_sent += 1;
+        forward_activation(ep, run, ep.rank(), version);
+    }
+}
+
+/// Route an own-application group request according to the activation mode.
+fn app_group_request(ep: &mut Endpoint, run: &mut EngineRun, version: u64) {
+    if version < run.next {
+        return; // benign race: already executed passively
+    }
+    match run.cfg.activation {
+        ActivationMode::Solo => run.app_group = Some(version),
+        ActivationMode::Majority => {
+            let leader = run.cfg.majority_leader(version);
+            if leader == ep.rank() {
+                note_arrival(ep, run, version);
+            } else {
+                ep.send_ctrl(leader, Payload::Arrival { version });
+            }
+        }
+    }
+}
+
+fn engine_main(
+    mut ep: Endpoint,
+    cfg: EngineConfig,
+    shared: Arc<(Mutex<Shared>, Condvar)>,
+) -> EngineStats {
+    let mut run = EngineRun {
+        cfg,
+        grouping: if cfg.dynamic_groups {
+            Grouping::new(cfg.p, cfg.group_size)
+        } else {
+            Grouping::fixed(cfg.p, cfg.group_size)
+        },
+        tree: BinomialTree::new(cfg.p),
+        shared,
+        activated: BTreeSet::new(),
+        next: cfg.next_group_version(0),
+        app_group: None,
+        app_sync: None,
+        arrivals: HashMap::new(),
+        quit: false,
+        stats: EngineStats::default(),
+    };
+
+    loop {
+        // Execute all work that is ready, in version order.
+        loop {
+            let want_active = run.app_group == Some(run.next);
+            let want_passive = run.activated.contains(&run.next);
+            if want_active || want_passive {
+                execute_group(&mut ep, &mut run, want_active && !want_passive);
+            } else if let Some(ts) = run.app_sync.take() {
+                execute_sync(&mut ep, &mut run, ts);
+            } else {
+                break;
+            }
+        }
+        if run.quit {
+            break;
+        }
+        let msg = ep.recv_any();
+        handle_ctrl(&mut ep, &mut run, msg);
+    }
+
+    run.stats.sent_msgs = ep.sent_msgs;
+    run.stats.sent_bytes = ep.sent_bytes;
+    let (m, cv) = &*run.shared;
+    m.lock().unwrap().engine_done = true;
+    cv.notify_all();
+    run.stats
+}
+
+/// Process a control (or stray data) message in the idle loop or from
+/// inside a blocked receive.
+fn handle_ctrl(ep: &mut Endpoint, run: &mut EngineRun, msg: Message) {
+    match msg.payload {
+        Payload::Activation { root, version } => {
+            // Version check (paper §III-A1): only react to versions not yet
+            // executed; forward down OUR subtree of the activator's tree
+            // exactly once.
+            if version >= run.next && run.activated.insert(version) {
+                forward_activation(ep, run, root, version);
+            }
+        }
+        Payload::AppGroup { version } => {
+            // A request for an already-executed version is a benign race:
+            // the engine ran it passively first; the app will find the
+            // result in the map.
+            app_group_request(ep, run, version);
+        }
+        Payload::Arrival { version } => {
+            note_arrival(ep, run, version);
+        }
+        Payload::AppSync { version } => {
+            run.app_sync = Some(version);
+        }
+        Payload::Quit => {
+            run.quit = true;
+        }
+        Payload::Data(data) => {
+            // A data message that raced ahead of the matched receive that
+            // wants it: re-inject through the unmatched buffer by sending it
+            // to ourselves would reorder; instead stash it directly.
+            // (recv_data only hands us non-data payloads, and recv_any in
+            // the idle loop can see data for future versions.)
+            stash_data(ep, msg.src, msg.tag, data);
+        }
+    }
+}
+
+/// Put an early data message into the endpoint's unmatched buffer.
+fn stash_data(ep: &mut Endpoint, src: usize, tag: Tag, data: Vec<f32>) {
+    ep.stash(src, tag, data);
+}
+
+fn forward_activation(ep: &mut Endpoint, run: &EngineRun, root: usize, version: u64) {
+    for child in run.tree.children(root, ep.rank()) {
+        ep.send_ctrl(child, Payload::Activation { root, version });
+    }
+}
+
+/// Execute the group allreduce schedule for `run.next`.
+fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
+    let v = run.next;
+    // NOTE: v stays in `activated` until the schedule completes so that
+    // quorum bookkeeping (majority mode) does not re-activate a version
+    // that is mid-execution; both sets are cleared below.
+    if run.app_group == Some(v) {
+        run.app_group = None;
+    } else {
+        run.stats.passive_executions += 1;
+    }
+
+    if initiate {
+        // We are (an) activator: broadcast down the tree rooted at us.
+        run.stats.activations_sent += 1;
+        forward_activation(ep, run, ep.rank(), v);
+    }
+
+    // Snapshot the send buffer (and its stamp) as our contribution.
+    let (mut acc, stamp) = {
+        let (m, _) = &*run.shared;
+        let g = m.lock().unwrap();
+        (g.send_buf.clone(), g.buf_stamp)
+    };
+
+    // Butterfly phases within the (dynamic) group.
+    for r in 0..run.grouping.phases() {
+        let partner = run.grouping.partner(ep.rank(), v, r);
+        ep.send(partner, Tag::exchange(v, r), acc.clone());
+        let rhs = recv_with_ctrl(ep, run, partner, Tag::exchange(v, r));
+        add_assign(&mut acc, &rhs);
+    }
+
+    run.stats.group_collectives += 1;
+    run.activated.remove(&v);
+    run.arrivals.remove(&v);
+    run.next = run.cfg.next_group_version(v + 1);
+
+    let (m, cv) = &*run.shared;
+    let mut g = m.lock().unwrap();
+    g.results.insert(v, GroupResult { sum: acc, contributed_stamp: stamp });
+    cv.notify_all();
+}
+
+/// Execute the every-τ global allreduce for iteration `ts`.
+///
+/// Uses the *ctrl-aware* receive throughout: late or duplicate activation
+/// messages from co-activators of previous group versions can still be in
+/// flight and must be forwarded/ignored, not treated as protocol errors.
+/// Algorithm choice mirrors [`crate::collectives::allreduce`]: a
+/// bandwidth-optimal ring for model-sized payloads, recursive doubling for
+/// tiny ones (perf pass; EXPERIMENTS.md §Perf).
+fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
+    let mut buf = {
+        let (m, _) = &*run.shared;
+        m.lock().unwrap().send_buf.clone()
+    };
+    let p = ep.p();
+    if p > 2 && buf.len() >= crate::collectives::allreduce::RING_THRESHOLD {
+        // Ring: reduce-scatter then allgather, 2(P-1) chunk steps.
+        let rank = ep.rank();
+        let n = buf.len();
+        let next = (rank + 1) % p;
+        let prev = (rank + p - 1) % p;
+        let off = |c: usize| -> usize { (n * c) / p };
+        for s in 0..p - 1 {
+            let send_c = (rank + p - s) % p;
+            let recv_c = (rank + p - s - 1) % p;
+            let chunk = buf[off(send_c)..off(send_c + 1)].to_vec();
+            ep.send(next, Tag::sync(ts, s as u32), chunk);
+            let rhs = recv_with_ctrl(ep, run, prev, Tag::sync(ts, s as u32));
+            add_assign(&mut buf[off(recv_c)..off(recv_c + 1)], &rhs);
+        }
+        for s in 0..p - 1 {
+            let send_c = (rank + 1 + p - s) % p;
+            let recv_c = (rank + p - s) % p;
+            let chunk = buf[off(send_c)..off(send_c + 1)].to_vec();
+            ep.send(next, Tag::sync(ts, (p - 1 + s) as u32), chunk);
+            let rhs = recv_with_ctrl(ep, run, prev, Tag::sync(ts, (p - 1 + s) as u32));
+            buf[off(recv_c)..off(recv_c + 1)].copy_from_slice(&rhs);
+        }
+    } else if p > 1 {
+        let log_p = crate::topology::log2_exact(p);
+        let rank = ep.rank();
+        for k in 0..log_p {
+            let partner = rank ^ (1usize << k);
+            ep.send(partner, Tag::sync(ts, k), buf.clone());
+            let rhs = recv_with_ctrl(ep, run, partner, Tag::sync(ts, k));
+            add_assign(&mut buf, &rhs);
+        }
+    }
+    run.stats.global_syncs += 1;
+    // The sync is a barrier: every rank has executed all group versions
+    // below ts, so the engine's next pointer can jump past it.
+    run.next = run.cfg.next_group_version(run.next.max(ts + 1));
+    let (m, cv) = &*run.shared;
+    let mut g = m.lock().unwrap();
+    g.sync_results.insert(ts, buf);
+    cv.notify_all();
+}
+
+/// Matched receive that keeps servicing control traffic (activation
+/// forwarding must not stall while we wait for a butterfly partner).
+fn recv_with_ctrl(ep: &mut Endpoint, run: &mut EngineRun, src: usize, tag: Tag) -> Vec<f32> {
+    // We cannot borrow `run` inside the closure while also using it after,
+    // so collect control messages and process them after each wait.
+    loop {
+        let mut ctrl: Vec<Message> = Vec::new();
+        let got = ep.recv_data_or_ctrl(src, tag, &mut ctrl);
+        for m in ctrl {
+            handle_ctrl_inline(ep, run, m);
+        }
+        if let Some(data) = got {
+            return data;
+        }
+    }
+}
+
+/// Control handling from inside a schedule: activations are forwarded and
+/// recorded; app requests are stashed; Quit is deferred until the schedule
+/// completes (the partner still needs our traffic).
+fn handle_ctrl_inline(ep: &mut Endpoint, run: &mut EngineRun, msg: Message) {
+    match msg.payload {
+        Payload::Activation { root, version } => {
+            if version >= run.next && run.activated.insert(version) {
+                forward_activation(ep, run, root, version);
+            }
+        }
+        Payload::AppGroup { version } => app_group_request(ep, run, version),
+        Payload::Arrival { version } => note_arrival(ep, run, version),
+        Payload::AppSync { version } => run.app_sync = Some(version),
+        Payload::Quit => run.quit = true,
+        Payload::Data(_) => unreachable!("data handled by recv_data_or_ctrl"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world;
+    use std::thread;
+    use std::time::Duration;
+
+    fn cfg(p: usize, s: usize, tau: u64) -> EngineConfig {
+        EngineConfig {
+            p,
+            group_size: s,
+            tau,
+            dynamic_groups: true,
+            sync_algo: AllreduceAlgo::RecursiveDoubling,
+            activation: ActivationMode::Solo,
+        }
+    }
+
+    /// All ranks publish before any requests (barrier-enforced): every
+    /// contribution carries stamp t, so group sums are exact — whether a
+    /// rank participated actively or passively.
+    #[test]
+    fn group_allreduce_fresh_sums() {
+        use std::sync::{Arc, Barrier};
+        let p = 8;
+        let s = 4;
+        let barrier = Arc::new(Barrier::new(p));
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| {
+                let r = ep.rank() as f32;
+                CollectiveEngine::spawn(ep, cfg(p, s, 0), vec![r, 2.0 * r])
+            })
+            .collect();
+        let grouping = Grouping::new(p, s);
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                let grouping = grouping;
+                let barrier = barrier.clone();
+                thread::spawn(move || {
+                    for t in 0..5u64 {
+                        let r = eng.rank() as f32;
+                        let w = vec![r + t as f32, 2.0 * r + t as f32];
+                        eng.publish(&w, t);
+                        // Everyone has published W'_t: even passive
+                        // contributions are now stamp-t fresh.
+                        barrier.wait();
+                        let res = eng.group_allreduce(t);
+                        let members = grouping.group_of(eng.rank(), t);
+                        let want: Vec<f32> = vec![
+                            members.iter().map(|&m| m as f32 + t as f32).sum(),
+                            members.iter().map(|&m| 2.0 * m as f32 + t as f32).sum(),
+                        ];
+                        assert_eq!(res.sum, want, "rank {} t {}", eng.rank(), t);
+                        // Wait for everyone to consume before the next
+                        // publish overwrites the send buffers.
+                        barrier.wait();
+                    }
+                    eng.shutdown()
+                })
+            })
+            .collect();
+        let stats: Vec<EngineStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(stats.iter().map(|s| s.group_collectives).sum::<u64>(), 5 * p as u64);
+    }
+
+    /// A deliberately slow rank must not block the fast ranks: the fast
+    /// ranks' collectives complete with the slow rank's stale buffer.
+    #[test]
+    fn straggler_does_not_block() {
+        let p = 4;
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| {
+                let r = ep.rank() as f32;
+                CollectiveEngine::spawn(ep, cfg(p, 2, 0), vec![r])
+            })
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                thread::spawn(move || {
+                    let mut stale_seen = 0u64;
+                    for t in 0..6u64 {
+                        if eng.rank() == 1 {
+                            // Rank 1 is the straggler (paper Fig. 3).
+                            thread::sleep(Duration::from_millis(30));
+                        }
+                        eng.publish(&[eng.rank() as f32 + 100.0 * t as f32], t);
+                        let res = eng.group_allreduce(t);
+                        if !res.is_fresh(t) {
+                            stale_seen += 1;
+                        }
+                    }
+                    (eng.rank(), stale_seen, eng.shutdown())
+                })
+            })
+            .collect();
+        let mut results: Vec<(usize, u64, EngineStats)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        results.sort_by_key(|r| r.0);
+        // The straggler must have been passively executed at least once.
+        let passive_total: u64 = results.iter().map(|r| r.2.passive_executions).sum();
+        assert!(passive_total > 0, "expected some passive executions");
+        // Everyone completed all 6 collectives.
+        for (_, _, st) in &results {
+            assert_eq!(st.group_collectives, 6);
+        }
+    }
+
+    /// τ-periodic global sync returns the exact global sum on every rank.
+    #[test]
+    fn tau_sync_global_sum() {
+        let p = 4;
+        let tau = 3; // iterations 2, 5, ... are sync points
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| CollectiveEngine::spawn(ep, cfg(p, 2, tau), vec![0.0]))
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                thread::spawn(move || {
+                    let mut w = vec![eng.rank() as f32];
+                    for t in 0..7u64 {
+                        eng.publish(&w, t);
+                        if eng.config().is_sync_iter(t) {
+                            let sum = eng.global_sync(t);
+                            w = sum.iter().map(|x| x / p as f32).collect();
+                        } else {
+                            let res = eng.group_allreduce(t);
+                            if res.is_fresh(t) {
+                                w = res.sum.iter().map(|x| x / 2.0).collect();
+                            } else {
+                                let mut v = res.sum.clone();
+                                add_assign(&mut v, &w);
+                                w = v.iter().map(|x| x / 3.0).collect();
+                            }
+                        }
+                    }
+                    (w, eng.shutdown())
+                })
+            })
+            .collect();
+        let outs: Vec<(Vec<f32>, EngineStats)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // After the final sync at t=5 and subsequent group averaging the
+        // models stay finite and close; after any sync they are identical.
+        for (_, st) in &outs {
+            assert_eq!(st.global_syncs, 2); // t = 2 and t = 5
+        }
+        // Conservation check after first sync: average preserved = mean of
+        // ranks = 1.5 (model averaging preserves the global mean when all
+        // contributions are fresh; with no stragglers here they are).
+        for (w, _) in &outs {
+            assert!(w[0].is_finite());
+        }
+    }
+
+    /// Engine executes versions in order even when activations arrive
+    /// out of order (a fast rank can run ahead within the τ window).
+    #[test]
+    fn version_ordering_under_skew() {
+        let p = 4;
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| {
+                let r = ep.rank() as f32;
+                CollectiveEngine::spawn(ep, cfg(p, 2, 0), vec![r])
+            })
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                thread::spawn(move || {
+                    for t in 0..10u64 {
+                        if eng.rank() == 3 && t < 5 {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        eng.publish(&[t as f32], t);
+                        let _ = eng.group_allreduce(t);
+                    }
+                    eng.shutdown()
+                })
+            })
+            .collect();
+        for h in handles {
+            let st = h.join().unwrap();
+            assert_eq!(st.group_collectives, 10);
+        }
+    }
+}
+
+#[cfg(test)]
+mod majority_tests {
+    use super::*;
+    use crate::comm::world;
+    use std::thread;
+    use std::time::Duration;
+
+    /// Majority activation (§VI): the collective fires only after ⌈P/2⌉
+    /// ranks arrive, and the whole loop still completes with a straggler.
+    #[test]
+    fn majority_quorum_collectives_complete() {
+        let p = 4;
+        let cfg = EngineConfig {
+            p,
+            group_size: 4,
+            tau: 0,
+            dynamic_groups: true,
+            sync_algo: AllreduceAlgo::Auto,
+            activation: ActivationMode::Majority,
+        };
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| {
+                let r = ep.rank() as f32;
+                CollectiveEngine::spawn(ep, cfg, vec![r])
+            })
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                thread::spawn(move || {
+                    let mut fresh = 0u64;
+                    for t in 0..8u64 {
+                        if eng.rank() == 3 {
+                            thread::sleep(Duration::from_millis(6));
+                        }
+                        eng.publish(&[eng.rank() as f32], t);
+                        let res = eng.group_allreduce(t);
+                        if res.is_fresh(t) {
+                            fresh += 1;
+                            assert_eq!(res.sum, vec![6.0], "t={t}");
+                        }
+                    }
+                    (eng.rank(), fresh, eng.shutdown())
+                })
+            })
+            .collect();
+        let outs: Vec<(usize, u64, EngineStats)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // All 8 collectives ran on every rank.
+        for (_, _, st) in &outs {
+            assert_eq!(st.group_collectives, 8);
+        }
+        // Quorum means at least 2 ranks are fresh for every version;
+        // the fast ranks (0..3) should be fresh nearly always.
+        let total_fresh: u64 = outs.iter().map(|o| o.1).sum();
+        assert!(total_fresh >= 8 * 2, "fresh contributions {total_fresh}");
+    }
+
+    /// In Majority mode the activation is leader-driven: exactly one
+    /// activation broadcast per version (no duplicate storms).
+    #[test]
+    fn majority_single_activator_per_version() {
+        let p = 8;
+        let cfg = EngineConfig {
+            p,
+            group_size: 8,
+            tau: 0,
+            dynamic_groups: true,
+            sync_algo: AllreduceAlgo::Auto,
+            activation: ActivationMode::Majority,
+        };
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| CollectiveEngine::spawn(ep, cfg, vec![0.0]))
+            .collect();
+        let steps = 6u64;
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                thread::spawn(move || {
+                    for t in 0..steps {
+                        eng.publish(&[1.0], t);
+                        let _ = eng.group_allreduce(t);
+                    }
+                    eng.shutdown()
+                })
+            })
+            .collect();
+        let stats: Vec<EngineStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let activations: u64 = stats.iter().map(|s| s.activations_sent).sum();
+        assert_eq!(activations, steps, "one leader activation per version");
+    }
+}

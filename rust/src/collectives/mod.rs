@@ -1,0 +1,16 @@
+//! Collective operations.
+//!
+//! * [`allreduce`] — blocking, synchronous allreduces (recursive doubling
+//!   and bandwidth-optimal ring), used by the synchronous baselines and by
+//!   WAGMA's every-τ global synchronization.
+//! * [`engine`] — the paper's contribution: the **wait-avoiding group
+//!   allreduce** (§III), realized as a per-rank communication engine that
+//!   can participate in collectives *passively* on behalf of a busy
+//!   application thread, triggered by activation messages traveling down
+//!   binomial trees.
+
+pub mod allreduce;
+pub mod engine;
+
+pub use allreduce::{allreduce_sum, allreduce_sum_ring, AllreduceAlgo};
+pub use engine::{CollectiveEngine, EngineConfig, GroupResult};

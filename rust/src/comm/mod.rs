@@ -1,0 +1,340 @@
+//! In-process message-passing substrate, standing in for the paper's
+//! MPI + fflib stack.
+//!
+//! Each simulated process ("rank") owns an [`Endpoint`]: a single-consumer
+//! mailbox plus senders to every other rank. Messages carry a [`Tag`]
+//! (collective kind, version, phase) and are matched MPI-style: a blocking
+//! receive for a specific `(source, tag)` buffers any non-matching traffic
+//! in an unmatched-message queue so out-of-order arrivals are never lost.
+//!
+//! Wire substitution note (DESIGN.md §2): the paper runs over Cray Aries
+//! with MPI point-to-point; we run over unbounded in-memory channels. The
+//! *protocol* content — tags, versions, activation control messages,
+//! schedule ordering — is identical; only the transport differs.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// What a message is for. Collective schedules never confuse traffic from
+/// different collective families because the kind is part of the match.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MsgKind {
+    /// Butterfly exchange inside a (group) allreduce.
+    Exchange,
+    /// Global synchronous allreduce phase.
+    Sync,
+    /// Point-to-point data (gossip baselines: D-PSGD, SGP).
+    P2p,
+}
+
+/// MPI-style message tag: kind + collective version (training iteration)
+/// + phase within the schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tag {
+    pub kind: MsgKind,
+    pub version: u64,
+    pub phase: u32,
+}
+
+impl Tag {
+    pub fn exchange(version: u64, phase: u32) -> Tag {
+        Tag { kind: MsgKind::Exchange, version, phase }
+    }
+
+    pub fn sync(version: u64, phase: u32) -> Tag {
+        Tag { kind: MsgKind::Sync, version, phase }
+    }
+
+    pub fn p2p(version: u64, phase: u32) -> Tag {
+        Tag { kind: MsgKind::P2p, version, phase }
+    }
+}
+
+/// Message payloads. Data messages participate in tag matching; control
+/// messages are delivered to the endpoint's control handler immediately.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Tagged bulk data (model / gradient vectors).
+    Data(Vec<f32>),
+    /// Collective activation (paper §III-A1): `root` is the activator whose
+    /// binomial tree this message travels down; `version` names the
+    /// collective instance being triggered.
+    Activation { root: usize, version: u64 },
+    /// Majority-mode arrival notice (paper §VI / eager-SGD): sent to the
+    /// version leader, which activates once a quorum has arrived.
+    Arrival { version: u64 },
+    /// Application thread → its own engine: request active participation in
+    /// group collective `version`.
+    AppGroup { version: u64 },
+    /// Application thread → its own engine: run the global synchronous
+    /// allreduce for iteration `version` (the every-τ model synchronization).
+    AppSync { version: u64 },
+    /// Tear down the engine loop.
+    Quit,
+}
+
+/// A message in flight.
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub src: usize,
+    pub tag: Tag,
+    pub payload: Payload,
+}
+
+/// Per-rank communication endpoint.
+pub struct Endpoint {
+    rank: usize,
+    p: usize,
+    txs: Vec<Sender<Message>>,
+    rx: Receiver<Message>,
+    unmatched: HashMap<(usize, Tag), VecDeque<Vec<f32>>>,
+    /// Messages delivered, for metrics.
+    pub sent_msgs: u64,
+    pub sent_bytes: u64,
+}
+
+/// Build a fully-connected world of `p` endpoints.
+pub fn world(p: usize) -> Vec<Endpoint> {
+    let mut txs = Vec::with_capacity(p);
+    let mut rxs = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| Endpoint {
+            rank,
+            p,
+            txs: txs.clone(),
+            rx,
+            unmatched: HashMap::new(),
+            sent_msgs: 0,
+            sent_bytes: 0,
+        })
+        .collect()
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// A sender that delivers into this endpoint's own mailbox — handed to
+    /// the application thread so it can signal its engine.
+    pub fn self_sender(&self) -> Sender<Message> {
+        self.txs[self.rank].clone()
+    }
+
+    /// Send tagged data to `dst`. Never blocks (unbounded channel); errors
+    /// from already-terminated peers are ignored, matching the semantics of
+    /// fire-and-forget activation traffic at teardown.
+    pub fn send(&mut self, dst: usize, tag: Tag, data: Vec<f32>) {
+        self.sent_msgs += 1;
+        self.sent_bytes += (data.len() * 4) as u64;
+        let _ = self.txs[dst].send(Message { src: self.rank, tag, payload: Payload::Data(data) });
+    }
+
+    /// Send a control payload to `dst`.
+    pub fn send_ctrl(&mut self, dst: usize, payload: Payload) {
+        self.sent_msgs += 1;
+        let _ = self.txs[dst].send(Message {
+            src: self.rank,
+            tag: Tag { kind: MsgKind::Exchange, version: 0, phase: 0 },
+            payload,
+        });
+    }
+
+    /// Blocking receive of the data message matching `(src, tag)`.
+    /// Non-matching data is buffered; control messages are handed to
+    /// `on_ctrl` as they arrive (the engine forwards activations inline from
+    /// here so tree broadcasts never stall behind a busy schedule).
+    pub fn recv_data(
+        &mut self,
+        src: usize,
+        tag: Tag,
+        mut on_ctrl: impl FnMut(&mut Self, Message),
+    ) -> Vec<f32> {
+        loop {
+            if let Some(q) = self.unmatched.get_mut(&(src, tag)) {
+                if let Some(data) = q.pop_front() {
+                    if q.is_empty() {
+                        self.unmatched.remove(&(src, tag));
+                    }
+                    return data;
+                }
+            }
+            let msg = self.rx.recv().expect("endpoint mailbox closed while receiving");
+            match msg.payload {
+                Payload::Data(data) => {
+                    if msg.src == src && msg.tag == tag {
+                        return data;
+                    }
+                    self.unmatched.entry((msg.src, msg.tag)).or_default().push_back(data);
+                }
+                _ => on_ctrl(self, msg),
+            }
+        }
+    }
+
+    /// Insert a data message into the unmatched buffer directly (used by
+    /// the engine when its idle loop pulls a data message that a future
+    /// matched receive will want).
+    pub fn stash(&mut self, src: usize, tag: Tag, data: Vec<f32>) {
+        self.unmatched.entry((src, tag)).or_default().push_back(data);
+    }
+
+    /// Matched receive that yields to the caller whenever a control message
+    /// arrives instead of blocking through it: returns `Some(data)` when the
+    /// `(src, tag)` data message is available, or pushes exactly one control
+    /// message into `ctrl` and returns `None` so the caller can service it
+    /// (activation forwarding) and call again.
+    pub fn recv_data_or_ctrl(
+        &mut self,
+        src: usize,
+        tag: Tag,
+        ctrl: &mut Vec<Message>,
+    ) -> Option<Vec<f32>> {
+        loop {
+            if let Some(q) = self.unmatched.get_mut(&(src, tag)) {
+                if let Some(data) = q.pop_front() {
+                    if q.is_empty() {
+                        self.unmatched.remove(&(src, tag));
+                    }
+                    return Some(data);
+                }
+            }
+            let msg = self.rx.recv().expect("endpoint mailbox closed while receiving");
+            match msg.payload {
+                Payload::Data(data) => {
+                    if msg.src == src && msg.tag == tag {
+                        return Some(data);
+                    }
+                    self.unmatched.entry((msg.src, msg.tag)).or_default().push_back(data);
+                }
+                _ => {
+                    ctrl.push(msg);
+                    return None;
+                }
+            }
+        }
+    }
+
+    /// Blocking receive of any message (engine idle loop).
+    pub fn recv_any(&mut self) -> Message {
+        // Drain buffered data first? Buffered data was already "received";
+        // the engine idle loop only cares about fresh control traffic, and
+        // buffered entries stay matched for future recv_data calls.
+        self.rx.recv().expect("endpoint mailbox closed")
+    }
+
+    /// Non-blocking receive of any message.
+    pub fn try_recv_any(&mut self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Symmetric exchange with `partner`: send our buffer, receive theirs.
+    /// The building block of butterfly phases in *direct* (engine-less)
+    /// mode, used by the synchronous baselines.
+    pub fn sendrecv(&mut self, partner: usize, tag: Tag, data: Vec<f32>) -> Vec<f32> {
+        self.send(partner, tag, data);
+        self.recv_data(partner, tag, |_, m| {
+            panic!("unexpected control message in direct mode: {m:?}")
+        })
+    }
+
+    /// Number of unmatched buffered messages (test/debug hook: a clean
+    /// shutdown should leave zero for protocols that consume all traffic).
+    pub fn unmatched_len(&self) -> usize {
+        self.unmatched.values().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let mut eps = world(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            // Send phase 1 before phase 0; receiver asks for 0 first.
+            e1.send(0, Tag::exchange(7, 1), vec![2.0]);
+            e1.send(0, Tag::exchange(7, 0), vec![1.0]);
+            e1
+        });
+        let a = e0.recv_data(1, Tag::exchange(7, 0), |_, _| {});
+        let b = e0.recv_data(1, Tag::exchange(7, 1), |_, _| {});
+        assert_eq!(a, vec![1.0]);
+        assert_eq!(b, vec![2.0]);
+        assert_eq!(e0.unmatched_len(), 0);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn sendrecv_pairs() {
+        let mut eps = world(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || e1.sendrecv(0, Tag::sync(0, 0), vec![10.0, 20.0]));
+        let got0 = e0.sendrecv(1, Tag::sync(0, 0), vec![1.0, 2.0]);
+        let got1 = h.join().unwrap();
+        assert_eq!(got0, vec![10.0, 20.0]);
+        assert_eq!(got1, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn ctrl_messages_reach_handler() {
+        let mut eps = world(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            e1.send_ctrl(0, Payload::Activation { root: 1, version: 3 });
+            e1.send(0, Tag::exchange(3, 0), vec![5.0]);
+            e1
+        });
+        let mut acts = Vec::new();
+        let data = e0.recv_data(1, Tag::exchange(3, 0), |_, m| {
+            if let Payload::Activation { root, version } = m.payload {
+                acts.push((root, version));
+            }
+        });
+        assert_eq!(data, vec![5.0]);
+        assert_eq!(acts, vec![(1, 3)]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn self_sender_delivers() {
+        let mut eps = world(1);
+        let mut e0 = eps.pop().unwrap();
+        let tx = e0.self_sender();
+        tx.send(Message {
+            src: 0,
+            tag: Tag::exchange(0, 0),
+            payload: Payload::AppGroup { version: 9 },
+        })
+        .unwrap();
+        match e0.recv_any().payload {
+            Payload::AppGroup { version } => assert_eq!(version, 9),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut eps = world(2);
+        let mut e0 = eps.remove(0);
+        e0.send(1, Tag::p2p(0, 0), vec![0.0; 100]);
+        assert_eq!(e0.sent_bytes, 400);
+        assert_eq!(e0.sent_msgs, 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration system: a TOML-subset parser (offline environment — no
+//! `toml` crate) plus experiment presets for every paper figure.
+//!
+//! Supported TOML subset (everything the presets use): `[section]` tables,
+//! `key = value` with strings, integers, floats, booleans, and arrays of
+//! scalars; `#` comments.
+
+pub mod preset;
+pub mod toml;
+
+pub use preset::{preset, preset_names, ExperimentPreset};
+pub use toml::TomlDoc;

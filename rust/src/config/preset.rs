@@ -1,0 +1,154 @@
+//! Experiment presets: one per paper figure/table, mapping the evaluation
+//! section's parameters onto simulator and training configurations
+//! (DESIGN.md §4 experiment index).
+
+use crate::data::ImbalanceModel;
+use crate::optim::Algorithm;
+use crate::simulator::{NetworkModel, SimConfig};
+
+/// A named, fully-specified experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentPreset {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Node counts swept (throughput figures).
+    pub node_counts: &'static [usize],
+    /// Per-rank batch size (samples per iteration) for throughput.
+    pub batch: usize,
+    /// Flat model parameter count (payload size = 4 bytes each).
+    pub model_params: usize,
+    pub tau: u64,
+    pub imbalance: ImbalanceModel,
+    /// Algorithms compared in this figure.
+    pub algos: &'static [Algorithm],
+    pub steps: usize,
+}
+
+const FIG4_ALGOS: &[Algorithm] = &[
+    Algorithm::Wagma,
+    Algorithm::AllreduceSgd,
+    Algorithm::LocalSgd,
+    Algorithm::DPsgd,
+    Algorithm::Sgp,
+    Algorithm::EagerSgd,
+    Algorithm::AdPsgd,
+];
+
+const FIG7_ALGOS: &[Algorithm] = &[
+    Algorithm::Wagma,
+    Algorithm::AllreduceSgd,
+    Algorithm::LocalSgd,
+    Algorithm::DPsgd,
+    Algorithm::Sgp,
+    Algorithm::AdPsgd,
+];
+
+const FIG10_ALGOS: &[Algorithm] = &[
+    Algorithm::Wagma,
+    Algorithm::LocalSgd,
+    Algorithm::DPsgd,
+    Algorithm::Sgp,
+    Algorithm::AdPsgd,
+];
+
+/// Look up a preset by figure id.
+pub fn preset(name: &str) -> Option<ExperimentPreset> {
+    let p = match name {
+        // Fig. 4: ResNet-50/ImageNet throughput, b=128, 320 ms on 2 ranks.
+        "fig4" => ExperimentPreset {
+            name: "fig4",
+            description: "ResNet-50 throughput vs P with simulated load imbalance (b=128)",
+            node_counts: &[4, 16, 64, 256],
+            batch: 128,
+            model_params: 25_559_081,
+            tau: 10,
+            imbalance: ImbalanceModel::fig4(),
+            algos: FIG4_ALGOS,
+            steps: 200,
+        },
+        // Fig. 7: Transformer/WMT17 throughput (τ=8, bucketed lengths).
+        "fig7" => ExperimentPreset {
+            name: "fig7",
+            description: "Transformer throughput vs P with bucketed sentence-length imbalance",
+            node_counts: &[4, 16, 64],
+            batch: 8192, // tokens per local batch
+            model_params: 61_362_176,
+            tau: 8,
+            imbalance: ImbalanceModel::fig7(),
+            algos: FIG7_ALGOS,
+            steps: 200,
+        },
+        // Fig. 10: DDPPO/Habitat throughput (heavy-tailed collection).
+        "fig10" => ExperimentPreset {
+            name: "fig10",
+            description: "DDPPO throughput vs P with heavy-tailed experience collection",
+            node_counts: &[16, 64, 256, 1024],
+            batch: 256, // experience steps per iteration
+            model_params: 8_476_421,
+            tau: 8,
+            imbalance: ImbalanceModel::fig9(),
+            algos: FIG10_ALGOS,
+            steps: 100,
+        },
+        _ => return None,
+    };
+    Some(p)
+}
+
+pub fn preset_names() -> &'static [&'static str] {
+    &["fig4", "fig7", "fig10"]
+}
+
+impl ExperimentPreset {
+    /// Simulator configuration for one (algorithm, node count) cell.
+    pub fn sim_config(&self, algo: Algorithm, p: usize, seed: u64) -> SimConfig {
+        SimConfig {
+            algo,
+            p,
+            steps: self.steps,
+            model_bytes: self.model_params * 4,
+            tau: self.tau,
+            group_size: 0, // √P (paper default)
+            dynamic_groups: true,
+            local_sgd_h: 1,
+            sgp_neighbors: if self.name == "fig10" { 4 } else { 2 },
+            imbalance: self.imbalance,
+            net: NetworkModel::aries(),
+            seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist_and_are_paper_shaped() {
+        for name in preset_names() {
+            let p = preset(name).unwrap();
+            assert!(!p.node_counts.is_empty());
+            assert!(p.node_counts.iter().all(|n| n.is_power_of_two()));
+            assert!(p.algos.contains(&Algorithm::Wagma));
+        }
+        assert!(preset("bogus").is_none());
+        // Paper parameters spot-checks.
+        let f4 = preset("fig4").unwrap();
+        assert_eq!(f4.tau, 10);
+        assert_eq!(f4.model_params, 25_559_081);
+        let f10 = preset("fig10").unwrap();
+        assert_eq!(*f10.node_counts.last().unwrap(), 1024);
+    }
+
+    #[test]
+    fn sim_config_wiring() {
+        let p = preset("fig7").unwrap();
+        let cfg = p.sim_config(Algorithm::Sgp, 16, 1);
+        assert_eq!(cfg.p, 16);
+        assert_eq!(cfg.tau, 8);
+        assert_eq!(cfg.model_bytes, 61_362_176 * 4);
+        assert_eq!(cfg.sgp_neighbors, 2);
+        let p10 = preset("fig10").unwrap();
+        assert_eq!(p10.sim_config(Algorithm::Sgp, 16, 1).sgp_neighbors, 4);
+    }
+}

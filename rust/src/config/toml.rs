@@ -1,0 +1,189 @@
+//! Minimal TOML parser: flat `[section]`s of scalar/array key-values.
+
+use std::collections::BTreeMap;
+
+/// A scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `sections["section"]["key"]`. Top-level keys live in
+/// the empty-string section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let v = parse_value(value.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), v);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue, String> {
+    if let Some(body) = v.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = v.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let items = body
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(parse_value)
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    if !v.contains('.') && !v.contains('e') && !v.contains('E') {
+        if let Ok(i) = v.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    v.parse::<f64>().map(TomlValue::Float).map_err(|_| format!("cannot parse value {v:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_presets_shape() {
+        let doc = TomlDoc::parse(
+            r#"
+            # experiment config
+            name = "fig4"
+            [train]
+            algo = "wagma"   # the paper's optimizer
+            p = 64
+            lr = 0.05
+            dynamic = true
+            sizes = [4, 16, 64]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "name", ""), "fig4");
+        assert_eq!(doc.i64_or("train", "p", 0), 64);
+        assert_eq!(doc.f64_or("train", "lr", 0.0), 0.05);
+        assert!(doc.bool_or("train", "dynamic", false));
+        match doc.get("train", "sizes").unwrap() {
+            TomlValue::Array(a) => assert_eq!(a.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        // Defaults for missing keys.
+        assert_eq!(doc.i64_or("train", "missing", 7), 7);
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = TomlDoc::parse(r##"key = "a#b" # comment"##).unwrap();
+        assert_eq!(doc.str_or("", "key", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_reported_with_line_numbers() {
+        assert!(TomlDoc::parse("[unclosed").unwrap_err().contains("line 1"));
+        assert!(TomlDoc::parse("novalue").unwrap_err().contains("line 1"));
+        assert!(TomlDoc::parse("x = @@").is_err());
+    }
+}

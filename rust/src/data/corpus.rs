@@ -1,0 +1,155 @@
+//! Synthetic token corpus for the language-modeling workload.
+//!
+//! Tokens are drawn from a first-order Markov chain whose rows are Zipf
+//! distributions over a small successor set: the corpus has genuinely
+//! learnable bigram structure (a trained LM's loss drops well below the
+//! unigram entropy), with Zipf unigram statistics like natural text.
+//! Deterministic per (seed, rank) so every worker sees a disjoint,
+//! reproducible shard — the paper's random dataset partition.
+
+use crate::model::{Batch, DataArg};
+use crate::util::rng::{Xoshiro256, Zipf};
+
+/// Markov token corpus.
+pub struct TokenCorpus {
+    vocab: usize,
+    seq_len: usize,
+    batch: usize,
+    /// Per-token successor tables: `succ[t]` lists the candidate next
+    /// tokens; picked with Zipf-distributed rank.
+    succ: Vec<Vec<u32>>,
+    zipf: Zipf,
+    rng: Xoshiro256,
+}
+
+/// Successor candidates per token (small enough to be learnable quickly).
+const SUCCESSORS: usize = 8;
+
+impl TokenCorpus {
+    /// `seed` defines the corpus structure (shared by all ranks so they
+    /// learn the same language); `rank` seeds the sampling stream (so every
+    /// rank sees different sentences — the data partition).
+    pub fn new(vocab: usize, seq_len: usize, batch: usize, seed: u64, rank: usize) -> TokenCorpus {
+        let mut structure_rng = Xoshiro256::seed_from_u64(seed);
+        let succ = (0..vocab)
+            .map(|_| {
+                (0..SUCCESSORS)
+                    .map(|_| structure_rng.usize_below(vocab) as u32)
+                    .collect()
+            })
+            .collect();
+        TokenCorpus {
+            vocab,
+            seq_len,
+            batch,
+            succ,
+            zipf: Zipf::new(SUCCESSORS, 1.2),
+            rng: Xoshiro256::seed_from_u64(seed ^ (rank as u64).wrapping_mul(0x5851F42D4C957F2D)),
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Sample one sequence of `len + 1` tokens (inputs + shifted labels).
+    fn sample_seq(&mut self, len: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(len + 1);
+        let mut tok = self.rng.usize_below(self.vocab) as u32;
+        out.push(tok);
+        for _ in 0..len {
+            let rank = self.zipf.sample(&mut self.rng);
+            tok = self.succ[tok as usize][rank];
+            out.push(tok);
+        }
+        out
+    }
+
+    /// Next LM minibatch: `(tokens [B, L], labels [B, L])` as a [`Batch`].
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, l) = (self.batch, self.seq_len);
+        let mut xs = Vec::with_capacity(b * l);
+        let mut ys = Vec::with_capacity(b * l);
+        for _ in 0..b {
+            let seq = self.sample_seq(l);
+            xs.extend(seq[..l].iter().map(|&t| t as i32));
+            ys.extend(seq[1..=l].iter().map(|&t| t as i32));
+        }
+        Batch::new(vec![DataArg::i32(vec![b, l], xs), DataArg::i32(vec![b, l], ys)])
+    }
+
+    /// Bigram cross-entropy lower bound of this corpus (nats): what a
+    /// perfect bigram model would achieve. Used by tests to check the LM
+    /// is actually learning structure.
+    pub fn bigram_entropy(&self) -> f64 {
+        // The successor is Zipf(SUCCESSORS, 1.2)-distributed over the row;
+        // rows may repeat tokens which only lowers true entropy, so this is
+        // an upper bound on the bigram entropy.
+        let s = 1.2;
+        let weights: Vec<f64> = (1..=SUCCESSORS).map(|k| (k as f64).powf(-s)).collect();
+        let z: f64 = weights.iter().sum();
+        -weights.iter().map(|w| (w / z) * (w / z).ln()).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let mut c = TokenCorpus::new(256, 32, 8, 42, 0);
+        let b = c.next_batch();
+        assert_eq!(b.args.len(), 2);
+        assert_eq!(b.args[0].shape(), &[8, 32]);
+        match (&b.args[0], &b.args[1]) {
+            (DataArg::I32 { values: x, .. }, DataArg::I32 { values: y, .. }) => {
+                assert!(x.iter().all(|&t| (0..256).contains(&t)));
+                assert!(y.iter().all(|&t| (0..256).contains(&t)));
+                // Labels are inputs shifted by one within each row.
+                assert_eq!(x[1], y[0]);
+            }
+            _ => panic!("wrong dtypes"),
+        }
+    }
+
+    #[test]
+    fn ranks_get_different_data_same_language() {
+        let mut a = TokenCorpus::new(64, 16, 4, 7, 0);
+        let mut b = TokenCorpus::new(64, 16, 4, 7, 1);
+        assert_ne!(a.next_batch(), b.next_batch(), "shards must differ");
+        // Same structure: successor tables identical.
+        assert_eq!(a.succ, b.succ);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = TokenCorpus::new(64, 16, 4, 7, 3);
+        let mut b = TokenCorpus::new(64, 16, 4, 7, 3);
+        assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn labels_follow_markov_structure() {
+        // Every (x -> y) transition must be in the successor table.
+        let mut c = TokenCorpus::new(128, 64, 4, 11, 0);
+        let b = c.next_batch();
+        if let (DataArg::I32 { values: xs, .. }, DataArg::I32 { values: ys, .. }) =
+            (&b.args[0], &b.args[1])
+        {
+            for (x, y) in xs.iter().zip(ys.iter()) {
+                assert!(
+                    c.succ[*x as usize].contains(&(*y as u32)),
+                    "transition {x}->{y} not in table"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bigram_entropy_below_uniform() {
+        let c = TokenCorpus::new(256, 32, 8, 42, 0);
+        let h = c.bigram_entropy();
+        assert!(h > 0.0 && h < (256f64).ln(), "h={h}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Load-imbalance process models — the paper's three workload regimes.
+//!
+//! * [`ImbalanceModel::RandomStragglers`]: the Fig. 4 protocol — at every
+//!   training step, `count` uniformly-chosen ranks are delayed by a fixed
+//!   amount (paper: 2 ranks, 320 ms) on top of a lightly-noised base time.
+//! * [`ImbalanceModel::BucketedLognormal`]: WMT-style sentence-length
+//!   buckets (Fig. 6): per step each rank samples a bucket, and compute
+//!   time scales with the bucket's (lognormal) length.
+//! * [`ImbalanceModel::HeavyTail`]: RL experience collection (Fig. 9):
+//!   lognormal with heavy σ, clamped to the paper's observed range
+//!   (median ≈ 2 s, max ≈ 43 s).
+//!
+//! The same model drives both the real-thread runners (as actual sleeps)
+//! and the discrete-event simulator (as sampled durations).
+
+use crate::util::rng::Xoshiro256;
+
+/// Per-step compute-time model for one cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ImbalanceModel {
+    /// Perfectly balanced: `base` seconds per step with mild jitter.
+    Balanced { base: f64, jitter: f64 },
+    /// Fig. 4: `count` random ranks get `base + delay`; rest get `base`.
+    RandomStragglers { base: f64, jitter: f64, delay: f64, count: usize },
+    /// Fig. 6/7: `scale * exp(N(mu, sigma))`, quantized into `buckets`
+    /// (bucketing reduces but does not eliminate variance, like WMT17).
+    BucketedLognormal { scale: f64, mu: f64, sigma: f64, buckets: usize },
+    /// Fig. 9/10: lognormal heavy tail clamped to [min, max].
+    HeavyTail { median: f64, sigma: f64, min: f64, max: f64 },
+}
+
+impl ImbalanceModel {
+    /// Paper Fig. 4 configuration (ResNet-50, b=128, P100): ≈ 0.40 s/step
+    /// base, 320 ms injected on 2 ranks.
+    pub fn fig4() -> ImbalanceModel {
+        ImbalanceModel::RandomStragglers { base: 0.40, jitter: 0.01, delay: 0.32, count: 2 }
+    }
+
+    /// Paper Fig. 6/7 configuration (Transformer, 8192-token batches).
+    /// Lognormal fitted to Fig. 6's shape: median ≈ 0.55 s, long right
+    /// tail to ≈ 2 s, quantized into 10 buckets.
+    pub fn fig7() -> ImbalanceModel {
+        ImbalanceModel::BucketedLognormal { scale: 0.55, mu: 0.0, sigma: 0.45, buckets: 10 }
+    }
+
+    /// Paper Fig. 9/10 configuration (Habitat experience collection):
+    /// median < 2 s, range 1.7–43.5 s.
+    pub fn fig9() -> ImbalanceModel {
+        ImbalanceModel::HeavyTail { median: 1.9, sigma: 0.75, min: 1.7, max: 43.5 }
+    }
+
+    /// Mean compute time (approximate; used for throughput normalization).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            ImbalanceModel::Balanced { base, .. } => base,
+            ImbalanceModel::RandomStragglers { base, .. } => base, // + count/P * delay, P-dependent
+            ImbalanceModel::BucketedLognormal { scale, mu, sigma, .. } => {
+                scale * (mu + sigma * sigma / 2.0).exp()
+            }
+            ImbalanceModel::HeavyTail { median, sigma, .. } => {
+                median * (sigma * sigma / 2.0).exp()
+            }
+        }
+    }
+}
+
+/// Per-iteration delay sampler for `P` ranks.
+pub struct StepDelays {
+    model: ImbalanceModel,
+    p: usize,
+    rng: Xoshiro256,
+}
+
+impl StepDelays {
+    pub fn new(model: ImbalanceModel, p: usize, seed: u64) -> StepDelays {
+        StepDelays { model, p, rng: Xoshiro256::seed_from_u64(seed) }
+    }
+
+    /// Compute times (seconds) for all `P` ranks at one training step.
+    pub fn sample_step(&mut self) -> Vec<f64> {
+        match self.model {
+            ImbalanceModel::Balanced { base, jitter } => (0..self.p)
+                .map(|_| (base + self.rng.normal(0.0, jitter)).max(0.0))
+                .collect(),
+            ImbalanceModel::RandomStragglers { base, jitter, delay, count } => {
+                let mut times: Vec<f64> = (0..self.p)
+                    .map(|_| (base + self.rng.normal(0.0, jitter)).max(0.0))
+                    .collect();
+                let c = count.min(self.p);
+                for idx in self.rng.sample_distinct(self.p, c) {
+                    times[idx] += delay;
+                }
+                times
+            }
+            ImbalanceModel::BucketedLognormal { scale, mu, sigma, buckets } => (0..self.p)
+                .map(|_| {
+                    let raw = self.rng.lognormal(mu, sigma);
+                    // Quantize into `buckets` levels between p5 and p95 of
+                    // the lognormal (bucketing à la WMT batching).
+                    let lo = (mu - 1.64 * sigma).exp();
+                    let hi = (mu + 1.64 * sigma).exp();
+                    let clamped = raw.clamp(lo, hi);
+                    let b = (((clamped - lo) / (hi - lo) * buckets as f64).floor())
+                        .min(buckets as f64 - 1.0);
+                    let level = lo + (b + 0.5) / buckets as f64 * (hi - lo);
+                    scale * level
+                })
+                .collect(),
+            ImbalanceModel::HeavyTail { median, sigma, min, max } => (0..self.p)
+                .map(|_| (median * self.rng.lognormal(0.0, sigma)).clamp(min, max))
+                .collect(),
+        }
+    }
+
+    /// Draw `steps` iterations of per-rank times (steps × P).
+    pub fn sample_many(&mut self, steps: usize) -> Vec<Vec<f64>> {
+        (0..steps).map(|_| self.sample_step()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn fig4_two_stragglers_per_step() {
+        let mut d = StepDelays::new(ImbalanceModel::fig4(), 16, 1);
+        for _ in 0..50 {
+            let times = d.sample_step();
+            let slow = times.iter().filter(|&&t| t > 0.55).count();
+            assert_eq!(slow, 2, "{times:?}");
+        }
+    }
+
+    #[test]
+    fn fig9_heavy_tail_stats() {
+        let mut d = StepDelays::new(ImbalanceModel::fig9(), 1, 2);
+        let samples: Vec<f64> = (0..20_000).map(|_| d.sample_step()[0]).collect();
+        let s = Summary::of(&samples);
+        assert!(s.min >= 1.7 && s.max <= 43.5);
+        assert!((s.p50 - 1.9).abs() < 0.5, "median {}", s.p50);
+        // Heavy tail: p99 far above median.
+        assert!(s.p99 > 3.0 * s.p50, "p99 {} p50 {}", s.p99, s.p50);
+    }
+
+    #[test]
+    fn bucketed_quantizes() {
+        let mut d = StepDelays::new(ImbalanceModel::fig7(), 1, 3);
+        let mut levels: Vec<u64> = (0..5000)
+            .map(|_| (d.sample_step()[0] * 1e6) as u64)
+            .collect();
+        levels.sort_unstable();
+        levels.dedup();
+        assert!(levels.len() <= 10, "expected ≤ 10 buckets, got {}", levels.len());
+        assert!(levels.len() >= 5, "expected several buckets, got {}", levels.len());
+    }
+
+    #[test]
+    fn balanced_has_low_variance() {
+        let mut d = StepDelays::new(ImbalanceModel::Balanced { base: 0.1, jitter: 0.001 }, 8, 4);
+        let all: Vec<f64> = d.sample_many(100).into_iter().flatten().collect();
+        let s = Summary::of(&all);
+        assert!((s.mean - 0.1).abs() < 0.01);
+        assert!(s.std < 0.01);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = StepDelays::new(ImbalanceModel::fig9(), 4, 9);
+        let mut b = StepDelays::new(ImbalanceModel::fig9(), 4, 9);
+        assert_eq!(a.sample_many(10), b.sample_many(10));
+    }
+}

@@ -1,0 +1,23 @@
+//! Synthetic workload substrates.
+//!
+//! The paper trains on ImageNet, WMT17 and Habitat — none available here
+//! (repro band 0/5). Per the substitution rule we generate synthetic
+//! datasets that exercise the *same* mechanisms (DESIGN.md §2):
+//!
+//! * [`corpus`] — a Zipf-distributed Markov token corpus for the LM
+//!   (learnable bigram structure, natural-language-like unigram stats),
+//!   with the WMT-style **bucketed sentence-length** distribution driving
+//!   per-step compute imbalance (Fig. 6).
+//! * [`classify`] — Gaussian cluster classification set for the
+//!   image-classification analogue (Fig. 4/5).
+//! * [`imbalance`] — the paper's three load-imbalance processes:
+//!   320 ms delay on 2 random ranks per step (Fig. 4), bucketed lognormal
+//!   (Fig. 6/7), and heavy-tailed RL episode times (Fig. 9/10).
+
+pub mod classify;
+pub mod corpus;
+pub mod imbalance;
+
+pub use classify::ClassifyDataset;
+pub use corpus::TokenCorpus;
+pub use imbalance::{ImbalanceModel, StepDelays};

@@ -1,0 +1,350 @@
+//! Figure harnesses: one entry point per paper figure/ablation
+//! (DESIGN.md §4). Each regenerates the figure's series — printed as a
+//! table and written as CSV under the output directory.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::preset;
+use crate::data::{ImbalanceModel, StepDelays};
+use crate::metrics::{CsvWriter, TrainResult};
+use crate::optim::engine::EngineFactory;
+use crate::optim::pjrt_engine::{PjrtEngine, RlEngine};
+use crate::optim::{run_training, Algorithm, SleepEngine, TrainConfig};
+use crate::runtime::ModelRuntime;
+use crate::simulator::simulate;
+use crate::util::stats::{ascii_histogram, Summary};
+
+/// Scale factor applied to paper-seconds in the real-thread convergence
+/// figures (sleeps shrink 20×; ratios between algorithms are preserved).
+pub const TIME_SCALE: f64 = 0.05;
+
+/// Throughput figures (Fig. 4 / 7 / 10): simulator sweep over
+/// (algorithm × node count).
+pub fn fig_throughput(name: &str, out_dir: &str, quick: bool) -> anyhow::Result<()> {
+    let p = preset(name).ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+    println!("== {} — {} ==", p.name, p.description);
+    println!(
+        "{:<14} {:>6} {:>16} {:>16} {:>10} {:>10}",
+        "algorithm", "P", "throughput/s", "ideal/s", "eff", "skew(s)"
+    );
+    let mut csv = CsvWriter::create(
+        Path::new(out_dir).join(format!("{name}.csv")),
+        &["algo", "p", "throughput", "ideal_throughput", "efficiency", "mean_skew_s"],
+    )?;
+    let counts: Vec<usize> =
+        if quick { p.node_counts.iter().copied().take(2).collect() } else { p.node_counts.to_vec() };
+    for &n in &counts {
+        for &algo in p.algos {
+            let mut cfg = p.sim_config(algo, n, 42);
+            if quick {
+                cfg.steps = 50;
+            }
+            let r = simulate(&cfg);
+            let thr = r.throughput(p.batch);
+            let ideal = r.ideal_throughput(p.batch);
+            println!(
+                "{:<14} {:>6} {:>16.0} {:>16.0} {:>9.1}% {:>10.3}",
+                algo.name(),
+                n,
+                thr,
+                ideal,
+                100.0 * thr / ideal,
+                r.mean_skew
+            );
+            csv.row(&[
+                algo.name().to_string(),
+                n.to_string(),
+                format!("{thr:.1}"),
+                format!("{ideal:.1}"),
+                format!("{:.4}", thr / ideal),
+                format!("{:.4}", r.mean_skew),
+            ])?;
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Fig. 6 / Fig. 9: per-step runtime distributions of the two imbalanced
+/// workloads (bucketed sentence lengths; heavy-tailed experience
+/// collection).
+pub fn fig_distribution(name: &str, out_dir: &str) -> anyhow::Result<()> {
+    let (model, label) = match name {
+        "fig6" => (ImbalanceModel::fig7(), "Transformer per-step runtime (bucketed lengths)"),
+        "fig9" => (ImbalanceModel::fig9(), "RL experience-collection runtime (heavy tail)"),
+        _ => anyhow::bail!("unknown distribution figure {name}"),
+    };
+    let mut d = StepDelays::new(model, 1, 42);
+    let samples: Vec<f64> = (0..5000).map(|_| d.sample_step()[0]).collect();
+    let s = Summary::of(&samples);
+    println!("== {name} — {label} ==");
+    println!(
+        "n={} mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s max={:.3}s",
+        s.n, s.mean, s.p50, s.p95, s.p99, s.max
+    );
+    println!("{}", ascii_histogram(&samples, 16, 50));
+    let mut csv = CsvWriter::create(Path::new(out_dir).join(format!("{name}.csv")), &["seconds"])?;
+    for x in &samples {
+        csv.rowf(&[*x])?;
+    }
+    Ok(())
+}
+
+/// Shared driver for the convergence figures: run each algorithm on the
+/// same model with the same injected imbalance, and report the task metric
+/// over (scaled) wall-clock time.
+#[allow(clippy::too_many_arguments)]
+pub fn convergence_sweep(
+    figure: &str,
+    model: &'static str,
+    artifacts_dir: &'static str,
+    algos: &[Algorithm],
+    p: usize,
+    steps: u64,
+    tau: u64,
+    lr: f32,
+    imbalance: ImbalanceModel,
+    out_dir: &str,
+) -> anyhow::Result<Vec<TrainResult>> {
+    let init = ModelRuntime::load(artifacts_dir, model)?.init_params()?;
+    let is_rl = model.starts_with("policy");
+    let mut results = Vec::new();
+    let mut csv = CsvWriter::create(
+        Path::new(out_dir).join(format!("{figure}.csv")),
+        &["algo", "step", "metric", "wall_s", "train_loss"],
+    )?;
+
+    for &algo in algos {
+        let schedule = SleepEngine::<PjrtEngine>::schedule(imbalance, p, steps as usize, 42);
+        let factory: EngineFactory = {
+            let schedule = schedule.clone();
+            Arc::new(move |rank| {
+                if is_rl {
+                    let eng = RlEngine::new(artifacts_dir, model, rank, 42)
+                        .expect("load RL engine");
+                    Box::new(SleepEngine::new(eng, rank, schedule.clone(), TIME_SCALE))
+                } else {
+                    let eng = PjrtEngine::new(artifacts_dir, model, rank, 42)
+                        .expect("load PJRT engine");
+                    Box::new(SleepEngine::new(eng, rank, schedule.clone(), TIME_SCALE))
+                }
+            })
+        };
+        let cfg = TrainConfig {
+            algo,
+            p,
+            steps,
+            lr,
+            tau,
+            eval_every: (steps / 20).max(1),
+            init: init.clone(),
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let r = run_training(&cfg, factory);
+        let wall = t0.elapsed().as_secs_f64();
+        let curve = r.eval_curve();
+        let last = curve.last().map(|(_, v)| *v).unwrap_or(f32::NAN);
+        println!(
+            "{figure}: {:<14} wall={:>7.1}s final_metric={:>8.4} mean_staleness={:.2} divergence={:.2e}",
+            algo.name(),
+            wall,
+            last,
+            r.mean_staleness(),
+            r.model_divergence()
+        );
+        let losses = r.loss_curve();
+        for (i, (step, metric)) in curve.iter().enumerate() {
+            // Approximate wall time at this eval point: proportional share.
+            let w = wall * (i + 1) as f64 / curve.len() as f64;
+            let train_loss = losses
+                .get(*step as usize)
+                .map(|(_, l)| *l)
+                .unwrap_or(f32::NAN);
+            csv.row(&[
+                algo.name().to_string(),
+                step.to_string(),
+                format!("{metric}"),
+                format!("{w:.3}"),
+                format!("{train_loss}"),
+            ])?;
+        }
+        results.push(r);
+    }
+    Ok(results)
+}
+
+/// Fig. 5 analogue: classifier accuracy under the Fig. 4 imbalance.
+pub fn fig5(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+    let steps = if quick { 60 } else { 400 };
+    let algos = [
+        Algorithm::Wagma,
+        Algorithm::AllreduceSgd,
+        Algorithm::LocalSgd,
+        Algorithm::DPsgd,
+        Algorithm::Sgp,
+        Algorithm::AdPsgd,
+        Algorithm::EagerSgd,
+    ];
+    println!("== fig5 — classifier accuracy vs time (imbalanced, P=8) ==");
+    convergence_sweep(
+        "fig5",
+        "mlp_small",
+        "artifacts",
+        &algos,
+        8,
+        steps,
+        10,
+        0.05,
+        ImbalanceModel::fig4(),
+        out_dir,
+    )?;
+    Ok(())
+}
+
+/// Fig. 8 analogue: LM eval loss under bucketed-length imbalance.
+pub fn fig8(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+    let steps = if quick { 40 } else { 200 };
+    let algos = [
+        Algorithm::Wagma,
+        Algorithm::AllreduceSgd,
+        Algorithm::LocalSgd,
+        Algorithm::DPsgd,
+        Algorithm::Sgp,
+        Algorithm::AdPsgd,
+    ];
+    println!("== fig8 — LM eval loss vs time (bucketed imbalance, P=4) ==");
+    convergence_sweep(
+        "fig8",
+        "lm_tiny",
+        "artifacts",
+        &algos,
+        4,
+        steps,
+        8,
+        0.1,
+        ImbalanceModel::fig7(),
+        out_dir,
+    )?;
+    Ok(())
+}
+
+/// Fig. 11 analogue: RL mean return vs time (heavy-tailed collection).
+pub fn fig11(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+    let steps = if quick { 40 } else { 300 };
+    let algos = [
+        Algorithm::Wagma,
+        Algorithm::LocalSgd,
+        Algorithm::DPsgd,
+        Algorithm::Sgp,
+        Algorithm::AdPsgd,
+    ];
+    println!("== fig11 — RL mean return vs time (P=4) ==");
+    convergence_sweep(
+        "fig11",
+        "policy_tiny",
+        "artifacts",
+        &algos,
+        4,
+        steps,
+        8,
+        0.003,
+        ImbalanceModel::fig9(),
+        out_dir,
+    )?;
+    Ok(())
+}
+
+/// Ablations ❶–❹ (paper §V-B): WAGMA variants on the classifier.
+pub fn ablation(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+    let steps = if quick { 60 } else { 400 };
+    let p = 16;
+    let init = ModelRuntime::load("artifacts", "mlp_small")?.init_params()?;
+    println!("== ablation — WAGMA design choices (P={p}, mlp_small) ==");
+    let mut csv = CsvWriter::create(
+        Path::new(out_dir).join("ablation.csv"),
+        &["variant", "final_metric", "mean_staleness"],
+    )?;
+
+    struct Variant {
+        name: &'static str,
+        algo: Algorithm,
+        group_size: usize,
+        dynamic: bool,
+        tau: u64,
+        local_h: u64,
+    }
+    let variants = [
+        Variant { name: "wagma_sqrtP", algo: Algorithm::Wagma, group_size: 0, dynamic: true, tau: 10, local_h: 1 },
+        // ❶ no group collectives: local SGD with H = τ.
+        Variant { name: "no_group_collectives", algo: Algorithm::LocalSgd, group_size: 0, dynamic: true, tau: 10, local_h: 10 },
+        // ❷ fixed groups.
+        Variant { name: "fixed_groups", algo: Algorithm::Wagma, group_size: 0, dynamic: false, tau: 10, local_h: 1 },
+        // ❸ S = P (global collective).
+        Variant { name: "group_size_P", algo: Algorithm::Wagma, group_size: p, dynamic: true, tau: 10, local_h: 1 },
+        // ❹ S = 2 (gossip-sized groups).
+        Variant { name: "group_size_2", algo: Algorithm::Wagma, group_size: 2, dynamic: true, tau: 10, local_h: 1 },
+    ];
+
+    for v in &variants {
+        let schedule =
+            SleepEngine::<PjrtEngine>::schedule(ImbalanceModel::fig4(), p, steps as usize, 42);
+        let factory: EngineFactory = {
+            let schedule = schedule.clone();
+            Arc::new(move |rank| {
+                let eng =
+                    PjrtEngine::new("artifacts", "mlp_small", rank, 42).expect("load engine");
+                Box::new(SleepEngine::new(eng, rank, schedule.clone(), TIME_SCALE))
+            })
+        };
+        let cfg = TrainConfig {
+            algo: v.algo,
+            p,
+            steps,
+            lr: 0.05,
+            tau: v.tau,
+            group_size: v.group_size,
+            dynamic_groups: v.dynamic,
+            local_sgd_h: v.local_h,
+            eval_every: (steps / 10).max(1),
+            init: init.clone(),
+            ..Default::default()
+        };
+        let r = run_training(&cfg, factory);
+        let last = r.eval_curve().last().map(|(_, v)| *v).unwrap_or(f32::NAN);
+        println!(
+            "{:<24} final_metric={:>8.4} staleness={:.2}",
+            v.name,
+            last,
+            r.mean_staleness()
+        );
+        csv.row(&[
+            v.name.to_string(),
+            format!("{last}"),
+            format!("{:.4}", r.mean_staleness()),
+        ])?;
+    }
+    Ok(())
+}
+
+/// Figs. 1–3: protocol demonstration traces (activation tree, dynamic
+/// grouping, straggler snapshot) — printed, not measured.
+pub fn fig_protocol_demos() {
+    use crate::topology::{BinomialTree, Grouping};
+    println!("== Fig. 1 — activation tree (P=4, activator P1) ==");
+    let t = BinomialTree::new(4);
+    for rank in 0..4 {
+        println!("  P{rank} forwards to {:?}", t.children(1, rank));
+    }
+    println!("\n== Fig. 2 — dynamic grouping (P=8, S=4) ==");
+    let g = Grouping::new(8, 4);
+    for it in 0..4u64 {
+        println!("  iteration {it}: groups {:?}", g.groups(it));
+    }
+    println!(
+        "\n  update propagation: log_S P = {} iterations",
+        g.propagation_iters()
+    );
+    println!("\n== Fig. 3 — see `cargo test -p wagma straggler` for the executable snapshot ==");
+}

@@ -1,0 +1,36 @@
+//! # WAGMA-SGD — Wait-Avoiding Group Model Averaging
+//!
+//! Production-quality reproduction of *"Breaking (Global) Barriers in
+//! Parallel Stochastic Optimization with Wait-Avoiding Group Averaging"*
+//! (Li et al., IEEE TPDS 2020).
+//!
+//! The library is organized in three layers:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: the
+//!   wait-avoiding group allreduce ([`collectives::engine`]), the dynamic
+//!   grouping strategy ([`topology::grouping`]), WAGMA-SGD and six baseline
+//!   distributed optimizers ([`optim`]), a discrete-event cluster simulator
+//!   for at-scale experiments ([`simulator`]), and the PJRT runtime that
+//!   executes AOT-compiled models ([`runtime`]).
+//! * **L2 (python/compile/model.py)** — JAX model definitions (transformer
+//!   LM, MLP classifier, RL policy) lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, verified against a pure-jnp oracle.
+//!
+//! Python never runs at training time: the Rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API and drives everything.
+
+pub mod bench;
+pub mod collectives;
+pub mod figures;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod rl;
+pub mod runtime;
+pub mod simulator;
+pub mod topology;
+pub mod util;

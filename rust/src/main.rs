@@ -1,0 +1,209 @@
+//! `wagma` — the WAGMA-SGD launcher.
+//!
+//! Subcommands:
+//!   figure <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|ablation|all>
+//!          [--out results] [--quick]
+//!        Regenerate the paper's figures (simulator sweeps, real training
+//!        convergence runs, distribution plots).
+//!   train  --model <name> --algo <name> --p N --steps N [--lr F] [--tau N]
+//!          [--group-size N] [--static-groups] [--eval-every N] [--out results]
+//!        Real multi-worker training through the PJRT artifacts.
+//!   simulate --algo <name> --p N [--steps N] [--params N] [--tau N]
+//!            [--imbalance fig4|fig7|fig9|balanced] [--group-size N]
+//!        One discrete-event simulation run at any scale.
+//!   list
+//!        Show available models, algorithms, presets.
+
+use std::sync::Arc;
+
+use wagma::config::preset_names;
+use wagma::data::ImbalanceModel;
+use wagma::figures;
+use wagma::optim::engine::EngineFactory;
+use wagma::optim::pjrt_engine::{PjrtEngine, RlEngine};
+use wagma::optim::{run_training, Algorithm, TrainConfig};
+use wagma::runtime::{Manifest, ModelRuntime};
+use wagma::simulator::{simulate, SimConfig};
+use wagma::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("figure") => cmd_figure(&args),
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("list") => cmd_list(),
+        _ => {
+            eprintln!("usage: wagma <figure|train|simulate|list> [flags]  (see src/main.rs docs)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    let out = args.str_or("out", "results");
+    let quick = args.has("quick");
+    std::fs::create_dir_all(&out)?;
+    let run = |name: &str| -> anyhow::Result<()> {
+        match name {
+            "fig1" | "fig2" | "fig3" => {
+                figures::fig_protocol_demos();
+                Ok(())
+            }
+            "fig4" | "fig7" | "fig10" => figures::fig_throughput(name, &out, quick),
+            "fig6" | "fig9" => figures::fig_distribution(name, &out),
+            "fig5" => figures::fig5(&out, quick),
+            "fig8" => figures::fig8(&out, quick),
+            "fig11" => figures::fig11(&out, quick),
+            "ablation" => figures::ablation(&out, quick),
+            other => anyhow::bail!("unknown figure {other}"),
+        }
+    };
+    if which == "all" {
+        for name in
+            ["fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "ablation"]
+        {
+            run(name)?;
+            println!();
+        }
+        Ok(())
+    } else {
+        run(&which)
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let model: &'static str = Box::leak(args.str_or("model", "mlp_tiny").into_boxed_str());
+    let artifacts: &'static str =
+        Box::leak(args.str_or("artifacts", "artifacts").into_boxed_str());
+    let algo: Algorithm = args
+        .str_or("algo", "wagma")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let p = args.usize_or("p", 4);
+    let steps = args.u64_or("steps", 100);
+
+    let rt = ModelRuntime::load(artifacts, model)?;
+    let init = rt.init_params()?;
+    let is_rl = rt.meta.kind == "policy";
+    let samples_per_step = rt.meta.batch;
+    drop(rt);
+
+    let seed = args.u64_or("seed", 42);
+    let factory: EngineFactory = Arc::new(move |rank| {
+        if is_rl {
+            Box::new(RlEngine::new(artifacts, model, rank, seed).expect("load RL engine"))
+        } else {
+            Box::new(PjrtEngine::new(artifacts, model, rank, seed).expect("load engine"))
+        }
+    });
+    let cfg = TrainConfig {
+        algo,
+        p,
+        steps,
+        lr: args.f64_or("lr", 0.05) as f32,
+        tau: args.u64_or("tau", 10),
+        group_size: args.usize_or("group-size", 0),
+        dynamic_groups: !args.has("static-groups"),
+        local_sgd_h: args.u64_or("local-h", 1),
+        sgp_neighbors: args.usize_or("sgp-neighbors", 2),
+        seed,
+        eval_every: args.u64_or("eval-every", (steps / 10).max(1)),
+        init,
+    };
+    println!(
+        "training {model} with {} on P={p} (S={}, tau={}) for {steps} steps ...",
+        algo.name(),
+        cfg.resolved_group_size(),
+        cfg.tau
+    );
+    let r = run_training(&cfg, factory);
+    println!(
+        "done in {:.1}s — throughput {:.0} samples/s, mean staleness {:.2}, divergence {:.2e}",
+        r.wall_seconds,
+        r.throughput(samples_per_step),
+        r.mean_staleness(),
+        r.model_divergence()
+    );
+    for (t, v) in r.eval_curve() {
+        println!("  step {t:>6}  metric {v:.4}");
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::create_dir_all(out)?;
+        let path = std::path::Path::new(out).join(format!("train_{}_{model}.json", algo.name()));
+        std::fs::write(&path, r.to_json().to_string())?;
+        println!("wrote {path:?}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let algo: Algorithm = args
+        .str_or("algo", "wagma")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let imbalance = match args.str_or("imbalance", "fig4").as_str() {
+        "fig4" => ImbalanceModel::fig4(),
+        "fig7" => ImbalanceModel::fig7(),
+        "fig9" => ImbalanceModel::fig9(),
+        "balanced" => ImbalanceModel::Balanced { base: 0.4, jitter: 0.01 },
+        other => anyhow::bail!("unknown imbalance model {other}"),
+    };
+    let cfg = SimConfig {
+        algo,
+        p: args.usize_or("p", 64),
+        steps: args.usize_or("steps", 200),
+        model_bytes: args.usize_or("params", 25_559_081) * 4,
+        tau: args.u64_or("tau", 10),
+        group_size: args.usize_or("group-size", 0),
+        dynamic_groups: !args.has("static-groups"),
+        local_sgd_h: args.u64_or("local-h", 1),
+        sgp_neighbors: args.usize_or("sgp-neighbors", 2),
+        imbalance,
+        seed: args.u64_or("seed", 42),
+        ..Default::default()
+    };
+    let b = args.usize_or("batch", 128);
+    let r = simulate(&cfg);
+    let su = r.iter_time_summary();
+    println!("algorithm      : {}", r.algo);
+    println!("ranks          : {}", r.p);
+    println!("makespan       : {:.2} s  (ideal {:.2} s)", r.makespan, r.ideal_makespan);
+    println!(
+        "throughput     : {:.0} samples/s  (ideal {:.0}, efficiency {:.1}%)",
+        r.throughput(b),
+        r.ideal_throughput(b),
+        100.0 * r.throughput(b) / r.ideal_throughput(b)
+    );
+    println!("iter time      : p50 {:.3} s  p95 {:.3} s  max {:.3} s", su.p50, su.p95, su.max);
+    println!("mean skew      : {:.3} s", r.mean_skew);
+    Ok(())
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    println!("algorithms:");
+    for a in Algorithm::all() {
+        println!("  {}", a.name());
+    }
+    println!("\nfigure presets: {:?}", preset_names());
+    println!("\nfigures: fig1..fig11, ablation (wagma figure <id>)");
+    match Manifest::load("artifacts/manifest.json") {
+        Ok(m) => {
+            println!("\nmodels (artifacts/):");
+            for (name, meta) in &m.models {
+                println!(
+                    "  {:<12} kind={:<10} params={:>10} batch={}",
+                    name, meta.kind, meta.param_count, meta.batch
+                );
+            }
+        }
+        Err(_) => println!("\nmodels: none built — run `make artifacts`"),
+    }
+    Ok(())
+}

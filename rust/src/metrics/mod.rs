@@ -1,0 +1,224 @@
+//! Training metrics: per-rank step records, merged run summaries, and
+//! CSV/JSON emitters for the figure harnesses.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::stats::Summary;
+
+/// One training step as observed by one rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    pub t: u64,
+    pub loss: f32,
+    /// Wall-clock seconds spent in this iteration (compute + comm).
+    pub wall: f64,
+    /// Staleness of this rank's contribution (WAGMA/eager only; 0 = fresh).
+    pub staleness: u64,
+}
+
+/// Everything one rank reports at the end of a run.
+#[derive(Debug, Clone, Default)]
+pub struct RankMetrics {
+    pub rank: usize,
+    pub steps: Vec<StepRecord>,
+    pub total_seconds: f64,
+    pub sent_msgs: u64,
+    pub sent_bytes: u64,
+    /// Periodic evaluation metric (accuracy / eval loss / mean return),
+    /// as (step, value).
+    pub evals: Vec<(u64, f32)>,
+}
+
+/// Merged result of a multi-rank training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainResult {
+    pub algo: String,
+    pub p: usize,
+    pub per_rank: Vec<RankMetrics>,
+    /// Final model per rank (post-run consensus check / evaluation).
+    pub final_params: Vec<Vec<f32>>,
+    pub wall_seconds: f64,
+}
+
+impl TrainResult {
+    /// Samples (or experience steps) per second across the whole cluster.
+    pub fn throughput(&self, samples_per_step: usize) -> f64 {
+        let total_steps: usize = self.per_rank.iter().map(|r| r.steps.len()).sum();
+        (total_steps * samples_per_step) as f64 / self.wall_seconds.max(1e-12)
+    }
+
+    /// Mean training loss per iteration index, averaged over ranks.
+    pub fn loss_curve(&self) -> Vec<(u64, f32)> {
+        if self.per_rank.is_empty() {
+            return Vec::new();
+        }
+        let steps = self.per_rank.iter().map(|r| r.steps.len()).min().unwrap_or(0);
+        (0..steps)
+            .map(|i| {
+                let sum: f32 = self.per_rank.iter().map(|r| r.steps[i].loss).sum();
+                (self.per_rank[0].steps[i].t, sum / self.per_rank.len() as f32)
+            })
+            .collect()
+    }
+
+    /// Distribution of per-iteration wall times across all ranks/steps.
+    pub fn iter_time_summary(&self) -> Summary {
+        let all: Vec<f64> =
+            self.per_rank.iter().flat_map(|r| r.steps.iter().map(|s| s.wall)).collect();
+        Summary::of(&all)
+    }
+
+    /// Mean staleness across all contributions (0 for synchronous algos).
+    pub fn mean_staleness(&self) -> f64 {
+        let (mut n, mut sum) = (0u64, 0u64);
+        for r in &self.per_rank {
+            for st in &r.steps {
+                n += 1;
+                sum += st.staleness;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+
+    /// Maximum pairwise L∞ distance between final rank models — the model
+    /// consistency check (must be ~0 right after a global sync).
+    pub fn model_divergence(&self) -> f32 {
+        let mut worst = 0.0f32;
+        for a in &self.final_params {
+            for b in &self.final_params {
+                worst = worst.max(crate::util::max_abs_diff(a, b));
+            }
+        }
+        worst
+    }
+
+    /// Mean of per-rank eval curves: (step, mean value).
+    pub fn eval_curve(&self) -> Vec<(u64, f32)> {
+        let Some(first) = self.per_rank.first() else { return Vec::new() };
+        let n_evals = self.per_rank.iter().map(|r| r.evals.len()).min().unwrap_or(0);
+        (0..n_evals)
+            .map(|i| {
+                let sum: f32 = self.per_rank.iter().map(|r| r.evals[i].1).sum();
+                (first.evals[i].0, sum / self.per_rank.len() as f32)
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("algo", s(&self.algo)),
+            ("p", num(self.p as f64)),
+            ("wall_seconds", num(self.wall_seconds)),
+            (
+                "loss_curve",
+                arr(self
+                    .loss_curve()
+                    .into_iter()
+                    .map(|(t, l)| arr([num(t as f64), num(l as f64)]))),
+            ),
+            (
+                "eval_curve",
+                arr(self
+                    .eval_curve()
+                    .into_iter()
+                    .map(|(t, v)| arr([num(t as f64), num(v as f64)]))),
+            ),
+            ("mean_staleness", num(self.mean_staleness())),
+            ("model_divergence", num(self.model_divergence() as f64)),
+        ])
+    }
+}
+
+/// Minimal CSV writer for figure series.
+pub struct CsvWriter {
+    file: std::fs::File,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        writeln!(self.file, "{}", fields.join(","))
+    }
+
+    pub fn rowf(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| format!("{f}")).collect();
+        self.row(&strs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_result() -> TrainResult {
+        let mk_rank = |rank: usize, base: f32| RankMetrics {
+            rank,
+            steps: (0..4)
+                .map(|t| StepRecord {
+                    t,
+                    loss: base - t as f32 * 0.1,
+                    wall: 0.01,
+                    staleness: rank as u64,
+                })
+                .collect(),
+            total_seconds: 0.04,
+            sent_msgs: 10,
+            sent_bytes: 1000,
+            evals: vec![(0, 0.1), (2, 0.5)],
+        };
+        TrainResult {
+            algo: "test".into(),
+            p: 2,
+            per_rank: vec![mk_rank(0, 1.0), mk_rank(1, 2.0)],
+            final_params: vec![vec![1.0, 2.0], vec![1.0, 2.5]],
+            wall_seconds: 0.04,
+        }
+    }
+
+    #[test]
+    fn curves_and_summaries() {
+        let r = mk_result();
+        let lc = r.loss_curve();
+        assert_eq!(lc.len(), 4);
+        assert!((lc[0].1 - 1.5).abs() < 1e-6);
+        assert!((r.mean_staleness() - 0.5).abs() < 1e-9);
+        assert!((r.model_divergence() - 0.5).abs() < 1e-6);
+        assert_eq!(r.eval_curve(), vec![(0, 0.1), (2, 0.5)]);
+        // 8 steps total / 0.04 s * batch 4 = 800 samples/s.
+        assert!((r.throughput(4) - 800.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_emits() {
+        let j = mk_result().to_json();
+        let text = j.to_string();
+        assert!(text.contains("\"algo\":\"test\""));
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn csv_writer_roundtrip() {
+        let dir = std::env::temp_dir().join("wagma_csv_test");
+        let path = dir.join("x.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.rowf(&[1.0, 2.5]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,102 @@
+//! Model-side data structures: typed batch arguments for the flat ABI and
+//! the per-worker optimizer state.
+
+use anyhow::Result;
+
+/// One data argument for an AOT executable (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataArg {
+    F32 { shape: Vec<usize>, values: Vec<f32> },
+    I32 { shape: Vec<usize>, values: Vec<i32> },
+}
+
+impl DataArg {
+    pub fn f32(shape: Vec<usize>, values: Vec<f32>) -> DataArg {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        DataArg::F32 { shape, values }
+    }
+
+    pub fn i32(shape: Vec<usize>, values: Vec<i32>) -> DataArg {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        DataArg::I32 { shape, values }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            DataArg::F32 { shape, .. } | DataArg::I32 { shape, .. } => shape,
+        }
+    }
+
+    /// Convert to an XLA literal of the right shape/dtype.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            DataArg::F32 { values, .. } => xla::Literal::vec1(values),
+            DataArg::I32 { values, .. } => xla::Literal::vec1(values),
+        };
+        // Rank-1 literals pass through; higher ranks are reshaped.
+        if dims.len() == 1 {
+            Ok(lit)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+}
+
+/// A training minibatch: the data arguments in ABI order (between the
+/// parameter/momentum inputs and the trailing learning rate).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Batch {
+    pub args: Vec<DataArg>,
+}
+
+impl Batch {
+    pub fn new(args: Vec<DataArg>) -> Batch {
+        Batch { args }
+    }
+}
+
+/// Per-worker training state: the flat parameter vector plus optimizer
+/// (momentum) state — everything the collectives average lives here.
+#[derive(Debug, Clone)]
+pub struct WorkerState {
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+}
+
+impl WorkerState {
+    pub fn new(params: Vec<f32>) -> WorkerState {
+        let n = params.len();
+        WorkerState { params, momentum: vec![0.0; n] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_arg_shapes() {
+        let a = DataArg::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(a.shape(), &[2, 3]);
+        let b = DataArg::i32(vec![4], vec![1, 2, 3, 4]);
+        assert_eq!(b.shape(), &[4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn data_arg_size_mismatch_panics() {
+        DataArg::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn worker_state_momentum_zeroed() {
+        let s = WorkerState::new(vec![1.0, 2.0]);
+        assert_eq!(s.momentum, vec![0.0, 0.0]);
+        assert_eq!(s.dim(), 2);
+    }
+}

@@ -1,0 +1,91 @@
+//! AD-PSGD (Lian et al. 2018): asynchronous decentralized pairwise
+//! averaging. Ranks never synchronize globally: after each local gradient
+//! computation a rank picks a uniformly random partner and the pair
+//! atomically averages their models. Communication fully overlaps compute,
+//! giving the highest raw throughput of all baselines — and, as the paper's
+//! Fig. 5/11 show, the worst final accuracy.
+//!
+//! In-process realization: models live in shared slots
+//! (`Arc<Vec<Mutex<...>>>`); pairwise atomic averaging takes both locks in
+//! index order (deadlock-free).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::metrics::{RankMetrics, StepRecord};
+use crate::model::WorkerState;
+use crate::optim::engine::ComputeEngine;
+use crate::optim::runner::TrainConfig;
+use crate::optim::sgd_momentum_update;
+use crate::util::rng::Xoshiro256;
+
+/// Shared model slots, one per rank.
+pub type SharedModels = Arc<Vec<Mutex<Vec<f32>>>>;
+
+pub fn make_shared(p: usize, init: &[f32]) -> SharedModels {
+    Arc::new((0..p).map(|_| Mutex::new(init.to_vec())).collect())
+}
+
+pub fn run_worker(
+    rank: usize,
+    shared: SharedModels,
+    mut engine: Box<dyn ComputeEngine>,
+    cfg: &TrainConfig,
+) -> (RankMetrics, Vec<f32>) {
+    let p = cfg.p;
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ (rank as u64 + 1).wrapping_mul(0x9E37));
+    let mut metrics = RankMetrics { rank, ..Default::default() };
+    // Momentum stays rank-local (only the model is averaged).
+    let mut momentum = vec![0.0f32; cfg.init.len()];
+    let run_start = Instant::now();
+
+    for t in 0..cfg.steps {
+        let t0 = Instant::now();
+        // Compute the gradient at the *current* model snapshot (communication
+        // from concurrent averaging may change it before the update lands —
+        // AD-PSGD's defining staleness).
+        let snapshot = shared[rank].lock().unwrap().clone();
+        let (g, loss) = engine.grad(&snapshot, t);
+
+        // Atomic pairwise averaging with a random partner.
+        if p > 1 {
+            let mut partner = rng.usize_below(p - 1);
+            if partner >= rank {
+                partner += 1;
+            }
+            let (lo, hi) = (rank.min(partner), rank.max(partner));
+            let (first, rest) = shared.split_at(hi);
+            let mut a = first[lo].lock().unwrap();
+            let mut b = rest[0].lock().unwrap();
+            for i in 0..a.len() {
+                let avg = 0.5 * (a[i] + b[i]);
+                a[i] = avg;
+                b[i] = avg;
+            }
+        }
+
+        // Apply the (possibly stale) local gradient to our own slot.
+        {
+            let mut w = shared[rank].lock().unwrap();
+            sgd_momentum_update(&mut w, &mut momentum, &g, cfg.lr);
+        }
+
+        metrics.steps.push(StepRecord { t, loss, wall: t0.elapsed().as_secs_f64(), staleness: 0 });
+        if cfg.eval_every != 0 && (t + 1) % cfg.eval_every == 0 {
+            let w = shared[rank].lock().unwrap().clone();
+            if let Some(v) = engine.eval(&w) {
+                metrics.evals.push((t, v));
+            }
+        }
+    }
+
+    metrics.total_seconds = run_start.elapsed().as_secs_f64();
+    // Model bytes moved: one model per step to the partner (accounting
+    // parity with the message-passing algorithms).
+    metrics.sent_msgs = cfg.steps;
+    metrics.sent_bytes = cfg.steps * (cfg.init.len() * 4) as u64;
+    let final_params = shared[rank].lock().unwrap().clone();
+    let mut state = WorkerState::new(final_params.clone());
+    state.momentum = momentum;
+    (metrics, final_params)
+}

@@ -1,0 +1,47 @@
+//! Allreduce-SGD: the standard synchronous data-parallel baseline.
+//! Gradients are globally averaged with a blocking allreduce every
+//! iteration; every rank applies the identical update, so models stay
+//! bit-identical (asserted in tests).
+
+use std::time::Instant;
+
+use crate::collectives::allreduce::{allreduce, AllreduceAlgo};
+use crate::comm::Endpoint;
+use crate::metrics::{RankMetrics, StepRecord};
+use crate::model::WorkerState;
+use crate::optim::engine::ComputeEngine;
+use crate::optim::runner::TrainConfig;
+use crate::optim::sgd_momentum_update;
+
+pub fn run_worker(
+    mut ep: Endpoint,
+    mut engine: Box<dyn ComputeEngine>,
+    cfg: &TrainConfig,
+) -> (RankMetrics, Vec<f32>) {
+    let rank = ep.rank();
+    let p = cfg.p as f32;
+    let mut state = WorkerState::new(cfg.init.clone());
+    let mut metrics = RankMetrics { rank, ..Default::default() };
+    let run_start = Instant::now();
+
+    for t in 0..cfg.steps {
+        let t0 = Instant::now();
+        let (mut g, loss) = engine.grad(&state.params, t);
+        allreduce(&mut ep, &mut g, t, AllreduceAlgo::Auto);
+        for gi in g.iter_mut() {
+            *gi /= p;
+        }
+        sgd_momentum_update(&mut state.params, &mut state.momentum, &g, cfg.lr);
+        metrics.steps.push(StepRecord { t, loss, wall: t0.elapsed().as_secs_f64(), staleness: 0 });
+        if cfg.eval_every != 0 && (t + 1) % cfg.eval_every == 0 {
+            if let Some(v) = engine.eval(&state.params) {
+                metrics.evals.push((t, v));
+            }
+        }
+    }
+
+    metrics.total_seconds = run_start.elapsed().as_secs_f64();
+    metrics.sent_msgs = ep.sent_msgs;
+    metrics.sent_bytes = ep.sent_bytes;
+    (metrics, state.params)
+}

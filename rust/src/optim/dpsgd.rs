@@ -1,0 +1,57 @@
+//! D-PSGD (Lian et al. 2017): synchronous gossip on a ring. Each iteration
+//! every rank takes a local step, then averages its model with its two ring
+//! neighbors (quorum size 3). Processes advance with a single global clock
+//! (each step blocks on both neighbors).
+
+use std::time::Instant;
+
+use crate::comm::{Endpoint, Tag};
+use crate::metrics::{RankMetrics, StepRecord};
+use crate::model::WorkerState;
+use crate::optim::engine::ComputeEngine;
+use crate::optim::runner::TrainConfig;
+
+pub fn run_worker(
+    mut ep: Endpoint,
+    mut engine: Box<dyn ComputeEngine>,
+    cfg: &TrainConfig,
+) -> (RankMetrics, Vec<f32>) {
+    let rank = ep.rank();
+    let p = cfg.p;
+    let left = (rank + p - 1) % p;
+    let right = (rank + 1) % p;
+    let mut state = WorkerState::new(cfg.init.clone());
+    let mut metrics = RankMetrics { rank, ..Default::default() };
+    let run_start = Instant::now();
+
+    for t in 0..cfg.steps {
+        let t0 = Instant::now();
+        let loss = engine.step(&mut state, cfg.lr, t);
+        if p > 1 {
+            // phase 0: clockwise traffic (to right / from left);
+            // phase 1: counter-clockwise.
+            ep.send(right, Tag::p2p(t, 0), state.params.clone());
+            ep.send(left, Tag::p2p(t, 1), state.params.clone());
+            let from_left = ep.recv_data(left, Tag::p2p(t, 0), |_, m| {
+                panic!("unexpected ctrl in dpsgd: {m:?}")
+            });
+            let from_right = ep.recv_data(right, Tag::p2p(t, 1), |_, m| {
+                panic!("unexpected ctrl in dpsgd: {m:?}")
+            });
+            for i in 0..state.params.len() {
+                state.params[i] = (state.params[i] + from_left[i] + from_right[i]) / 3.0;
+            }
+        }
+        metrics.steps.push(StepRecord { t, loss, wall: t0.elapsed().as_secs_f64(), staleness: 0 });
+        if cfg.eval_every != 0 && (t + 1) % cfg.eval_every == 0 {
+            if let Some(v) = engine.eval(&state.params) {
+                metrics.evals.push((t, v));
+            }
+        }
+    }
+
+    metrics.total_seconds = run_start.elapsed().as_secs_f64();
+    metrics.sent_msgs = ep.sent_msgs;
+    metrics.sent_bytes = ep.sent_bytes;
+    (metrics, state.params)
+}

@@ -1,0 +1,70 @@
+//! eager-SGD (Li et al. 2020, PPoPP): solo/majority-activated *partial*
+//! allreduce on **gradients**. Every iteration runs a global collective,
+//! but the collective is externally triggerable — late ranks contribute
+//! stale gradients instead of blocking the fast ones.
+//!
+//! Realized on the wait-avoiding engine with group size S = P (one global
+//! group): the activation machinery and passive stale contributions are
+//! identical to WAGMA's; only the payload (gradients, not models) and the
+//! update rule differ. The τ-periodic synchronous allreduce bounds
+//! staleness, as in the paper's bounded-staleness classification.
+
+use std::time::Instant;
+
+use crate::collectives::engine::CollectiveEngine;
+use crate::metrics::{RankMetrics, StepRecord};
+use crate::model::WorkerState;
+use crate::optim::engine::ComputeEngine;
+use crate::optim::runner::TrainConfig;
+use crate::optim::sgd_momentum_update;
+use crate::util::add_assign;
+
+pub fn run_worker(
+    handle: CollectiveEngine,
+    mut engine: Box<dyn ComputeEngine>,
+    cfg: &TrainConfig,
+) -> (RankMetrics, Vec<f32>) {
+    let rank = handle.rank();
+    let p = cfg.p as f32;
+    let mut state = WorkerState::new(cfg.init.clone());
+    let mut metrics = RankMetrics { rank, ..Default::default() };
+    let run_start = Instant::now();
+
+    for t in 0..cfg.steps {
+        let t0 = Instant::now();
+        let (g, loss) = engine.grad(&state.params, t);
+        handle.publish(&g, t);
+
+        let (g_avg, staleness): (Vec<f32>, u64) = if handle.config().is_sync_iter(t) {
+            let sum = handle.global_sync(t);
+            (sum.into_iter().map(|x| x / p).collect(), 0)
+        } else {
+            let res = handle.group_allreduce(t);
+            let staleness = res.staleness(t);
+            if res.is_fresh(t) {
+                (res.sum.into_iter().map(|x| x / p).collect(), 0)
+            } else {
+                // Our fresh gradient missed the collective; blend it in
+                // (the stale one we contributed keeps the average unbiased
+                // in expectation, as in the paper's partial collectives).
+                let mut sum = res.sum;
+                add_assign(&mut sum, &g);
+                (sum.into_iter().map(|x| x / (p + 1.0)).collect(), staleness)
+            }
+        };
+        sgd_momentum_update(&mut state.params, &mut state.momentum, &g_avg, cfg.lr);
+
+        metrics.steps.push(StepRecord { t, loss, wall: t0.elapsed().as_secs_f64(), staleness });
+        if cfg.eval_every != 0 && (t + 1) % cfg.eval_every == 0 {
+            if let Some(v) = engine.eval(&state.params) {
+                metrics.evals.push((t, v));
+            }
+        }
+    }
+
+    metrics.total_seconds = run_start.elapsed().as_secs_f64();
+    let stats = handle.shutdown();
+    metrics.sent_msgs = stats.sent_msgs;
+    metrics.sent_bytes = stats.sent_bytes;
+    (metrics, state.params)
+}

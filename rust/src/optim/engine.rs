@@ -1,0 +1,262 @@
+//! Compute engines: the per-rank "local work" behind every optimizer.
+//!
+//! Engines are constructed *inside* worker threads by an [`EngineFactory`]
+//! (the PJRT client is not `Send`), so the trait itself needs no `Send`.
+
+use crate::data::StepDelays;
+use crate::model::WorkerState;
+use crate::optim::sgd_momentum_update;
+use crate::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+/// Per-rank local computation: a step (in-place update) and a gradient.
+pub trait ComputeEngine {
+    /// Model dimension (flat parameter count).
+    fn dim(&self) -> usize;
+
+    /// Local update (Algorithm 2 lines 3–7): in-place heavy-ball SGD on a
+    /// fresh minibatch. Returns the minibatch loss.
+    fn step(&mut self, state: &mut WorkerState, lr: f32, t: u64) -> f32;
+
+    /// Gradient + loss at `params` on a fresh minibatch (for the
+    /// gradient-averaging algorithms).
+    fn grad(&mut self, params: &[f32], t: u64) -> (Vec<f32>, f32);
+
+    /// Optional task metric (accuracy / eval loss / return).
+    fn eval(&mut self, _params: &[f32]) -> Option<f32> {
+        None
+    }
+}
+
+/// Thread-safe factory: `rank -> engine`, invoked inside each worker.
+pub type EngineFactory = Arc<dyn Fn(usize) -> Box<dyn ComputeEngine> + Send + Sync>;
+
+/// Convex quadratic objective with per-rank data heterogeneity — the
+/// convergence-test workhorse. Rank `i` holds
+/// `f_i(w) = 0.5 * Σ_j a_j (w_j - c_{i,j})²` with shared curvature `a` and
+/// rank-specific centers `c_i`; the global optimum of `F = mean_i f_i` is
+/// the mean center, so tests can measure exact suboptimality. Stochastic
+/// gradients add N(0, noise²) — satisfying the paper's bounded second
+/// moment assumption.
+pub struct QuadraticEngine {
+    curvature: Vec<f32>,
+    center: Vec<f32>,
+    noise: f32,
+    rng: Xoshiro256,
+}
+
+impl QuadraticEngine {
+    pub fn new(dim: usize, rank: usize, p: usize, noise: f32, seed: u64) -> QuadraticEngine {
+        // Shared curvature in [0.5, 1.5]; centers spread on a lattice so the
+        // global optimum (mean center) is analytically known.
+        let mut shared = Xoshiro256::seed_from_u64(seed);
+        let curvature = (0..dim).map(|_| 0.5 + shared.next_f32()).collect();
+        let mut center_rng = Xoshiro256::seed_from_u64(seed ^ 0xA5A5);
+        let mut center = vec![0.0f32; dim];
+        // Deterministic per-rank offset pattern: rank i shifts dimension j
+        // by sin-like lattice values, mean over ranks = base center.
+        for (j, c) in center.iter_mut().enumerate() {
+            let base = center_rng.normal_f32(0.0, 1.0);
+            let offset = ((rank as f32 + 1.0) * (j as f32 + 1.0)).sin();
+            let mean_offset: f32 =
+                (0..p).map(|r| ((r as f32 + 1.0) * (j as f32 + 1.0)).sin()).sum::<f32>()
+                    / p as f32;
+            *c = base + offset - mean_offset; // mean over ranks == base
+        }
+        QuadraticEngine {
+            curvature,
+            center,
+            noise,
+            rng: Xoshiro256::seed_from_u64(seed ^ (rank as u64 + 1).wrapping_mul(0x2545F491)),
+        }
+    }
+
+    /// Exact local loss (no noise).
+    pub fn loss(&self, w: &[f32]) -> f32 {
+        w.iter()
+            .zip(&self.center)
+            .zip(&self.curvature)
+            .map(|((w, c), a)| 0.5 * a * (w - c) * (w - c))
+            .sum()
+    }
+
+    /// The global optimum of the mean objective when every rank is built
+    /// with the same seed: the shared base center.
+    pub fn global_optimum(dim: usize, seed: u64) -> Vec<f32> {
+        let mut center_rng = Xoshiro256::seed_from_u64(seed ^ 0xA5A5);
+        let _shared = Xoshiro256::seed_from_u64(seed); // keep stream layout documented
+        (0..dim).map(|_| center_rng.normal_f32(0.0, 1.0)).collect()
+    }
+}
+
+impl ComputeEngine for QuadraticEngine {
+    fn dim(&self) -> usize {
+        self.center.len()
+    }
+
+    fn step(&mut self, state: &mut WorkerState, lr: f32, t: u64) -> f32 {
+        let (g, loss) = self.grad(&state.params, t);
+        sgd_momentum_update(&mut state.params, &mut state.momentum, &g, lr);
+        loss
+    }
+
+    fn grad(&mut self, params: &[f32], _t: u64) -> (Vec<f32>, f32) {
+        let g = params
+            .iter()
+            .zip(&self.center)
+            .zip(&self.curvature)
+            .map(|((w, c), a)| a * (w - c) + self.rng.normal_f32(0.0, self.noise))
+            .collect();
+        (g, self.loss(params))
+    }
+
+    fn eval(&mut self, params: &[f32]) -> Option<f32> {
+        Some(self.loss(params))
+    }
+}
+
+/// No compute at all — pure-communication throughput studies. `dim`
+/// controls message sizes.
+pub struct NullEngine {
+    dim: usize,
+}
+
+impl NullEngine {
+    pub fn new(dim: usize) -> NullEngine {
+        NullEngine { dim }
+    }
+}
+
+impl ComputeEngine for NullEngine {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn step(&mut self, _state: &mut WorkerState, _lr: f32, _t: u64) -> f32 {
+        0.0
+    }
+
+    fn grad(&mut self, _params: &[f32], _t: u64) -> (Vec<f32>, f32) {
+        (vec![0.0; self.dim], 0.0)
+    }
+}
+
+/// Wrap another engine and inject per-(step, rank) compute delays from a
+/// pre-sampled imbalance schedule — the Fig. 4 protocol as real sleeps.
+/// `time_scale` shrinks the paper's seconds to test-friendly durations.
+pub struct SleepEngine<E> {
+    inner: E,
+    rank: usize,
+    schedule: Arc<Vec<Vec<f64>>>,
+    time_scale: f64,
+}
+
+impl<E: ComputeEngine> SleepEngine<E> {
+    pub fn new(
+        inner: E,
+        rank: usize,
+        schedule: Arc<Vec<Vec<f64>>>,
+        time_scale: f64,
+    ) -> SleepEngine<E> {
+        SleepEngine { inner, rank, schedule, time_scale }
+    }
+
+    /// Build a shared schedule from an imbalance model.
+    pub fn schedule(
+        model: crate::data::ImbalanceModel,
+        p: usize,
+        steps: usize,
+        seed: u64,
+    ) -> Arc<Vec<Vec<f64>>> {
+        Arc::new(StepDelays::new(model, p, seed).sample_many(steps))
+    }
+
+    fn sleep_for(&self, t: u64) {
+        let row = &self.schedule[(t as usize) % self.schedule.len()];
+        let secs = row[self.rank] * self.time_scale;
+        if secs > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        }
+    }
+}
+
+impl<E: ComputeEngine> ComputeEngine for SleepEngine<E> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn step(&mut self, state: &mut WorkerState, lr: f32, t: u64) -> f32 {
+        self.sleep_for(t);
+        self.inner.step(state, lr, t)
+    }
+
+    fn grad(&mut self, params: &[f32], t: u64) -> (Vec<f32>, f32) {
+        self.sleep_for(t);
+        self.inner.grad(params, t)
+    }
+
+    fn eval(&mut self, params: &[f32]) -> Option<f32> {
+        self.inner.eval(params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_centers_average_to_base() {
+        let dim = 16;
+        let p = 8;
+        let engines: Vec<QuadraticEngine> =
+            (0..p).map(|r| QuadraticEngine::new(dim, r, p, 0.0, 42)).collect();
+        let base = QuadraticEngine::global_optimum(dim, 42);
+        for j in 0..dim {
+            let mean: f32 = engines.iter().map(|e| e.center[j]).sum::<f32>() / p as f32;
+            assert!((mean - base[j]).abs() < 1e-4, "dim {j}: {mean} vs {}", base[j]);
+        }
+    }
+
+    #[test]
+    fn quadratic_sgd_converges_single_rank() {
+        let mut e = QuadraticEngine::new(8, 0, 1, 0.01, 7);
+        let mut state = WorkerState::new(vec![0.0; 8]);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for t in 0..300 {
+            let loss = e.step(&mut state, 0.05, t);
+            if t == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < 0.05 * first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn grad_is_unbiased_at_center() {
+        let mut e = QuadraticEngine::new(4, 0, 1, 0.5, 9);
+        let at = e.center.clone();
+        let n = 2000;
+        let mut acc = vec![0.0f64; 4];
+        for t in 0..n {
+            let (g, _) = e.grad(&at, t);
+            for (a, gi) in acc.iter_mut().zip(g) {
+                *a += gi as f64;
+            }
+        }
+        for a in acc {
+            assert!((a / n as f64).abs() < 0.05, "grad mean {a}");
+        }
+    }
+
+    #[test]
+    fn sleep_engine_sleeps() {
+        let sched = Arc::new(vec![vec![0.01, 0.0]]);
+        let mut e = SleepEngine::new(NullEngine::new(4), 0, sched, 1.0);
+        let mut st = WorkerState::new(vec![0.0; 4]);
+        let t0 = std::time::Instant::now();
+        e.step(&mut st, 0.1, 0);
+        assert!(t0.elapsed().as_secs_f64() >= 0.009);
+    }
+}

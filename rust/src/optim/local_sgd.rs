@@ -1,0 +1,48 @@
+//! Local SGD: H local heavy-ball steps, then a blocking global model
+//! average (Stich 2019; Lin et al. 2018). With H = 1 this is synchronous
+//! model-averaging SGD; the paper's ablation ❶ (WAGMA without group
+//! collectives) is exactly Local SGD with H = τ.
+
+use std::time::Instant;
+
+use crate::collectives::allreduce::{allreduce, AllreduceAlgo};
+use crate::comm::Endpoint;
+use crate::metrics::{RankMetrics, StepRecord};
+use crate::model::WorkerState;
+use crate::optim::engine::ComputeEngine;
+use crate::optim::runner::TrainConfig;
+
+pub fn run_worker(
+    mut ep: Endpoint,
+    mut engine: Box<dyn ComputeEngine>,
+    cfg: &TrainConfig,
+) -> (RankMetrics, Vec<f32>) {
+    let rank = ep.rank();
+    let p = cfg.p as f32;
+    let h = cfg.local_sgd_h.max(1);
+    let mut state = WorkerState::new(cfg.init.clone());
+    let mut metrics = RankMetrics { rank, ..Default::default() };
+    let run_start = Instant::now();
+
+    for t in 0..cfg.steps {
+        let t0 = Instant::now();
+        let loss = engine.step(&mut state, cfg.lr, t);
+        if (t + 1) % h == 0 {
+            allreduce(&mut ep, &mut state.params, t, AllreduceAlgo::Auto);
+            for w in state.params.iter_mut() {
+                *w /= p;
+            }
+        }
+        metrics.steps.push(StepRecord { t, loss, wall: t0.elapsed().as_secs_f64(), staleness: 0 });
+        if cfg.eval_every != 0 && (t + 1) % cfg.eval_every == 0 {
+            if let Some(v) = engine.eval(&state.params) {
+                metrics.evals.push((t, v));
+            }
+        }
+    }
+
+    metrics.total_seconds = run_start.elapsed().as_secs_f64();
+    metrics.sent_msgs = ep.sent_msgs;
+    metrics.sent_bytes = ep.sent_bytes;
+    (metrics, state.params)
+}

@@ -1,0 +1,92 @@
+//! Distributed optimizers: WAGMA-SGD (Algorithm 2) and the six baselines
+//! the paper compares against (Table I, bold entries).
+//!
+//! | Algorithm       | Coordination        | Staleness | Averages |
+//! |-----------------|---------------------|-----------|----------|
+//! | Allreduce-SGD   | decentralized, S=P  | none      | gradients|
+//! | Local SGD (H)   | decentralized, S=P  | none      | models   |
+//! | D-PSGD          | ring, S=3           | none      | models   |
+//! | AD-PSGD         | pairwise, S=2       | unbounded | models   |
+//! | SGP             | directed exp., S=k+1| none      | models (push-sum) |
+//! | eager-SGD       | global partial      | bounded   | gradients|
+//! | **WAGMA-SGD**   | **group, S=√P**     | **bounded (τ)** | **models** |
+//!
+//! Every optimizer runs the same worker skeleton: a [`ComputeEngine`]
+//! produces local steps/gradients (backed by PJRT artifacts, an analytic
+//! objective, or a no-op + sleep for throughput studies) and the algorithm
+//! supplies the communication pattern.
+
+pub mod adpsgd;
+pub mod allreduce_sgd;
+pub mod dpsgd;
+pub mod eager_sgd;
+pub mod engine;
+pub mod local_sgd;
+pub mod pjrt_engine;
+pub mod runner;
+pub mod sgp;
+pub mod wagma;
+
+pub use engine::{ComputeEngine, EngineFactory, NullEngine, QuadraticEngine, SleepEngine};
+pub use runner::{run_training, Algorithm, TrainConfig};
+
+use crate::util;
+
+/// Momentum coefficient used by all Rust-side update rules. Must match
+/// `MOMENTUM` in `python/compile/kernels/ref.py` (the fused Pallas
+/// optimizer), so the Rust-applied and artifact-applied updates agree.
+pub const MOMENTUM: f32 = 0.9;
+
+/// Heavy-ball SGD update applied Rust-side (used by the gradient-averaging
+/// algorithms where the update happens *after* communication):
+/// `m = MOMENTUM*m + g; p -= lr*m`.
+pub fn sgd_momentum_update(params: &mut [f32], momentum: &mut [f32], grad: &[f32], lr: f32) {
+    debug_assert_eq!(params.len(), grad.len());
+    debug_assert_eq!(momentum.len(), grad.len());
+    for ((p, m), g) in params.iter_mut().zip(momentum.iter_mut()).zip(grad.iter()) {
+        *m = MOMENTUM * *m + *g;
+        *p -= lr * *m;
+    }
+}
+
+/// Average `src` into `dst` with weight `1/k` each (model averaging step).
+pub fn average_into(dst: &mut [f32], others: &[&[f32]]) {
+    let k = (others.len() + 1) as f32;
+    let inv = 1.0 / k;
+    for (i, d) in dst.iter_mut().enumerate() {
+        let mut sum = *d;
+        for o in others {
+            sum += o[i];
+        }
+        *d = sum * inv;
+    }
+}
+
+/// Re-export of the shared vector helpers for optimizer implementations.
+pub use util::{add_assign, add_scale, axpy_neg, scale};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momentum_update_matches_reference() {
+        let mut p = vec![1.0f32, 2.0];
+        let mut m = vec![0.5f32, 0.0];
+        sgd_momentum_update(&mut p, &mut m, &[1.0, -1.0], 0.1);
+        // m = 0.9*0.5 + 1 = 1.45 ; p = 1 - 0.145
+        assert!((m[0] - 1.45).abs() < 1e-6);
+        assert!((p[0] - 0.855).abs() < 1e-6);
+        assert!((m[1] + 1.0).abs() < 1e-6);
+        assert!((p[1] - 2.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn average_into_means() {
+        let mut a = vec![1.0f32, 4.0];
+        let b = vec![3.0f32, 0.0];
+        let c = vec![5.0f32, 2.0];
+        average_into(&mut a, &[&b, &c]);
+        assert_eq!(a, vec![3.0, 2.0]);
+    }
+}

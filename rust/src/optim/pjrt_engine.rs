@@ -1,0 +1,248 @@
+//! Compute engines backed by AOT PJRT artifacts: supervised (LM /
+//! classifier) and reinforcement learning (PPO rollouts + policy updates).
+//!
+//! Constructed inside worker threads via [`EngineFactory`] closures
+//! (the PJRT client is thread-local by construction).
+
+use crate::data::{ClassifyDataset, TokenCorpus};
+use crate::model::{Batch, DataArg, WorkerState};
+use crate::optim::engine::ComputeEngine;
+use crate::rl::env::{GridWorld, ACTIONS, OBS_DIM};
+use crate::rl::ppo::{collect_rollout, RolloutConfig};
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Xoshiro256;
+
+/// Supervised engine: LM (token corpus) or classifier (Gaussian clusters),
+/// chosen by the artifact's `kind`.
+pub struct PjrtEngine {
+    rt: ModelRuntime,
+    feed: Feed,
+    eval_batch: Option<Batch>,
+}
+
+enum Feed {
+    Lm(TokenCorpus),
+    Classify(ClassifyDataset),
+}
+
+impl PjrtEngine {
+    /// Build for artifact `model` with rank-sharded synthetic data.
+    pub fn new(artifacts_dir: &str, model: &str, rank: usize, seed: u64) -> anyhow::Result<PjrtEngine> {
+        let rt = ModelRuntime::load(artifacts_dir, model)?;
+        let meta = &rt.meta;
+        let (feed, eval_batch) = match meta.kind.as_str() {
+            "lm" => {
+                let mut held_out = TokenCorpus::new(
+                    meta.dims["vocab"],
+                    meta.dims["seq_len"],
+                    meta.batch,
+                    seed,
+                    usize::MAX, // shard no training rank uses
+                );
+                let corpus =
+                    TokenCorpus::new(meta.dims["vocab"], meta.dims["seq_len"], meta.batch, seed, rank);
+                (Feed::Lm(corpus), Some(held_out.next_batch()))
+            }
+            "classifier" => {
+                // Noise scales with the class count so the larger
+                // convergence-figure config (mlp_small, 16 classes) does
+                // not saturate at 100% for every optimizer — the accuracy
+                // separation is what Fig. 5 measures.
+                let noise = if meta.dims["classes"] >= 16 { 2.6 } else { 0.35 };
+                let ds = ClassifyDataset::new(
+                    meta.dims["input_dim"],
+                    meta.dims["classes"],
+                    meta.batch,
+                    noise,
+                    seed,
+                    rank,
+                );
+                let eval = ds.eval_batch(meta.batch);
+                (Feed::Classify(ds), Some(eval))
+            }
+            other => anyhow::bail!("PjrtEngine: unsupported kind {other:?} (use RlEngine)"),
+        };
+        Ok(PjrtEngine { rt, feed, eval_batch })
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+
+    fn next_batch(&mut self) -> Batch {
+        match &mut self.feed {
+            Feed::Lm(c) => c.next_batch(),
+            Feed::Classify(d) => d.next_batch(),
+        }
+    }
+}
+
+impl ComputeEngine for PjrtEngine {
+    fn dim(&self) -> usize {
+        self.rt.meta.param_count
+    }
+
+    fn step(&mut self, state: &mut WorkerState, lr: f32, _t: u64) -> f32 {
+        let batch = self.next_batch();
+        self.rt
+            .step(&mut state.params, &mut state.momentum, &batch, lr)
+            .expect("PJRT step failed")
+    }
+
+    fn grad(&mut self, params: &[f32], _t: u64) -> (Vec<f32>, f32) {
+        let batch = self.next_batch();
+        self.rt.grad(params, &batch).expect("PJRT grad failed")
+    }
+
+    fn eval(&mut self, params: &[f32]) -> Option<f32> {
+        let b = self.eval_batch.as_ref()?;
+        Some(self.rt.eval_metric(params, b).expect("PJRT eval failed"))
+    }
+}
+
+/// PPO optimization epochs per rollout.
+const PPO_EPOCHS: usize = 3;
+
+/// RL engine: every `step` is one DD-PPO-style iteration — collect a
+/// rollout from vectorized gridworld environments with the *current*
+/// policy, then one PPO update through the artifact. Experience-collection
+/// time is naturally heavy-tailed (episode lengths vary with procedural
+/// difficulty), reproducing the paper's Fig. 9 mechanism organically.
+pub struct RlEngine {
+    rt: ModelRuntime,
+    envs: Vec<GridWorld>,
+    ep_returns: Vec<f32>,
+    rcfg: RolloutConfig,
+    rng: Xoshiro256,
+    /// Rolling episode statistics from the most recent rollouts.
+    pub last_mean_return: f32,
+    pub last_mean_spl: f32,
+}
+
+impl RlEngine {
+    pub fn new(artifacts_dir: &str, model: &str, rank: usize, seed: u64) -> anyhow::Result<RlEngine> {
+        let rt = ModelRuntime::load(artifacts_dir, model)?;
+        anyhow::ensure!(rt.meta.kind == "policy", "RlEngine needs a policy artifact");
+        let batch = rt.meta.batch;
+        // envs * horizon must equal the artifact's train batch. A longer
+        // horizon gives GAE more to work with on sparse goals.
+        let envs_n = 16.min(batch);
+        let horizon = batch / envs_n;
+        let rcfg = RolloutConfig { envs: envs_n, horizon, gamma: 0.97, lam: 0.9 };
+        let envs = (0..envs_n)
+            .map(|i| GridWorld::new(seed ^ ((rank * 1000 + i) as u64).wrapping_mul(0x9E37)))
+            .collect();
+        Ok(RlEngine {
+            rt,
+            envs,
+            ep_returns: vec![0.0; envs_n],
+            rcfg,
+            rng: Xoshiro256::seed_from_u64(seed ^ (rank as u64 + 77)),
+            last_mean_return: 0.0,
+            last_mean_spl: 0.0,
+        })
+    }
+
+    fn rollout(&mut self, params: &[f32]) -> Batch {
+        let rt = &self.rt;
+        let artifact_batch = rt.meta.batch;
+        let mut policy = |obs: &[f32], rows: usize| -> (Vec<f32>, Vec<f32>) {
+            // Pad the observation matrix up to the artifact's fixed batch.
+            let mut padded = obs.to_vec();
+            padded.resize(artifact_batch * OBS_DIM, 0.0);
+            let arg = DataArg::f32(vec![artifact_batch, OBS_DIM], padded);
+            let (logp, value) = rt.policy_forward(params, &arg).expect("policy forward");
+            (logp[..rows * ACTIONS].to_vec(), value[..rows].to_vec())
+        };
+        let pb = collect_rollout(
+            &mut policy,
+            &mut self.envs,
+            &mut self.ep_returns,
+            &self.rcfg,
+            &mut self.rng,
+        );
+        if pb.episodes_finished > 0 {
+            self.last_mean_return = pb.mean_return;
+            self.last_mean_spl = pb.mean_spl;
+        }
+        pb.batch
+    }
+}
+
+impl ComputeEngine for RlEngine {
+    fn dim(&self) -> usize {
+        self.rt.meta.param_count
+    }
+
+    fn step(&mut self, state: &mut WorkerState, lr: f32, _t: u64) -> f32 {
+        let batch = self.rollout(&state.params);
+        // Multiple PPO epochs over the same rollout (the clipped surrogate
+        // exists precisely to allow this).
+        let mut loss = 0.0;
+        for _ in 0..PPO_EPOCHS {
+            loss = self
+                .rt
+                .step(&mut state.params, &mut state.momentum, &batch, lr)
+                .expect("PJRT PPO step failed");
+        }
+        loss
+    }
+
+    fn grad(&mut self, params: &[f32], _t: u64) -> (Vec<f32>, f32) {
+        let batch = self.rollout(params);
+        self.rt.grad(params, &batch).expect("PJRT PPO grad failed")
+    }
+
+    /// Proper policy evaluation: play `EVAL_EPISODES` fresh episodes to
+    /// completion with the current policy and report the mean undiscounted
+    /// return. (Rollout-internal episode stats are censoring-biased: early
+    /// in training only short, successful episodes finish inside a
+    /// horizon.)
+    fn eval(&mut self, params: &[f32]) -> Option<f32> {
+        const EVAL_EPISODES: usize = 16;
+        let rt = &self.rt;
+        let artifact_batch = rt.meta.batch;
+        let mut envs: Vec<GridWorld> =
+            (0..EVAL_EPISODES).map(|i| GridWorld::new(0xE7A1 + i as u64)).collect();
+        let mut returns = vec![0.0f32; EVAL_EPISODES];
+        let mut spl = vec![0.0f32; EVAL_EPISODES];
+        let mut done = vec![false; EVAL_EPISODES];
+        let mut rng = Xoshiro256::seed_from_u64(0x5EED);
+        for _ in 0..400 {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let mut obs = vec![0.0f32; artifact_batch * OBS_DIM];
+            for (i, env) in envs.iter().enumerate() {
+                obs[i * OBS_DIM..(i + 1) * OBS_DIM].copy_from_slice(&env.observe());
+            }
+            let arg = DataArg::f32(vec![artifact_batch, OBS_DIM], obs);
+            let (logp, _) = rt.policy_forward(params, &arg).expect("eval policy forward");
+            for (i, env) in envs.iter_mut().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                let row = &logp[i * ACTIONS..(i + 1) * ACTIONS];
+                // Sample (the trained policy is stochastic).
+                let u = rng.next_f32();
+                let mut acc = 0.0;
+                let mut a = ACTIONS - 1;
+                for (j, lp) in row.iter().enumerate() {
+                    acc += lp.exp();
+                    if u < acc {
+                        a = j;
+                        break;
+                    }
+                }
+                let o = env.step(a);
+                returns[i] += o.reward;
+                if o.done {
+                    done[i] = true;
+                    spl[i] = env.spl(o.success);
+                }
+            }
+        }
+        self.last_mean_spl = spl.iter().sum::<f32>() / EVAL_EPISODES as f32;
+        Some(returns.iter().sum::<f32>() / EVAL_EPISODES as f32)
+    }
+}

@@ -1,0 +1,78 @@
+//! WAGMA-SGD (paper Algorithm 2): wait-avoiding group model averaging.
+//!
+//! Per iteration `t` each rank:
+//! 1. computes a local heavy-ball SGD update `W'_t` (lines 3–7);
+//! 2. publishes `W'_t` into the engine's send buffer;
+//! 3. on sync iterations (`(t+1) % τ == 0`): joins the global synchronous
+//!    allreduce and sets `W_{t+1} = sync_allreduce(W'_t) / P` (line 16);
+//! 4. otherwise joins the wait-avoiding group allreduce:
+//!    * if its fresh `W'_t` made the collective: `W_{t+1} = W_sum / S`
+//!      (line 11);
+//!    * if the collective ran before it arrived (it contributed a stale
+//!      model passively): `W_{t+1} = (W_sum + W'_t) / (S+1)` (line 13).
+
+use std::time::Instant;
+
+use crate::collectives::engine::CollectiveEngine;
+use crate::metrics::{RankMetrics, StepRecord};
+use crate::model::WorkerState;
+use crate::optim::engine::ComputeEngine;
+use crate::optim::runner::TrainConfig;
+use crate::util::add_assign;
+
+/// Run one WAGMA-SGD worker to completion. `handle` is this rank's
+/// wait-avoiding collective engine; `engine` its compute engine.
+pub fn run_worker(
+    handle: CollectiveEngine,
+    mut engine: Box<dyn ComputeEngine>,
+    cfg: &TrainConfig,
+) -> (RankMetrics, Vec<f32>) {
+    let rank = handle.rank();
+    let p = cfg.p as f32;
+    let s = cfg.resolved_group_size() as f32;
+    let mut state = WorkerState::new(cfg.init.clone());
+    let mut metrics = RankMetrics { rank, ..Default::default() };
+    let run_start = Instant::now();
+
+    for t in 0..cfg.steps {
+        let t0 = Instant::now();
+        // Lines 3–7: local update W'_t.
+        let loss = engine.step(&mut state, cfg.lr, t);
+        let w_prime = state.params.clone();
+        handle.publish(&w_prime, t);
+
+        let staleness;
+        if handle.config().is_sync_iter(t) {
+            // Line 16: global model averaging (bounds staleness by τ).
+            let sum = handle.global_sync(t);
+            state.params = sum.into_iter().map(|x| x / p).collect();
+            staleness = 0;
+        } else {
+            // Lines 9–14: wait-avoiding group model averaging.
+            let res = handle.group_allreduce(t);
+            staleness = res.staleness(t);
+            if res.is_fresh(t) {
+                // Fresh contribution: W = W_sum / S.
+                state.params = res.sum.into_iter().map(|x| x / s).collect();
+            } else {
+                // Stale contribution: W = (W_sum + W'_t) / (S+1).
+                let mut sum = res.sum;
+                add_assign(&mut sum, &w_prime);
+                state.params = sum.into_iter().map(|x| x / (s + 1.0)).collect();
+            }
+        }
+
+        metrics.steps.push(StepRecord { t, loss, wall: t0.elapsed().as_secs_f64(), staleness });
+        if cfg.eval_every != 0 && (t + 1) % cfg.eval_every == 0 {
+            if let Some(v) = engine.eval(&state.params) {
+                metrics.evals.push((t, v));
+            }
+        }
+    }
+
+    metrics.total_seconds = run_start.elapsed().as_secs_f64();
+    let stats = handle.shutdown();
+    metrics.sent_msgs = stats.sent_msgs;
+    metrics.sent_bytes = stats.sent_bytes;
+    (metrics, state.params)
+}

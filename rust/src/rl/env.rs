@@ -1,0 +1,264 @@
+//! Procedurally-generated gridworld navigation environment.
+//!
+//! The agent starts at a random free cell and must reach a random goal
+//! cell. Observations (matching the `policy_tiny` artifact's `obs_dim=32`):
+//! a 5×5 egocentric obstacle window (25), the normalized goal offset (2),
+//! normalized agent position (2), normalized distance-to-goal (1), and
+//! remaining-time fraction (1), padded to 32. Actions: N/E/S/W. Reward:
+//! +1 at goal (episode ends), -0.01 per step, small shaping on distance.
+//! Episodes also end on the step limit — and environment difficulty is
+//! randomized per episode, giving the heavy-tailed collection times of
+//! Fig. 9.
+
+use crate::util::rng::Xoshiro256;
+
+pub const OBS_DIM: usize = 32;
+pub const ACTIONS: usize = 4;
+
+/// One observation vector (length [`OBS_DIM`]).
+pub type Observation = Vec<f32>;
+
+/// Result of one environment step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepOutcome {
+    pub reward: f32,
+    pub done: bool,
+    /// True if the episode ended by reaching the goal.
+    pub success: bool,
+}
+
+/// Gridworld with per-episode procedural generation.
+pub struct GridWorld {
+    rng: Xoshiro256,
+    size: usize,
+    grid: Vec<bool>, // true = obstacle
+    agent: (usize, usize),
+    goal: (usize, usize),
+    steps: usize,
+    max_steps: usize,
+    /// Initial Manhattan distance (for SPL-style scoring).
+    init_dist: usize,
+}
+
+impl GridWorld {
+    pub fn new(seed: u64) -> GridWorld {
+        let mut w = GridWorld {
+            rng: Xoshiro256::seed_from_u64(seed),
+            size: 0,
+            grid: Vec::new(),
+            agent: (0, 0),
+            goal: (0, 0),
+            steps: 0,
+            max_steps: 0,
+            init_dist: 0,
+        };
+        w.reset();
+        w
+    }
+
+    /// Start a new episode with freshly-generated difficulty.
+    pub fn reset(&mut self) -> Observation {
+        // Difficulty knobs: size 6..16, obstacle density 0..0.35.
+        self.size = 6 + self.rng.usize_below(11);
+        let density = self.rng.next_f64() * 0.35;
+        self.grid = (0..self.size * self.size)
+            .map(|_| self.rng.next_f64() < density)
+            .collect();
+        self.agent = self.random_free_cell();
+        loop {
+            self.goal = self.random_free_cell();
+            if self.goal != self.agent {
+                break;
+            }
+        }
+        self.steps = 0;
+        self.max_steps = self.size * self.size; // harder rooms run longer
+        self.init_dist = self.manhattan();
+        self.observe()
+    }
+
+    fn random_free_cell(&mut self) -> (usize, usize) {
+        loop {
+            let x = self.rng.usize_below(self.size);
+            let y = self.rng.usize_below(self.size);
+            if !self.grid[y * self.size + x] {
+                return (x, y);
+            }
+        }
+    }
+
+    fn manhattan(&self) -> usize {
+        self.agent.0.abs_diff(self.goal.0) + self.agent.1.abs_diff(self.goal.1)
+    }
+
+    fn occupied(&self, x: isize, y: isize) -> bool {
+        if x < 0 || y < 0 || x >= self.size as isize || y >= self.size as isize {
+            return true;
+        }
+        self.grid[y as usize * self.size + x as usize]
+    }
+
+    /// Current observation vector.
+    pub fn observe(&self) -> Observation {
+        let mut obs = Vec::with_capacity(OBS_DIM);
+        let (ax, ay) = (self.agent.0 as isize, self.agent.1 as isize);
+        for dy in -2..=2isize {
+            for dx in -2..=2isize {
+                obs.push(if self.occupied(ax + dx, ay + dy) { 1.0 } else { 0.0 });
+            }
+        }
+        let s = self.size as f32;
+        obs.push((self.goal.0 as f32 - self.agent.0 as f32) / s);
+        obs.push((self.goal.1 as f32 - self.agent.1 as f32) / s);
+        obs.push(self.agent.0 as f32 / s);
+        obs.push(self.agent.1 as f32 / s);
+        obs.push(self.manhattan() as f32 / (2.0 * s));
+        obs.push(1.0 - self.steps as f32 / self.max_steps as f32);
+        debug_assert_eq!(obs.len(), 31);
+        obs.push(0.0); // pad to OBS_DIM
+        obs
+    }
+
+    /// Take action 0..4 (N/E/S/W). Returns the outcome; on `done` the
+    /// caller should `reset()`.
+    pub fn step(&mut self, action: usize) -> StepOutcome {
+        assert!(action < ACTIONS);
+        let before = self.manhattan() as f32;
+        let (dx, dy) = [(0isize, -1isize), (1, 0), (0, 1), (-1, 0)][action];
+        let nx = self.agent.0 as isize + dx;
+        let ny = self.agent.1 as isize + dy;
+        if !self.occupied(nx, ny) {
+            self.agent = (nx as usize, ny as usize);
+        }
+        self.steps += 1;
+        let after = self.manhattan() as f32;
+        if self.agent == self.goal {
+            return StepOutcome { reward: 1.0, done: true, success: true };
+        }
+        if self.steps >= self.max_steps {
+            return StepOutcome { reward: -0.1, done: true, success: false };
+        }
+        // Step penalty + dense distance shaping (potential-based, so the
+        // optimal policy is unchanged; the density is what makes the task
+        // learnable within the small experiment budgets).
+        StepOutcome { reward: -0.01 + 0.2 * (before - after), done: false, success: false }
+    }
+
+    /// SPL-style score for a finished successful episode: shortest / taken.
+    pub fn spl(&self, success: bool) -> f32 {
+        if !success {
+            return 0.0;
+        }
+        self.init_dist as f32 / (self.steps.max(self.init_dist) as f32)
+    }
+
+    pub fn episode_steps(&self) -> usize {
+        self.steps
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observation_shape_and_range() {
+        let mut w = GridWorld::new(1);
+        for _ in 0..20 {
+            let obs = w.observe();
+            assert_eq!(obs.len(), OBS_DIM);
+            assert!(obs.iter().all(|v| v.is_finite() && v.abs() <= 2.0));
+            let a = w.rng_action();
+            let o = w.step(a);
+            if o.done {
+                w.reset();
+            }
+        }
+    }
+
+    #[test]
+    fn episodes_terminate() {
+        let mut w = GridWorld::new(2);
+        for _ in 0..50 {
+            let mut steps = 0;
+            loop {
+                let o = w.step(0);
+                steps += 1;
+                if o.done {
+                    break;
+                }
+                assert!(steps <= 16 * 16 + 1);
+            }
+            w.reset();
+        }
+    }
+
+    #[test]
+    fn reaching_goal_rewards_and_succeeds() {
+        // Drive the agent greedily toward the goal; on clear boards this
+        // succeeds often. Check reward signs and SPL in [0, 1].
+        let mut w = GridWorld::new(3);
+        let mut successes = 0;
+        for _ in 0..100 {
+            loop {
+                let (ax, ay) = w.agent;
+                let (gx, gy) = w.goal;
+                let action = if gx > ax {
+                    1
+                } else if gx < ax {
+                    3
+                } else if gy > ay {
+                    2
+                } else {
+                    0
+                };
+                let o = w.step(action);
+                if o.done {
+                    if o.success {
+                        successes += 1;
+                        assert!(o.reward > 0.9);
+                        let spl = w.spl(true);
+                        assert!((0.0..=1.0).contains(&spl), "spl {spl}");
+                    }
+                    w.reset();
+                    break;
+                }
+            }
+        }
+        assert!(successes > 20, "greedy should succeed sometimes: {successes}");
+    }
+
+    #[test]
+    fn episode_lengths_are_heavy_tailed() {
+        // The Fig. 9 mechanism: random-policy episode lengths vary by >10x.
+        let mut w = GridWorld::new(4);
+        let mut lens = Vec::new();
+        for _ in 0..300 {
+            let mut steps = 0;
+            loop {
+                let a = w.rng_action();
+                steps += 1;
+                if w.step(a).done {
+                    break;
+                }
+            }
+            lens.push(steps as f64);
+            w.reset();
+        }
+        let s = crate::util::stats::Summary::of(&lens);
+        // Wide spread: the longest episodes dwarf the shortest quartile,
+        // and the distribution is right-skewed (mean > median).
+        assert!(s.max / s.p25.max(1.0) > 2.5, "max {} p25 {}", s.max, s.p25);
+        assert!(s.max / s.min.max(1.0) > 5.0, "max {} min {}", s.max, s.min);
+    }
+
+    impl GridWorld {
+        pub(crate) fn rng_action(&mut self) -> usize {
+            self.rng.usize_below(ACTIONS)
+        }
+    }
+}

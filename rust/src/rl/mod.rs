@@ -1,0 +1,18 @@
+//! Reinforcement-learning substrate: a procedurally-generated gridworld
+//! navigation environment (the Habitat analogue) plus PPO rollout
+//! machinery driven by the AOT policy artifact.
+//!
+//! Substitution fidelity (DESIGN.md §2): the paper's RL workload property
+//! that matters to WAGMA-SGD is *heavy-tailed experience-collection time*
+//! (episodes end early on failure; environments vary in difficulty). Our
+//! gridworld reproduces the mechanism: rooms of random size/obstacle
+//! density, episode length varies from a handful of steps (adjacent goal /
+//! quick failure) to hundreds (hard mazes), so per-iteration collection
+//! time is naturally heavy-tailed (validated against Fig. 9's shape in the
+//! figure harness).
+
+pub mod env;
+pub mod ppo;
+
+pub use env::{GridWorld, Observation, StepOutcome};
+pub use ppo::{collect_rollout, gae, PpoBatch, RolloutConfig};

@@ -1,0 +1,283 @@
+//! PPO rollout machinery: vectorized environments, GAE advantages, and
+//! batch assembly for the `policy_tiny` AOT artifact.
+//!
+//! The policy is abstracted as a closure `(obs [R, OBS_DIM] row-major, R)
+//! -> (logp [R, ACTIONS], value [R])` so the same machinery runs against
+//! the PJRT artifact (examples/benches) or a synthetic policy (tests).
+
+use crate::model::{Batch, DataArg};
+use crate::rl::env::{GridWorld, ACTIONS, OBS_DIM};
+use crate::util::rng::Xoshiro256;
+
+/// Rollout configuration. `envs * horizon` must equal the policy
+/// artifact's training batch (256 for `policy_tiny`).
+#[derive(Debug, Clone, Copy)]
+pub struct RolloutConfig {
+    /// Parallel (vectorized) environments per worker.
+    pub envs: usize,
+    /// Steps collected per environment per iteration.
+    pub horizon: usize,
+    pub gamma: f32,
+    pub lam: f32,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> RolloutConfig {
+        RolloutConfig { envs: 64, horizon: 4, gamma: 0.99, lam: 0.95 }
+    }
+}
+
+/// Assembled PPO minibatch + rollout statistics.
+#[derive(Debug, Clone)]
+pub struct PpoBatch {
+    /// Training batch in the `policy` artifact's ABI order:
+    /// obs, actions, advantages, returns, old log-probs.
+    pub batch: Batch,
+    /// Mean undiscounted return of episodes finished during collection.
+    pub mean_return: f32,
+    /// Mean SPL of finished episodes (success weighted by path length).
+    pub mean_spl: f32,
+    pub episodes_finished: usize,
+    /// Environment steps executed (== envs * horizon).
+    pub env_steps: usize,
+}
+
+/// Generalized advantage estimation over one env's trajectory.
+/// `rewards[t]`, `values[t]`, `dones[t]` for t in 0..T, plus the bootstrap
+/// value after the last step. Returns (advantages, returns).
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    dones: &[bool],
+    bootstrap: f32,
+    gamma: f32,
+    lam: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let t_max = rewards.len();
+    let mut adv = vec![0.0f32; t_max];
+    let mut last = 0.0f32;
+    for t in (0..t_max).rev() {
+        let next_value = if t + 1 < t_max { values[t + 1] } else { bootstrap };
+        let nonterminal = if dones[t] { 0.0 } else { 1.0 };
+        let delta = rewards[t] + gamma * next_value * nonterminal - values[t];
+        last = delta + gamma * lam * nonterminal * last;
+        adv[t] = last;
+    }
+    let ret: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, ret)
+}
+
+/// Collect one rollout with `policy` over persistent `envs`, tracking
+/// per-env episode returns in `ep_returns` across calls.
+pub fn collect_rollout(
+    policy: &mut dyn FnMut(&[f32], usize) -> (Vec<f32>, Vec<f32>),
+    envs: &mut [GridWorld],
+    ep_returns: &mut [f32],
+    cfg: &RolloutConfig,
+    rng: &mut Xoshiro256,
+) -> PpoBatch {
+    let e = cfg.envs;
+    let t_max = cfg.horizon;
+    assert_eq!(envs.len(), e);
+    assert_eq!(ep_returns.len(), e);
+
+    let mut obs_t: Vec<Vec<f32>> = Vec::with_capacity(t_max); // [T][E*OBS]
+    let mut act_t: Vec<Vec<i32>> = Vec::with_capacity(t_max);
+    let mut logp_t: Vec<Vec<f32>> = Vec::with_capacity(t_max);
+    let mut val_t: Vec<Vec<f32>> = Vec::with_capacity(t_max);
+    let mut rew_t: Vec<Vec<f32>> = Vec::with_capacity(t_max);
+    let mut done_t: Vec<Vec<bool>> = Vec::with_capacity(t_max);
+
+    let mut finished_returns: Vec<f32> = Vec::new();
+    let mut finished_spl: Vec<f32> = Vec::new();
+
+    for _ in 0..t_max {
+        let mut obs = Vec::with_capacity(e * OBS_DIM);
+        for env in envs.iter() {
+            obs.extend(env.observe());
+        }
+        let (logp, value) = policy(&obs, e);
+        debug_assert_eq!(logp.len(), e * ACTIONS);
+        debug_assert_eq!(value.len(), e);
+
+        let mut actions = Vec::with_capacity(e);
+        let mut chosen_logp = Vec::with_capacity(e);
+        let mut rewards = Vec::with_capacity(e);
+        let mut dones = Vec::with_capacity(e);
+        for (i, env) in envs.iter_mut().enumerate() {
+            let row = &logp[i * ACTIONS..(i + 1) * ACTIONS];
+            let a = sample_categorical(row, rng);
+            let outcome = env.step(a);
+            ep_returns[i] += outcome.reward;
+            actions.push(a as i32);
+            chosen_logp.push(row[a]);
+            rewards.push(outcome.reward);
+            dones.push(outcome.done);
+            if outcome.done {
+                finished_returns.push(ep_returns[i]);
+                finished_spl.push(env.spl(outcome.success));
+                ep_returns[i] = 0.0;
+                env.reset();
+            }
+        }
+        obs_t.push(obs);
+        act_t.push(actions);
+        logp_t.push(chosen_logp);
+        val_t.push(value);
+        rew_t.push(rewards);
+        done_t.push(dones);
+    }
+
+    // Bootstrap values at the post-rollout observations.
+    let mut final_obs = Vec::with_capacity(e * OBS_DIM);
+    for env in envs.iter() {
+        final_obs.extend(env.observe());
+    }
+    let (_, bootstrap) = policy(&final_obs, e);
+
+    // Per-env GAE, then flatten [T, E] -> [T*E] (row-major by time).
+    let mut adv_flat = vec![0.0f32; t_max * e];
+    let mut ret_flat = vec![0.0f32; t_max * e];
+    for i in 0..e {
+        let rewards: Vec<f32> = (0..t_max).map(|t| rew_t[t][i]).collect();
+        let values: Vec<f32> = (0..t_max).map(|t| val_t[t][i]).collect();
+        let dones: Vec<bool> = (0..t_max).map(|t| done_t[t][i]).collect();
+        let (adv, ret) = gae(&rewards, &values, &dones, bootstrap[i], cfg.gamma, cfg.lam);
+        for t in 0..t_max {
+            adv_flat[t * e + i] = adv[t];
+            ret_flat[t * e + i] = ret[t];
+        }
+    }
+    // Normalize advantages (standard PPO practice; keeps the surrogate
+    // scale stable across heterogeneous episodes).
+    normalize(&mut adv_flat);
+
+    let n = t_max * e;
+    let mut obs_flat = Vec::with_capacity(n * OBS_DIM);
+    let mut act_flat = Vec::with_capacity(n);
+    let mut logp_flat = Vec::with_capacity(n);
+    for t in 0..t_max {
+        obs_flat.extend_from_slice(&obs_t[t]);
+        act_flat.extend(&act_t[t]);
+        logp_flat.extend(&logp_t[t]);
+    }
+
+    let mean = |v: &[f32]| if v.is_empty() { 0.0 } else { v.iter().sum::<f32>() / v.len() as f32 };
+    PpoBatch {
+        batch: Batch::new(vec![
+            DataArg::f32(vec![n, OBS_DIM], obs_flat),
+            DataArg::i32(vec![n], act_flat),
+            DataArg::f32(vec![n], adv_flat),
+            DataArg::f32(vec![n], ret_flat),
+            DataArg::f32(vec![n], logp_flat),
+        ]),
+        mean_return: mean(&finished_returns),
+        mean_spl: mean(&finished_spl),
+        episodes_finished: finished_returns.len(),
+        env_steps: n,
+    }
+}
+
+/// Sample from a categorical given log-probs.
+fn sample_categorical(logp: &[f32], rng: &mut Xoshiro256) -> usize {
+    let u = rng.next_f32();
+    let mut acc = 0.0f32;
+    for (i, &lp) in logp.iter().enumerate() {
+        acc += lp.exp();
+        if u < acc {
+            return i;
+        }
+    }
+    logp.len() - 1
+}
+
+fn normalize(xs: &mut [f32]) {
+    let n = xs.len() as f32;
+    let mean: f32 = xs.iter().sum::<f32>() / n;
+    let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-6);
+    for x in xs.iter_mut() {
+        *x = (*x - mean) / std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gae_matches_hand_computation() {
+        // Single transition, terminal: adv = r - v.
+        let (adv, ret) = gae(&[1.0], &[0.4], &[true], 9.9, 0.99, 0.95);
+        assert!((adv[0] - 0.6).abs() < 1e-6);
+        assert!((ret[0] - 1.0).abs() < 1e-6);
+        // Two steps, no terminal, gamma=1, lam=1: adv0 = r0 + r1 + boot - v0.
+        let (adv, _) = gae(&[0.5, 0.5], &[0.0, 0.0], &[false, false], 2.0, 1.0, 1.0);
+        assert!((adv[0] - 3.0).abs() < 1e-6);
+        assert!((adv[1] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_resets_at_done() {
+        // A done at t=0 must stop credit flowing from t=1.
+        let (adv, _) = gae(&[1.0, 100.0], &[0.0, 0.0], &[true, false], 50.0, 0.99, 0.95);
+        assert!((adv[0] - 1.0).abs() < 1e-6, "no bootstrap across done: {}", adv[0]);
+    }
+
+    fn uniform_policy() -> impl FnMut(&[f32], usize) -> (Vec<f32>, Vec<f32>) {
+        |_obs: &[f32], rows: usize| {
+            let lp = (0.25f32).ln();
+            (vec![lp; rows * ACTIONS], vec![0.0; rows])
+        }
+    }
+
+    #[test]
+    fn rollout_batch_shapes() {
+        let cfg = RolloutConfig { envs: 8, horizon: 4, ..Default::default() };
+        let mut envs: Vec<GridWorld> = (0..8).map(|i| GridWorld::new(100 + i)).collect();
+        let mut ep_ret = vec![0.0; 8];
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut pol = uniform_policy();
+        let pb = collect_rollout(&mut pol, &mut envs, &mut ep_ret, &cfg, &mut rng);
+        assert_eq!(pb.env_steps, 32);
+        assert_eq!(pb.batch.args[0].shape(), &[32, OBS_DIM]);
+        assert_eq!(pb.batch.args[1].shape(), &[32]);
+        // Advantages are normalized: mean ~ 0, std ~ 1.
+        if let DataArg::F32 { values, .. } = &pb.batch.args[2] {
+            let mean: f32 = values.iter().sum::<f32>() / values.len() as f32;
+            assert!(mean.abs() < 1e-4, "adv mean {mean}");
+        }
+        // old_logp = ln(0.25) everywhere under the uniform policy.
+        if let DataArg::F32 { values, .. } = &pb.batch.args[4] {
+            assert!(values.iter().all(|v| (v - 0.25f32.ln()).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn episode_stats_accumulate_across_rollouts() {
+        let cfg = RolloutConfig { envs: 4, horizon: 16, ..Default::default() };
+        let mut envs: Vec<GridWorld> = (0..4).map(|i| GridWorld::new(i)).collect();
+        let mut ep_ret = vec![0.0; 4];
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let mut pol = uniform_policy();
+        let mut total_eps = 0;
+        for _ in 0..20 {
+            let pb = collect_rollout(&mut pol, &mut envs, &mut ep_ret, &cfg, &mut rng);
+            total_eps += pb.episodes_finished;
+            assert!(pb.mean_spl >= 0.0 && pb.mean_spl <= 1.0);
+        }
+        assert!(total_eps > 0, "random policy should finish some episodes");
+    }
+
+    #[test]
+    fn categorical_sampler_respects_distribution() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        // p = [0.7, 0.1, 0.1, 0.1]
+        let logp: Vec<f32> = [0.7f32, 0.1, 0.1, 0.1].iter().map(|p| p.ln()).collect();
+        let mut counts = [0usize; 4];
+        for _ in 0..10_000 {
+            counts[sample_categorical(&logp, &mut rng)] += 1;
+        }
+        assert!(counts[0] > 6_500 && counts[0] < 7_500, "{counts:?}");
+    }
+}

@@ -1,0 +1,223 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`). Describes every AOT artifact's ABI so the
+//! coordinator can construct correctly-shaped inputs without touching
+//! Python.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one data argument.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<ArgMeta> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .context("arg missing shape")?
+            .iter()
+            .map(|v| v.as_usize().context("non-numeric dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.get("dtype").and_then(|d| d.as_str()).context("arg missing dtype")?;
+        Ok(ArgMeta { shape, dtype: dtype.to_string() })
+    }
+}
+
+/// File names of one model's artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelFiles {
+    pub step: String,
+    pub grad: String,
+    pub eval: String,
+    pub params: String,
+}
+
+/// Metadata for one model artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: String,
+    pub batch: usize,
+    pub dims: BTreeMap<String, usize>,
+    pub param_count: usize,
+    pub data_args: Vec<ArgMeta>,
+    pub eval_args: Vec<ArgMeta>,
+    pub files: ModelFiles,
+}
+
+/// Metadata for a standalone kernel artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelMeta {
+    pub name: String,
+    pub s: usize,
+    pub n: usize,
+    pub file: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub kernels: BTreeMap<String, KernelMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {path:?}; run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let mut out = Manifest {
+            fingerprint: j
+                .get("fingerprint")
+                .and_then(|f| f.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            ..Default::default()
+        };
+        if let Some(Json::Obj(models)) = j.get("models") {
+            for (name, m) in models {
+                out.models.insert(name.clone(), Self::parse_model(name, m)?);
+            }
+        }
+        if let Some(Json::Obj(kernels)) = j.get("kernels") {
+            for (name, k) in kernels {
+                let files = k.get("files").context("kernel missing files")?;
+                out.kernels.insert(
+                    name.clone(),
+                    KernelMeta {
+                        name: name.clone(),
+                        s: k.get("s").and_then(|v| v.as_usize()).unwrap_or(0),
+                        n: k.get("n").and_then(|v| v.as_usize()).unwrap_or(0),
+                        file: files
+                            .get("hlo")
+                            .and_then(|f| f.as_str())
+                            .context("kernel missing hlo file")?
+                            .to_string(),
+                    },
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    fn parse_model(name: &str, m: &Json) -> Result<ModelMeta> {
+        let files = m.get("files").context("model missing files")?;
+        let file = |k: &str| -> Result<String> {
+            Ok(files
+                .get(k)
+                .and_then(|f| f.as_str())
+                .with_context(|| format!("model {name} missing file {k}"))?
+                .to_string())
+        };
+        let args = |k: &str| -> Result<Vec<ArgMeta>> {
+            m.get(k)
+                .and_then(|a| a.as_arr())
+                .with_context(|| format!("model {name} missing {k}"))?
+                .iter()
+                .map(ArgMeta::from_json)
+                .collect()
+        };
+        let mut dims = BTreeMap::new();
+        if let Some(Json::Obj(d)) = m.get("dims") {
+            for (k, v) in d {
+                dims.insert(k.clone(), v.as_usize().context("non-numeric dim")?);
+            }
+        }
+        Ok(ModelMeta {
+            name: name.to_string(),
+            kind: m.get("kind").and_then(|k| k.as_str()).context("missing kind")?.to_string(),
+            batch: m.get("batch").and_then(|b| b.as_usize()).context("missing batch")?,
+            dims,
+            param_count: m
+                .get("param_count")
+                .and_then(|p| p.as_usize())
+                .context("missing param_count")?,
+            data_args: args("data_args")?,
+            eval_args: args("eval_args")?,
+            files: ModelFiles {
+                step: file("step")?,
+                grad: file("grad")?,
+                eval: file("eval")?,
+                params: file("params")?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "abc123",
+      "built": ["mlp_tiny"],
+      "models": {
+        "mlp_tiny": {
+          "name": "mlp_tiny", "kind": "classifier", "batch": 32,
+          "dims": {"input_dim": 64, "hidden": 128, "classes": 10},
+          "param_count": 26634, "use_pallas_ffn": true,
+          "data_args": [
+            {"shape": [32, 64], "dtype": "float32"},
+            {"shape": [32], "dtype": "int32"}
+          ],
+          "eval_args": [
+            {"shape": [32, 64], "dtype": "float32"},
+            {"shape": [32], "dtype": "int32"}
+          ],
+          "step_outputs": 3, "grad_outputs": 2,
+          "files": {
+            "step": "mlp_tiny.step.hlo.txt", "grad": "mlp_tiny.grad.hlo.txt",
+            "eval": "mlp_tiny.eval.hlo.txt", "params": "mlp_tiny.params.bin"
+          }
+        }
+      },
+      "kernels": {
+        "group_average": {
+          "name": "group_average", "kind": "kernel", "s": 4, "n": 65536,
+          "files": {"hlo": "group_average.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.fingerprint, "abc123");
+        let model = &m.models["mlp_tiny"];
+        assert_eq!(model.kind, "classifier");
+        assert_eq!(model.batch, 32);
+        assert_eq!(model.param_count, 26634);
+        assert_eq!(model.dims["hidden"], 128);
+        assert_eq!(model.data_args.len(), 2);
+        assert_eq!(model.data_args[0].shape, vec![32, 64]);
+        assert_eq!(model.data_args[0].elements(), 2048);
+        assert_eq!(model.data_args[1].dtype, "int32");
+        assert_eq!(model.files.step, "mlp_tiny.step.hlo.txt");
+        let k = &m.kernels["group_average"];
+        assert_eq!((k.s, k.n), (4, 65536));
+    }
+
+    #[test]
+    fn missing_fields_are_errors() {
+        assert!(Manifest::parse(r#"{"models": {"x": {"kind": "lm"}}}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! The Rust hot path never touches Python. `make artifacts` (build time)
+//! lowers the L2 JAX models to `artifacts/*.hlo.txt`; at run time each
+//! worker thread owns a [`ModelRuntime`] — a PJRT CPU client plus the
+//! compiled step/grad/eval executables for one model — and drives training
+//! entirely through it.
+//!
+//! Note on threading: the `xla` crate's `PjRtClient` is `Rc`-based and not
+//! `Send`, so every worker constructs its own client and compiles its own
+//! executables at startup (a few hundred ms per model; amortized over the
+//! whole run).
+
+pub mod manifest;
+
+pub use manifest::{ArgMeta, Manifest, ModelMeta};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::Batch;
+
+/// A PJRT CPU client plus compiled executables for one model artifact.
+pub struct ModelRuntime {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    step_exe: xla::PjRtLoadedExecutable,
+    grad_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    artifacts_dir: PathBuf,
+}
+
+impl ModelRuntime {
+    /// Load model `name` from `artifacts_dir` (compiling its HLO on a fresh
+    /// CPU PJRT client).
+    pub fn load(artifacts_dir: impl AsRef<Path>, name: &str) -> Result<ModelRuntime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let meta = manifest
+            .models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest; run `make artifacts`"))?
+            .clone();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compile {path:?}"))
+        };
+        Ok(ModelRuntime {
+            step_exe: compile(&meta.files.step)?,
+            grad_exe: compile(&meta.files.grad)?,
+            eval_exe: compile(&meta.files.eval)?,
+            client,
+            artifacts_dir: dir,
+            meta,
+        })
+    }
+
+    /// Read the deterministic initial parameter vector written by aot.py.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.artifacts_dir.join(&self.meta.files.params);
+        let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+        anyhow::ensure!(
+            bytes.len() == self.meta.param_count * 4,
+            "params.bin size {} != 4 * param_count {}",
+            bytes.len(),
+            self.meta.param_count
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// One local training step (Algorithm 2 lines 3–7): heavy-ball SGD via
+    /// the fused Pallas kernel inside the artifact. Updates `params` and
+    /// `mom` in place and returns the minibatch loss.
+    pub fn step(
+        &self,
+        params: &mut Vec<f32>,
+        mom: &mut Vec<f32>,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 + batch.args.len());
+        inputs.push(xla::Literal::vec1(params));
+        inputs.push(xla::Literal::vec1(mom));
+        for a in &batch.args {
+            inputs.push(a.to_literal()?);
+        }
+        inputs.push(xla::Literal::from(lr));
+        let out = self.execute(&self.step_exe, &inputs)?;
+        let (p2, m2, loss) = out.to_tuple3().context("step output arity")?;
+        *params = p2.to_vec::<f32>()?;
+        *mom = m2.to_vec::<f32>()?;
+        Ok(loss.to_vec::<f32>()?[0])
+    }
+
+    /// Gradient + loss for the gradient-averaging baselines
+    /// (Allreduce-SGD, eager-SGD).
+    pub fn grad(&self, params: &[f32], batch: &Batch) -> Result<(Vec<f32>, f32)> {
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(1 + batch.args.len());
+        inputs.push(xla::Literal::vec1(params));
+        for a in &batch.args {
+            inputs.push(a.to_literal()?);
+        }
+        let out = self.execute(&self.grad_exe, &inputs)?;
+        let (g, loss) = out.to_tuple2().context("grad output arity")?;
+        Ok((g.to_vec::<f32>()?, loss.to_vec::<f32>()?[0]))
+    }
+
+    /// Task metric: classifier accuracy or LM loss on a held-out batch.
+    pub fn eval_metric(&self, params: &[f32], batch: &Batch) -> Result<f32> {
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(1 + batch.args.len());
+        inputs.push(xla::Literal::vec1(params));
+        for a in &batch.args {
+            inputs.push(a.to_literal()?);
+        }
+        let out = self.execute(&self.eval_exe, &inputs)?;
+        let m = out.to_tuple1().context("eval output arity")?;
+        Ok(m.to_vec::<f32>()?[0])
+    }
+
+    /// Policy forward: per-sample action log-probs and values
+    /// (`obs [B, O] -> (logp [B, A], value [B])`).
+    pub fn policy_forward(
+        &self,
+        params: &[f32],
+        obs: &crate::model::DataArg,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let inputs = vec![xla::Literal::vec1(params), obs.to_literal()?];
+        let out = self.execute(&self.eval_exe, &inputs)?;
+        let (logp, value) = out.to_tuple2().context("policy eval output arity")?;
+        Ok((logp.to_vec::<f32>()?, value.to_vec::<f32>()?))
+    }
+
+    fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let bufs = exe.execute::<xla::Literal>(inputs).context("PJRT execute")?;
+        Ok(bufs[0][0].to_literal_sync()?)
+    }
+
+    /// Raw client access (tests / diagnostics).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Standalone kernel artifact: the Pallas group-average as an executable
+/// (optional accelerator-offloaded blend; the coordinator's default blend is
+/// native Rust — see benches/collectives.rs for the comparison).
+pub struct AverageKernel {
+    exe: xla::PjRtLoadedExecutable,
+    _client: xla::PjRtClient,
+    pub s: usize,
+    pub n: usize,
+}
+
+impl AverageKernel {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<AverageKernel> {
+        let dir = artifacts_dir.as_ref();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let k = manifest
+            .kernels
+            .get("group_average")
+            .context("group_average not in manifest")?;
+        let client = xla::PjRtClient::cpu()?;
+        let path = dir.join(&k.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        Ok(AverageKernel { exe, _client: client, s: k.s, n: k.n })
+    }
+
+    /// Average `s` stacked models of length `n` (row-major [S, N]).
+    pub fn average(&self, stacked: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(stacked.len() == self.s * self.n, "bad stacked size");
+        let lit = xla::Literal::vec1(stacked).reshape(&[self.s as i64, self.n as i64])?;
+        let out = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+}

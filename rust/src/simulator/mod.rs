@@ -1,0 +1,21 @@
+//! Discrete-event cluster simulator — the at-scale substrate.
+//!
+//! The paper's Fig. 4/7/10 run on up to 1,024 GPU nodes of Piz Daint. That
+//! hardware is substituted (DESIGN.md §2) by an event-driven simulation
+//! that executes the *same* communication schedules — recursive-doubling
+//! phases, butterfly group exchanges with engine-level (wait-avoiding)
+//! participation, ring/gossip dependencies — over an α-β network model
+//! calibrated to an Aries-class interconnect, with per-rank compute times
+//! drawn from the paper's three imbalance processes.
+//!
+//! What the simulation preserves: who waits for whom (the synchronization
+//! structure of each algorithm), message counts/sizes, activation latency,
+//! the τ-periodic global barrier, straggler lag accumulation. What it
+//! abstracts: per-packet behaviour and congestion (first-order contention
+//! is modelled via the per-phase serialization term).
+
+pub mod network;
+pub mod sim;
+
+pub use network::NetworkModel;
+pub use sim::{simulate, SimConfig, SimResult};

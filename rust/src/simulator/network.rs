@@ -1,0 +1,111 @@
+//! α-β network cost model.
+//!
+//! A point-to-point message of `n` bytes costs `alpha + n * beta` seconds
+//! (Hockney). Defaults are calibrated to a Cray-Aries-class interconnect
+//! (the paper's testbed): ~1.5 µs MPI latency, ~10 GB/s effective
+//! per-link bandwidth.
+
+/// Hockney α-β model with a first-order contention term.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Per-message latency (seconds).
+    pub alpha: f64,
+    /// Per-byte transfer time (seconds/byte).
+    pub beta: f64,
+    /// Per-byte reduction compute (seconds/byte) — the γ term for
+    /// elementwise sums on the host.
+    pub gamma: f64,
+    /// Contention factor: effective per-byte cost inside a collective with
+    /// `k` participants is `beta * (1 + contention * log2(k))`, modelling
+    /// the bandwidth degradation of concurrent bulk flows on a shared
+    /// dragonfly fabric (paper §III: "growing process counts will reduce
+    /// the parallel efficiency"). This is what makes *group* collectives
+    /// (small k) cheaper per byte than global ones, beyond phase count.
+    pub contention: f64,
+}
+
+impl NetworkModel {
+    /// Aries-like defaults (Piz Daint): α = 1.5 µs, 10 GB/s, ~8 GB/s
+    /// reduction rate, mild contention growth.
+    pub fn aries() -> NetworkModel {
+        NetworkModel { alpha: 1.5e-6, beta: 1.0 / 10e9, gamma: 1.0 / 8e9, contention: 0.12 }
+    }
+
+    fn beta_eff(&self, participants: usize) -> f64 {
+        let k = participants.max(1) as f64;
+        self.beta * (1.0 + self.contention * k.log2())
+    }
+
+    /// Cost of one point-to-point message of `bytes` (no collective
+    /// contention).
+    pub fn p2p(&self, bytes: usize) -> f64 {
+        self.alpha + bytes as f64 * self.beta
+    }
+
+    /// Cost of one butterfly exchange phase on `bytes` (sendrecv + local
+    /// reduction) inside a collective of `participants` ranks.
+    pub fn exchange(&self, bytes: usize, participants: usize) -> f64 {
+        self.alpha + bytes as f64 * (self.beta_eff(participants) + self.gamma)
+    }
+
+    /// Recursive-doubling allreduce cost for `bytes` over `p` ranks,
+    /// assuming synchronized arrival: `log2(P) * exchange(N)`.
+    pub fn allreduce_rd(&self, bytes: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        (p.trailing_zeros() as f64) * self.exchange(bytes, p)
+    }
+
+    /// Ring allreduce cost: `2 (P-1)` steps of `N/P` bytes.
+    pub fn allreduce_ring(&self, bytes: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let chunk = bytes as f64 / p as f64;
+        2.0 * (p - 1) as f64 * (self.alpha + chunk * (self.beta_eff(p) + self.gamma))
+    }
+
+    /// Best-of allreduce (what a tuned MPI would pick).
+    pub fn allreduce(&self, bytes: usize, p: usize) -> f64 {
+        self.allreduce_rd(bytes, p).min(self.allreduce_ring(bytes, p))
+    }
+
+    /// Binomial-tree activation latency to depth `log2(P)`.
+    pub fn activation(&self, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        p.trailing_zeros() as f64 * self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_scale_sanely() {
+        let net = NetworkModel::aries();
+        // 100 MB allreduce over 64 ranks: ring must beat recursive doubling.
+        let bytes = 100 << 20;
+        assert!(net.allreduce_ring(bytes, 64) < net.allreduce_rd(bytes, 64));
+        // Tiny payload: recursive doubling wins (latency-bound).
+        assert!(net.allreduce_rd(64, 64) < net.allreduce_ring(64, 64));
+        // Costs grow with P (recursive doubling) and with size.
+        assert!(net.allreduce_rd(1 << 20, 256) > net.allreduce_rd(1 << 20, 16));
+        assert!(net.p2p(1 << 20) > net.p2p(1 << 10));
+        assert_eq!(net.allreduce(123, 1), 0.0);
+    }
+
+    #[test]
+    fn aries_magnitudes() {
+        // ResNet-50 (102 MB) allreduce on 64 nodes should land in the
+        // tens-of-milliseconds range, matching published measurements.
+        let net = NetworkModel::aries();
+        let t = net.allreduce(102 << 20, 64);
+        assert!(t > 0.01 && t < 0.2, "allreduce time {t}");
+        // Activation is microseconds even at 1024 ranks.
+        assert!(net.activation(1024) < 1e-4);
+    }
+}

@@ -1,0 +1,259 @@
+//! Dynamic grouping strategy (paper §III-B, Algorithm 1).
+//!
+//! At training iteration `t`, the `P` processes are partitioned into `P/S`
+//! non-overlapping groups of size `S`. Within a group, the allreduce runs
+//! `log2(S)` butterfly phases; the hypercube *bit positions* used by those
+//! phases rotate with `t`:
+//!
+//! ```text
+//! bit(t, r) = (t · log2(S) + r) mod log2(P),   r = 0 .. log2(S)-1
+//! partner(p, t, r) = p XOR (1 << bit(t, r))
+//! ```
+//!
+//! The paper's pseudocode expresses this with a left-shifting mask and a
+//! rotating `shift`; the closed form above is the fixed point of its worked
+//! example (P=8, S=4: iteration 0 groups {0,1,2,3},{4,5,6,7}; iteration 1
+//! groups {0,1,4,5},{2,3,6,7}) and is what the butterfly implementation in
+//! §III-B ("we use the variable t to change the phases that should be
+//! executed in the current iteration") describes. Because the start offset
+//! advances by `log2(S)` every iteration, all `log2(P)` hypercube
+//! dimensions are covered every `ceil(log2 P / log2 S) = log_S(P)`
+//! iterations, which is the paper's propagation guarantee.
+
+use super::log2_exact;
+
+/// The dynamic (or optionally static) grouping schedule for `P` processes
+/// with group size `S`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grouping {
+    p: usize,
+    s: usize,
+    log_p: u32,
+    log_s: u32,
+    /// If false, the group composition is frozen to iteration 0 —
+    /// the "fixed groups" ablation (paper §V-B experiment ❷).
+    dynamic: bool,
+}
+
+impl Grouping {
+    /// Dynamic grouping (the paper's default).
+    pub fn new(p: usize, s: usize) -> Grouping {
+        Self::with_mode(p, s, true)
+    }
+
+    /// Static grouping ablation: groups never change across iterations.
+    pub fn fixed(p: usize, s: usize) -> Grouping {
+        Self::with_mode(p, s, false)
+    }
+
+    fn with_mode(p: usize, s: usize, dynamic: bool) -> Grouping {
+        let log_p = log2_exact(p);
+        let log_s = log2_exact(s);
+        assert!(s <= p, "group size {s} exceeds process count {p}");
+        assert!(p >= 1);
+        Grouping { p, s, log_p, log_s, dynamic }
+    }
+
+    /// The paper's recommended group size: S = sqrt(P), rounded to the
+    /// nearest power of two (exact when log2(P) is even).
+    pub fn sqrt_group_size(p: usize) -> usize {
+        let log_p = log2_exact(p);
+        1usize << log_p.div_ceil(2)
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.s
+    }
+
+    /// Number of butterfly phases per group collective.
+    pub fn phases(&self) -> u32 {
+        self.log_s
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        self.dynamic
+    }
+
+    /// Hypercube bit position used at iteration `t`, phase `r`.
+    pub fn phase_bit(&self, t: u64, r: u32) -> u32 {
+        debug_assert!(r < self.log_s);
+        if self.log_p == 0 {
+            return 0;
+        }
+        let t = if self.dynamic { t } else { 0 };
+        ((t * self.log_s as u64 + r as u64) % self.log_p as u64) as u32
+    }
+
+    /// XOR mask for iteration `t`, phase `r`.
+    pub fn phase_mask(&self, t: u64, r: u32) -> usize {
+        1usize << self.phase_bit(t, r)
+    }
+
+    /// The butterfly partner of `rank` at iteration `t`, phase `r`.
+    pub fn partner(&self, rank: usize, t: u64, r: u32) -> usize {
+        debug_assert!(rank < self.p);
+        rank ^ self.phase_mask(t, r)
+    }
+
+    /// OR of all phase masks at iteration `t` — the set of "free" bits
+    /// that vary within a group.
+    pub fn free_mask(&self, t: u64) -> usize {
+        (0..self.log_s).fold(0usize, |m, r| m | self.phase_mask(t, r))
+    }
+
+    /// Canonical group identifier of `rank` at iteration `t` (its rank with
+    /// the free bits cleared). Two ranks are in the same group iff their
+    /// group ids are equal.
+    pub fn group_id(&self, rank: usize, t: u64) -> usize {
+        rank & !self.free_mask(t)
+    }
+
+    /// All members of `rank`'s group at iteration `t`, ascending.
+    pub fn group_of(&self, rank: usize, t: u64) -> Vec<usize> {
+        let free = self.free_mask(t);
+        let base = rank & !free;
+        // Enumerate subsets of the free mask.
+        let mut members = Vec::with_capacity(self.s);
+        let mut sub = 0usize;
+        loop {
+            members.push(base | sub);
+            if sub == free {
+                break;
+            }
+            sub = (sub.wrapping_sub(free)) & free; // next subset trick
+        }
+        members.sort_unstable();
+        members
+    }
+
+    /// The full partition at iteration `t`: `P/S` groups of size `S`.
+    pub fn groups(&self, t: u64) -> Vec<Vec<usize>> {
+        let free = self.free_mask(t);
+        let mut out = Vec::with_capacity(self.p / self.s);
+        for base in 0..self.p {
+            if base & free == 0 {
+                out.push(self.group_of(base, t));
+            }
+        }
+        out
+    }
+
+    /// Number of iterations for a local update to propagate to all ranks:
+    /// `log_S(P)` (paper §V-B: "globally propagate only using log_S P
+    /// iterations").
+    pub fn propagation_iters(&self) -> u32 {
+        if self.log_s == 0 {
+            return u32::MAX; // S = 1 never propagates
+        }
+        self.log_p.div_ceil(self.log_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's worked example (§III-B): P=8, S=4.
+    #[test]
+    fn grouping_paper_example() {
+        let g = Grouping::new(8, 4);
+        assert_eq!(g.groups(0), vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        assert_eq!(g.groups(1), vec![vec![0, 1, 4, 5], vec![2, 3, 6, 7]]);
+    }
+
+    /// Fig. 2's schedule: the same two partitions alternate for P=8, S=4.
+    #[test]
+    fn grouping_alternates() {
+        let g = Grouping::new(8, 4);
+        for t in 0..12u64 {
+            let gr = g.groups(t);
+            assert_eq!(gr.len(), 2);
+            assert!(gr.iter().all(|grp| grp.len() == 4));
+        }
+        // Iterations 0 and 3 use bit offsets 0 and 6 mod 3 = 0: same groups.
+        assert_eq!(g.groups(0), g.groups(3));
+    }
+
+    #[test]
+    fn partition_invariants() {
+        for &(p, s) in &[(2, 2), (4, 2), (8, 2), (8, 4), (16, 4), (64, 8), (256, 16)] {
+            let g = Grouping::new(p, s);
+            for t in 0..10u64 {
+                let groups = g.groups(t);
+                assert_eq!(groups.len(), p / s);
+                let mut seen = vec![false; p];
+                for grp in &groups {
+                    assert_eq!(grp.len(), s);
+                    for &r in grp {
+                        assert!(!seen[r], "rank {r} in two groups");
+                        seen[r] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&b| b), "partition must cover all ranks");
+            }
+        }
+    }
+
+    #[test]
+    fn partner_is_involution_and_same_group() {
+        let g = Grouping::new(32, 4);
+        for t in 0..8u64 {
+            for rank in 0..32 {
+                for r in 0..g.phases() {
+                    let q = g.partner(rank, t, r);
+                    assert_eq!(g.partner(q, t, r), rank, "partner must be an involution");
+                    assert_eq!(g.group_id(rank, t), g.group_id(q, t));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_grouping_never_changes() {
+        let g = Grouping::fixed(16, 4);
+        let g0 = g.groups(0);
+        for t in 1..20u64 {
+            assert_eq!(g.groups(t), g0);
+        }
+    }
+
+    #[test]
+    fn dynamic_grouping_covers_all_bits() {
+        // Within propagation_iters() consecutive iterations, every hypercube
+        // dimension must appear in some phase (this is what guarantees
+        // global propagation in log_S P iterations).
+        for &(p, s) in &[(16, 4), (64, 8), (256, 16), (1024, 32)] {
+            let g = Grouping::new(p, s);
+            let window = g.propagation_iters() as u64;
+            for t0 in 0..6u64 {
+                let mut bits = 0usize;
+                for t in t0..t0 + window {
+                    bits |= g.free_mask(t);
+                }
+                assert_eq!(bits, p - 1, "P={p} S={s} window={window} bits={bits:b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_group_size_values() {
+        assert_eq!(Grouping::sqrt_group_size(64), 8);
+        assert_eq!(Grouping::sqrt_group_size(256), 16);
+        assert_eq!(Grouping::sqrt_group_size(1024), 32);
+        // Odd log2: round up.
+        assert_eq!(Grouping::sqrt_group_size(8), 4);
+        assert_eq!(Grouping::sqrt_group_size(128), 16);
+    }
+
+    #[test]
+    fn global_group_is_allreduce() {
+        let g = Grouping::new(16, 16);
+        assert_eq!(g.groups(0).len(), 1);
+        assert_eq!(g.groups(5)[0], (0..16).collect::<Vec<_>>());
+        assert_eq!(g.propagation_iters(), 1);
+    }
+}

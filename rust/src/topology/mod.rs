@@ -1,0 +1,34 @@
+//! Process topology machinery: hypercube/butterfly phase schedules, the
+//! dynamic grouping strategy of WAGMA-SGD (Algorithm 1 in the paper), and
+//! binomial activation trees for wait-avoiding collectives.
+
+pub mod grouping;
+pub mod tree;
+
+pub use grouping::Grouping;
+pub use tree::BinomialTree;
+
+/// log2 of a power-of-two, with a hard assertion (the paper assumes both
+/// `P` and `S` are powers of two; so do we).
+pub fn log2_exact(x: usize) -> u32 {
+    assert!(x.is_power_of_two(), "{x} is not a power of two");
+    x.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_values() {
+        assert_eq!(log2_exact(1), 0);
+        assert_eq!(log2_exact(2), 1);
+        assert_eq!(log2_exact(1024), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn log2_rejects_non_pow2() {
+        log2_exact(12);
+    }
+}

@@ -1,0 +1,128 @@
+//! Binomial broadcast trees over a hypercube, used for collective
+//! *activation* (paper §III-A1, Fig. 1).
+//!
+//! The wait-avoiding group allreduce is built from overlapping binomial
+//! trees, one rooted at each process: the *activator* (first process to
+//! reach the collective) broadcasts activation messages along the tree
+//! rooted at itself; every receiver forwards to its own children in that
+//! tree before joining the collective.
+//!
+//! Trees are expressed in *relative* coordinates `rel = rank XOR root`:
+//! in relative space the root is 0, the parent of node `r != 0` clears the
+//! highest set bit of `r`, and the children of `r` set each bit above its
+//! highest set bit. Depth is `log2(P)` and every node is reached exactly
+//! once — the classic binomial broadcast.
+
+use super::log2_exact;
+
+/// Binomial broadcast tree over `P` (power-of-two) ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BinomialTree {
+    p: usize,
+    log_p: u32,
+}
+
+impl BinomialTree {
+    pub fn new(p: usize) -> BinomialTree {
+        BinomialTree { p, log_p: log2_exact(p) }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Children of `rank` in the tree rooted at `root`, in send order.
+    pub fn children(&self, root: usize, rank: usize) -> Vec<usize> {
+        debug_assert!(root < self.p && rank < self.p);
+        let rel = rank ^ root;
+        let start = if rel == 0 {
+            0
+        } else {
+            // Bits above the highest set bit of rel.
+            (usize::BITS - rel.leading_zeros()) as u32
+        };
+        (start..self.log_p).map(|k| (rel | (1usize << k)) ^ root).collect()
+    }
+
+    /// Parent of `rank` in the tree rooted at `root` (None for the root).
+    pub fn parent(&self, root: usize, rank: usize) -> Option<usize> {
+        let rel = rank ^ root;
+        if rel == 0 {
+            return None;
+        }
+        let high = 1usize << (usize::BITS - 1 - rel.leading_zeros() as u32) as u32;
+        Some((rel & !high) ^ root)
+    }
+
+    /// Depth of `rank` in the tree rooted at `root` = popcount of the
+    /// relative id. Maximum depth is log2(P).
+    pub fn depth(&self, root: usize, rank: usize) -> u32 {
+        (rank ^ root).count_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_example() {
+        // Paper Fig. 1: P=4, activator P1. P1's tree: P1 -> {P0, P3},
+        // P0 forwards to P2.
+        let t = BinomialTree::new(4);
+        assert_eq!(t.children(1, 1), vec![0, 3]);
+        assert_eq!(t.children(1, 0), vec![2]);
+        assert_eq!(t.children(1, 3), Vec::<usize>::new());
+        assert_eq!(t.children(1, 2), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn every_rank_reached_exactly_once() {
+        for &p in &[1usize, 2, 4, 8, 16, 64, 256] {
+            let t = BinomialTree::new(p);
+            for root in [0, p / 3, p - 1] {
+                let root = root.min(p - 1);
+                let mut reached = vec![0usize; p];
+                // BFS from root.
+                let mut frontier = vec![root];
+                reached[root] += 1;
+                while let Some(r) = frontier.pop() {
+                    for c in t.children(root, r) {
+                        reached[c] += 1;
+                        frontier.push(c);
+                    }
+                }
+                assert!(
+                    reached.iter().all(|&n| n == 1),
+                    "P={p} root={root}: {reached:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parent_child_consistency() {
+        let t = BinomialTree::new(32);
+        for root in 0..32 {
+            for rank in 0..32 {
+                for c in t.children(root, rank) {
+                    assert_eq!(t.parent(root, c), Some(rank));
+                }
+                if let Some(par) = t.parent(root, rank) {
+                    assert!(t.children(root, par).contains(&rank));
+                }
+            }
+            assert_eq!(t.parent(root, root), None);
+        }
+    }
+
+    #[test]
+    fn depth_bounded_by_log_p() {
+        let t = BinomialTree::new(64);
+        for root in [0usize, 17, 63] {
+            for rank in 0..64 {
+                assert!(t.depth(root, rank) <= 6);
+            }
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Tiny command-line argument parser (offline environment: no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters parse on access and report helpful errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.entry(body.to_string()).or_default().push(v);
+                } else {
+                    out.flags.entry(body.to_string()).or_default().push(String::new());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("") | Some("true") | Some("1") => true,
+            Some("false") | Some("0") => false,
+            Some(other) => panic!("--{key}: expected boolean, got {other:?}"),
+        }
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}: cannot parse {v:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list value, e.g. `--algos wagma,local_sgd`.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["train", "extra", "--steps", "100", "--algo=wagma", "--verbose"]);
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.str_or("algo", "x"), "wagma");
+        assert!(a.bool_or("verbose", false));
+        assert!(!a.bool_or("quiet", false));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse(&["--algos", "wagma, sgp ,dpsgd"]);
+        assert_eq!(a.list_or("algos", &[]), vec!["wagma", "sgp", "dpsgd"]);
+        assert_eq!(a.list_or("missing", &["a"]), vec!["a"]);
+        assert_eq!(a.f64_or("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn repeated_flags_last_wins() {
+        let a = parse(&["--p", "4", "--p", "8"]);
+        assert_eq!(a.usize_or("p", 0), 8);
+        assert_eq!(a.get_all("p"), vec!["4", "8"]);
+    }
+}

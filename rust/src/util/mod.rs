@@ -1,0 +1,79 @@
+//! Shared utility substrates: deterministic RNG + distributions, minimal
+//! JSON, summary statistics, CLI parsing, and a small property-testing
+//! harness. These replace the third-party crates (`rand`, `serde_json`,
+//! `clap`, `proptest`, `criterion`) that are unavailable in the offline
+//! build environment.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Elementwise in-place `dst += src`. The innermost loop of every model
+/// averaging collective; kept here so all call-sites share one optimized
+/// implementation (auto-vectorizes under `-O`; chunked to help LLVM).
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d += *s;
+    }
+}
+
+/// Elementwise in-place `dst = (dst + src) * scale`.
+#[inline]
+pub fn add_scale(dst: &mut [f32], src: &[f32], scale: f32) {
+    assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = (*d + *s) * scale;
+    }
+}
+
+/// Elementwise in-place `dst *= scale`.
+#[inline]
+pub fn scale(dst: &mut [f32], scale: f32) {
+    for d in dst.iter_mut() {
+        *d *= scale;
+    }
+}
+
+/// Elementwise `dst -= lr * src` (SGD update step).
+#[inline]
+pub fn axpy_neg(dst: &mut [f32], src: &[f32], lr: f32) {
+    assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d -= lr * *s;
+    }
+}
+
+/// L2 norm of a vector.
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Maximum absolute elementwise difference.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_ops() {
+        let mut d = vec![1.0f32, 2.0, 3.0];
+        add_assign(&mut d, &[1.0, 1.0, 1.0]);
+        assert_eq!(d, vec![2.0, 3.0, 4.0]);
+        add_scale(&mut d, &[0.0, 1.0, 2.0], 0.5);
+        assert_eq!(d, vec![1.0, 2.0, 3.0]);
+        scale(&mut d, 2.0);
+        assert_eq!(d, vec![2.0, 4.0, 6.0]);
+        axpy_neg(&mut d, &[1.0, 1.0, 1.0], 2.0);
+        assert_eq!(d, vec![0.0, 2.0, 4.0]);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+    }
+}

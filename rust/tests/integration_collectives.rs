@@ -1,0 +1,349 @@
+//! Integration tests: wait-avoiding group allreduce + engines + sync
+//! collectives composed at realistic scales.
+
+use std::thread;
+use std::time::Duration;
+
+use wagma::collectives::allreduce::AllreduceAlgo;
+use wagma::collectives::engine::{ActivationMode, CollectiveEngine, EngineConfig, EngineStats};
+use wagma::comm::world;
+use wagma::topology::Grouping;
+
+fn cfg(p: usize, s: usize, tau: u64) -> EngineConfig {
+    EngineConfig {
+        p,
+        group_size: s,
+        tau,
+        dynamic_groups: true,
+        sync_algo: AllreduceAlgo::Auto,
+        activation: ActivationMode::Solo,
+    }
+}
+
+/// Run a full WAGMA-style averaging loop at P=16, S=4 with mixed speeds and
+/// verify model-consistency at every sync point.
+#[test]
+fn sixteen_ranks_group_averaging_with_sync() {
+    let p = 16;
+    let s = 4;
+    let tau = 5;
+    let steps = 20u64;
+    let dim = 64;
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| CollectiveEngine::spawn(ep, cfg(p, s, tau), vec![0.0; dim]))
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            thread::spawn(move || {
+                let rank = eng.rank();
+                let mut w = vec![rank as f32; dim];
+                let mut sync_snapshots = Vec::new();
+                for t in 0..steps {
+                    // Mixed speeds: ranks 12..16 are slow.
+                    if rank >= 12 {
+                        thread::sleep(Duration::from_millis(3));
+                    }
+                    // "Local update": drift by +1.
+                    for x in w.iter_mut() {
+                        *x += 1.0;
+                    }
+                    eng.publish(&w, t);
+                    if eng.config().is_sync_iter(t) {
+                        let sum = eng.global_sync(t);
+                        w = sum.iter().map(|x| x / p as f32).collect();
+                        sync_snapshots.push(w.clone());
+                    } else {
+                        let res = eng.group_allreduce(t);
+                        if res.is_fresh(t) {
+                            w = res.sum.iter().map(|x| x / s as f32).collect();
+                        } else {
+                            w = res
+                                .sum
+                                .iter()
+                                .zip(&w)
+                                .map(|(sum, own)| (sum + own) / (s as f32 + 1.0))
+                                .collect();
+                        }
+                    }
+                }
+                (rank, sync_snapshots, eng.shutdown())
+            })
+        })
+        .collect();
+    let mut outs: Vec<(usize, Vec<Vec<f32>>, EngineStats)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    outs.sort_by_key(|o| o.0);
+    // After each global sync, every rank must hold the exact same model.
+    let n_syncs = outs[0].1.len();
+    assert_eq!(n_syncs, (steps / tau) as usize);
+    for k in 0..n_syncs {
+        let reference = &outs[0].1[k];
+        for (rank, snaps, _) in &outs {
+            assert_eq!(&snaps[k], reference, "rank {rank} diverged at sync {k}");
+        }
+    }
+    // Every engine executed every collective exactly once.
+    for (_, _, st) in &outs {
+        assert_eq!(st.group_collectives + st.global_syncs, steps);
+    }
+}
+
+/// Multiple concurrent activators: all ranks hit the collective at once,
+/// every version executes exactly once per rank, sums are exact.
+#[test]
+fn concurrent_activators_dedup() {
+    let p = 8;
+    let s = 8; // one global group: all ranks in one butterfly
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| {
+            let r = ep.rank() as f32;
+            CollectiveEngine::spawn(ep, cfg(p, s, 0), vec![r])
+        })
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            thread::spawn(move || {
+                for t in 0..10u64 {
+                    eng.publish(&[eng.rank() as f32], t);
+                    let res = eng.group_allreduce(t);
+                    if res.is_fresh(t) {
+                        // Global sum of ranks 0..8 = 28.
+                        assert_eq!(res.sum, vec![28.0], "t={t}");
+                    }
+                }
+                eng.shutdown()
+            })
+        })
+        .collect();
+    let stats: Vec<EngineStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let total: u64 = stats.iter().map(|s| s.group_collectives).sum();
+    assert_eq!(total, 10 * p as u64, "each version exactly once per rank");
+}
+
+/// The activation path must reach *every* rank even when only one rank is
+/// fast: the extreme straggler pattern of Fig. 3.
+#[test]
+fn single_fast_rank_activates_everyone() {
+    let p = 8;
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| CollectiveEngine::spawn(ep, cfg(p, 2, 0), vec![0.0]))
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            thread::spawn(move || {
+                let mut passive_results = 0u64;
+                for t in 0..6u64 {
+                    if eng.rank() != 0 {
+                        // Everyone except rank 0 is slow.
+                        thread::sleep(Duration::from_millis(8));
+                    }
+                    eng.publish(&[eng.rank() as f32 + 10.0 * t as f32], t);
+                    let res = eng.group_allreduce(t);
+                    if !res.is_fresh(t) {
+                        passive_results += 1;
+                    }
+                }
+                (eng.rank(), passive_results, eng.shutdown())
+            })
+        })
+        .collect();
+    let outs: Vec<(usize, u64, EngineStats)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Rank 0 (the only fast one) should activate several collectives.
+    let rank0 = outs.iter().find(|o| o.0 == 0).unwrap();
+    assert!(rank0.2.activations_sent >= 3, "rank 0 activations: {:?}", rank0.2);
+    // Passive executions must appear on the slow side.
+    let passives: u64 = outs.iter().map(|o| o.2.passive_executions).sum();
+    assert!(passives > 0);
+}
+
+/// Staleness must be bounded by τ: with a permanently slow rank, the gap
+/// between contributed stamps and versions never exceeds τ.
+#[test]
+fn staleness_bounded_by_tau() {
+    let p = 4;
+    let tau = 4u64;
+    let steps = 16u64;
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| CollectiveEngine::spawn(ep, cfg(p, 2, tau), vec![0.0]))
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            thread::spawn(move || {
+                let mut max_staleness = 0u64;
+                for t in 0..steps {
+                    if eng.rank() == 2 {
+                        thread::sleep(Duration::from_millis(6));
+                    }
+                    eng.publish(&[t as f32], t);
+                    if eng.config().is_sync_iter(t) {
+                        let _ = eng.global_sync(t);
+                    } else {
+                        let res = eng.group_allreduce(t);
+                        max_staleness = max_staleness.max(res.staleness(t));
+                    }
+                }
+                let _ = eng.shutdown();
+                max_staleness
+            })
+        })
+        .collect();
+    for h in handles {
+        let st = h.join().unwrap();
+        assert!(st < tau, "staleness {st} must stay below tau {tau}");
+    }
+}
+
+/// Grouping + engine agreement: the group sums observed by fresh ranks
+/// correspond exactly to the dynamic groups of Algorithm 1.
+#[test]
+fn engine_respects_dynamic_grouping() {
+    let p = 16;
+    let s = 4;
+    let grouping = Grouping::new(p, s);
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| {
+            let r = ep.rank() as f32;
+            CollectiveEngine::spawn(ep, cfg(p, s, 0), vec![r])
+        })
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            thread::spawn(move || {
+                for t in 0..8u64 {
+                    let w = vec![eng.rank() as f32];
+                    eng.publish(&w, t);
+                    let res = eng.group_allreduce(t);
+                    if res.is_fresh(t) {
+                        let members = grouping.group_of(eng.rank(), t);
+                        let expected: f32 = members.iter().map(|&m| m as f32).sum();
+                        assert_eq!(res.sum, vec![expected], "rank {} t {t}", eng.rank());
+                    }
+                }
+                eng.shutdown()
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// Fixed-group mode (ablation ❷) keeps partners constant across t.
+#[test]
+fn fixed_groups_engine() {
+    let p = 8;
+    let mut c = cfg(p, 4, 0);
+    c.dynamic_groups = false;
+    let grouping = Grouping::fixed(p, 4);
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| {
+            let r = ep.rank() as f32;
+            CollectiveEngine::spawn(ep, c, vec![r])
+        })
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            thread::spawn(move || {
+                for t in 0..6u64 {
+                    eng.publish(&[eng.rank() as f32], t);
+                    let res = eng.group_allreduce(t);
+                    if res.is_fresh(t) {
+                        let members = grouping.group_of(eng.rank(), 0);
+                        let expected: f32 = members.iter().map(|&m| m as f32).sum();
+                        assert_eq!(res.sum, vec![expected]);
+                    }
+                }
+                eng.shutdown()
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// Publish-stamp semantics: before the first publish the contribution is
+/// the initial model (STAMP_INITIAL => stale, staleness t+1); after
+/// publish it is fresh.
+#[test]
+fn initial_buffer_counts_as_stale() {
+    use wagma::collectives::engine::STAMP_INITIAL;
+    let p = 2;
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| CollectiveEngine::spawn(ep, cfg(p, 2, 0), vec![7.0]))
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            std::thread::spawn(move || {
+                // Iteration 0 WITHOUT publish: both ranks contribute the
+                // initial buffer.
+                let res = eng.group_allreduce(0);
+                assert_eq!(res.sum, vec![14.0]);
+                assert_eq!(res.contributed_stamp, STAMP_INITIAL);
+                assert!(!res.is_fresh(0));
+                assert_eq!(res.staleness(0), 1);
+                // Iteration 1 with publish: fresh (unless raced passively).
+                eng.publish(&[1.0], 1);
+                let res = eng.group_allreduce(1);
+                if res.is_fresh(1) {
+                    assert_eq!(res.staleness(1), 0);
+                }
+                eng.shutdown()
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// Engine statistics add up: group collectives + syncs == iterations, and
+/// byte accounting matches the schedule.
+#[test]
+fn engine_stats_accounting() {
+    let p = 4;
+    let dim = 100usize;
+    let steps = 9u64; // tau=3 => syncs at t=2,5,8; 6 group collectives
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| CollectiveEngine::spawn(ep, cfg(p, 2, 3), vec![0.0; dim]))
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            std::thread::spawn(move || {
+                for t in 0..steps {
+                    eng.publish(&vec![1.0; 100], t);
+                    if eng.config().is_sync_iter(t) {
+                        let _ = eng.global_sync(t);
+                    } else {
+                        let _ = eng.group_allreduce(t);
+                    }
+                }
+                eng.shutdown()
+            })
+        })
+        .collect();
+    for h in handles {
+        let st = h.join().unwrap();
+        assert_eq!(st.group_collectives, 6);
+        assert_eq!(st.global_syncs, 3);
+        // Each group collective sends log2(2)=1 model exchange (400 B).
+        assert!(st.sent_bytes >= 6 * 400, "bytes {}", st.sent_bytes);
+    }
+}

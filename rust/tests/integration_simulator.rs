@@ -1,0 +1,141 @@
+//! Integration tests of the at-scale simulator against the paper's
+//! qualitative results (the reproduction contract: who wins, by roughly
+//! what factor, where crossovers fall).
+
+use wagma::config::preset;
+use wagma::data::ImbalanceModel;
+use wagma::optim::Algorithm;
+use wagma::simulator::{simulate, SimConfig};
+
+fn thr(cfg: &SimConfig, b: usize) -> f64 {
+    simulate(cfg).throughput(b)
+}
+
+/// Fig. 4 reproduction contract at 64 nodes: WAGMA beats every synchronous
+/// variant by 1.1–1.6x (paper: 1.13–1.26x), loses only to AD-PSGD.
+#[test]
+fn fig4_ordering_and_factors_at_64() {
+    let p = preset("fig4").unwrap();
+    let get = |algo| thr(&p.sim_config(algo, 64, 42), p.batch);
+    let wagma = get(Algorithm::Wagma);
+    for algo in [
+        Algorithm::AllreduceSgd,
+        Algorithm::LocalSgd,
+        Algorithm::DPsgd,
+        Algorithm::Sgp,
+        Algorithm::EagerSgd,
+    ] {
+        let other = get(algo);
+        let speedup = wagma / other;
+        assert!(
+            speedup > 1.02 && speedup < 2.2,
+            "{}: speedup {speedup} out of the paper's band",
+            algo.name()
+        );
+    }
+    let adpsgd = get(Algorithm::AdPsgd);
+    assert!(adpsgd > wagma, "AD-PSGD must have the highest raw throughput");
+}
+
+/// Fig. 4: speedup grows with scale (paper: 1.25x at 64 → 1.37x at 256).
+/// Our network model reproduces the growth through P=64 and saturates
+/// above (EXPERIMENTS.md documents the deviation): assert growth 4→64 and
+/// no collapse at 256.
+#[test]
+fn fig4_speedup_grows_with_p() {
+    let p = preset("fig4").unwrap();
+    let speedup = |n| {
+        thr(&p.sim_config(Algorithm::Wagma, n, 1), p.batch)
+            / thr(&p.sim_config(Algorithm::AllreduceSgd, n, 1), p.batch)
+    };
+    let s4 = speedup(4);
+    let s64 = speedup(64);
+    let s256 = speedup(256);
+    assert!(s64 > s4 * 1.1, "speedup must grow 4→64: {s4} -> {s64}");
+    assert!(s256 > s64 * 0.9, "no collapse at 256: {s64} -> {s256}");
+}
+
+/// Fig. 7: transformer, medium imbalance — WAGMA above all synchronous
+/// variants at 16 nodes; communication overhead grows with P (efficiency
+/// at 64 < efficiency at 4, the paper's "far worse than ideal" point).
+#[test]
+fn fig7_ordering_and_efficiency_decay() {
+    let p = preset("fig7").unwrap();
+    let wagma16 = thr(&p.sim_config(Algorithm::Wagma, 16, 2), p.batch);
+    for algo in [Algorithm::AllreduceSgd, Algorithm::LocalSgd, Algorithm::DPsgd, Algorithm::Sgp] {
+        let other = thr(&p.sim_config(algo, 16, 2), p.batch);
+        assert!(wagma16 > other, "{}: {wagma16} vs {other}", algo.name());
+    }
+    let eff = |n: usize| {
+        let r = simulate(&p.sim_config(Algorithm::Wagma, n, 2));
+        r.throughput(p.batch) / r.ideal_throughput(p.batch)
+    };
+    assert!(eff(64) < eff(4), "efficiency decays with P: {} vs {}", eff(64), eff(4));
+}
+
+/// Fig. 10 at 1,024 nodes: the paper's headline — ~1.9–2.3x over D-PSGD /
+/// SGP / local SGD under heavy-tailed RL collection times.
+#[test]
+fn fig10_headline_speedups_at_1024() {
+    let p = preset("fig10").unwrap();
+    let get = |algo| thr(&p.sim_config(algo, 1024, 3), p.batch);
+    let wagma = get(Algorithm::Wagma);
+    let local = get(Algorithm::LocalSgd);
+    let dpsgd = get(Algorithm::DPsgd);
+    let sgp = get(Algorithm::Sgp);
+    let adpsgd = get(Algorithm::AdPsgd);
+    let s_local = wagma / local;
+    let s_dpsgd = wagma / dpsgd;
+    let s_sgp = wagma / sgp;
+    // Paper: 2.33x, 1.88x, 2.10x. Accept the band [1.3, 4].
+    assert!(s_local > 1.3 && s_local < 4.0, "vs local: {s_local}");
+    assert!(s_dpsgd > 1.2 && s_dpsgd < 4.0, "vs dpsgd: {s_dpsgd}");
+    assert!(s_sgp > 1.2 && s_sgp < 4.0, "vs sgp: {s_sgp}");
+    assert!(adpsgd > wagma, "AD-PSGD highest throughput");
+}
+
+/// Ablation ❸'s throughput side: S=P drops WAGMA throughput (paper 1.24x
+/// at 64 nodes; accept [1.05, 2]).
+#[test]
+fn ablation_group_size_throughput_drop() {
+    let p = preset("fig4").unwrap();
+    let mut sqrt_cfg = p.sim_config(Algorithm::Wagma, 64, 4);
+    sqrt_cfg.group_size = 8;
+    let mut global_cfg = p.sim_config(Algorithm::Wagma, 64, 4);
+    global_cfg.group_size = 64;
+    let drop = simulate(&sqrt_cfg).throughput(p.batch) / simulate(&global_cfg).throughput(p.batch);
+    assert!(drop > 1.05 && drop < 2.0, "S=P throughput drop {drop}");
+}
+
+/// The wait-avoiding mechanism is what provides the gain: with a perfectly
+/// balanced workload, WAGMA ≈ local SGD ≈ allreduce (no straggler to
+/// avoid), so the advantage must collapse.
+#[test]
+fn no_imbalance_no_advantage() {
+    let balanced = ImbalanceModel::Balanced { base: 0.4, jitter: 0.002 };
+    let mk = |algo| SimConfig {
+        algo,
+        p: 64,
+        steps: 100,
+        imbalance: balanced,
+        seed: 5,
+        ..Default::default()
+    };
+    let wagma = simulate(&mk(Algorithm::Wagma)).throughput(128);
+    let local = simulate(&mk(Algorithm::LocalSgd)).throughput(128);
+    let ratio = wagma / local;
+    assert!(
+        ratio < 1.15,
+        "balanced workload: WAGMA advantage should collapse, got {ratio}"
+    );
+}
+
+/// Simulated message accounting sanity: eager (S=P) costs more per
+/// iteration than WAGMA (S=√P), which shows as lower throughput at scale.
+#[test]
+fn group_collectives_cheaper_than_global() {
+    let p = preset("fig4").unwrap();
+    let wagma = thr(&p.sim_config(Algorithm::Wagma, 256, 6), p.batch);
+    let eager = thr(&p.sim_config(Algorithm::EagerSgd, 256, 6), p.batch);
+    assert!(wagma >= eager, "wagma {wagma} vs eager {eager}");
+}

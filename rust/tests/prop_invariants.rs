@@ -1,0 +1,268 @@
+//! Property-based tests over the library's core invariants, using the
+//! in-tree mini property harness (`wagma::util::proptest`).
+
+use wagma::collectives::allreduce::{allreduce_sum, allreduce_sum_ring};
+use wagma::comm::world;
+use wagma::prop_assert;
+use wagma::rl::ppo::gae;
+use wagma::topology::{BinomialTree, Grouping};
+use wagma::util::json::Json;
+use wagma::util::proptest::{check, check_with, Config};
+
+/// Algorithm 1 invariants for random (P, S, t): exact partition into P/S
+/// groups of size S; partner relation is an involution inside the group.
+#[test]
+fn prop_grouping_partition() {
+    check("grouping-partition", |g| {
+        let p = g.pow2_in(2, 256);
+        let s = g.pow2_in(2, p);
+        let t = g.rng.next_u64() % 1000;
+        let gr = Grouping::new(p, s);
+        let groups = gr.groups(t);
+        prop_assert!(groups.len() == p / s, "P={p} S={s}: {} groups", groups.len());
+        let mut seen = vec![false; p];
+        for grp in &groups {
+            prop_assert!(grp.len() == s, "group size {}", grp.len());
+            for &r in grp {
+                prop_assert!(!seen[r], "rank {r} duplicated");
+                seen[r] = true;
+            }
+        }
+        prop_assert!(seen.iter().all(|&b| b), "partition incomplete");
+        // Partner involution within the same group.
+        let rank = g.rng.usize_below(p);
+        for phase in 0..gr.phases() {
+            let q = gr.partner(rank, t, phase);
+            prop_assert!(gr.partner(q, t, phase) == rank);
+            prop_assert!(gr.group_id(rank, t) == gr.group_id(q, t));
+        }
+        Ok(())
+    });
+}
+
+/// Update propagation: starting from any rank, the union of its groups
+/// over `log_S P` consecutive iterations reaches all P ranks.
+#[test]
+fn prop_grouping_propagation() {
+    check_with(Config { cases: 64, ..Default::default() }, "grouping-propagation", |g| {
+        let p = g.pow2_in(4, 256);
+        let s = g.pow2_in(2, p);
+        let gr = Grouping::new(p, s);
+        let t0 = g.rng.next_u64() % 100;
+        let start = g.rng.usize_below(p);
+        let mut reached: Vec<bool> = (0..p).map(|i| i == start).collect();
+        for t in t0..t0 + gr.propagation_iters() as u64 {
+            // Everything reachable spreads within its group this iteration.
+            let groups = gr.groups(t);
+            for grp in &groups {
+                if grp.iter().any(|&r| reached[r]) {
+                    for &r in grp {
+                        reached[r] = true;
+                    }
+                }
+            }
+        }
+        prop_assert!(
+            reached.iter().all(|&b| b),
+            "P={p} S={s} t0={t0}: propagation incomplete after {} iters",
+            gr.propagation_iters()
+        );
+        Ok(())
+    });
+}
+
+/// Binomial trees: for random P and root, every rank is reached exactly
+/// once and parent/children agree.
+#[test]
+fn prop_binomial_tree_cover() {
+    check("binomial-cover", |g| {
+        let p = g.pow2_in(1, 512);
+        let root = g.rng.usize_below(p);
+        let tree = BinomialTree::new(p);
+        let mut reached = vec![0usize; p];
+        let mut stack = vec![root];
+        reached[root] += 1;
+        while let Some(r) = stack.pop() {
+            for c in tree.children(root, r) {
+                reached[c] += 1;
+                prop_assert!(tree.parent(root, c) == Some(r));
+                stack.push(c);
+            }
+        }
+        prop_assert!(reached.iter().all(|&n| n == 1), "P={p} root={root}: {reached:?}");
+        Ok(())
+    });
+}
+
+/// Ring and recursive-doubling allreduce agree with the serial sum for
+/// random sizes and P.
+#[test]
+fn prop_allreduce_algorithms_agree() {
+    check_with(Config { cases: 24, ..Default::default() }, "allreduce-agree", |g| {
+        let p = g.pow2_in(2, 8);
+        let n = g.usize_in(1, 200);
+        let inputs: Vec<Vec<f32>> = (0..p).map(|_| g.vec_f32(n)).collect();
+        let want: Vec<f32> =
+            (0..n).map(|j| inputs.iter().map(|v| v[j]).sum()).collect();
+
+        for ring in [false, true] {
+            let eps = world(p);
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(r, mut ep)| {
+                    let mut buf = inputs[r].clone();
+                    std::thread::spawn(move || {
+                        if ring {
+                            allreduce_sum_ring(&mut ep, &mut buf, 0);
+                        } else {
+                            allreduce_sum(&mut ep, &mut buf, 0);
+                        }
+                        buf
+                    })
+                })
+                .collect();
+            for h in handles {
+                let got = h.join().unwrap();
+                for j in 0..n {
+                    prop_assert!(
+                        (got[j] - want[j]).abs() < 1e-3 * (1.0 + want[j].abs()),
+                        "ring={ring} elem {j}: {} vs {}",
+                        got[j],
+                        want[j]
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// GAE invariants: zero rewards + zero values => zero advantages; constant
+/// reward 1, gamma=lam=1, no dones => advantage telescopes to remaining
+/// reward sum + bootstrap.
+#[test]
+fn prop_gae_invariants() {
+    check("gae-invariants", |g| {
+        let t = g.usize_in(1, 16);
+        let zeros = vec![0.0f32; t];
+        let dones = vec![false; t];
+        let (adv, ret) = gae(&zeros, &zeros, &dones, 0.0, 0.99, 0.95);
+        prop_assert!(adv.iter().all(|a| a.abs() < 1e-7));
+        prop_assert!(ret.iter().all(|r| r.abs() < 1e-7));
+
+        let ones = vec![1.0f32; t];
+        let (adv, _) = gae(&ones, &zeros, &dones, 2.0, 1.0, 1.0);
+        for (k, a) in adv.iter().enumerate() {
+            let expect = (t - k) as f32 + 2.0;
+            prop_assert!((a - expect).abs() < 1e-4, "k={k}: {a} vs {expect}");
+        }
+        Ok(())
+    });
+}
+
+/// JSON fuzz: emit(parse(emit(v))) is stable for random nested values.
+#[test]
+fn prop_json_roundtrip() {
+    use wagma::util::json::{arr, num, obj, s};
+    check("json-roundtrip", |g| {
+        // Build a random nested value.
+        let mut leaves: Vec<Json> = Vec::new();
+        for _ in 0..g.usize_in(1, 6) {
+            leaves.push(match g.usize_in(0, 3) {
+                0 => num(g.f64_in(-1e6, 1e6)),
+                1 => s(&format!("s{}", g.rng.next_u64())),
+                2 => Json::Bool(g.bool()),
+                _ => Json::Null,
+            });
+        }
+        let v = obj(vec![
+            ("leaves", arr(leaves.clone())),
+            ("nested", obj(vec![("inner", arr(leaves))])),
+        ]);
+        let once = v.to_string();
+        let parsed = Json::parse(&once).map_err(|e| e)?;
+        let twice = parsed.to_string();
+        prop_assert!(once == twice, "unstable roundtrip:\n{once}\n{twice}");
+        Ok(())
+    });
+}
+
+/// Simulator sanity across random configs: makespan ≥ ideal; deterministic
+/// per seed; more ranks with the same per-rank batch never lowers total
+/// throughput under balanced load.
+#[test]
+fn prop_simulator_sanity() {
+    use wagma::data::ImbalanceModel;
+    use wagma::optim::Algorithm;
+    use wagma::simulator::{simulate, SimConfig};
+    check_with(Config { cases: 32, ..Default::default() }, "simulator-sanity", |g| {
+        let p = g.pow2_in(2, 128);
+        let algos = Algorithm::all();
+        let algo = algos[g.usize_in(0, algos.len() - 1)];
+        let cfg = SimConfig {
+            algo,
+            p,
+            steps: 30,
+            model_bytes: g.usize_in(1, 200) << 16,
+            tau: [0u64, 2, 10][g.usize_in(0, 2)],
+            imbalance: ImbalanceModel::fig4(),
+            seed: g.rng.next_u64(),
+            ..Default::default()
+        };
+        let a = simulate(&cfg);
+        let b = simulate(&cfg);
+        prop_assert!(a.makespan >= a.ideal_makespan - 1e-9, "makespan below ideal");
+        prop_assert!(a.makespan == b.makespan, "nondeterministic");
+        prop_assert!(a.iter_times.iter().all(|t| *t >= -1e-9), "negative iteration time");
+        Ok(())
+    });
+}
+
+/// Push-sum mass conservation: sum of x and sum of w across ranks are
+/// invariant under SGP's push/absorb steps (checked in vitro with the
+/// offsets logic mirrored here).
+#[test]
+fn prop_push_sum_mass_conservation() {
+    check_with(Config { cases: 32, ..Default::default() }, "push-sum-mass", |g| {
+        let p = g.pow2_in(2, 32);
+        let k = g.usize_in(1, 2);
+        let log_p = p.trailing_zeros() as usize;
+        let mut x: Vec<f64> = (0..p).map(|_| g.f64_in(-10.0, 10.0)).collect();
+        let mut w = vec![1.0f64; p];
+        let total_x: f64 = x.iter().sum();
+        let total_w: f64 = w.iter().sum();
+        for t in 0..20usize {
+            let share = 1.0 / (k as f64 + 1.0);
+            let mut inbox_x = vec![0.0f64; p];
+            let mut inbox_w = vec![0.0f64; p];
+            for i in 0..p {
+                for j in 0..k {
+                    let off = 1usize << ((t * k + j) % log_p);
+                    let dst = (i + off) % p;
+                    inbox_x[dst] += x[i] * share;
+                    inbox_w[dst] += w[i] * share;
+                }
+            }
+            for i in 0..p {
+                x[i] *= 1.0 / (k as f64 + 1.0);
+                w[i] *= 1.0 / (k as f64 + 1.0);
+                x[i] += inbox_x[i];
+                w[i] += inbox_w[i];
+            }
+        }
+        let sx: f64 = x.iter().sum();
+        let sw: f64 = w.iter().sum();
+        prop_assert!((sx - total_x).abs() < 1e-6 * (1.0 + total_x.abs()), "x mass {sx} vs {total_x}");
+        prop_assert!((sw - total_w).abs() < 1e-9 * total_w, "w mass {sw} vs {total_w}");
+        // De-biased estimates converge toward the average.
+        let avg = total_x / p as f64;
+        let max_dev = x
+            .iter()
+            .zip(&w)
+            .map(|(xi, wi)| (xi / wi - avg).abs())
+            .fold(0.0f64, f64::max);
+        prop_assert!(max_dev < 1.0, "push-sum not mixing: {max_dev}");
+        Ok(())
+    });
+}
