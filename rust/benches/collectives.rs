@@ -49,6 +49,7 @@ fn bench_group_allreduce(b: &mut Bencher, p: usize, s: usize, n: usize, iters: u
             dynamic_groups: true,
             sync_algo: AllreduceAlgo::Auto,
             activation: ActivationMode::Solo,
+            chunk_elems: 0,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()

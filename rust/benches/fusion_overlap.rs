@@ -1,0 +1,88 @@
+//! Fusion/overlap bench: quantify the simulated-makespan reduction of
+//! layer-aware bucketed exchanges (rust/src/sched/) versus the seed's flat
+//! payload, on the fig4 preset — and time the layered simulator itself
+//! (the bucket loop multiplies the per-iteration work).
+//!
+//! Run: `cargo bench --bench fusion_overlap` (or `cargo run --release
+//! --bench ...` equivalents; the harness is the in-tree Bencher).
+
+use wagma::bench::Bencher;
+use wagma::config::preset;
+use wagma::optim::Algorithm;
+use wagma::sched::{flat_makespan, schedule_iteration, FusionConfig, FusionMode, FusionPlan, LayerProfile};
+use wagma::simulator::{simulate, NetworkModel};
+
+fn main() {
+    let pre = preset("fig4").unwrap();
+    let p = 64usize;
+    let mut b = Bencher::quick();
+
+    println!("Fusion & overlap — {} at P={p}", pre.description);
+    println!(
+        "{:<14} {:<12} {:>8} {:>12} {:>12} {:>8}",
+        "algorithm", "fusion", "buckets", "makespan", "flat", "speedup"
+    );
+
+    let profile = LayerProfile::for_model_bytes(pre.model_params * 4);
+    let net = NetworkModel::aries();
+
+    for &algo in &[Algorithm::Wagma, Algorithm::AllreduceSgd] {
+        let flat_cfg = pre.sim_config(algo, p, 42);
+        let mut flat_result = None;
+        b.bench(&format!("simulate/{}/flat", algo.name()), |_| {
+            flat_result = Some(simulate(&flat_cfg));
+        });
+        let flat = flat_result.unwrap().makespan;
+
+        for mode in [FusionMode::Threshold, FusionMode::MgWfbp] {
+            let fusion = FusionConfig { layered: true, mode, ..Default::default() };
+            let mut cfg = flat_cfg.clone();
+            cfg.fusion = fusion;
+            let plan = FusionPlan::build(
+                &profile,
+                &fusion,
+                &net,
+                cfg.fusion_participants(),
+                cfg.imbalance.mean(),
+            );
+            let mut result = None;
+            b.bench(&format!("simulate/{}/layered_{}", algo.name(), mode.name()), |_| {
+                result = Some(simulate(&cfg));
+            });
+            let makespan = result.unwrap().makespan;
+            println!(
+                "{:<14} {:<12} {:>8} {:>11.3}s {:>11.3}s {:>7.2}x",
+                algo.name(),
+                mode.name(),
+                plan.num_buckets(),
+                makespan,
+                flat,
+                flat / makespan
+            );
+        }
+    }
+
+    // Single-rank timeline view (the planner's own cost model): how much
+    // of the fig4 communication hides under one 0.4 s backward pass.
+    let compute = pre.imbalance.mean();
+    let total_cost = net.allreduce(profile.total_bytes(), p);
+    let flat_tl = flat_makespan(compute, total_cost, 0.0);
+    for (label, plan) in [
+        ("threshold_8MiB", FusionPlan::threshold(&profile, 8 << 20)),
+        ("mgwfbp", FusionPlan::mgwfbp(&profile, &net, p, compute)),
+    ] {
+        let costs: Vec<f64> =
+            plan.buckets.iter().map(|bk| net.allreduce(bk.bytes, p)).collect();
+        let tl = schedule_iteration(&plan, compute, &costs, 0.0);
+        println!(
+            "timeline/{label:<16} buckets {:>3}  makespan {:.4}s (flat {:.4}s)  exposed tail {:.4}s",
+            plan.num_buckets(),
+            tl.makespan,
+            flat_tl,
+            tl.comm_tail().max(0.0)
+        );
+        b.record(&format!("timeline/{label}/makespan_s"), vec![tl.makespan]);
+    }
+
+    b.finish("fusion_overlap");
+}

@@ -24,6 +24,7 @@ fn main() {
         dynamic_groups: true,
         sync_algo: AllreduceAlgo::Auto,
         activation: ActivationMode::Solo,
+        chunk_elems: 0,
     };
     println!("Fig. 3 demo: P=4, S=2, tau={tau}; rank 1 is the straggler\n");
     let (log_tx, log_rx) = channel::<(u64, usize, String)>();

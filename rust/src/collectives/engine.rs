@@ -94,6 +94,14 @@ pub struct EngineConfig {
     /// version leader broadcasts activation (the PPoPP'20 eager-SGD
     /// majority collectives, used by the eager-SGD baseline).
     pub activation: ActivationMode,
+    /// Bucketed-exchange granularity in f32 elements (0 = send the whole
+    /// payload in one message, the seed behaviour). When nonzero, each
+    /// butterfly phase streams the buffer as `ceil(n / chunk_elems)`
+    /// independently-tagged chunks — the engine-level counterpart of the
+    /// scheduler's fused gradient buckets ([`crate::sched`]), so a fused
+    /// bucket can be injected as soon as it is ready instead of waiting for
+    /// the full flat payload.
+    pub chunk_elems: usize,
 }
 
 /// How a collective instance gets triggered.
@@ -128,6 +136,28 @@ impl EngineConfig {
         }
         t
     }
+
+    /// Effective chunk size for an `n`-element payload: honours
+    /// `chunk_elems` but caps the chunk count so phase/chunk tags stay
+    /// disjoint (see [`chunk_tag`]).
+    fn effective_chunk(&self, n: usize) -> usize {
+        if self.chunk_elems == 0 || n <= self.chunk_elems {
+            return 0; // unchunked
+        }
+        self.chunk_elems.max(n.div_ceil(MAX_CHUNKS))
+    }
+}
+
+/// Upper bound on chunks per butterfly phase (tag-space partitioning).
+const MAX_CHUNKS: usize = 1 << 16;
+
+/// Tag for chunk `c` of butterfly phase `r` in version `v`. Unchunked
+/// phases use plain `Tag::exchange(v, r)` (`r` < 32), chunked phases live
+/// in disjoint high ranges — both sides of an exchange share the engine
+/// config, so the schedules agree.
+fn chunk_tag(v: u64, r: u32, c: usize) -> Tag {
+    debug_assert!(c < MAX_CHUNKS);
+    Tag::exchange(v, (r + 1) * (MAX_CHUNKS as u32 * 2) + c as u32)
 }
 
 #[derive(Default)]
@@ -463,12 +493,32 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
         (g.send_buf.clone(), g.buf_stamp)
     };
 
-    // Butterfly phases within the (dynamic) group.
+    // Butterfly phases within the (dynamic) group. With chunking enabled
+    // (layered/fused mode) each phase streams the payload as independent
+    // chunks: all sends are issued up front so the partner can overlap its
+    // reductions with our remaining traffic.
+    let chunk = run.cfg.effective_chunk(acc.len());
     for r in 0..run.grouping.phases() {
         let partner = run.grouping.partner(ep.rank(), v, r);
-        ep.send(partner, Tag::exchange(v, r), acc.clone());
-        let rhs = recv_with_ctrl(ep, run, partner, Tag::exchange(v, r));
-        add_assign(&mut acc, &rhs);
+        if chunk == 0 {
+            ep.send(partner, Tag::exchange(v, r), acc.clone());
+            let rhs = recv_with_ctrl(ep, run, partner, Tag::exchange(v, r));
+            add_assign(&mut acc, &rhs);
+        } else {
+            let n = acc.len();
+            let n_chunks = n.div_ceil(chunk);
+            for c in 0..n_chunks {
+                let lo = c * chunk;
+                let hi = (lo + chunk).min(n);
+                ep.send(partner, chunk_tag(v, r, c), acc[lo..hi].to_vec());
+            }
+            for c in 0..n_chunks {
+                let lo = c * chunk;
+                let hi = (lo + chunk).min(n);
+                let rhs = recv_with_ctrl(ep, run, partner, chunk_tag(v, r, c));
+                add_assign(&mut acc[lo..hi], &rhs);
+            }
+        }
     }
 
     run.stats.group_collectives += 1;
@@ -589,7 +639,73 @@ mod tests {
             dynamic_groups: true,
             sync_algo: AllreduceAlgo::RecursiveDoubling,
             activation: ActivationMode::Solo,
+            chunk_elems: 0,
         }
+    }
+
+    /// Chunked (bucketed) exchanges produce the exact same group sums as
+    /// the flat path — the engine-level contract of the fusion scheduler.
+    #[test]
+    fn chunked_group_allreduce_matches_flat() {
+        use std::sync::{Arc, Barrier};
+        let p = 8;
+        let s = 4;
+        let dim = 10;
+        let chunked = EngineConfig { chunk_elems: 3, ..cfg(p, s, 0) };
+        let barrier = Arc::new(Barrier::new(p));
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| {
+                let r = ep.rank() as f32;
+                CollectiveEngine::spawn(ep, chunked, vec![r; dim])
+            })
+            .collect();
+        let grouping = Grouping::new(p, s);
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                let grouping = grouping;
+                let barrier = barrier.clone();
+                thread::spawn(move || {
+                    for t in 0..4u64 {
+                        let w: Vec<f32> =
+                            (0..dim).map(|j| eng.rank() as f32 + (j + t as usize) as f32).collect();
+                        eng.publish(&w, t);
+                        barrier.wait();
+                        let res = eng.group_allreduce(t);
+                        let members = grouping.group_of(eng.rank(), t);
+                        let want: Vec<f32> = (0..dim)
+                            .map(|j| {
+                                members
+                                    .iter()
+                                    .map(|&m| m as f32 + (j + t as usize) as f32)
+                                    .sum()
+                            })
+                            .collect();
+                        assert_eq!(res.sum, want, "rank {} t {}", eng.rank(), t);
+                        barrier.wait();
+                    }
+                    eng.shutdown()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn effective_chunk_caps_chunk_count() {
+        let mut c = cfg(4, 2, 0);
+        assert_eq!(c.effective_chunk(100), 0, "chunking disabled by default");
+        c.chunk_elems = 8;
+        assert_eq!(c.effective_chunk(4), 0, "small payloads stay unchunked");
+        assert_eq!(c.effective_chunk(100), 8);
+        // Pathologically small chunks get raised so the count fits the
+        // tag range.
+        c.chunk_elems = 1;
+        let n = MAX_CHUNKS * 3;
+        assert!(n.div_ceil(c.effective_chunk(n)) <= MAX_CHUNKS);
     }
 
     /// All ranks publish before any requests (barrier-enforced): every
@@ -787,6 +903,7 @@ mod majority_tests {
             dynamic_groups: true,
             sync_algo: AllreduceAlgo::Auto,
             activation: ActivationMode::Majority,
+            chunk_elems: 0,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()
@@ -839,6 +956,7 @@ mod majority_tests {
             dynamic_groups: true,
             sync_algo: AllreduceAlgo::Auto,
             activation: ActivationMode::Majority,
+            chunk_elems: 0,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()

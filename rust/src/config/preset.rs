@@ -4,6 +4,7 @@
 
 use crate::data::ImbalanceModel;
 use crate::optim::Algorithm;
+use crate::sched::FusionConfig;
 use crate::simulator::{NetworkModel, SimConfig};
 
 /// A named, fully-specified experiment.
@@ -22,6 +23,9 @@ pub struct ExperimentPreset {
     /// Algorithms compared in this figure.
     pub algos: &'static [Algorithm],
     pub steps: usize,
+    /// Fusion/overlap knobs (flat by default so the paper figures are
+    /// reproduced unchanged; the fusion figure/bench flips `layered` on).
+    pub fusion: FusionConfig,
 }
 
 const FIG4_ALGOS: &[Algorithm] = &[
@@ -65,6 +69,7 @@ pub fn preset(name: &str) -> Option<ExperimentPreset> {
             imbalance: ImbalanceModel::fig4(),
             algos: FIG4_ALGOS,
             steps: 200,
+            fusion: FusionConfig::default(),
         },
         // Fig. 7: Transformer/WMT17 throughput (τ=8, bucketed lengths).
         "fig7" => ExperimentPreset {
@@ -77,6 +82,7 @@ pub fn preset(name: &str) -> Option<ExperimentPreset> {
             imbalance: ImbalanceModel::fig7(),
             algos: FIG7_ALGOS,
             steps: 200,
+            fusion: FusionConfig::default(),
         },
         // Fig. 10: DDPPO/Habitat throughput (heavy-tailed collection).
         "fig10" => ExperimentPreset {
@@ -89,6 +95,7 @@ pub fn preset(name: &str) -> Option<ExperimentPreset> {
             imbalance: ImbalanceModel::fig9(),
             algos: FIG10_ALGOS,
             steps: 100,
+            fusion: FusionConfig::default(),
         },
         _ => return None,
     };
@@ -115,6 +122,7 @@ impl ExperimentPreset {
             imbalance: self.imbalance,
             net: NetworkModel::aries(),
             seed,
+            fusion: self.fusion,
         }
     }
 }

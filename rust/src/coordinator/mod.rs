@@ -1,1 +1,41 @@
-// paper's L3 coordination contribution
+//! Coordinator façade — the paper's L3 contribution gathered behind one
+//! import path.
+//!
+//! Training a model with wait-avoiding group averaging touches four
+//! subsystems: the collective engine (wait-avoiding group allreduce,
+//! §III-A), the dynamic grouping strategy (Algorithm 1), the optimizer
+//! runner (Algorithm 2 and the baselines), and — since the fusion PR — the
+//! scheduling layer that plans bucketed, overlap-friendly exchanges. This
+//! module re-exports the scheduler-facing coordination API so embedders
+//! can write `use wagma::coordinator::*;` without learning the internal
+//! module layout.
+
+pub use crate::collectives::engine::{
+    ActivationMode, CollectiveEngine, EngineConfig, EngineStats, GroupResult,
+};
+pub use crate::optim::{run_training, Algorithm, EngineFactory, TrainConfig};
+pub use crate::sched::{
+    schedule_iteration, FusionConfig, FusionMode, FusionPlan, LayerProfile, Timeline,
+};
+pub use crate::topology::{BinomialTree, Grouping};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The façade exposes a coherent, compilable API surface.
+    #[test]
+    fn facade_reexports_are_usable() {
+        let cfg = TrainConfig::default();
+        assert_eq!(cfg.algo, Algorithm::Wagma);
+        assert_eq!(Grouping::sqrt_group_size(64), 8);
+        let profile = LayerProfile::for_model_bytes(1 << 20);
+        let fusion = FusionConfig { layered: true, mode: FusionMode::Threshold, ..Default::default() };
+        let plan = FusionPlan::threshold(&profile, fusion.threshold_bytes);
+        plan.validate(&profile).unwrap();
+        let costs: Vec<f64> = plan.buckets.iter().map(|_| 0.001).collect();
+        let tl: Timeline = schedule_iteration(&plan, 0.1, &costs, 0.0);
+        assert!(tl.makespan >= tl.compute_end);
+        assert_eq!(ActivationMode::Solo, ActivationMode::Solo);
+    }
+}

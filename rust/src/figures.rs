@@ -328,6 +328,73 @@ pub fn ablation(out_dir: &str, quick: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Fusion/overlap study (the scheduling subsystem's figure): simulated
+/// makespan of flat vs layered exchanges on the fig4 preset, across fusion
+/// modes and bucket thresholds. Quantifies how much communication the
+/// bucket timeline hides under backprop.
+pub fn fig_fusion(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+    use crate::sched::{FusionConfig, FusionMode, FusionPlan, LayerProfile};
+
+    let pre = preset("fig4").ok_or_else(|| anyhow::anyhow!("fig4 preset missing"))?;
+    let p = 64usize;
+    println!("== fusion — layered gradient fusion & overlap vs flat payloads (fig4, P={p}) ==");
+    let mut csv = CsvWriter::create(
+        Path::new(out_dir).join("fusion.csv"),
+        &["algo", "mode", "threshold_bytes", "buckets", "makespan_s", "flat_makespan_s", "speedup"],
+    )?;
+    let profile = LayerProfile::for_model_bytes(pre.model_params * 4);
+    let thresholds: &[usize] =
+        if quick { &[8 << 20] } else { &[1 << 20, 4 << 20, 8 << 20, 32 << 20] };
+    println!(
+        "{:<14} {:<10} {:>14} {:>8} {:>12} {:>12} {:>8}",
+        "algorithm", "mode", "threshold", "buckets", "makespan", "flat", "speedup"
+    );
+    for &algo in &[Algorithm::Wagma, Algorithm::AllreduceSgd] {
+        let mut flat_cfg = pre.sim_config(algo, p, 42);
+        if quick {
+            flat_cfg.steps = 50;
+        }
+        let flat = simulate(&flat_cfg).makespan;
+        for mode in [FusionMode::Threshold, FusionMode::MgWfbp] {
+            for &threshold in thresholds {
+                let fusion = FusionConfig { layered: true, mode, threshold_bytes: threshold };
+                let mut cfg = flat_cfg.clone();
+                cfg.fusion = fusion;
+                let buckets = FusionPlan::build(
+                    &profile,
+                    &fusion,
+                    &cfg.net,
+                    cfg.fusion_participants(),
+                    cfg.imbalance.mean(),
+                )
+                .num_buckets();
+                let makespan = simulate(&cfg).makespan;
+                let speedup = flat / makespan;
+                println!(
+                    "{:<14} {:<10} {:>14} {:>8} {:>11.3}s {:>11.3}s {:>7.2}x",
+                    algo.name(),
+                    mode.name(),
+                    threshold,
+                    buckets,
+                    makespan,
+                    flat,
+                    speedup
+                );
+                csv.row(&[
+                    algo.name().to_string(),
+                    mode.name().to_string(),
+                    threshold.to_string(),
+                    buckets.to_string(),
+                    format!("{makespan:.6}"),
+                    format!("{flat:.6}"),
+                    format!("{speedup:.4}"),
+                ])?;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Figs. 1–3: protocol demonstration traces (activation tree, dynamic
 /// grouping, straggler snapshot) — printed, not measured.
 pub fn fig_protocol_demos() {

@@ -9,9 +9,14 @@
 //! * **L3 (this crate)** — the distributed-training coordinator: the
 //!   wait-avoiding group allreduce ([`collectives::engine`]), the dynamic
 //!   grouping strategy ([`topology::grouping`]), WAGMA-SGD and six baseline
-//!   distributed optimizers ([`optim`]), a discrete-event cluster simulator
-//!   for at-scale experiments ([`simulator`]), and the PJRT runtime that
-//!   executes AOT-compiled models ([`runtime`]).
+//!   distributed optimizers ([`optim`]), the layer-aware gradient fusion
+//!   and communication-overlap scheduler ([`sched`]: MG-WFBP-style bucket
+//!   planning over per-layer backprop profiles), a discrete-event cluster
+//!   simulator for at-scale experiments ([`simulator`], with a layered mode
+//!   that consumes the bucket timeline instead of one flat payload), and
+//!   the PJRT runtime that executes AOT-compiled models ([`runtime`]).
+//!   [`coordinator`] gathers the scheduler-facing coordination API behind
+//!   one import path.
 //! * **L2 (python/compile/model.py)** — JAX model definitions (transformer
 //!   LM, MLP classifier, RL policy) lowered once to HLO text artifacts.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
@@ -22,6 +27,7 @@
 
 pub mod bench;
 pub mod collectives;
+pub mod coordinator;
 pub mod figures;
 pub mod comm;
 pub mod config;
@@ -31,6 +37,7 @@ pub mod model;
 pub mod optim;
 pub mod rl;
 pub mod runtime;
+pub mod sched;
 pub mod simulator;
 pub mod topology;
 pub mod util;

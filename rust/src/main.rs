@@ -1,16 +1,21 @@
 //! `wagma` — the WAGMA-SGD launcher.
 //!
 //! Subcommands:
-//!   figure <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|ablation|all>
+//!   figure <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|ablation|fusion|all>
 //!          [--out results] [--quick]
 //!        Regenerate the paper's figures (simulator sweeps, real training
-//!        convergence runs, distribution plots).
+//!        convergence runs, distribution plots) plus the fusion/overlap
+//!        makespan study.
 //!   train  --model <name> --algo <name> --p N --steps N [--lr F] [--tau N]
 //!          [--group-size N] [--static-groups] [--eval-every N] [--out results]
 //!        Real multi-worker training through the PJRT artifacts.
 //!   simulate --algo <name> --p N [--steps N] [--params N] [--tau N]
 //!            [--imbalance fig4|fig7|fig9|balanced] [--group-size N]
-//!        One discrete-event simulation run at any scale.
+//!            [--layered] [--fusion-mode flat|threshold|mgwfbp]
+//!            [--fusion-threshold-bytes N] [--config file.toml]
+//!        One discrete-event simulation run at any scale. --layered turns
+//!        on bucketed, overlap-scheduled exchanges; --config loads the
+//!        [fusion] TOML section (CLI flags override it).
 //!   list
 //!        Show available models, algorithms, presets.
 
@@ -21,8 +26,10 @@ use wagma::data::ImbalanceModel;
 use wagma::figures;
 use wagma::optim::engine::EngineFactory;
 use wagma::optim::pjrt_engine::{PjrtEngine, RlEngine};
+use wagma::config::TomlDoc;
 use wagma::optim::{run_training, Algorithm, TrainConfig};
 use wagma::runtime::{Manifest, ModelRuntime};
+use wagma::sched::FusionConfig;
 use wagma::simulator::{simulate, SimConfig};
 use wagma::util::cli::Args;
 
@@ -58,6 +65,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
             }
             "fig4" | "fig7" | "fig10" => figures::fig_throughput(name, &out, quick),
             "fig6" | "fig9" => figures::fig_distribution(name, &out),
+            "fusion" => figures::fig_fusion(&out, quick),
             "fig5" => figures::fig5(&out, quick),
             "fig8" => figures::fig8(&out, quick),
             "fig11" => figures::fig11(&out, quick),
@@ -66,9 +74,10 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         }
     };
     if which == "all" {
-        for name in
-            ["fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "ablation"]
-        {
+        for name in [
+            "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "ablation",
+            "fusion",
+        ] {
             run(name)?;
             println!();
         }
@@ -115,6 +124,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         sgp_neighbors: args.usize_or("sgp-neighbors", 2),
         seed,
         eval_every: args.u64_or("eval-every", (steps / 10).max(1)),
+        fusion: FusionConfig::from_args(args),
         init,
     };
     println!(
@@ -155,6 +165,17 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "balanced" => ImbalanceModel::Balanced { base: 0.4, jitter: 0.01 },
         other => anyhow::bail!("unknown imbalance model {other}"),
     };
+    // Fusion knobs: optional TOML `[fusion]` section as the base, CLI
+    // flags (--layered, --fusion-mode, --fusion-threshold-bytes) override.
+    let fusion_base = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let doc = TomlDoc::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            FusionConfig::from_toml(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+        }
+        None => FusionConfig::default(),
+    };
+    let fusion = FusionConfig::from_args_with(args, fusion_base);
     let cfg = SimConfig {
         algo,
         p: args.usize_or("p", 64),
@@ -167,12 +188,25 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         sgp_neighbors: args.usize_or("sgp-neighbors", 2),
         imbalance,
         seed: args.u64_or("seed", 42),
+        fusion,
         ..Default::default()
     };
     let b = args.usize_or("batch", 128);
     let r = simulate(&cfg);
     let su = r.iter_time_summary();
     println!("algorithm      : {}", r.algo);
+    if cfg.layered_active() {
+        println!(
+            "fusion         : layered, mode {}, threshold {} B",
+            cfg.fusion.mode.name(),
+            cfg.fusion.threshold_bytes
+        );
+    } else if cfg.fusion.layered {
+        println!(
+            "fusion         : --layered ignored ({}'s exchanges are not bucket-scheduled collectives)",
+            r.algo
+        );
+    }
     println!("ranks          : {}", r.p);
     println!("makespan       : {:.2} s  (ideal {:.2} s)", r.makespan, r.ideal_makespan);
     println!(

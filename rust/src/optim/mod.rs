@@ -15,6 +15,16 @@
 //! produces local steps/gradients (backed by PJRT artifacts, an analytic
 //! objective, or a no-op + sleep for throughput studies) and the algorithm
 //! supplies the communication pattern.
+//!
+//! **Scheduling subsystem** ([`crate::sched`]): exchanges need not be one
+//! flat payload. [`TrainConfig::fusion`] carries the layer-aware fusion
+//! knobs (`layered`, `fusion_mode`, `fusion_threshold_bytes`); with
+//! `layered = true` the collective engine streams bucketed exchanges at
+//! the plan's granularity, and the at-scale simulator consumes the bucket
+//! timeline (per-layer backprop ready times → per-bucket collective
+//! start/finish) so communication overlaps the backward pass the way
+//! MG-WFBP/DaSGD describe. Flat remains the default, reproducing the
+//! seed's results bit-for-bit.
 
 pub mod adpsgd;
 pub mod allreduce_sgd;

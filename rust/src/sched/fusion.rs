@@ -1,0 +1,434 @@
+//! Gradient bucket-fusion planning.
+//!
+//! Given a [`LayerProfile`] (layers in backprop completion order), a plan
+//! partitions the layers into contiguous **buckets**, each communicated as
+//! one fused collective. Two planners:
+//!
+//! * [`FusionPlan::threshold`] — greedy size-threshold fusion (the
+//!   Horovod/DDP default): accumulate layers until the bucket reaches
+//!   `threshold_bytes`, then seal it.
+//! * [`FusionPlan::mgwfbp`] — MG-WFBP-style optimal merge (Shi et al.): a
+//!   dynamic program over the [`NetworkModel`] cost function that minimizes
+//!   the iteration's communication finish time, merging small tensors whose
+//!   startup (α) cost dominates and splitting where overlap with remaining
+//!   backprop pays.
+//!
+//! Invariants (enforced by [`FusionPlan::validate`] and the property
+//! tests): buckets partition all layers exactly once, preserve layer
+//! order, and respect the size threshold (greedy mode).
+
+use std::str::FromStr;
+
+use crate::config::TomlDoc;
+use crate::sched::profile::LayerProfile;
+use crate::simulator::NetworkModel;
+use crate::util::cli::Args;
+
+/// How gradients are fused into communication buckets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusionMode {
+    /// Single bucket holding the whole model (the seed's flat payload).
+    Flat,
+    /// Greedy size-threshold fusion.
+    Threshold,
+    /// MG-WFBP optimal merge over the network cost model.
+    MgWfbp,
+}
+
+impl FusionMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FusionMode::Flat => "flat",
+            FusionMode::Threshold => "threshold",
+            FusionMode::MgWfbp => "mgwfbp",
+        }
+    }
+
+    pub fn all() -> [FusionMode; 3] {
+        [FusionMode::Flat, FusionMode::Threshold, FusionMode::MgWfbp]
+    }
+}
+
+impl FromStr for FusionMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FusionMode, String> {
+        match s {
+            "flat" => Ok(FusionMode::Flat),
+            "threshold" | "greedy" => Ok(FusionMode::Threshold),
+            "mgwfbp" | "mg-wfbp" | "optimal" => Ok(FusionMode::MgWfbp),
+            other => Err(format!("unknown fusion mode {other:?} (flat|threshold|mgwfbp)")),
+        }
+    }
+}
+
+/// Fusion knobs, threaded through preset, TOML, and CLI parsing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FusionConfig {
+    /// Enable the layered (bucketed, overlap-scheduled) exchange path.
+    /// `false` keeps the seed's flat single-payload behaviour.
+    pub layered: bool,
+    pub mode: FusionMode,
+    /// Greedy threshold (also the chunk granularity for the collective
+    /// engine's bucketed exchanges).
+    pub threshold_bytes: usize,
+}
+
+impl Default for FusionConfig {
+    fn default() -> FusionConfig {
+        FusionConfig {
+            layered: false,
+            mode: FusionMode::Threshold,
+            threshold_bytes: 8 << 20, // 8 MiB, the MG-WFBP sweet spot band
+        }
+    }
+}
+
+impl FusionConfig {
+    /// Parse from CLI flags (`--layered`, `--fusion-mode`,
+    /// `--fusion-threshold-bytes`) on top of `base`.
+    pub fn from_args_with(args: &Args, base: FusionConfig) -> FusionConfig {
+        let mode: FusionMode = args
+            .str_or("fusion-mode", base.mode.name())
+            .parse()
+            .unwrap_or_else(|e: String| panic!("--fusion-mode: {e}"));
+        let threshold_bytes = args.usize_or("fusion-threshold-bytes", base.threshold_bytes);
+        // Same validation as the TOML path: reject rather than silently
+        // rewrite (one f32 is the smallest meaningful bucket).
+        if threshold_bytes < 4 {
+            panic!("--fusion-threshold-bytes: must be >= 4, got {threshold_bytes}");
+        }
+        FusionConfig { layered: args.bool_or("layered", base.layered), mode, threshold_bytes }
+    }
+
+    pub fn from_args(args: &Args) -> FusionConfig {
+        Self::from_args_with(args, FusionConfig::default())
+    }
+
+    /// Parse from a TOML document's `[fusion]` section (missing keys fall
+    /// back to the defaults).
+    pub fn from_toml(doc: &TomlDoc) -> Result<FusionConfig, String> {
+        let d = FusionConfig::default();
+        let mode: FusionMode = doc.str_or("fusion", "fusion_mode", d.mode.name()).parse()?;
+        let threshold = doc.i64_or("fusion", "fusion_threshold_bytes", d.threshold_bytes as i64);
+        if threshold < 4 {
+            return Err(format!("fusion_threshold_bytes must be >= 4, got {threshold}"));
+        }
+        Ok(FusionConfig {
+            layered: doc.bool_or("fusion", "layered", d.layered),
+            mode,
+            threshold_bytes: threshold as usize,
+        })
+    }
+
+    /// Emit the `[fusion]` TOML section (round-trips through
+    /// [`FusionConfig::from_toml`]).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[fusion]\nlayered = {}\nfusion_mode = \"{}\"\nfusion_threshold_bytes = {}\n",
+            self.layered,
+            self.mode.name(),
+            self.threshold_bytes
+        )
+    }
+
+    /// Emit the equivalent CLI flags (round-trips through
+    /// [`FusionConfig::from_args`]).
+    pub fn to_args(&self) -> Vec<String> {
+        vec![
+            format!("--layered={}", self.layered),
+            format!("--fusion-mode={}", self.mode.name()),
+            format!("--fusion-threshold-bytes={}", self.threshold_bytes),
+        ]
+    }
+
+    /// Engine chunk granularity in f32 elements (0 disables chunking).
+    pub fn chunk_elems(&self) -> usize {
+        if self.layered {
+            (self.threshold_bytes / 4).max(1)
+        } else {
+            0
+        }
+    }
+}
+
+/// One fused communication bucket: a contiguous run of profile layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bucket {
+    /// First layer index (inclusive, backprop order).
+    pub first: usize,
+    /// Last layer index (inclusive).
+    pub last: usize,
+    pub bytes: usize,
+    /// Backprop-time fraction at which the whole bucket is ready
+    /// (= ready fraction of its last layer).
+    pub ready_frac: f64,
+}
+
+/// A complete fusion plan over a profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusionPlan {
+    pub mode: FusionMode,
+    pub buckets: Vec<Bucket>,
+}
+
+impl FusionPlan {
+    /// Dispatch on the configured mode. `participants` and
+    /// `compute_seconds` parameterize the MG-WFBP cost model (ignored by
+    /// the other modes).
+    pub fn build(
+        profile: &LayerProfile,
+        cfg: &FusionConfig,
+        net: &NetworkModel,
+        participants: usize,
+        compute_seconds: f64,
+    ) -> FusionPlan {
+        let plan = match cfg.mode {
+            FusionMode::Flat => Self::flat(profile),
+            FusionMode::Threshold => Self::threshold(profile, cfg.threshold_bytes),
+            FusionMode::MgWfbp => Self::mgwfbp(profile, net, participants, compute_seconds),
+        };
+        debug_assert!(plan.validate(profile).is_ok());
+        plan
+    }
+
+    /// Single bucket covering the whole model — numerically identical to
+    /// the seed's flat payload path.
+    pub fn flat(profile: &LayerProfile) -> FusionPlan {
+        let n = profile.len();
+        FusionPlan {
+            mode: FusionMode::Flat,
+            buckets: vec![Bucket {
+                first: 0,
+                last: n - 1,
+                bytes: profile.total_bytes(),
+                ready_frac: 1.0,
+            }],
+        }
+    }
+
+    /// Greedy size-threshold fusion: accumulate consecutive layers until
+    /// the bucket reaches `threshold_bytes`, then seal it. Every sealed
+    /// bucket is at least `threshold_bytes` large; only the final bucket
+    /// may be smaller.
+    pub fn threshold(profile: &LayerProfile, threshold_bytes: usize) -> FusionPlan {
+        let threshold = threshold_bytes.max(4);
+        let mut buckets = Vec::new();
+        let mut first = 0usize;
+        let mut acc = 0usize;
+        for j in 0..profile.len() {
+            acc += profile.bytes(j);
+            if acc >= threshold {
+                buckets.push(Bucket {
+                    first,
+                    last: j,
+                    bytes: acc,
+                    ready_frac: profile.ready_frac(j),
+                });
+                first = j + 1;
+                acc = 0;
+            }
+        }
+        if first < profile.len() {
+            let last = profile.len() - 1;
+            buckets.push(Bucket { first, last, bytes: acc, ready_frac: profile.ready_frac(last) });
+        }
+        FusionPlan { mode: FusionMode::Threshold, buckets }
+    }
+
+    /// MG-WFBP-style optimal merge: choose the contiguous partition that
+    /// minimizes the finish time of the last collective when each bucket
+    /// may start at `max(prev bucket finished, bucket gradients ready)` and
+    /// costs `net.allreduce(bytes, participants)`. O(L²) dynamic program
+    /// (L = layer count, ≤ a few dozen for the paper workloads).
+    pub fn mgwfbp(
+        profile: &LayerProfile,
+        net: &NetworkModel,
+        participants: usize,
+        compute_seconds: f64,
+    ) -> FusionPlan {
+        let l = profile.len();
+        let participants = participants.max(2);
+        let compute = compute_seconds.max(0.0);
+        // Prefix byte sums: bytes(i..=j) = pre[j+1] - pre[i].
+        let mut pre = vec![0usize; l + 1];
+        for j in 0..l {
+            pre[j + 1] = pre[j] + profile.bytes(j);
+        }
+        // best[k]: minimal finish time covering layers 0..k (k layers);
+        // cut[k]: start index of the final bucket in that optimum.
+        let mut best = vec![f64::INFINITY; l + 1];
+        let mut cut = vec![0usize; l + 1];
+        best[0] = 0.0;
+        for k in 1..=l {
+            let ready = compute * profile.ready_frac(k - 1);
+            for i in 0..k {
+                let bytes = pre[k] - pre[i];
+                let finish = best[i].max(ready) + net.allreduce(bytes, participants);
+                if finish < best[k] {
+                    best[k] = finish;
+                    cut[k] = i;
+                }
+            }
+        }
+        // Reconstruct the partition.
+        let mut bounds = Vec::new();
+        let mut k = l;
+        while k > 0 {
+            bounds.push((cut[k], k - 1));
+            k = cut[k];
+        }
+        bounds.reverse();
+        let buckets = bounds
+            .into_iter()
+            .map(|(first, last)| Bucket {
+                first,
+                last,
+                bytes: pre[last + 1] - pre[first],
+                ready_frac: profile.ready_frac(last),
+            })
+            .collect();
+        FusionPlan { mode: FusionMode::MgWfbp, buckets }
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.buckets.iter().map(|b| b.bytes).sum()
+    }
+
+    /// Check the partition invariants against the profile: contiguous
+    /// in-order cover of all layers, exact byte accounting, nondecreasing
+    /// ready fractions.
+    pub fn validate(&self, profile: &LayerProfile) -> Result<(), String> {
+        if self.buckets.is_empty() {
+            return Err("empty plan".to_string());
+        }
+        let mut next = 0usize;
+        let mut prev_frac = 0.0f64;
+        for (k, b) in self.buckets.iter().enumerate() {
+            if b.first != next {
+                return Err(format!("bucket {k} starts at {} (expected {next})", b.first));
+            }
+            if b.last < b.first || b.last >= profile.len() {
+                return Err(format!("bucket {k} range {}..={} out of bounds", b.first, b.last));
+            }
+            let bytes: usize = (b.first..=b.last).map(|j| profile.bytes(j)).sum();
+            if bytes != b.bytes {
+                return Err(format!("bucket {k} bytes {} != layer sum {bytes}", b.bytes));
+            }
+            if b.ready_frac + 1e-12 < prev_frac {
+                return Err(format!("bucket {k} ready_frac decreases"));
+            }
+            prev_frac = b.ready_frac;
+            next = b.last + 1;
+        }
+        if next != profile.len() {
+            return Err(format!("plan covers {next} of {} layers", profile.len()));
+        }
+        if self.total_bytes() != profile.total_bytes() {
+            return Err("plan byte total mismatch".to_string());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> LayerProfile {
+        LayerProfile::resnet50()
+    }
+
+    #[test]
+    fn flat_is_one_full_bucket() {
+        let p = profile();
+        let plan = FusionPlan::flat(&p);
+        assert_eq!(plan.num_buckets(), 1);
+        assert_eq!(plan.buckets[0].bytes, p.total_bytes());
+        assert_eq!(plan.buckets[0].ready_frac, 1.0);
+        plan.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn threshold_respects_size_and_partitions() {
+        let p = profile();
+        for threshold in [1usize << 20, 4 << 20, 16 << 20, 1 << 30] {
+            let plan = FusionPlan::threshold(&p, threshold);
+            plan.validate(&p).unwrap();
+            for b in &plan.buckets[..plan.num_buckets() - 1] {
+                assert!(b.bytes >= threshold, "sealed bucket below threshold");
+            }
+        }
+        // Huge threshold degenerates to (near-)flat.
+        let one = FusionPlan::threshold(&p, usize::MAX / 2);
+        assert_eq!(one.num_buckets(), 1);
+        // Small threshold produces many buckets.
+        let many = FusionPlan::threshold(&p, 1 << 20);
+        assert!(many.num_buckets() > 4, "{} buckets", many.num_buckets());
+    }
+
+    #[test]
+    fn mgwfbp_merges_small_tensors_and_validates() {
+        let p = profile();
+        let net = NetworkModel::aries();
+        let plan = FusionPlan::mgwfbp(&p, &net, 8, 0.4);
+        plan.validate(&p).unwrap();
+        // With a 0.4 s backprop and millisecond-scale collectives the DP
+        // must exploit overlap: more than one bucket, fewer than one per
+        // layer (the α term makes per-layer collectives suboptimal for the
+        // small tail tensors).
+        assert!(plan.num_buckets() >= 2, "{}", plan.num_buckets());
+        assert!(plan.num_buckets() <= p.len());
+    }
+
+    #[test]
+    fn mgwfbp_with_zero_compute_prefers_fewer_buckets() {
+        // No overlap to exploit: the optimum is the pure comm minimum,
+        // which for an affine cost is a single fused bucket.
+        let p = profile();
+        let net = NetworkModel::aries();
+        let plan = FusionPlan::mgwfbp(&p, &net, 8, 0.0);
+        plan.validate(&p).unwrap();
+        assert_eq!(plan.num_buckets(), 1);
+    }
+
+    #[test]
+    fn config_roundtrips_toml_and_cli() {
+        let cfg = FusionConfig {
+            layered: true,
+            mode: FusionMode::MgWfbp,
+            threshold_bytes: 2 << 20,
+        };
+        let doc = TomlDoc::parse(&cfg.to_toml()).unwrap();
+        assert_eq!(FusionConfig::from_toml(&doc).unwrap(), cfg);
+        let args = Args::parse(cfg.to_args());
+        assert_eq!(FusionConfig::from_args(&args), cfg);
+        // Defaults survive an empty doc / empty args.
+        let d = FusionConfig::default();
+        assert_eq!(FusionConfig::from_toml(&TomlDoc::parse("").unwrap()).unwrap(), d);
+        assert_eq!(FusionConfig::from_args(&Args::parse(Vec::new())), d);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!("flat".parse::<FusionMode>().unwrap(), FusionMode::Flat);
+        assert_eq!("greedy".parse::<FusionMode>().unwrap(), FusionMode::Threshold);
+        assert_eq!("mg-wfbp".parse::<FusionMode>().unwrap(), FusionMode::MgWfbp);
+        assert!("bogus".parse::<FusionMode>().is_err());
+        for m in FusionMode::all() {
+            assert_eq!(m.name().parse::<FusionMode>().unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn chunk_elems_follows_layered_flag() {
+        let mut cfg = FusionConfig::default();
+        assert_eq!(cfg.chunk_elems(), 0);
+        cfg.layered = true;
+        assert_eq!(cfg.chunk_elems(), (8 << 20) / 4);
+    }
+}

@@ -1,0 +1,36 @@
+//! Layer-aware gradient fusion & communication-overlap scheduling.
+//!
+//! The seed modelled every exchange as one flat `model_bytes` blob fired
+//! after compute finished. Real training overlaps communication with
+//! backpropagation: gradients become available layer by layer (output
+//! first), get merged into fused buckets (MG-WFBP, Shi et al.), and each
+//! bucket's collective is issued as soon as its layers are ready — hiding
+//! most communication under the remaining backward pass (DaSGD, Zhou et
+//! al.). This subsystem models that pipeline:
+//!
+//! * [`profile`] — [`LayerProfile`]: per-layer parameter sizes and backprop
+//!   completion fractions for the three paper workloads (ResNet-50,
+//!   transformer LM, PPO policy), derived from `python/compile/model.py`
+//!   shapes and pinned to the presets' exact flat payload sizes.
+//! * [`fusion`] — [`FusionPlan`]: greedy size-threshold fusion and the
+//!   MG-WFBP optimal merge pass over the [`crate::simulator::NetworkModel`]
+//!   cost function, plus [`FusionConfig`] (the `layered` / `fusion_mode` /
+//!   `fusion_threshold_bytes` knobs threaded through preset, TOML, and CLI
+//!   parsing).
+//! * [`overlap`] — [`schedule_iteration`]: the per-iteration timeline of
+//!   (bucket ready → collective start → finish) events and its makespan.
+//!
+//! Consumers: the discrete-event simulator's layered mode
+//! ([`crate::simulator::sim`]) embeds the same recurrence with per-rank
+//! ready/engine coupling; the collective engine
+//! ([`crate::collectives::engine`]) accepts chunked exchanges at the plan's
+//! bucket granularity; `benches/fusion_overlap.rs` and the `fusion` figure
+//! hook quantify the makespan reduction against the flat baseline.
+
+pub mod fusion;
+pub mod overlap;
+pub mod profile;
+
+pub use fusion::{Bucket, FusionConfig, FusionMode, FusionPlan};
+pub use overlap::{flat_makespan, schedule_iteration, BucketEvent, Timeline};
+pub use profile::{Layer, LayerProfile};

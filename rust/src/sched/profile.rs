@@ -1,0 +1,291 @@
+//! Per-layer model profiles for the fusion planner.
+//!
+//! A [`LayerProfile`] lists a model's parameter tensors **in backpropagation
+//! completion order** (output layer first — its gradient is the first one
+//! available during the backward pass) together with a relative compute
+//! weight per layer. From the weights we derive `ready_frac[j]`: the
+//! fraction of the iteration's backprop time after which layer `j`'s
+//! gradient bucket may start communicating. This is the timing substrate
+//! MG-WFBP-style fusion planning needs (Shi et al.: merged-gradient
+//! wait-free backpropagation).
+//!
+//! The three paper workloads are modelled structurally from
+//! `python/compile/model.py` shapes (transformer blocks, MLP classifier,
+//! PPO policy/value net) and from the standard ResNet-50 bottleneck layout,
+//! then rescaled so the profile's total byte count matches the preset's
+//! flat `model_bytes` exactly — layered and flat simulations move the same
+//! number of bytes.
+
+/// One parameter tensor (or fused block of tensors) of the model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    /// Gradient payload size in bytes (f32 parameters × 4).
+    pub bytes: usize,
+    /// Relative backprop compute weight (arbitrary units; normalized away).
+    pub compute_weight: f64,
+}
+
+impl Layer {
+    fn params(name: &str, params: usize) -> Layer {
+        Layer { name: name.to_string(), bytes: params * 4, compute_weight: params as f64 }
+    }
+}
+
+/// Layers in backprop completion order plus the derived ready fractions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProfile {
+    pub model: String,
+    layers: Vec<Layer>,
+    /// `ready_frac[j]`: cumulative backprop-time fraction at which layer
+    /// `j`'s gradient is complete. Nondecreasing; last element is 1.0.
+    ready_frac: Vec<f64>,
+}
+
+impl LayerProfile {
+    /// Build a profile from layers given in backprop completion order.
+    pub fn new(model: &str, layers: Vec<Layer>) -> LayerProfile {
+        assert!(!layers.is_empty(), "profile needs at least one layer");
+        assert!(layers.iter().all(|l| l.bytes > 0), "zero-byte layer");
+        let total: f64 = layers.iter().map(|l| l.compute_weight.max(1e-12)).sum();
+        let mut acc = 0.0;
+        let ready_frac: Vec<f64> = layers
+            .iter()
+            .map(|l| {
+                acc += l.compute_weight.max(1e-12) / total;
+                acc.min(1.0)
+            })
+            .collect();
+        let mut p = LayerProfile { model: model.to_string(), layers, ready_frac };
+        // Guard against rounding: the final gradient completes exactly when
+        // backprop does.
+        if let Some(last) = p.ready_frac.last_mut() {
+            *last = 1.0;
+        }
+        p
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn bytes(&self, j: usize) -> usize {
+        self.layers[j].bytes
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Backprop-completion fraction of layer `j` (nondecreasing in `j`).
+    pub fn ready_frac(&self, j: usize) -> f64 {
+        self.ready_frac[j]
+    }
+
+    /// Rescale layer sizes so `total_bytes() == total` exactly (keeps
+    /// 4-byte alignment; the residual lands on the largest layer).
+    pub fn scaled_to_bytes(mut self, total: usize) -> LayerProfile {
+        assert!(total >= self.layers.len() * 4, "target too small for {} layers", self.layers.len());
+        let total = total / 4 * 4; // f32 payloads
+        let current = self.total_bytes() as f64;
+        let ratio = total as f64 / current;
+        for l in self.layers.iter_mut() {
+            let scaled = ((l.bytes as f64 * ratio / 4.0).round() as usize).max(1) * 4;
+            l.bytes = scaled;
+        }
+        // Fix rounding drift: add the shortfall to the largest layer, or
+        // shave surplus 4-byte words off the largest layers (each layer
+        // keeps at least one f32 — total >= 4 * len guarantees termination).
+        let now: usize = self.total_bytes();
+        if now < total {
+            let largest = (0..self.layers.len())
+                .max_by_key(|&j| self.layers[j].bytes)
+                .unwrap();
+            self.layers[largest].bytes += total - now;
+        } else {
+            let mut excess = now - total;
+            while excess > 0 {
+                let largest = (0..self.layers.len())
+                    .max_by_key(|&j| self.layers[j].bytes)
+                    .unwrap();
+                let shave = excess.min(self.layers[largest].bytes - 4);
+                debug_assert!(shave > 0, "cannot shave below one f32 per layer");
+                self.layers[largest].bytes -= shave;
+                excess -= shave;
+            }
+        }
+        debug_assert_eq!(self.total_bytes(), total);
+        self
+    }
+
+    /// ResNet-50 (Fig. 4 workload): stem + 16 bottleneck blocks + fc, in
+    /// backprop order (fc first), rescaled to the preset's exact 25,559,081
+    /// parameters.
+    pub fn resnet50() -> LayerProfile {
+        let mut fwd: Vec<Layer> = Vec::new();
+        fwd.push(Layer::params("stem_conv7x7", 3 * 64 * 49 + 2 * 64));
+        // (blocks, bottleneck width m, output channels w) per stage.
+        let stages: [(usize, usize, usize); 4] =
+            [(3, 64, 256), (4, 128, 512), (6, 256, 1024), (3, 512, 2048)];
+        let mut in_ch = 64usize;
+        for (s, &(blocks, m, w)) in stages.iter().enumerate() {
+            for b in 0..blocks {
+                let mut p = in_ch * m + 2 * m; // conv1 1x1
+                p += 9 * m * m + 2 * m; // conv2 3x3
+                p += m * w + 2 * w; // conv3 1x1
+                if b == 0 {
+                    p += in_ch * w + 2 * w; // downsample projection
+                }
+                fwd.push(Layer::params(&format!("stage{}_block{}", s + 1, b), p));
+                in_ch = w;
+            }
+        }
+        fwd.push(Layer::params("fc", 2048 * 1000 + 1000));
+        fwd.reverse(); // backprop order: fc first, stem last
+        LayerProfile::new("resnet50", fwd).scaled_to_bytes(25_559_081 * 4)
+    }
+
+    /// Decoder-only transformer LM (Fig. 7 workload), mirroring the block
+    /// structure in `python/compile/model.py` (attention and FFN fused per
+    /// block with their layer norms), rescaled to the preset's 61,362,176
+    /// parameters.
+    pub fn transformer() -> LayerProfile {
+        let (vocab, dm, n_layers, seq) = (32_000usize, 512usize, 6usize, 128usize);
+        let ff = 4 * dm;
+        let mut fwd: Vec<Layer> = Vec::new();
+        fwd.push(Layer::params("embedding", vocab * dm + seq * dm));
+        for i in 0..n_layers {
+            fwd.push(Layer::params(
+                &format!("block{i}_attn"),
+                2 * dm + dm * 3 * dm + 3 * dm + dm * dm + dm,
+            ));
+            fwd.push(Layer::params(
+                &format!("block{i}_ffn"),
+                2 * dm + dm * ff + ff + ff * dm + dm,
+            ));
+        }
+        fwd.push(Layer::params("ln_f_head", 2 * dm));
+        fwd.reverse(); // backprop order: head first, embedding last
+        LayerProfile::new("transformer", fwd).scaled_to_bytes(61_362_176 * 4)
+    }
+
+    /// PPO policy/value net (Fig. 10 workload), mirroring
+    /// `python/compile/model.py`'s policy spec (two hidden layers plus the
+    /// policy and value heads), rescaled to the preset's 8,476,421
+    /// parameters.
+    pub fn ppo_policy() -> LayerProfile {
+        let (obs, h, actions) = (32usize, 2048usize, 4usize);
+        let fwd = vec![
+            Layer::params("w1", obs * h + h),
+            Layer::params("w2", h * h + h),
+            Layer::params("heads", h * actions + actions + h + 1),
+        ];
+        let mut bwd = fwd;
+        bwd.reverse();
+        LayerProfile::new("ppo_policy", bwd).scaled_to_bytes(8_476_421 * 4)
+    }
+
+    /// Generic geometric pyramid profile for arbitrary payload sizes (used
+    /// when `model_bytes` matches no paper workload): `n_layers` layers
+    /// whose sizes grow toward the output, summing to `total_bytes`.
+    pub fn synthetic(total_bytes: usize, n_layers: usize) -> LayerProfile {
+        let n_layers = n_layers.max(1).min(total_bytes / 4).max(1);
+        let growth = 1.15f64;
+        let fwd: Vec<Layer> = (0..n_layers)
+            .map(|j| {
+                let w = growth.powi(j as i32);
+                Layer { name: format!("layer{j}"), bytes: 4, compute_weight: w }
+            })
+            .collect();
+        let mut bwd: Vec<Layer> = fwd;
+        bwd.reverse();
+        // Assign bytes proportional to compute weight, then rescale exact.
+        let total_w: f64 = bwd.iter().map(|l| l.compute_weight).sum();
+        for l in bwd.iter_mut() {
+            l.bytes = (((l.compute_weight / total_w) * total_bytes as f64 / 4.0).round() as usize)
+                .max(1)
+                * 4;
+        }
+        LayerProfile::new("synthetic", bwd).scaled_to_bytes(total_bytes.max(n_layers * 4))
+    }
+
+    /// Pick the profile matching a flat payload size: the three paper
+    /// workloads are recognized by their exact byte counts; anything else
+    /// gets a synthetic pyramid of the same total size.
+    pub fn for_model_bytes(model_bytes: usize) -> LayerProfile {
+        match model_bytes {
+            b if b == 25_559_081 * 4 => LayerProfile::resnet50(),
+            b if b == 61_362_176 * 4 => LayerProfile::transformer(),
+            b if b == 8_476_421 * 4 => LayerProfile::ppo_policy(),
+            b => LayerProfile::synthetic(b, 32),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_profiles_match_preset_totals() {
+        assert_eq!(LayerProfile::resnet50().total_bytes(), 25_559_081 * 4);
+        assert_eq!(LayerProfile::transformer().total_bytes(), 61_362_176 * 4);
+        assert_eq!(LayerProfile::ppo_policy().total_bytes(), 8_476_421 * 4);
+    }
+
+    #[test]
+    fn ready_fracs_are_monotone_and_end_at_one() {
+        for p in [
+            LayerProfile::resnet50(),
+            LayerProfile::transformer(),
+            LayerProfile::ppo_policy(),
+            LayerProfile::synthetic(1 << 20, 16),
+        ] {
+            let n = p.len();
+            assert!(n >= 3, "{}: {n} layers", p.model);
+            for j in 1..n {
+                assert!(
+                    p.ready_frac(j) >= p.ready_frac(j - 1),
+                    "{}: frac not monotone at {j}",
+                    p.model
+                );
+            }
+            assert!((p.ready_frac(n - 1) - 1.0).abs() < 1e-12);
+            assert!(p.ready_frac(0) > 0.0);
+        }
+    }
+
+    #[test]
+    fn resnet_backprop_order_puts_fc_first() {
+        let p = LayerProfile::resnet50();
+        assert_eq!(p.layers()[0].name, "fc");
+        assert_eq!(p.layers()[p.len() - 1].name, "stem_conv7x7");
+        // 1 stem + 16 blocks + 1 fc.
+        assert_eq!(p.len(), 18);
+    }
+
+    #[test]
+    fn scaling_is_exact_and_aligned() {
+        let p = LayerProfile::synthetic(10_000_000, 24);
+        assert_eq!(p.total_bytes(), 10_000_000);
+        assert!(p.layers().iter().all(|l| l.bytes % 4 == 0 && l.bytes >= 4));
+    }
+
+    #[test]
+    fn for_model_bytes_dispatch() {
+        assert_eq!(LayerProfile::for_model_bytes(25_559_081 * 4).model, "resnet50");
+        assert_eq!(LayerProfile::for_model_bytes(61_362_176 * 4).model, "transformer");
+        assert_eq!(LayerProfile::for_model_bytes(8_476_421 * 4).model, "ppo_policy");
+        let s = LayerProfile::for_model_bytes(123_456);
+        assert_eq!(s.model, "synthetic");
+        assert_eq!(s.total_bytes(), 123_456);
+    }
+}

@@ -7,6 +7,7 @@
 
 use crate::data::{ImbalanceModel, StepDelays};
 use crate::optim::Algorithm;
+use crate::sched::{Bucket, FusionConfig, FusionMode, FusionPlan, LayerProfile};
 use crate::simulator::network::NetworkModel;
 use crate::topology::{log2_exact, Grouping};
 use crate::util::stats::Summary;
@@ -29,6 +30,17 @@ pub struct SimConfig {
     pub imbalance: ImbalanceModel,
     pub net: NetworkModel,
     pub seed: u64,
+    /// Layer-aware fusion / overlap knobs. With `fusion.layered = false`
+    /// (the default) every exchange is the seed's flat `model_bytes` blob
+    /// fired after compute — existing results are reproduced exactly. With
+    /// `layered = true` the allreduce-style algorithms (WAGMA, eager-SGD,
+    /// Allreduce-SGD, Local SGD's averaging steps) consume the bucket
+    /// timeline from [`crate::sched`]: each bucket's collective starts as
+    /// soon as its layers' backprop completes, overlapping communication
+    /// with the rest of the backward pass. The gossip baselines (D-PSGD,
+    /// SGP, AD-PSGD) keep flat payloads — their per-step exchanges are not
+    /// bucket-scheduled collectives.
+    pub fusion: FusionConfig,
 }
 
 impl Default for SimConfig {
@@ -46,6 +58,7 @@ impl Default for SimConfig {
             imbalance: ImbalanceModel::fig4(),
             net: NetworkModel::aries(),
             seed: 42,
+            fusion: FusionConfig::default(),
         }
     }
 }
@@ -66,6 +79,38 @@ pub struct SimResult {
     /// Mean lag (seconds) between fastest and slowest rank entering each
     /// iteration — the straggler-absorption metric.
     pub mean_skew: f64,
+}
+
+impl SimConfig {
+    /// Does this configuration actually take the layered path? The gossip
+    /// baselines (D-PSGD, SGP, AD-PSGD) ignore `fusion.layered`: their
+    /// per-step exchanges are not bucket-scheduled collectives.
+    pub fn layered_active(&self) -> bool {
+        self.fusion.layered
+            && matches!(
+                self.algo,
+                Algorithm::Wagma
+                    | Algorithm::EagerSgd
+                    | Algorithm::AllreduceSgd
+                    | Algorithm::LocalSgd
+            )
+    }
+
+    /// Collective size the fusion planner costs against — the group
+    /// butterfly for WAGMA, the global allreduce for everything else.
+    /// Single source of truth shared by `simulate`, the fusion figure,
+    /// and the fusion bench.
+    pub fn fusion_participants(&self) -> usize {
+        let group_size = if self.group_size == 0 {
+            Grouping::sqrt_group_size(self.p)
+        } else {
+            self.group_size
+        };
+        match self.algo {
+            Algorithm::Wagma => group_size.min(self.p).max(2),
+            _ => self.p.max(2),
+        }
+    }
 }
 
 impl SimResult {
@@ -102,6 +147,33 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         Grouping::fixed(p, group_size.min(p))
     };
 
+    // Layered mode: one fusion plan per run, sized against the collective
+    // this algorithm actually issues every iteration (group butterfly for
+    // WAGMA, global allreduce otherwise). Algorithms whose exchanges are
+    // not bucket-scheduled collectives never build a plan.
+    let layered: Option<FusionPlan> = if cfg.layered_active() {
+        let profile = LayerProfile::for_model_bytes(n);
+        Some(FusionPlan::build(
+            &profile,
+            &cfg.fusion,
+            &net,
+            cfg.fusion_participants(),
+            cfg.imbalance.mean(),
+        ))
+    } else {
+        None
+    };
+    // Group collectives always run through the bucket recurrence: the
+    // layered plan when active, else one flat full-payload bucket —
+    // numerically identical to the seed's flat path (`ready_frac = 1`
+    // makes every bucket-ready time the plain arrival time; pinned
+    // bit-for-bit by the layered/flat equivalence tests).
+    let flat_plan = FusionPlan {
+        mode: FusionMode::Flat,
+        buckets: vec![Bucket { first: 0, last: 0, bytes: n, ready_frac: 1.0 }],
+    };
+    let group_plan: &FusionPlan = layered.as_ref().unwrap_or(&flat_plan);
+
     // app[i]: when rank i's app finished iteration t-1 (incl. waiting for
     // the data it needs). engine[i]: when its comm engine is next free.
     let mut app = vec![0.0f64; p];
@@ -120,16 +192,27 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
             ideal[i] += compute[i];
         }
         // Arrival of each app at the communication call site.
-        let mut arrival: Vec<f64> = (0..p).map(|i| app[i] + compute[i]).collect();
+        let arrival: Vec<f64> = (0..p).map(|i| app[i] + compute[i]).collect();
+        // Pre-compute app times: the bucket recurrence places per-bucket
+        // gradient ready points inside the backward pass relative to these.
+        let app_prev: Vec<f64> = app.clone();
 
         match cfg.algo {
             Algorithm::AllreduceSgd => {
-                sync_allreduce_step(&mut app, &arrival, net.allreduce(n, p));
+                if let Some(plan) = &layered {
+                    layered_sync_allreduce_step(&mut app, &app_prev, &compute, plan, &net, p);
+                } else {
+                    sync_allreduce_step(&mut app, &arrival, net.allreduce(n, p));
+                }
             }
             Algorithm::LocalSgd => {
                 let h = cfg.local_sgd_h.max(1);
                 if (t as u64 + 1) % h == 0 {
-                    sync_allreduce_step(&mut app, &arrival, net.allreduce(n, p));
+                    if let Some(plan) = &layered {
+                        layered_sync_allreduce_step(&mut app, &app_prev, &compute, plan, &net, p);
+                    } else {
+                        sync_allreduce_step(&mut app, &arrival, net.allreduce(n, p));
+                    }
                 } else {
                     app.copy_from_slice(&arrival);
                 }
@@ -169,21 +252,27 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                 let s = if cfg.algo == Algorithm::EagerSgd { p } else { group_size };
                 let is_sync = cfg.tau != 0 && (t as u64 + 1) % cfg.tau == 0;
                 if is_sync {
-                    let cost = net.allreduce(n, p);
-                    let start = arrival.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                    for i in 0..p {
-                        app[i] = start + cost;
-                        engine[i] = app[i];
+                    if let Some(plan) = &layered {
+                        layered_sync_allreduce_step(&mut app, &app_prev, &compute, plan, &net, p);
+                    } else {
+                        let cost = net.allreduce(n, p);
+                        let start = arrival.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                        for a in app.iter_mut() {
+                            *a = start + cost;
+                        }
                     }
+                    engine.copy_from_slice(&app);
                 } else {
-                    wait_avoiding_group_step(
+                    layered_group_step(
                         &mut app,
                         &mut engine,
-                        &mut arrival,
+                        &app_prev,
+                        &compute,
+                        &arrival,
                         &grouping,
                         s,
                         t as u64,
-                        n,
+                        group_plan,
                         &net,
                         p,
                     );
@@ -214,55 +303,91 @@ fn sync_allreduce_step(app: &mut [f64], arrival: &[f64], cost: f64) {
     }
 }
 
-/// One wait-avoiding group allreduce iteration (the paper's §III
-/// semantics at the timing level):
-///
-/// * the first app arrival activates the collective; activation reaches
-///   every engine after the binomial-tree latency;
-/// * an engine joins at `max(engine_free, min(own app arrival, activation))`
-///   — i.e. a busy app does NOT delay its engine (passive, stale
-///   contribution), which is exactly the wait-avoidance;
-/// * `log2(S)` butterfly phases relax pairwise with the dynamic grouping's
-///   partners;
-/// * the app continues at `max(own arrival, own engine completion)` — for
-///   stragglers the collective is already done when they arrive.
-#[allow(clippy::too_many_arguments)]
-fn wait_avoiding_group_step(
+/// Layered synchronous allreduce (Allreduce-SGD, Local SGD averaging, the
+/// every-τ WAGMA sync): bucket `b` becomes ready on rank `i` at
+/// `app_prev[i] + compute[i] * ready_frac(b)` — i.e. partway through the
+/// backward pass — and the cluster-wide collective for `b` starts once
+/// every rank's bucket is ready AND the previous bucket finished (one
+/// serial communication engine, as in MG-WFBP). The iteration ends at
+/// `max(last bucket finish, slowest compute)`.
+fn layered_sync_allreduce_step(
     app: &mut [f64],
-    engine: &mut [f64],
-    arrival: &mut [f64],
-    grouping: &Grouping,
-    s: usize,
-    t: u64,
-    n: usize,
+    app_prev: &[f64],
+    compute: &[f64],
+    plan: &FusionPlan,
     net: &NetworkModel,
     p: usize,
 ) {
-    let activator = arrival.iter().cloned().fold(f64::INFINITY, f64::min);
-    let act = activator + net.activation(p);
-    // Engine join times.
-    let mut times: Vec<f64> = (0..p)
-        .map(|i| engine[i].max(arrival[i].min(act)))
-        .collect();
-    // Butterfly phases within the group (partners via dynamic grouping; for
-    // eager-SGD s == p and the grouping covers the full hypercube rotation,
-    // so use plain recursive doubling masks in that case).
+    let mut finish = f64::NEG_INFINITY;
+    for b in &plan.buckets {
+        let ready = (0..p)
+            .map(|i| app_prev[i] + compute[i] * b.ready_frac)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let start = ready.max(finish);
+        finish = start + net.allreduce(b.bytes, p);
+    }
+    let arrival_max = (0..p)
+        .map(|i| app_prev[i] + compute[i])
+        .fold(f64::NEG_INFINITY, f64::max);
+    let end = finish.max(arrival_max);
+    for a in app.iter_mut() {
+        *a = end;
+    }
+}
+
+/// Wait-avoiding group allreduce iteration (the paper's §III semantics at
+/// the timing level), applied per fused bucket in backprop-completion
+/// order — the flat payload is simply the single-bucket plan
+/// (`ready_frac = 1`, so every bucket-ready time is the plain arrival):
+///
+/// * the first *bucket-ready* rank activates; activation reaches every
+///   engine after the binomial-tree latency;
+/// * an engine joins at `max(engine_free, min(own bucket ready,
+///   activation))` — a busy app does NOT delay its engine (passive, stale
+///   contribution), which is exactly the wait-avoidance;
+/// * `log2(S)` butterfly phases relax pairwise on the bucket's bytes with
+///   the dynamic grouping's partners (for eager-SGD `s == p`: plain
+///   recursive-doubling masks);
+/// * engines serialize across buckets; the app continues at
+///   `max(own arrival, own engine completion)` — for stragglers the
+///   collective is already done when they arrive.
+#[allow(clippy::too_many_arguments)]
+fn layered_group_step(
+    app: &mut [f64],
+    engine: &mut [f64],
+    app_prev: &[f64],
+    compute: &[f64],
+    arrival: &[f64],
+    grouping: &Grouping,
+    s: usize,
+    t: u64,
+    plan: &FusionPlan,
+    net: &NetworkModel,
+    p: usize,
+) {
     let phases = log2_exact(s.min(p));
-    let cost = net.exchange(n, s.min(p));
-    for r in 0..phases {
-        let prev = times.clone();
-        for i in 0..p {
-            let partner = if s >= p {
-                i ^ (1usize << r)
-            } else {
-                grouping.partner(i, t, r)
-            };
-            times[i] = prev[i].max(prev[partner]) + cost;
+    for bucket in &plan.buckets {
+        let ready: Vec<f64> =
+            (0..p).map(|i| app_prev[i] + compute[i] * bucket.ready_frac).collect();
+        let activator = ready.iter().cloned().fold(f64::INFINITY, f64::min);
+        let act = activator + net.activation(p);
+        let mut times: Vec<f64> = (0..p).map(|i| engine[i].max(ready[i].min(act))).collect();
+        let cost = net.exchange(bucket.bytes, s.min(p));
+        for r in 0..phases {
+            let prev = times.clone();
+            for i in 0..p {
+                let partner = if s >= p {
+                    i ^ (1usize << r)
+                } else {
+                    grouping.partner(i, t, r)
+                };
+                times[i] = prev[i].max(prev[partner]) + cost;
+            }
         }
+        engine.copy_from_slice(&times);
     }
     for i in 0..p {
-        engine[i] = times[i];
-        app[i] = arrival[i].max(times[i]);
+        app[i] = arrival[i].max(engine[i]);
     }
 }
 
@@ -401,6 +526,50 @@ mod tests {
         let b = simulate(&base(Algorithm::Wagma, 16));
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.iter_times, b.iter_times);
+    }
+
+    #[test]
+    fn layered_flat_bucket_reproduces_flat_results() {
+        // fusion.layered with a single full-model bucket (mode = Flat) is
+        // numerically identical to the seed's flat path — for the group
+        // collectives, the τ syncs, and the synchronous baselines.
+        use crate::sched::{FusionConfig, FusionMode};
+        for algo in [Algorithm::Wagma, Algorithm::EagerSgd, Algorithm::AllreduceSgd, Algorithm::LocalSgd] {
+            let flat = simulate(&base(algo, 16));
+            let layered = simulate(&SimConfig {
+                fusion: FusionConfig {
+                    layered: true,
+                    mode: FusionMode::Flat,
+                    ..Default::default()
+                },
+                ..base(algo, 16)
+            });
+            assert_eq!(flat.makespan, layered.makespan, "{}", algo.name());
+            assert_eq!(flat.iter_times, layered.iter_times, "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn layered_overlap_reduces_makespan() {
+        // Bucketed, overlap-scheduled exchanges must strictly beat the flat
+        // payload under the Fig. 4 workload (the acceptance criterion's
+        // mechanism: communication hides under backprop).
+        use crate::sched::FusionConfig;
+        for algo in [Algorithm::Wagma, Algorithm::AllreduceSgd] {
+            let flat = simulate(&base(algo, 64));
+            let layered = simulate(&SimConfig {
+                fusion: FusionConfig { layered: true, ..Default::default() },
+                ..base(algo, 64)
+            });
+            assert!(
+                layered.makespan < flat.makespan,
+                "{}: layered {} vs flat {}",
+                algo.name(),
+                layered.makespan,
+                flat.makespan
+            );
+            assert!(layered.makespan >= layered.ideal_makespan - 1e-9);
+        }
     }
 
     #[test]

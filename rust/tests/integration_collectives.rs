@@ -17,6 +17,7 @@ fn cfg(p: usize, s: usize, tau: u64) -> EngineConfig {
         dynamic_groups: true,
         sync_algo: AllreduceAlgo::Auto,
         activation: ActivationMode::Solo,
+        chunk_elems: 0,
     }
 }
 

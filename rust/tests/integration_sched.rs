@@ -1,0 +1,172 @@
+//! Integration tests for the layer-aware fusion & overlap scheduler
+//! (`wagma::sched`) and its simulator integration — the PR's acceptance
+//! contract: layered mode strictly beats the flat payload on the fig4
+//! preset, single-bucket layered mode reproduces flat results exactly, and
+//! the fusion knobs round-trip through TOML, preset, and CLI parsing.
+
+use wagma::config::{preset, TomlDoc};
+use wagma::optim::Algorithm;
+use wagma::sched::{FusionConfig, FusionMode, FusionPlan, LayerProfile};
+use wagma::simulator::{simulate, NetworkModel, SimConfig};
+use wagma::util::cli::Args;
+
+/// Acceptance criterion: in layered mode on the fig4 preset,
+/// overlap-scheduled WAGMA-SGD's simulated makespan is strictly lower
+/// than the flat-payload equivalent (same seed, same workload).
+#[test]
+fn fig4_layered_wagma_beats_flat() {
+    let pre = preset("fig4").unwrap();
+    let flat_cfg = pre.sim_config(Algorithm::Wagma, 64, 42);
+    assert!(!flat_cfg.fusion.layered, "preset default must stay flat");
+    let mut layered_cfg = flat_cfg.clone();
+    layered_cfg.fusion = FusionConfig { layered: true, ..Default::default() };
+
+    let flat = simulate(&flat_cfg);
+    let layered = simulate(&layered_cfg);
+    assert!(
+        layered.makespan < flat.makespan,
+        "layered {} must be strictly below flat {}",
+        layered.makespan,
+        flat.makespan
+    );
+    // Sanity: never below the zero-communication ideal.
+    assert!(layered.makespan >= layered.ideal_makespan - 1e-9);
+    // Both modes simulate the same compute process.
+    assert_eq!(flat.ideal_makespan, layered.ideal_makespan);
+}
+
+/// The overlap win extends to the synchronous baseline and to the MG-WFBP
+/// planner, across the other paper presets.
+#[test]
+fn layered_wins_across_presets_and_modes() {
+    for (name, p) in [("fig4", 64usize), ("fig7", 16), ("fig10", 64)] {
+        let pre = preset(name).unwrap();
+        for algo in [Algorithm::Wagma, Algorithm::AllreduceSgd] {
+            if !pre.algos.contains(&algo) {
+                continue;
+            }
+            let mut flat_cfg = pre.sim_config(algo, p, 7);
+            flat_cfg.steps = 60; // keep the sweep fast
+            let flat = simulate(&flat_cfg).makespan;
+            for mode in [FusionMode::Threshold, FusionMode::MgWfbp] {
+                let mut cfg = flat_cfg.clone();
+                cfg.fusion = FusionConfig { layered: true, mode, ..Default::default() };
+                let layered = simulate(&cfg).makespan;
+                assert!(
+                    layered < flat,
+                    "{name}/{}/{}: layered {layered} vs flat {flat}",
+                    algo.name(),
+                    mode.name()
+                );
+            }
+        }
+    }
+}
+
+/// Regression pin for a small fixed seed: layered-mode makespans are
+/// deterministic (bit-identical across runs), bounded by the flat payload
+/// above and the zero-communication ideal below, and a single full-model
+/// bucket reproduces the flat makespan exactly.
+#[test]
+fn layered_makespan_regression_pin() {
+    let base = SimConfig {
+        algo: Algorithm::Wagma,
+        p: 16,
+        steps: 50,
+        seed: 7,
+        ..Default::default()
+    };
+    let flat = simulate(&base);
+
+    let mut layered_cfg = base.clone();
+    layered_cfg.fusion = FusionConfig { layered: true, ..Default::default() };
+    let a = simulate(&layered_cfg);
+    let b = simulate(&layered_cfg);
+    assert_eq!(a.makespan, b.makespan, "layered mode must be deterministic");
+    assert_eq!(a.iter_times, b.iter_times);
+    assert!(a.makespan < flat.makespan, "layered {} vs flat {}", a.makespan, flat.makespan);
+    assert!(a.makespan >= a.ideal_makespan - 1e-9);
+
+    // mode = flat inside the layered path: numerically identical to the
+    // seed's flat code path (the strongest equivalence pin available).
+    let mut one_bucket = base.clone();
+    one_bucket.fusion =
+        FusionConfig { layered: true, mode: FusionMode::Flat, ..Default::default() };
+    let eq = simulate(&one_bucket);
+    assert_eq!(eq.makespan, flat.makespan);
+    assert_eq!(eq.iter_times, flat.iter_times);
+}
+
+/// Smaller fusion thresholds expose less tail communication (down to the
+/// α-dominated floor): the makespan is monotone-ish in bucket count on the
+/// fig4 workload.
+#[test]
+fn threshold_sweep_behaviour() {
+    let pre = preset("fig4").unwrap();
+    let mk = |threshold: usize| {
+        let mut cfg = pre.sim_config(Algorithm::Wagma, 64, 3);
+        cfg.steps = 60;
+        cfg.fusion = FusionConfig {
+            layered: true,
+            mode: FusionMode::Threshold,
+            threshold_bytes: threshold,
+        };
+        simulate(&cfg).makespan
+    };
+    let coarse = mk(64 << 20); // ~2 buckets
+    let medium = mk(8 << 20);
+    assert!(
+        medium < coarse * 1.001,
+        "finer buckets must not lose: medium {medium} vs coarse {coarse}"
+    );
+}
+
+/// Fusion knobs round-trip: preset → SimConfig, TOML → FusionConfig →
+/// TOML, CLI args → FusionConfig (the acceptance criterion's parsing leg).
+#[test]
+fn fusion_knobs_roundtrip_everywhere() {
+    // Preset leg: the preset's knobs land in the SimConfig verbatim.
+    let mut pre = preset("fig4").unwrap();
+    pre.fusion = FusionConfig { layered: true, mode: FusionMode::MgWfbp, threshold_bytes: 123_456 };
+    let cfg = pre.sim_config(Algorithm::Wagma, 16, 1);
+    assert_eq!(cfg.fusion, pre.fusion);
+
+    // TOML leg.
+    let toml_text = pre.fusion.to_toml();
+    let doc = TomlDoc::parse(&toml_text).unwrap();
+    assert_eq!(FusionConfig::from_toml(&doc).unwrap(), pre.fusion);
+
+    // Hand-written TOML with partial keys falls back to defaults.
+    let partial = TomlDoc::parse("[fusion]\nlayered = true\n").unwrap();
+    let parsed = FusionConfig::from_toml(&partial).unwrap();
+    assert!(parsed.layered);
+    assert_eq!(parsed.mode, FusionConfig::default().mode);
+
+    // CLI leg: emitted flags parse back to the same config, and explicit
+    // flags override a TOML base.
+    let args = Args::parse(pre.fusion.to_args());
+    assert_eq!(FusionConfig::from_args(&args), pre.fusion);
+    let override_args = Args::parse(vec!["--fusion-threshold-bytes=999992".to_string()]);
+    let merged = FusionConfig::from_args_with(&override_args, pre.fusion);
+    assert_eq!(merged.threshold_bytes, 999_992);
+    assert_eq!(merged.mode, FusionMode::MgWfbp);
+    assert!(merged.layered);
+}
+
+/// The planner's profiles line up with the presets' flat payloads, so
+/// layered and flat modes move identical byte totals.
+#[test]
+fn profiles_conserve_preset_bytes() {
+    let net = NetworkModel::aries();
+    for name in ["fig4", "fig7", "fig10"] {
+        let pre = preset(name).unwrap();
+        let profile = LayerProfile::for_model_bytes(pre.model_params * 4);
+        assert_eq!(profile.total_bytes(), pre.model_params * 4, "{name}");
+        for mode in [FusionMode::Flat, FusionMode::Threshold, FusionMode::MgWfbp] {
+            let fusion = FusionConfig { layered: true, mode, ..Default::default() };
+            let plan = FusionPlan::build(&profile, &fusion, &net, 8, pre.imbalance.mean());
+            plan.validate(&profile).unwrap();
+            assert_eq!(plan.total_bytes(), pre.model_params * 4, "{name}/{}", mode.name());
+        }
+    }
+}

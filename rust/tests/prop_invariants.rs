@@ -5,6 +5,8 @@ use wagma::collectives::allreduce::{allreduce_sum, allreduce_sum_ring};
 use wagma::comm::world;
 use wagma::prop_assert;
 use wagma::rl::ppo::gae;
+use wagma::sched::{FusionMode, FusionPlan, LayerProfile};
+use wagma::simulator::NetworkModel;
 use wagma::topology::{BinomialTree, Grouping};
 use wagma::util::json::Json;
 use wagma::util::proptest::{check, check_with, Config};
@@ -215,6 +217,134 @@ fn prop_simulator_sanity() {
         prop_assert!(a.makespan >= a.ideal_makespan - 1e-9, "makespan below ideal");
         prop_assert!(a.makespan == b.makespan, "nondeterministic");
         prop_assert!(a.iter_times.iter().all(|t| *t >= -1e-9), "negative iteration time");
+        Ok(())
+    });
+}
+
+/// Fusion-plan invariants over random profiles, thresholds, and planners:
+/// buckets partition all layers exactly once (contiguous, in order),
+/// respect the size threshold (greedy mode: every sealed bucket ≥
+/// threshold), conserve the byte total, and carry nondecreasing ready
+/// fractions.
+#[test]
+fn prop_fusion_plan_invariants() {
+    let net = NetworkModel::aries();
+    check_with(Config { cases: 96, ..Default::default() }, "fusion-plan", |g| {
+        let layers = g.usize_in(1, 48);
+        let total_bytes = g.usize_in(layers, 4_000_000) * 4;
+        let profile = LayerProfile::synthetic(total_bytes, layers);
+        prop_assert!(profile.total_bytes() == total_bytes, "profile bytes");
+
+        // Greedy threshold plan.
+        let threshold = g.usize_in(1, total_bytes + 8);
+        let plan = FusionPlan::threshold(&profile, threshold);
+        plan.validate(&profile).map_err(|e| format!("threshold: {e}"))?;
+        let nb = plan.num_buckets();
+        for (k, b) in plan.buckets.iter().enumerate() {
+            if k + 1 < nb {
+                prop_assert!(
+                    b.bytes >= threshold.max(4),
+                    "sealed bucket {k} has {} < threshold {threshold}",
+                    b.bytes
+                );
+            }
+        }
+        // Exact cover, each layer exactly once.
+        let covered: usize = plan.buckets.iter().map(|b| b.last - b.first + 1).sum();
+        prop_assert!(covered == profile.len(), "covered {covered} of {}", profile.len());
+
+        // MG-WFBP plan under a random collective size / compute budget.
+        let participants = g.pow2_in(2, 64);
+        let compute = g.f64_in(0.0, 2.0);
+        let opt = FusionPlan::mgwfbp(&profile, &net, participants, compute);
+        opt.validate(&profile).map_err(|e| format!("mgwfbp: {e}"))?;
+        prop_assert!(opt.total_bytes() == profile.total_bytes());
+
+        // Flat plan is always a single full bucket.
+        let flat = FusionPlan::flat(&profile);
+        flat.validate(&profile).map_err(|e| format!("flat: {e}"))?;
+        prop_assert!(flat.num_buckets() == 1 && flat.buckets[0].ready_frac == 1.0);
+        Ok(())
+    });
+}
+
+/// The MG-WFBP dynamic program is optimal for its own cost model: its
+/// scheduled finish time is never worse than greedy threshold plans or the
+/// flat single bucket, for any profile and network drawn.
+#[test]
+fn prop_mgwfbp_not_worse_than_alternatives() {
+    use wagma::sched::schedule_iteration;
+    let net = NetworkModel::aries();
+    check_with(Config { cases: 48, ..Default::default() }, "mgwfbp-optimal", |g| {
+        let layers = g.usize_in(2, 32);
+        let total_bytes = g.usize_in(layers * 256, 8_000_000) * 4;
+        let profile = LayerProfile::synthetic(total_bytes, layers);
+        let participants = g.pow2_in(2, 64);
+        let compute = g.f64_in(0.01, 1.0);
+        let mk = |plan: &FusionPlan| {
+            let costs: Vec<f64> =
+                plan.buckets.iter().map(|b| net.allreduce(b.bytes, participants)).collect();
+            schedule_iteration(plan, compute, &costs, 0.0).makespan
+        };
+        let opt = mk(&FusionPlan::mgwfbp(&profile, &net, participants, compute));
+        for threshold in [total_bytes / 7 + 1, total_bytes / 3 + 1, total_bytes + 1] {
+            let alt = mk(&FusionPlan::threshold(&profile, threshold));
+            prop_assert!(
+                opt <= alt + 1e-9,
+                "mgwfbp {opt} beaten by threshold({threshold}) {alt}"
+            );
+        }
+        let flat = mk(&FusionPlan::flat(&profile));
+        prop_assert!(opt <= flat + 1e-9, "mgwfbp {opt} beaten by flat {flat}");
+        Ok(())
+    });
+}
+
+/// Layered-mode simulator invariants across random configurations:
+/// deterministic per seed, makespan never below the ideal, and the
+/// flat-bucket plan (mode = flat, layered = true) always reproduces the
+/// flat-path makespan bit-for-bit.
+#[test]
+fn prop_layered_simulator_sanity() {
+    use wagma::data::ImbalanceModel;
+    use wagma::optim::Algorithm;
+    use wagma::sched::FusionConfig;
+    use wagma::simulator::{simulate, SimConfig};
+    check_with(Config { cases: 24, ..Default::default() }, "layered-sim", |g| {
+        let p = g.pow2_in(2, 64);
+        let algos = [Algorithm::Wagma, Algorithm::EagerSgd, Algorithm::AllreduceSgd, Algorithm::LocalSgd];
+        let algo = algos[g.usize_in(0, algos.len() - 1)];
+        let base = SimConfig {
+            algo,
+            p,
+            steps: 20,
+            model_bytes: g.usize_in(1, 100) << 16,
+            tau: [0u64, 3, 10][g.usize_in(0, 2)],
+            imbalance: ImbalanceModel::fig4(),
+            seed: g.rng.next_u64(),
+            ..Default::default()
+        };
+        let flat = simulate(&base);
+
+        let mut eq_cfg = base.clone();
+        eq_cfg.fusion = FusionConfig { layered: true, mode: FusionMode::Flat, ..Default::default() };
+        let eq = simulate(&eq_cfg);
+        prop_assert!(
+            eq.makespan == flat.makespan,
+            "flat-bucket layered {} != flat {}",
+            eq.makespan,
+            flat.makespan
+        );
+
+        let mut lay_cfg = base.clone();
+        // 64 KiB buckets so the plan genuinely splits these small payloads.
+        lay_cfg.fusion =
+            FusionConfig { layered: true, threshold_bytes: 1 << 16, ..Default::default() };
+        let a = simulate(&lay_cfg);
+        let b = simulate(&lay_cfg);
+        prop_assert!(a.makespan == b.makespan, "layered nondeterministic");
+        prop_assert!(a.makespan >= a.ideal_makespan - 1e-9, "below ideal");
+        prop_assert!(a.iter_times.iter().all(|t| *t >= -1e-9), "negative iter time");
         Ok(())
     });
 }

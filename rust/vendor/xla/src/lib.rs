@@ -1,0 +1,258 @@
+//! Stub of the `xla` (PJRT) bindings used by the runtime layer.
+//!
+//! The offline build environment has no libxla/PJRT shared library, so this
+//! crate keeps the coordinator compiling and testable while gating artifact
+//! *execution* behind a runtime error: [`PjRtClient::cpu`] (the first call
+//! on every execution path) fails with a clear message, and the integration
+//! tests skip gracefully because `artifacts/` is never built here. The
+//! [`Literal`] container is implemented for real — shape/dtype bookkeeping,
+//! reshape validation, tuple access — so host-side plumbing stays honest.
+
+use std::fmt;
+
+/// Stub error type (also what the real bindings' fallible calls produce).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: this build uses the offline `xla` stub crate \
+     (no libxla). Simulator, collectives, and analytic training paths are \
+     unaffected; AOT artifact execution needs the real bindings";
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Sized + Copy {
+    fn to_literal(v: &[Self], dims: Vec<i64>) -> Literal;
+    fn from_literal(l: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_literal(v: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::F32 { values: v.to_vec(), dims }
+    }
+
+    fn from_literal(l: &Literal) -> Result<Vec<Self>> {
+        match l {
+            Literal::F32 { values, .. } => Ok(values.clone()),
+            other => Err(Error(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_literal(v: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::I32 { values: v.to_vec(), dims }
+    }
+
+    fn from_literal(l: &Literal) -> Result<Vec<Self>> {
+        match l {
+            Literal::I32 { values, .. } => Ok(values.clone()),
+            other => Err(Error(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+/// A host-side tensor (or tuple of tensors).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32 { values: Vec<f32>, dims: Vec<i64> },
+    I32 { values: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::to_literal(v, vec![v.len() as i64])
+    }
+
+    /// Element count (sum over tuple members).
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { values, .. } => values.len(),
+            Literal::I32 { values, .. } => values.len(),
+            Literal::Tuple(ts) => ts.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Reshape to `dims` (element count must be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        match self {
+            Literal::F32 { values, .. } => {
+                if values.len() as i64 != want {
+                    return Err(Error(format!(
+                        "reshape {} elements to {dims:?}",
+                        values.len()
+                    )));
+                }
+                Ok(Literal::F32 { values: values.clone(), dims: dims.to_vec() })
+            }
+            Literal::I32 { values, .. } => {
+                if values.len() as i64 != want {
+                    return Err(Error(format!(
+                        "reshape {} elements to {dims:?}",
+                        values.len()
+                    )));
+                }
+                Ok(Literal::I32 { values: values.clone(), dims: dims.to_vec() })
+            }
+            Literal::Tuple(_) => Err(Error("cannot reshape a tuple".to_string())),
+        }
+    }
+
+    /// Flatten to a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_literal(self)
+    }
+
+    /// Single-element tuple access (non-tuples pass through, matching the
+    /// bindings' tolerance for unwrapped single outputs).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        match self {
+            Literal::Tuple(ts) if ts.len() == 1 => Ok(ts[0].clone()),
+            Literal::Tuple(ts) => Err(Error(format!("expected 1-tuple, got {}-tuple", ts.len()))),
+            other => Ok(other.clone()),
+        }
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        match self {
+            Literal::Tuple(ts) if ts.len() == 2 => Ok((ts[0].clone(), ts[1].clone())),
+            other => Err(Error(format!("expected 2-tuple, got {other:?}"))),
+        }
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        match self {
+            Literal::Tuple(ts) if ts.len() == 3 => {
+                Ok((ts[0].clone(), ts[1].clone(), ts[2].clone()))
+            }
+            other => Err(Error(format!("expected 3-tuple, got {other:?}"))),
+        }
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(x: f32) -> Literal {
+        Literal::F32 { values: vec![x], dims: Vec::new() }
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub: parsing requires the
+/// real bindings, and nothing downstream can run without it).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (construction fails in the stub).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub: no client exists).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[1i32, 2]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, 2]);
+        let s = Literal::from(0.5f32);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn tuples() {
+        let t = Literal::Tuple(vec![Literal::from(1.0), Literal::from(2.0)]);
+        let (a, b) = t.to_tuple2().unwrap();
+        assert_eq!(a.to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(b.to_vec::<f32>().unwrap(), vec![2.0]);
+        assert!(t.to_tuple3().is_err());
+        // Non-tuple passes through to_tuple1.
+        assert_eq!(Literal::from(3.0).to_tuple1().unwrap(), Literal::from(3.0));
+    }
+
+    #[test]
+    fn execution_is_gated() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
