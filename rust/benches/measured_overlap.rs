@@ -1,0 +1,19 @@
+//! Measured-overlap wall-clock bench (`cargo bench --bench
+//! measured_overlap`) — the same harness as `wagma bench`, run through the
+//! in-tree Bencher conventions: real compute threads against streamed
+//! chunk exchanges on the collective engine, per the PR-1 fusion plan.
+//!
+//! Set `WAGMA_BENCH_QUICK=1` for the smoke-sized variant.
+
+use wagma::bench::measured_overlap::bench_preset;
+
+fn main() {
+    let quick = matches!(
+        std::env::var("WAGMA_BENCH_QUICK").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0"
+    );
+    println!("Measured-overlap bench ({}):", if quick { "quick" } else { "full" });
+    for name in ["fig4", "fig7", "fig10"] {
+        let _ = bench_preset(name, quick, 42);
+    }
+}

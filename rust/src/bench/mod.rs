@@ -1,6 +1,11 @@
 //! Benchmark harness (offline environment: no `criterion`). Provides
 //! warmup + timed iterations, robust statistics, throughput units, and a
 //! JSON report — used by every target in `rust/benches/`.
+//!
+//! [`measured_overlap`] is the wall-clock engine harness behind the
+//! `wagma bench` subcommand and `BENCH_engine.json`.
+
+pub mod measured_overlap;
 
 use std::time::Instant;
 
@@ -28,6 +33,7 @@ impl BenchResult {
             ("iters", num(self.iters as f64)),
             ("mean_s", num(su.mean)),
             ("median_s", num(su.p50)),
+            ("p99_s", num(su.p99)),
             ("std_s", num(su.std)),
             ("min_s", num(su.min)),
             ("max_s", num(su.max)),

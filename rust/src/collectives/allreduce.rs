@@ -7,10 +7,20 @@
 //! * **Ring (reduce-scatter + allgather)** — `2(P-1)` phases sending
 //!   `N/P` each: bandwidth-optimal for large models (Baidu-style), added in
 //!   the performance pass as the default for vectors above a threshold.
+//!
+//! Both are zero-copy on the send side: payloads travel as refcounted
+//! [`Chunk`] views of a shared buffer. Recursive doubling circulates the
+//! accumulator as an `Arc` (reducing in place once the partner has dropped
+//! its reference); the ring keeps the vector as `P` segment views, reduces
+//! into fresh segments, and forwards received segments by reference during
+//! the allgather — the classic implementation's per-step `to_vec()` chunk
+//! copies are gone entirely.
 
-use crate::comm::{Endpoint, Tag};
+use std::sync::Arc;
+
+use crate::comm::{shared, BufferPool, Chunk, Endpoint, SharedBuf, Tag};
 use crate::topology::log2_exact;
-use crate::util::add_assign;
+use crate::util::{add_assign, sum_into};
 
 /// Which allreduce algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,6 +39,20 @@ pub enum AllreduceAlgo {
 /// latency-bound tiny payloads.
 pub const RING_THRESHOLD: usize = 2048;
 
+/// One step of the ring schedule. `gather = false` is the reduce-scatter
+/// pass, `gather = true` the allgather; the two passes share this index
+/// map (the allgather simply walks the same orbit shifted by one chunk)
+/// and differ only in how the received segment is combined.
+///
+/// Returns `(send_chunk, recv_chunk, phase_tag)` for step `s ∈ 0..p-1`.
+pub fn ring_step(rank: usize, p: usize, s: usize, gather: bool) -> (usize, usize, u32) {
+    let shift = usize::from(gather);
+    let send_c = (rank + shift + p - s) % p;
+    let recv_c = (rank + shift + p - s - 1) % p;
+    let phase = if gather { (p - 1 + s) as u32 } else { s as u32 };
+    (send_c, recv_c, phase)
+}
+
 /// In-place global sum over all ranks using `algo`. Blocking: every rank
 /// must call with the same `version`. Vector contents are replaced by the
 /// elementwise sum across ranks.
@@ -46,6 +70,46 @@ pub fn allreduce(ep: &mut Endpoint, buf: &mut Vec<f32>, version: u64, algo: Allr
     }
 }
 
+fn recv_plain(ep: &mut Endpoint, src: usize, tag: Tag) -> Chunk {
+    ep.recv_data(src, tag, |_, m| {
+        panic!("unexpected control message in direct-mode allreduce: {m:?}")
+    })
+}
+
+/// Combine an accumulator with a received contribution: in place when the
+/// partner has already released our buffer (`Arc::try_unwrap` proves sole
+/// ownership), else one fused `sum_into` pass into a pooled buffer. Both
+/// branches compute `lhs[i] + rhs[i]` in the same operand order, so the
+/// result is bitwise independent of which path timing selects. Either way
+/// the returned `Arc` is unique. Shared by the direct-mode recursive
+/// doubling and the engine's butterfly phases.
+pub(crate) fn reduce_shared(pool: &BufferPool, lhs: SharedBuf, rhs: &[f32]) -> SharedBuf {
+    match Arc::try_unwrap(lhs) {
+        Ok(mut own) => {
+            add_assign(own.data_mut(), rhs);
+            Arc::new(own)
+        }
+        Err(held) => {
+            let mut out = pool.take(held.len());
+            sum_into(out.data_mut(), held.as_slice(), rhs);
+            Arc::new(out)
+        }
+    }
+}
+
+/// Extract a final accumulator as a plain vector for the caller. After at
+/// least one [`reduce_shared`] the `Arc` is provably unique, so this is a
+/// move; degenerate schedules (zero phases) fall back to one counted copy.
+pub(crate) fn shared_into_vec(acc: SharedBuf, copied_bytes: &mut u64) -> Vec<f32> {
+    match Arc::try_unwrap(acc) {
+        Ok(own) => own.into_data(),
+        Err(held) => {
+            *copied_bytes += (held.len() * 4) as u64;
+            held.as_slice().to_vec()
+        }
+    }
+}
+
 /// Recursive-doubling allreduce (sum), in place. `P` must be a power of two.
 pub fn allreduce_sum(ep: &mut Endpoint, buf: &mut Vec<f32>, version: u64) {
     let p = ep.p();
@@ -54,11 +118,64 @@ pub fn allreduce_sum(ep: &mut Endpoint, buf: &mut Vec<f32>, version: u64) {
     }
     let log_p = log2_exact(p);
     let rank = ep.rank();
+    let pool = ep.pool().clone();
+    let mut acc: SharedBuf = shared(std::mem::take(buf));
     for k in 0..log_p {
         let partner = rank ^ (1usize << k);
-        let rhs = ep.sendrecv(partner, Tag::sync(version, k), buf.clone());
-        add_assign(buf, &rhs);
+        ep.send_chunk(partner, Tag::sync(version, k), Chunk::full(acc.clone()));
+        let rhs = recv_plain(ep, partner, Tag::sync(version, k));
+        acc = reduce_shared(&pool, acc, rhs.as_slice());
     }
+    *buf = shared_into_vec(acc, &mut ep.copied_bytes);
+}
+
+/// The segmented zero-copy ring allreduce core, shared by the direct-mode
+/// [`allreduce_sum_ring`] and the engine's ctrl-aware τ-sync (which only
+/// differ in how they receive). Segments start as range views of the
+/// local contribution; the reduce-scatter replaces reduced segments with
+/// freshly-summed pooled ones and the allgather adopts received segments
+/// by reference (pure refcount forwarding). The final reassembly into one
+/// contiguous vector is the path's single counted copy.
+pub(crate) fn ring_allreduce_segments(
+    ep: &mut Endpoint,
+    version: u64,
+    contrib: SharedBuf,
+    mut recv: impl FnMut(&mut Endpoint, usize, Tag) -> Chunk,
+) -> Vec<f32> {
+    let p = ep.p();
+    let rank = ep.rank();
+    let n = contrib.len();
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+    // Chunk boundaries: segment c covers [off(c), off(c+1)).
+    let off = |c: usize| -> usize { (n * c) / p };
+    let pool = ep.pool().clone();
+
+    let mut segs: Vec<Chunk> =
+        (0..p).map(|c| Chunk::range(contrib.clone(), off(c), off(c + 1))).collect();
+    for gather in [false, true] {
+        for s in 0..p - 1 {
+            let (send_c, recv_c, phase) = ring_step(rank, p, s, gather);
+            ep.send_chunk(next, Tag::sync(version, phase), segs[send_c].clone());
+            let rhs = recv(ep, prev, Tag::sync(version, phase));
+            debug_assert_eq!(rhs.len(), segs[recv_c].len());
+            if gather {
+                segs[recv_c] = rhs;
+            } else {
+                let mut out = pool.take(segs[recv_c].len());
+                sum_into(out.data_mut(), segs[recv_c].as_slice(), rhs.as_slice());
+                segs[recv_c] = Chunk::full(std::sync::Arc::new(out));
+            }
+        }
+    }
+
+    // Reassemble the full vector (the one unavoidable copy of this path).
+    let mut out = pool.take(n);
+    for (c, seg) in segs.iter().enumerate() {
+        out.data_mut()[off(c)..off(c + 1)].copy_from_slice(seg.as_slice());
+    }
+    ep.copied_bytes += (n * 4) as u64;
+    out.into_data()
 }
 
 /// Ring allreduce (sum), in place: reduce-scatter then allgather.
@@ -69,37 +186,8 @@ pub fn allreduce_sum_ring(ep: &mut Endpoint, buf: &mut Vec<f32>, version: u64) {
     if p == 1 {
         return;
     }
-    let rank = ep.rank();
-    let n = buf.len();
-    let next = (rank + 1) % p;
-    let prev = (rank + p - 1) % p;
-    // Chunk boundaries: chunk c covers [off(c), off(c+1)).
-    let off = |c: usize| -> usize { (n * c) / p };
-
-    // Reduce-scatter: after step s, rank owns the full sum of chunk
-    // (rank + 1) mod p ... converging so that rank ends owning chunk
-    // (rank + 1) mod p. Standard ring schedule.
-    for s in 0..p - 1 {
-        let send_c = (rank + p - s) % p;
-        let recv_c = (rank + p - s - 1) % p;
-        let chunk = buf[off(send_c)..off(send_c + 1)].to_vec();
-        ep.send(next, Tag::sync(version, s as u32), chunk);
-        let rhs = ep.recv_data(prev, Tag::sync(version, s as u32), |_, m| {
-            panic!("unexpected control message in ring allreduce: {m:?}")
-        });
-        add_assign(&mut buf[off(recv_c)..off(recv_c + 1)], &rhs);
-    }
-    // Allgather: circulate the reduced chunks.
-    for s in 0..p - 1 {
-        let send_c = (rank + 1 + p - s) % p;
-        let recv_c = (rank + p - s) % p;
-        let chunk = buf[off(send_c)..off(send_c + 1)].to_vec();
-        ep.send(next, Tag::sync(version, (p - 1 + s) as u32), chunk);
-        let rhs = ep.recv_data(prev, Tag::sync(version, (p - 1 + s) as u32), |_, m| {
-            panic!("unexpected control message in ring allreduce: {m:?}")
-        });
-        buf[off(recv_c)..off(recv_c + 1)].copy_from_slice(&rhs);
-    }
+    let contrib: SharedBuf = shared(std::mem::take(buf));
+    *buf = ring_allreduce_segments(ep, version, contrib, recv_plain);
 }
 
 #[cfg(test)]
@@ -194,6 +282,49 @@ mod tests {
             let (a, b) = h.join().unwrap();
             assert_eq!(a, vec![6.0]);
             assert_eq!(b, vec![60.0]);
+        }
+    }
+
+    /// The unified ring schedule: both passes send the segment that was
+    /// combined in the previous step, every segment is reduced exactly
+    /// once, and the allgather visits every segment.
+    #[test]
+    fn ring_step_schedule_invariants() {
+        for p in [2usize, 3, 5, 8] {
+            for rank in 0..p {
+                let mut reduced = vec![false; p];
+                let mut prev_recv = None;
+                for s in 0..p - 1 {
+                    let (send_c, recv_c, phase) = ring_step(rank, p, s, false);
+                    assert_eq!(phase, s as u32);
+                    assert_ne!(send_c, recv_c);
+                    if let Some(pr) = prev_recv {
+                        // We forward what we just reduced.
+                        assert_eq!(send_c, pr, "P={p} rank={rank} s={s}");
+                    }
+                    assert!(!reduced[recv_c], "segment reduced twice");
+                    reduced[recv_c] = true;
+                    prev_recv = Some(recv_c);
+                }
+                // Every segment except our own was a reduce target; the
+                // last one reduced is (rank + 1) mod p — the segment this
+                // rank ends up owning in full.
+                assert!(!reduced[rank]);
+                assert_eq!(reduced.iter().filter(|&&b| b).count(), p - 1);
+                assert_eq!(prev_recv, Some((rank + 1) % p));
+                let mut gathered = vec![false; p];
+                for s in 0..p - 1 {
+                    let (send_c, recv_c, phase) = ring_step(rank, p, s, true);
+                    assert_eq!(phase, (p - 1 + s) as u32);
+                    assert!(!gathered[recv_c]);
+                    gathered[recv_c] = true;
+                    // The first gather send is the segment we own in full.
+                    if s == 0 {
+                        assert_eq!(send_c, (rank + 1) % p);
+                    }
+                }
+                assert_eq!(gathered.iter().filter(|&&b| b).count(), p - 1);
+            }
         }
     }
 }

@@ -3,7 +3,7 @@
 //! Every rank runs a dedicated **communication engine thread** next to its
 //! application (training) thread — the in-process analogue of fflib's
 //! asynchronously-progressed schedules. The engine owns the rank's
-//! [`Endpoint`] and maintains a *send buffer* holding the rank's newest
+//! [`Endpoint`] and maintains the rank's *send slot* holding its newest
 //! model contribution.
 //!
 //! Protocol (one collective instance = one `version`, the training
@@ -17,7 +17,7 @@
 //!    receive), then execute the schedule themselves.
 //! 2. Each engine executes the group allreduce schedule for `version`:
 //!    `log2(S)` butterfly phases with partners drawn from the dynamic
-//!    grouping (Algorithm 1). The contribution is whatever the send buffer
+//!    grouping (Algorithm 1). The contribution is whatever the send slot
 //!    holds — a **stale** model if the rank's application has not caught up
 //!    (§IV, Fig. 3); the stamp of the contributed buffer is recorded.
 //! 3. Versions are executed strictly in order; a version is executed
@@ -30,16 +30,45 @@
 //!
 //! The every-τ global synchronization (Alg. 2 line 16) also runs on the
 //! engine thread (`AppSync`), so the mailbox has a single consumer.
+//!
+//! ## Data path (zero-copy, lock-split)
+//!
+//! The steady-state data path performs **no payload copies and no
+//! allocations**:
+//!
+//! * the send slot holds a refcounted [`SharedBuf`]; `publish_owned`
+//!   installs the application's vector by move and the engine snapshots it
+//!   with a refcount bump;
+//! * every butterfly send is a [`Chunk`] view of the accumulator (chunked
+//!   exchanges send range views — no per-chunk materialization);
+//! * reductions are in-place when the partner has already released our
+//!   buffer (`Arc::try_unwrap`), else a single fused `sum_into` pass into
+//!   a buffer from the endpoint's [`BufferPool`]; pooled buffers return to
+//!   their home pool wherever the last reference drops;
+//! * the every-τ ring keeps the model as `P` segment views, reducing into
+//!   pooled segments and forwarding allgather segments by reference.
+//!
+//! Application↔engine state is lock-split: the send slot, the result maps
+//! (the only condvar — the blocking `group_allreduce`/`global_sync` edge),
+//! and the staleness log each have their own mutex, so a `publish` never
+//! contends with a result wait. [`EngineStats::copied_bytes`] counts the
+//! residual memcpy'd payload bytes (ring reassembly, the borrowing
+//! `publish`), which the measured-overlap bench compares against the
+//! pre-refactor engine's per-phase clones.
 
 use std::collections::{BTreeSet, HashMap};
-use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use crate::collectives::allreduce::AllreduceAlgo;
-use crate::comm::{Endpoint, Message, Payload, Tag};
-use crate::topology::{BinomialTree, Grouping};
-use crate::util::add_assign;
+use crate::collectives::allreduce::{
+    reduce_shared, ring_allreduce_segments, shared_into_vec, AllreduceAlgo, RING_THRESHOLD,
+};
+use crate::comm::{
+    BufferPool, Chunk, Endpoint, MailboxSender, Message, Payload, PoolStats, SharedBuf, Tag,
+};
+use crate::topology::{log2_exact, BinomialTree, Grouping};
+use crate::util::sum_into;
 
 /// Stamp of a send buffer that has never been published by the
 /// application (the initial model W_0).
@@ -100,7 +129,8 @@ pub struct EngineConfig {
     /// independently-tagged chunks — the engine-level counterpart of the
     /// scheduler's fused gradient buckets ([`crate::sched`]), so a fused
     /// bucket can be injected as soon as it is ready instead of waiting for
-    /// the full flat payload.
+    /// the full flat payload. Chunks are range views of one shared buffer,
+    /// not copies.
     pub chunk_elems: usize,
 }
 
@@ -160,24 +190,60 @@ fn chunk_tag(v: u64, r: u32, c: usize) -> Tag {
     Tag::exchange(v, (r + 1) * (MAX_CHUNKS as u32 * 2) + c as u32)
 }
 
+/// The rank's newest model contribution (its own small lock: `publish`
+/// never contends with result waits or the engine's result inserts).
+struct SendSlot {
+    buf: SharedBuf,
+    stamp: u64,
+}
+
+/// Completed collectives, waited on by the application. This is the only
+/// condvar edge left in the engine: the blocking
+/// `group_allreduce`/`global_sync` retrieval.
 #[derive(Default)]
-struct Shared {
-    /// Model contribution for the next collective + its iteration stamp.
-    send_buf: Vec<f32>,
-    buf_stamp: u64,
-    /// Completed group collectives: version → (sum, stamp contributed).
-    results: HashMap<u64, GroupResult>,
-    /// Completed global syncs: version → global sum.
-    sync_results: HashMap<u64, Vec<f32>>,
-    /// Observed staleness samples (t - contributed_stamp), for metrics.
-    staleness: Vec<u64>,
+struct ResultMaps {
+    group: HashMap<u64, GroupResult>,
+    sync: HashMap<u64, Vec<f32>>,
     engine_done: bool,
+}
+
+/// Aggregate staleness counters (lock-free accessors for metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StalenessStats {
+    pub count: u64,
+    pub total: u64,
+    pub max: u64,
+}
+
+impl StalenessStats {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total as f64 / self.count as f64
+        }
+    }
+}
+
+struct EngineShared {
+    slot: Mutex<SendSlot>,
+    results: Mutex<ResultMaps>,
+    results_cv: Condvar,
+    /// Staleness samples since the last `staleness_samples` drain.
+    staleness: Mutex<Vec<u64>>,
+    stale_count: AtomicU64,
+    stale_total: AtomicU64,
+    stale_max: AtomicU64,
+    /// Payload bytes the application-side API memcpy'd (the borrowing
+    /// `publish`); merged into [`EngineStats::copied_bytes`] at shutdown.
+    app_copied_bytes: AtomicU64,
 }
 
 /// Handle owned by the application thread.
 pub struct CollectiveEngine {
-    shared: Arc<(Mutex<Shared>, Condvar)>,
-    to_engine: Sender<Message>,
+    shared: Arc<EngineShared>,
+    to_engine: MailboxSender,
+    pool: BufferPool,
     rank: usize,
     cfg: EngineConfig,
     join: Option<JoinHandle<EngineStats>>,
@@ -195,29 +261,42 @@ pub struct EngineStats {
     pub global_syncs: u64,
     pub sent_msgs: u64,
     pub sent_bytes: u64,
+    /// Payload bytes memcpy'd end to end (engine + application API). The
+    /// steady-state group path contributes zero; the τ-ring reassembly and
+    /// the borrowing `publish` are the residual copiers.
+    pub copied_bytes: u64,
+    /// Fresh allocations the endpoint's buffer pool had to make (fixed
+    /// after warmup when the application publishes by move).
+    pub pool_allocs: u64,
 }
 
 impl CollectiveEngine {
-    /// Spawn the engine thread for `ep`. `init_buf` seeds the send buffer
-    /// (the initial model, stamp 0).
+    /// Spawn the engine thread for `ep`. `init_buf` seeds the send slot
+    /// (the initial model, stamp [`STAMP_INITIAL`]).
     pub fn spawn(ep: Endpoint, cfg: EngineConfig, init_buf: Vec<f32>) -> CollectiveEngine {
         let rank = ep.rank();
         assert_eq!(ep.p(), cfg.p);
-        let shared = Arc::new((
-            Mutex::new(Shared {
-                send_buf: init_buf,
-                buf_stamp: STAMP_INITIAL,
-                ..Default::default()
+        let pool = ep.pool().clone();
+        let shared = Arc::new(EngineShared {
+            slot: Mutex::new(SendSlot {
+                buf: Arc::new(pool.adopt(init_buf)),
+                stamp: STAMP_INITIAL,
             }),
-            Condvar::new(),
-        ));
+            results: Mutex::new(ResultMaps::default()),
+            results_cv: Condvar::new(),
+            staleness: Mutex::new(Vec::new()),
+            stale_count: AtomicU64::new(0),
+            stale_total: AtomicU64::new(0),
+            stale_max: AtomicU64::new(0),
+            app_copied_bytes: AtomicU64::new(0),
+        });
         let to_engine = ep.self_sender();
         let sh = shared.clone();
         let join = std::thread::Builder::new()
             .name(format!("wagma-engine-{rank}"))
             .spawn(move || engine_main(ep, cfg, sh))
             .expect("spawn engine thread");
-        CollectiveEngine { shared, to_engine, rank, cfg, join: Some(join) }
+        CollectiveEngine { shared, to_engine, pool, rank, cfg, join: Some(join) }
     }
 
     pub fn rank(&self) -> usize {
@@ -229,16 +308,31 @@ impl CollectiveEngine {
     }
 
     /// Publish this rank's freshest model `w` (iteration stamp `t`) into the
-    /// send buffer. Called right after the local update, *before*
+    /// send slot. Called right after the local update, *before*
     /// [`group_allreduce`](Self::group_allreduce) — and also before a global
     /// sync so passive participation in later versions uses the newest
     /// model (paper Fig. 3: "the data in the send buffer of P1 is updated").
+    ///
+    /// This borrowing form copies `w` into a pooled buffer; prefer
+    /// [`publish_owned`](Self::publish_owned) on hot paths.
     pub fn publish(&self, w: &[f32], t: u64) {
-        let (m, _) = &*self.shared;
-        let mut g = m.lock().unwrap();
-        g.send_buf.clear();
-        g.send_buf.extend_from_slice(w);
-        g.buf_stamp = t;
+        let mut pv = self.pool.take(w.len());
+        pv.data_mut().copy_from_slice(w);
+        self.shared.app_copied_bytes.fetch_add((w.len() * 4) as u64, Ordering::Relaxed);
+        self.publish_shared(Arc::new(pv), t);
+    }
+
+    /// Zero-copy publish: the vector moves into the send slot (and, once
+    /// superseded, retires into the endpoint's buffer pool).
+    pub fn publish_owned(&self, w: Vec<f32>, t: u64) {
+        self.publish_shared(Arc::new(self.pool.adopt(w)), t);
+    }
+
+    /// Install an already-shared buffer as the contribution for stamp `t`.
+    pub fn publish_shared(&self, buf: SharedBuf, t: u64) {
+        let mut slot = self.shared.slot.lock().unwrap();
+        slot.buf = buf; // the superseded buffer retires to its home pool
+        slot.stamp = t;
     }
 
     /// Wait-avoiding group allreduce for iteration `t`. Returns the group
@@ -248,52 +342,71 @@ impl CollectiveEngine {
     pub fn group_allreduce(&self, t: u64) -> GroupResult {
         debug_assert!(!self.cfg.is_sync_iter(t), "iteration {t} is a sync point");
         // Wake the engine: request active participation.
-        let _ = self.to_engine.send(Message {
+        self.to_engine.send(Message {
             src: self.rank,
             tag: Tag::exchange(t, 0),
             payload: Payload::AppGroup { version: t },
         });
-        let (m, cv) = &*self.shared;
-        let mut g = m.lock().unwrap();
-        loop {
-            if let Some(r) = g.results.remove(&t) {
-                let s = r.staleness(t);
-                g.staleness.push(s);
-                return r;
+        let r = {
+            let mut g = self.shared.results.lock().unwrap();
+            loop {
+                if let Some(r) = g.group.remove(&t) {
+                    break r;
+                }
+                assert!(!g.engine_done, "engine terminated with pending collective {t}");
+                g = self.shared.results_cv.wait(g).unwrap();
             }
-            assert!(!g.engine_done, "engine terminated with pending collective {t}");
-            g = cv.wait(g).unwrap();
-        }
+        };
+        let s = r.staleness(t);
+        self.shared.staleness.lock().unwrap().push(s);
+        self.shared.stale_count.fetch_add(1, Ordering::Relaxed);
+        self.shared.stale_total.fetch_add(s, Ordering::Relaxed);
+        self.shared.stale_max.fetch_max(s, Ordering::Relaxed);
+        r
     }
 
     /// Global synchronous allreduce for iteration `t` (Alg. 2 line 16).
     /// `w` must already be published. Returns the global sum over all P.
     pub fn global_sync(&self, t: u64) -> Vec<f32> {
-        let _ = self.to_engine.send(Message {
+        self.to_engine.send(Message {
             src: self.rank,
             tag: Tag::sync(t, 0),
             payload: Payload::AppSync { version: t },
         });
-        let (m, cv) = &*self.shared;
-        let mut g = m.lock().unwrap();
+        let mut g = self.shared.results.lock().unwrap();
         loop {
-            if let Some(r) = g.sync_results.remove(&t) {
+            if let Some(r) = g.sync.remove(&t) {
                 return r;
             }
             assert!(!g.engine_done, "engine terminated with pending sync {t}");
-            g = cv.wait(g).unwrap();
+            g = self.shared.results_cv.wait(g).unwrap();
         }
     }
 
-    /// Observed staleness samples (iterations between contributed stamp and
-    /// collective version).
+    /// Staleness samples observed since the previous call (a cheap
+    /// buffer swap — nothing is cloned under the lock). Use
+    /// [`staleness_stats`](Self::staleness_stats) for running aggregates.
     pub fn staleness_samples(&self) -> Vec<u64> {
-        self.shared.0.lock().unwrap().staleness.clone()
+        std::mem::take(&mut *self.shared.staleness.lock().unwrap())
+    }
+
+    /// Running staleness aggregates (count / total / max), lock-free.
+    pub fn staleness_stats(&self) -> StalenessStats {
+        StalenessStats {
+            count: self.shared.stale_count.load(Ordering::Relaxed),
+            total: self.shared.stale_total.load(Ordering::Relaxed),
+            max: self.shared.stale_max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The endpoint buffer pool's counters (test/bench hook).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// Shut the engine down and collect its statistics.
     pub fn shutdown(mut self) -> EngineStats {
-        let _ = self.to_engine.send(Message {
+        self.to_engine.send(Message {
             src: self.rank,
             tag: Tag::exchange(0, 0),
             payload: Payload::Quit,
@@ -305,7 +418,7 @@ impl CollectiveEngine {
 impl Drop for CollectiveEngine {
     fn drop(&mut self) {
         if let Some(j) = self.join.take() {
-            let _ = self.to_engine.send(Message {
+            self.to_engine.send(Message {
                 src: self.rank,
                 tag: Tag::exchange(0, 0),
                 payload: Payload::Quit,
@@ -320,7 +433,8 @@ struct EngineRun {
     cfg: EngineConfig,
     grouping: Grouping,
     tree: BinomialTree,
-    shared: Arc<(Mutex<Shared>, Condvar)>,
+    shared: Arc<EngineShared>,
+    pool: BufferPool,
     /// Versions for which an activation has been seen (not yet executed).
     activated: BTreeSet<u64>,
     /// Next group version this engine will execute.
@@ -368,11 +482,8 @@ fn app_group_request(ep: &mut Endpoint, run: &mut EngineRun, version: u64) {
     }
 }
 
-fn engine_main(
-    mut ep: Endpoint,
-    cfg: EngineConfig,
-    shared: Arc<(Mutex<Shared>, Condvar)>,
-) -> EngineStats {
+fn engine_main(mut ep: Endpoint, cfg: EngineConfig, shared: Arc<EngineShared>) -> EngineStats {
+    let pool = ep.pool().clone();
     let mut run = EngineRun {
         cfg,
         grouping: if cfg.dynamic_groups {
@@ -382,6 +493,7 @@ fn engine_main(
         },
         tree: BinomialTree::new(cfg.p),
         shared,
+        pool,
         activated: BTreeSet::new(),
         next: cfg.next_group_version(0),
         app_group: None,
@@ -407,20 +519,29 @@ fn engine_main(
         if run.quit {
             break;
         }
-        let msg = ep.recv_any();
+        // Idle: only control traffic can unblock us; data for future
+        // versions waits in its sender's lane until the matching schedule
+        // runs.
+        let msg = ep.recv_ctrl();
         handle_ctrl(&mut ep, &mut run, msg);
     }
 
     run.stats.sent_msgs = ep.sent_msgs;
     run.stats.sent_bytes = ep.sent_bytes;
-    let (m, cv) = &*run.shared;
-    m.lock().unwrap().engine_done = true;
-    cv.notify_all();
+    run.stats.copied_bytes =
+        ep.copied_bytes + run.shared.app_copied_bytes.load(Ordering::Relaxed);
+    run.stats.pool_allocs = run.pool.stats().allocs;
+    let mut g = run.shared.results.lock().unwrap();
+    g.engine_done = true;
+    drop(g);
+    run.shared.results_cv.notify_all();
     run.stats
 }
 
-/// Process a control (or stray data) message in the idle loop or from
-/// inside a blocked receive.
+/// Process a control message — from the idle loop or from inside a blocked
+/// matched receive. Activations are forwarded and recorded; app requests
+/// are routed; Quit is deferred until the current schedule completes (the
+/// partner still needs our traffic).
 fn handle_ctrl(ep: &mut Endpoint, run: &mut EngineRun, msg: Message) {
     match msg.payload {
         Payload::Activation { root, version } => {
@@ -446,26 +567,57 @@ fn handle_ctrl(ep: &mut Endpoint, run: &mut EngineRun, msg: Message) {
         Payload::Quit => {
             run.quit = true;
         }
-        Payload::Data(data) => {
-            // A data message that raced ahead of the matched receive that
-            // wants it: re-inject through the unmatched buffer by sending it
-            // to ourselves would reorder; instead stash it directly.
-            // (recv_data only hands us non-data payloads, and recv_any in
-            // the idle loop can see data for future versions.)
-            stash_data(ep, msg.src, msg.tag, data);
-        }
     }
-}
-
-/// Put an early data message into the endpoint's unmatched buffer.
-fn stash_data(ep: &mut Endpoint, src: usize, tag: Tag, data: Vec<f32>) {
-    ep.stash(src, tag, data);
 }
 
 fn forward_activation(ep: &mut Endpoint, run: &EngineRun, root: usize, version: u64) {
     for child in run.tree.children(root, ep.rank()) {
         ep.send_ctrl(child, Payload::Activation { root, version });
     }
+}
+
+/// One unchunked butterfly phase: refcount send, ctrl-aware receive, fused
+/// reduce ([`reduce_shared`] — in place when the partner already released
+/// our buffer, else one pooled `sum_into` pass).
+fn exchange_reduce(
+    ep: &mut Endpoint,
+    run: &mut EngineRun,
+    partner: usize,
+    tag: Tag,
+    acc: SharedBuf,
+) -> SharedBuf {
+    ep.send_chunk(partner, tag, Chunk::full(acc.clone()));
+    let rhs = recv_with_ctrl(ep, run, partner, tag);
+    reduce_shared(&run.pool, acc, rhs.as_slice())
+}
+
+/// One chunked butterfly phase: all sends are issued up front as range
+/// views so the partner can overlap its reductions with our remaining
+/// traffic; receives reduce range-by-range into one pooled output.
+fn exchange_reduce_chunked(
+    ep: &mut Endpoint,
+    run: &mut EngineRun,
+    partner: usize,
+    v: u64,
+    r: u32,
+    chunk: usize,
+    acc: SharedBuf,
+) -> SharedBuf {
+    let n = acc.len();
+    let n_chunks = n.div_ceil(chunk);
+    for c in 0..n_chunks {
+        let lo = c * chunk;
+        let hi = (lo + chunk).min(n);
+        ep.send_chunk(partner, chunk_tag(v, r, c), Chunk::range(acc.clone(), lo, hi));
+    }
+    let mut out = run.pool.take(n);
+    for c in 0..n_chunks {
+        let lo = c * chunk;
+        let hi = (lo + chunk).min(n);
+        let rhs = recv_with_ctrl(ep, run, partner, chunk_tag(v, r, c));
+        sum_into(&mut out.data_mut()[lo..hi], &acc.as_slice()[lo..hi], rhs.as_slice());
+    }
+    Arc::new(out)
 }
 
 /// Execute the group allreduce schedule for `run.next`.
@@ -486,39 +638,24 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
         forward_activation(ep, run, ep.rank(), v);
     }
 
-    // Snapshot the send buffer (and its stamp) as our contribution.
-    let (mut acc, stamp) = {
-        let (m, _) = &*run.shared;
-        let g = m.lock().unwrap();
-        (g.send_buf.clone(), g.buf_stamp)
+    // Snapshot the send slot (refcount bump — no copy) as our contribution.
+    let (mut acc, stamp): (SharedBuf, u64) = {
+        let slot = run.shared.slot.lock().unwrap();
+        (slot.buf.clone(), slot.stamp)
     };
 
     // Butterfly phases within the (dynamic) group. With chunking enabled
     // (layered/fused mode) each phase streams the payload as independent
-    // chunks: all sends are issued up front so the partner can overlap its
-    // reductions with our remaining traffic.
+    // range views: all sends are issued up front so the partner can overlap
+    // its reductions with our remaining traffic.
     let chunk = run.cfg.effective_chunk(acc.len());
     for r in 0..run.grouping.phases() {
         let partner = run.grouping.partner(ep.rank(), v, r);
-        if chunk == 0 {
-            ep.send(partner, Tag::exchange(v, r), acc.clone());
-            let rhs = recv_with_ctrl(ep, run, partner, Tag::exchange(v, r));
-            add_assign(&mut acc, &rhs);
+        acc = if chunk == 0 {
+            exchange_reduce(ep, run, partner, Tag::exchange(v, r), acc)
         } else {
-            let n = acc.len();
-            let n_chunks = n.div_ceil(chunk);
-            for c in 0..n_chunks {
-                let lo = c * chunk;
-                let hi = (lo + chunk).min(n);
-                ep.send(partner, chunk_tag(v, r, c), acc[lo..hi].to_vec());
-            }
-            for c in 0..n_chunks {
-                let lo = c * chunk;
-                let hi = (lo + chunk).min(n);
-                let rhs = recv_with_ctrl(ep, run, partner, chunk_tag(v, r, c));
-                add_assign(&mut acc[lo..hi], &rhs);
-            }
-        }
+            exchange_reduce_chunked(ep, run, partner, v, r, chunk, acc)
+        };
     }
 
     run.stats.group_collectives += 1;
@@ -526,10 +663,11 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
     run.arrivals.remove(&v);
     run.next = run.cfg.next_group_version(v + 1);
 
-    let (m, cv) = &*run.shared;
-    let mut g = m.lock().unwrap();
-    g.results.insert(v, GroupResult { sum: acc, contributed_stamp: stamp });
-    cv.notify_all();
+    let sum = shared_into_vec(acc, &mut ep.copied_bytes);
+    let mut g = run.shared.results.lock().unwrap();
+    g.group.insert(v, GroupResult { sum, contributed_stamp: stamp });
+    drop(g);
+    run.shared.results_cv.notify_all();
 }
 
 /// Execute the every-τ global allreduce for iteration `ts`.
@@ -541,64 +679,52 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
 /// bandwidth-optimal ring for model-sized payloads, recursive doubling for
 /// tiny ones (perf pass; EXPERIMENTS.md §Perf).
 fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
-    let mut buf = {
-        let (m, _) = &*run.shared;
-        m.lock().unwrap().send_buf.clone()
-    };
+    let contrib: SharedBuf = run.shared.slot.lock().unwrap().buf.clone();
     let p = ep.p();
-    if p > 2 && buf.len() >= crate::collectives::allreduce::RING_THRESHOLD {
-        // Ring: reduce-scatter then allgather, 2(P-1) chunk steps.
-        let rank = ep.rank();
-        let n = buf.len();
-        let next = (rank + 1) % p;
-        let prev = (rank + p - 1) % p;
-        let off = |c: usize| -> usize { (n * c) / p };
-        for s in 0..p - 1 {
-            let send_c = (rank + p - s) % p;
-            let recv_c = (rank + p - s - 1) % p;
-            let chunk = buf[off(send_c)..off(send_c + 1)].to_vec();
-            ep.send(next, Tag::sync(ts, s as u32), chunk);
-            let rhs = recv_with_ctrl(ep, run, prev, Tag::sync(ts, s as u32));
-            add_assign(&mut buf[off(recv_c)..off(recv_c + 1)], &rhs);
-        }
-        for s in 0..p - 1 {
-            let send_c = (rank + 1 + p - s) % p;
-            let recv_c = (rank + p - s) % p;
-            let chunk = buf[off(send_c)..off(send_c + 1)].to_vec();
-            ep.send(next, Tag::sync(ts, (p - 1 + s) as u32), chunk);
-            let rhs = recv_with_ctrl(ep, run, prev, Tag::sync(ts, (p - 1 + s) as u32));
-            buf[off(recv_c)..off(recv_c + 1)].copy_from_slice(&rhs);
-        }
+    let result: Vec<f32> = if p > 2 && contrib.len() >= RING_THRESHOLD {
+        ring_sync(ep, run, ts, contrib)
     } else if p > 1 {
-        let log_p = crate::topology::log2_exact(p);
+        let log_p = log2_exact(p);
         let rank = ep.rank();
+        let mut acc = contrib;
         for k in 0..log_p {
             let partner = rank ^ (1usize << k);
-            ep.send(partner, Tag::sync(ts, k), buf.clone());
-            let rhs = recv_with_ctrl(ep, run, partner, Tag::sync(ts, k));
-            add_assign(&mut buf, &rhs);
+            acc = exchange_reduce(ep, run, partner, Tag::sync(ts, k), acc);
         }
-    }
+        shared_into_vec(acc, &mut ep.copied_bytes)
+    } else {
+        ep.copied_bytes += (contrib.len() * 4) as u64;
+        contrib.as_slice().to_vec()
+    };
     run.stats.global_syncs += 1;
     // The sync is a barrier: every rank has executed all group versions
     // below ts, so the engine's next pointer can jump past it.
     run.next = run.cfg.next_group_version(run.next.max(ts + 1));
-    let (m, cv) = &*run.shared;
-    let mut g = m.lock().unwrap();
-    g.sync_results.insert(ts, buf);
-    cv.notify_all();
+    let mut g = run.shared.results.lock().unwrap();
+    g.sync.insert(ts, result);
+    drop(g);
+    run.shared.results_cv.notify_all();
+}
+
+/// Segmented zero-copy ring allreduce for the global sync: the shared
+/// [`ring_allreduce_segments`] core driven with the *ctrl-aware* receive,
+/// so activation traffic keeps flowing during the barrier. Segment sums
+/// come from the endpoint's pool and allgather segments are adopted by
+/// reference; the final reassembly is the sync path's single counted copy.
+fn ring_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64, contrib: SharedBuf) -> Vec<f32> {
+    ring_allreduce_segments(ep, ts, contrib, |ep, src, tag| recv_with_ctrl(ep, run, src, tag))
 }
 
 /// Matched receive that keeps servicing control traffic (activation
 /// forwarding must not stall while we wait for a butterfly partner).
-fn recv_with_ctrl(ep: &mut Endpoint, run: &mut EngineRun, src: usize, tag: Tag) -> Vec<f32> {
+fn recv_with_ctrl(ep: &mut Endpoint, run: &mut EngineRun, src: usize, tag: Tag) -> Chunk {
     // We cannot borrow `run` inside the closure while also using it after,
     // so collect control messages and process them after each wait.
     loop {
         let mut ctrl: Vec<Message> = Vec::new();
         let got = ep.recv_data_or_ctrl(src, tag, &mut ctrl);
         for m in ctrl {
-            handle_ctrl_inline(ep, run, m);
+            handle_ctrl(ep, run, m);
         }
         if let Some(data) = got {
             return data;
@@ -606,28 +732,11 @@ fn recv_with_ctrl(ep: &mut Endpoint, run: &mut EngineRun, src: usize, tag: Tag) 
     }
 }
 
-/// Control handling from inside a schedule: activations are forwarded and
-/// recorded; app requests are stashed; Quit is deferred until the schedule
-/// completes (the partner still needs our traffic).
-fn handle_ctrl_inline(ep: &mut Endpoint, run: &mut EngineRun, msg: Message) {
-    match msg.payload {
-        Payload::Activation { root, version } => {
-            if version >= run.next && run.activated.insert(version) {
-                forward_activation(ep, run, root, version);
-            }
-        }
-        Payload::AppGroup { version } => app_group_request(ep, run, version),
-        Payload::Arrival { version } => note_arrival(ep, run, version),
-        Payload::AppSync { version } => run.app_sync = Some(version),
-        Payload::Quit => run.quit = true,
-        Payload::Data(_) => unreachable!("data handled by recv_data_or_ctrl"),
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::comm::world;
+    use crate::util::add_assign;
     use std::thread;
     use std::time::Duration;
 
@@ -734,7 +843,7 @@ mod tests {
                     for t in 0..5u64 {
                         let r = eng.rank() as f32;
                         let w = vec![r + t as f32, 2.0 * r + t as f32];
-                        eng.publish(&w, t);
+                        eng.publish_owned(w, t);
                         // Everyone has published W'_t: even passive
                         // contributions are now stamp-t fresh.
                         barrier.wait();
@@ -746,7 +855,7 @@ mod tests {
                         ];
                         assert_eq!(res.sum, want, "rank {} t {}", eng.rank(), t);
                         // Wait for everyone to consume before the next
-                        // publish overwrites the send buffers.
+                        // publish overwrites the send slots.
                         barrier.wait();
                     }
                     eng.shutdown()
@@ -755,6 +864,10 @@ mod tests {
             .collect();
         let stats: Vec<EngineStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(stats.iter().map(|s| s.group_collectives).sum::<u64>(), 5 * p as u64);
+        // publish_owned + refcount sends: the engines memcpy'd nothing.
+        for st in &stats {
+            assert_eq!(st.copied_bytes, 0, "{st:?}");
+        }
     }
 
     /// A deliberately slow rank must not block the fast ranks: the fast
@@ -880,6 +993,49 @@ mod tests {
         for h in handles {
             let st = h.join().unwrap();
             assert_eq!(st.group_collectives, 10);
+        }
+    }
+
+    /// The staleness accessors: `staleness_samples` drains (cheap swap),
+    /// `staleness_stats` aggregates without locking the sample log.
+    #[test]
+    fn staleness_accessors() {
+        use std::sync::{Arc, Barrier};
+        let p = 2;
+        let steps = 4u64;
+        let barrier = Arc::new(Barrier::new(p));
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| CollectiveEngine::spawn(ep, cfg(p, 2, 0), vec![0.0]))
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                let barrier = barrier.clone();
+                thread::spawn(move || {
+                    for t in 0..steps {
+                        eng.publish(&[1.0], t);
+                        barrier.wait();
+                        let _ = eng.group_allreduce(t);
+                        barrier.wait();
+                    }
+                    let stats = eng.staleness_stats();
+                    assert_eq!(stats.count, steps);
+                    // Barriered publishes: every contribution was fresh.
+                    assert_eq!(stats.total, 0);
+                    assert_eq!(stats.max, 0);
+                    assert_eq!(stats.mean(), 0.0);
+                    let drained = eng.staleness_samples();
+                    assert_eq!(drained.len(), steps as usize);
+                    assert!(eng.staleness_samples().is_empty(), "drain must reset");
+                    // Aggregates survive the drain.
+                    assert_eq!(eng.staleness_stats().count, steps);
+                    eng.shutdown()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
         }
     }
 }

@@ -12,5 +12,5 @@
 pub mod allreduce;
 pub mod engine;
 
-pub use allreduce::{allreduce_sum, allreduce_sum_ring, AllreduceAlgo};
-pub use engine::{CollectiveEngine, EngineConfig, GroupResult};
+pub use allreduce::{allreduce_sum, allreduce_sum_ring, ring_step, AllreduceAlgo};
+pub use engine::{CollectiveEngine, EngineConfig, EngineStats, GroupResult, StalenessStats};

@@ -1,19 +1,46 @@
 //! In-process message-passing substrate, standing in for the paper's
 //! MPI + fflib stack.
 //!
-//! Each simulated process ("rank") owns an [`Endpoint`]: a single-consumer
-//! mailbox plus senders to every other rank. Messages carry a [`Tag`]
-//! (collective kind, version, phase) and are matched MPI-style: a blocking
-//! receive for a specific `(source, tag)` buffers any non-matching traffic
-//! in an unmatched-message queue so out-of-order arrivals are never lost.
+//! Each simulated process ("rank") owns an [`Endpoint`]: per-peer
+//! **mailbox lanes** (sharded locks — one data lane and one control lane
+//! per sending peer) plus a reusable [`BufferPool`]. Messages carry a
+//! [`Tag`] (collective kind, version, phase) and are matched MPI-style: a
+//! blocking receive for a specific `(source, tag)` leaves non-matching
+//! traffic queued in its sender's lane, so out-of-order arrivals are never
+//! lost and never contend with the matched path.
+//!
+//! ## Zero-copy payloads
+//!
+//! Bulk data travels as a [`Chunk`]: a refcounted [`SharedBuf`]
+//! (`Arc<PoolVec>`) plus a byte range. Sending is a refcount bump; a
+//! chunked exchange sends range *views* of one buffer instead of
+//! materializing per-chunk vectors. Buffers allocated from a
+//! [`BufferPool`] return to their home pool when the last reference drops
+//! (wherever that happens), so steady-state traffic performs no
+//! allocation and no payload memcpy. [`Endpoint::copied_bytes`] counts
+//! the bytes that *are* memcpy'd (e.g. direct-mode fallbacks), for the
+//! measured-overlap bench.
+//!
+//! ## Lock structure
+//!
+//! The old implementation funneled all traffic through one
+//! `mpsc::channel` plus an unmatched-message map. Now each peer has its
+//! own `Mutex<Lane>`; the only shared state touched on the steady-state
+//! path is that single lane lock. A `(Mutex<u64>, Condvar)` wake channel
+//! is consulted **only when a receiver actually has to block** (the
+//! `waiters` atomic gates the notify, so uncontended sends never touch
+//! it).
 //!
 //! Wire substitution note (DESIGN.md §2): the paper runs over Cray Aries
-//! with MPI point-to-point; we run over unbounded in-memory channels. The
-//! *protocol* content — tags, versions, activation control messages,
-//! schedule ordering — is identical; only the transport differs.
+//! with MPI point-to-point; we run over in-memory lanes. The *protocol*
+//! content — tags, versions, activation control messages, schedule
+//! ordering — is identical; only the transport differs.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::fmt;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// What a message is for. Collective schedules never confuse traffic from
 /// different collective families because the kind is part of the match.
@@ -50,12 +77,262 @@ impl Tag {
     }
 }
 
-/// Message payloads. Data messages participate in tag matching; control
-/// messages are delivered to the endpoint's control handler immediately.
+// ---------------------------------------------------------------------------
+// Buffer pool + shared payloads
+// ---------------------------------------------------------------------------
+
+/// Cap on the number of idle buffers a pool retains (protects against a
+/// pathological producer pattern hoarding memory).
+const POOL_FREE_CAP: usize = 64;
+
+#[derive(Default)]
+struct PoolState {
+    free: Vec<Vec<f32>>,
+    allocs: u64,
+    takes: u64,
+    puts: u64,
+}
+
+/// Counters describing a pool's lifetime behaviour. After warmup a healthy
+/// steady state keeps `allocs` fixed while `takes`/`puts` keep growing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Fresh heap allocations performed (pool misses).
+    pub allocs: u64,
+    /// Buffers handed out.
+    pub takes: u64,
+    /// Buffers returned.
+    pub puts: u64,
+    /// Currently idle buffers.
+    pub free: usize,
+}
+
+/// A shared, thread-safe free list of `Vec<f32>` payload buffers.
+/// Cloning is cheap (one `Arc`); every clone refers to the same pool.
+#[derive(Clone, Default)]
+pub struct BufferPool {
+    inner: Arc<Mutex<PoolState>>,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// Take a buffer of exactly `n` elements. Reused buffers keep their
+    /// previous contents in the prefix — callers must fully overwrite.
+    ///
+    /// Only free buffers whose capacity already covers `n` are reused
+    /// (preferring the most recently returned), so the `resize` below
+    /// never reallocates and `allocs` honestly counts every heap
+    /// allocation even under mixed-size traffic (full models and ring
+    /// segments share one pool).
+    pub fn take(&self, n: usize) -> PoolVec {
+        let mut v = {
+            let mut st = self.inner.lock().unwrap();
+            st.takes += 1;
+            match st.free.iter().rposition(|v| v.capacity() >= n) {
+                Some(i) => st.free.swap_remove(i),
+                None => {
+                    st.allocs += 1;
+                    Vec::with_capacity(n)
+                }
+            }
+        };
+        v.resize(n, 0.0);
+        PoolVec { data: v, home: Some(self.clone()) }
+    }
+
+    /// Wrap an externally-allocated vector so it retires into this pool
+    /// when its last reference drops.
+    pub fn adopt(&self, data: Vec<f32>) -> PoolVec {
+        PoolVec { data, home: Some(self.clone()) }
+    }
+
+    /// Return a raw vector to the free list. Every non-empty return is
+    /// counted in `puts` (so `takes - puts` bounds outstanding buffers);
+    /// beyond [`POOL_FREE_CAP`] idle buffers the storage is dropped rather
+    /// than retained.
+    pub fn put(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut st = self.inner.lock().unwrap();
+        st.puts += 1;
+        if st.free.len() < POOL_FREE_CAP {
+            st.free.push(v);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let st = self.inner.lock().unwrap();
+        PoolStats { allocs: st.allocs, takes: st.takes, puts: st.puts, free: st.free.len() }
+    }
+}
+
+/// A payload buffer that knows its home pool: when the last owner drops
+/// it — on whichever thread that happens — the storage returns to the
+/// pool it came from. Buffers created with [`PoolVec::unpooled`] simply
+/// deallocate.
+pub struct PoolVec {
+    data: Vec<f32>,
+    home: Option<BufferPool>,
+}
+
+impl PoolVec {
+    /// A buffer with no home pool (plain heap lifetime).
+    pub fn unpooled(data: Vec<f32>) -> PoolVec {
+        PoolVec { data, home: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Extract the storage, detaching it from the pool (used to hand a
+    /// result to the application as a plain `Vec`).
+    pub fn into_data(mut self) -> Vec<f32> {
+        self.home = None;
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl Drop for PoolVec {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            home.put(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+impl Deref for PoolVec {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl fmt::Debug for PoolVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PoolVec(len {}, pooled {})", self.data.len(), self.home.is_some())
+    }
+}
+
+/// Refcounted payload storage shared between sender and receiver(s).
+pub type SharedBuf = Arc<PoolVec>;
+
+/// Wrap a plain vector as a sharable buffer with no pool affinity.
+pub fn shared(data: Vec<f32>) -> SharedBuf {
+    Arc::new(PoolVec::unpooled(data))
+}
+
+/// A view of (a range of) a [`SharedBuf`] — the unit of data transfer.
+/// Cloning or sending a chunk is a refcount bump; no payload bytes move.
+#[derive(Clone)]
+pub struct Chunk {
+    buf: SharedBuf,
+    lo: usize,
+    hi: usize,
+}
+
+impl Chunk {
+    /// View of the whole buffer.
+    pub fn full(buf: SharedBuf) -> Chunk {
+        let hi = buf.len();
+        Chunk { buf, lo: 0, hi }
+    }
+
+    /// View of `buf[lo..hi]`.
+    pub fn range(buf: SharedBuf, lo: usize, hi: usize) -> Chunk {
+        assert!(lo <= hi && hi <= buf.len(), "chunk range {lo}..{hi} of {}", buf.len());
+        Chunk { buf, lo, hi }
+    }
+
+    /// Freshly-owned full view of `data` (no extra copy: the vector moves
+    /// into the shared allocation's header).
+    pub fn from_vec(data: Vec<f32>) -> Chunk {
+        Chunk::full(shared(data))
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf.as_slice()[self.lo..self.hi]
+    }
+
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    /// Owned vector of the viewed contents. Zero-copy when this is the
+    /// sole reference to a full-range buffer; otherwise one memcpy, which
+    /// the caller should record in [`Endpoint::copied_bytes`].
+    pub fn into_vec(self) -> Vec<f32> {
+        if self.lo == 0 && self.hi == self.buf.len() {
+            match Arc::try_unwrap(self.buf) {
+                Ok(pv) => return pv.into_data(),
+                Err(shared) => return shared.as_slice().to_vec(),
+            }
+        }
+        self.as_slice().to_vec()
+    }
+}
+
+impl Deref for Chunk {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl fmt::Debug for Chunk {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Chunk({}..{} of {})", self.lo, self.hi, self.buf.len())
+    }
+}
+
+impl PartialEq for Chunk {
+    fn eq(&self, other: &Chunk) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for Chunk {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for Chunk {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// Control payloads. Bulk data travels separately as tagged [`Chunk`]s;
+/// control messages are matched by arrival, not by tag.
 #[derive(Debug, Clone)]
 pub enum Payload {
-    /// Tagged bulk data (model / gradient vectors).
-    Data(Vec<f32>),
     /// Collective activation (paper §III-A1): `root` is the activator whose
     /// binomial tree this message travels down; `version` names the
     /// collective instance being triggered.
@@ -73,7 +350,7 @@ pub enum Payload {
     Quit,
 }
 
-/// A message in flight.
+/// A control message in flight.
 #[derive(Debug, Clone)]
 pub struct Message {
     pub src: usize,
@@ -81,37 +358,200 @@ pub struct Message {
     pub payload: Payload,
 }
 
+// ---------------------------------------------------------------------------
+// Per-peer mailbox lanes
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Lane {
+    data: VecDeque<(Tag, Chunk)>,
+    ctrl: VecDeque<Message>,
+}
+
+/// One rank's inbox: a lane per sending peer, plus a wake channel used
+/// only while a receiver is blocked.
+struct MailboxShared {
+    lanes: Vec<Mutex<Lane>>,
+    /// Total queued control messages across all lanes (fast-path gate: a
+    /// matched receive only scans the control lanes when this is nonzero).
+    ctrl_pending: AtomicUsize,
+    /// Receivers currently (about to be) blocked; senders skip the wake
+    /// lock entirely while this is zero.
+    waiters: AtomicUsize,
+    /// Pure lock-pairing state for the condvar: waiters re-attempt their
+    /// pop under this lock and notifiers acquire it before signalling, so
+    /// a push can never slip between a re-attempt and the wait.
+    wake: Mutex<()>,
+    cv: Condvar,
+}
+
+impl MailboxShared {
+    fn new(p: usize) -> MailboxShared {
+        MailboxShared {
+            lanes: (0..p).map(|_| Mutex::new(Lane::default())).collect(),
+            ctrl_pending: AtomicUsize::new(0),
+            waiters: AtomicUsize::new(0),
+            wake: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn notify(&self) {
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            // Acquire/release the wake lock so this notify cannot land in
+            // the gap between a waiter's re-attempt and its wait.
+            drop(self.wake.lock().unwrap());
+            self.cv.notify_all();
+        }
+    }
+
+    fn push_data(&self, src: usize, tag: Tag, chunk: Chunk) {
+        self.lanes[src].lock().unwrap().data.push_back((tag, chunk));
+        self.notify();
+    }
+
+    fn push_ctrl(&self, src: usize, msg: Message) {
+        // Increment BEFORE the push so `ctrl_pending` always over-counts,
+        // never under-counts: a scanner that pops an as-yet-uncounted
+        // message must not decrement on behalf of a different queued one
+        // (which would make that message invisible forever). A transient
+        // over-count only costs one extra scan.
+        self.ctrl_pending.fetch_add(1, Ordering::SeqCst);
+        self.lanes[src].lock().unwrap().ctrl.push_back(msg);
+        self.notify();
+    }
+
+    fn try_pop_data(&self, src: usize, tag: Tag) -> Option<Chunk> {
+        let mut lane = self.lanes[src].lock().unwrap();
+        let pos = lane.data.iter().position(|(t, _)| *t == tag)?;
+        lane.data.remove(pos).map(|(_, c)| c)
+    }
+
+    fn try_pop_ctrl(&self) -> Option<Message> {
+        if self.ctrl_pending.load(Ordering::SeqCst) == 0 {
+            return None;
+        }
+        for lane in &self.lanes {
+            let mut l = lane.lock().unwrap();
+            if let Some(m) = l.ctrl.pop_front() {
+                self.ctrl_pending.fetch_sub(1, Ordering::SeqCst);
+                return Some(m);
+            }
+        }
+        None
+    }
+
+    fn pending_data(&self) -> usize {
+        self.lanes.iter().map(|l| l.lock().unwrap().data.len()).sum()
+    }
+
+    /// One parked wait round of a blocking receive: register as a waiter,
+    /// re-run the actual pop under the wake lock, and park on the condvar
+    /// if it still comes up empty. Missed-wakeup-safe: a push completing
+    /// before our registration is found by the re-attempt; one completing
+    /// after it sees `waiters != 0` and must take the wake lock to notify,
+    /// which it cannot do between our re-attempt and the wait. Re-running
+    /// the pop itself (rather than a cheap readiness predicate) means a
+    /// transiently over-counting `ctrl_pending` parks here instead of
+    /// spinning until the preempted sender finishes its push.
+    fn wait_round<T>(&self, mut attempt: impl FnMut(&Self) -> Option<T>) -> Option<T> {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let guard = self.wake.lock().unwrap();
+        let got = attempt(self);
+        if got.is_none() {
+            let guard = self.cv.wait(guard).unwrap();
+            drop(guard);
+        } else {
+            drop(guard);
+        }
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+        got
+    }
+
+    /// Non-blocking matched receive. Pending control traffic is drained
+    /// before data — activations and app requests must never queue behind
+    /// bulk payloads (the old single-FIFO delivered them in arrival order;
+    /// control-first is the conservative refinement).
+    fn try_recv_matched(&self, src: usize, tag: Tag) -> Option<Result<Chunk, Message>> {
+        if let Some(m) = self.try_pop_ctrl() {
+            return Some(Err(m));
+        }
+        self.try_pop_data(src, tag).map(Ok)
+    }
+
+    /// Blocking: the data message matching `(src, tag)` (`Ok`), or any
+    /// control message (`Err`) so the caller can service it and retry.
+    fn recv_data_or_ctrl_blocking(&self, src: usize, tag: Tag) -> Result<Chunk, Message> {
+        loop {
+            if let Some(r) = self.try_recv_matched(src, tag) {
+                return r;
+            }
+            if let Some(r) = self.wait_round(|s| s.try_recv_matched(src, tag)) {
+                return r;
+            }
+        }
+    }
+
+    /// Blocking receive of the next control message (engine idle loop).
+    fn recv_ctrl_blocking(&self) -> Message {
+        loop {
+            if let Some(m) = self.try_pop_ctrl() {
+                return m;
+            }
+            if let Some(m) = self.wait_round(|s| s.try_pop_ctrl()) {
+                return m;
+            }
+        }
+    }
+}
+
+/// Cloneable handle that injects control messages into one rank's inbox —
+/// handed to the application thread so it can signal its engine.
+#[derive(Clone)]
+pub struct MailboxSender {
+    inbox: Arc<MailboxShared>,
+    src: usize,
+}
+
+impl MailboxSender {
+    pub fn send(&self, msg: Message) {
+        self.inbox.push_ctrl(self.src, msg);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Endpoint
+// ---------------------------------------------------------------------------
+
 /// Per-rank communication endpoint.
 pub struct Endpoint {
     rank: usize,
     p: usize,
-    txs: Vec<Sender<Message>>,
-    rx: Receiver<Message>,
-    unmatched: HashMap<(usize, Tag), VecDeque<Vec<f32>>>,
+    peers: Vec<Arc<MailboxShared>>,
+    inbox: Arc<MailboxShared>,
+    pool: BufferPool,
     /// Messages delivered, for metrics.
     pub sent_msgs: u64,
     pub sent_bytes: u64,
+    /// Payload bytes memcpy'd by this endpoint's owner (sends and receives
+    /// themselves are refcount bumps; this counts the residual copies).
+    pub copied_bytes: u64,
 }
 
 /// Build a fully-connected world of `p` endpoints.
 pub fn world(p: usize) -> Vec<Endpoint> {
-    let mut txs = Vec::with_capacity(p);
-    let mut rxs = Vec::with_capacity(p);
-    for _ in 0..p {
-        let (tx, rx) = channel();
-        txs.push(tx);
-        rxs.push(rx);
-    }
-    rxs.into_iter()
-        .enumerate()
-        .map(|(rank, rx)| Endpoint {
+    let shareds: Vec<Arc<MailboxShared>> =
+        (0..p).map(|_| Arc::new(MailboxShared::new(p))).collect();
+    (0..p)
+        .map(|rank| Endpoint {
             rank,
             p,
-            txs: txs.clone(),
-            rx,
-            unmatched: HashMap::new(),
+            peers: shareds.clone(),
+            inbox: shareds[rank].clone(),
+            pool: BufferPool::new(),
             sent_msgs: 0,
             sent_bytes: 0,
+            copied_bytes: 0,
         })
         .collect()
 }
@@ -125,117 +565,88 @@ impl Endpoint {
         self.p
     }
 
-    /// A sender that delivers into this endpoint's own mailbox — handed to
-    /// the application thread so it can signal its engine.
-    pub fn self_sender(&self) -> Sender<Message> {
-        self.txs[self.rank].clone()
+    /// This endpoint's buffer pool (cloneable handle).
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
     }
 
-    /// Send tagged data to `dst`. Never blocks (unbounded channel); errors
-    /// from already-terminated peers are ignored, matching the semantics of
-    /// fire-and-forget activation traffic at teardown.
+    /// A sender that delivers into this endpoint's own mailbox — handed to
+    /// the application thread so it can signal its engine.
+    pub fn self_sender(&self) -> MailboxSender {
+        MailboxSender { inbox: self.inbox.clone(), src: self.rank }
+    }
+
+    /// Send tagged data to `dst`, taking ownership of the vector (it moves
+    /// into a shared buffer; no payload copy). Never blocks.
     pub fn send(&mut self, dst: usize, tag: Tag, data: Vec<f32>) {
+        self.send_chunk(dst, tag, Chunk::from_vec(data));
+    }
+
+    /// Send a chunk (refcount bump) to `dst`. Never blocks.
+    pub fn send_chunk(&mut self, dst: usize, tag: Tag, chunk: Chunk) {
         self.sent_msgs += 1;
-        self.sent_bytes += (data.len() * 4) as u64;
-        let _ = self.txs[dst].send(Message { src: self.rank, tag, payload: Payload::Data(data) });
+        self.sent_bytes += (chunk.len() * 4) as u64;
+        self.peers[dst].push_data(self.rank, tag, chunk);
     }
 
     /// Send a control payload to `dst`.
     pub fn send_ctrl(&mut self, dst: usize, payload: Payload) {
         self.sent_msgs += 1;
-        let _ = self.txs[dst].send(Message {
-            src: self.rank,
-            tag: Tag { kind: MsgKind::Exchange, version: 0, phase: 0 },
-            payload,
-        });
+        self.peers[dst].push_ctrl(
+            self.rank,
+            Message { src: self.rank, tag: Tag::exchange(0, 0), payload },
+        );
     }
 
     /// Blocking receive of the data message matching `(src, tag)`.
-    /// Non-matching data is buffered; control messages are handed to
-    /// `on_ctrl` as they arrive (the engine forwards activations inline from
-    /// here so tree broadcasts never stall behind a busy schedule).
+    /// Non-matching data stays queued in its sender's lane; control
+    /// messages are handed to `on_ctrl` as they arrive (the engine
+    /// forwards activations inline from here so tree broadcasts never
+    /// stall behind a busy schedule).
     pub fn recv_data(
         &mut self,
         src: usize,
         tag: Tag,
         mut on_ctrl: impl FnMut(&mut Self, Message),
-    ) -> Vec<f32> {
+    ) -> Chunk {
         loop {
-            if let Some(q) = self.unmatched.get_mut(&(src, tag)) {
-                if let Some(data) = q.pop_front() {
-                    if q.is_empty() {
-                        self.unmatched.remove(&(src, tag));
-                    }
-                    return data;
-                }
-            }
-            let msg = self.rx.recv().expect("endpoint mailbox closed while receiving");
-            match msg.payload {
-                Payload::Data(data) => {
-                    if msg.src == src && msg.tag == tag {
-                        return data;
-                    }
-                    self.unmatched.entry((msg.src, msg.tag)).or_default().push_back(data);
-                }
-                _ => on_ctrl(self, msg),
+            match self.inbox.recv_data_or_ctrl_blocking(src, tag) {
+                Ok(chunk) => return chunk,
+                Err(msg) => on_ctrl(self, msg),
             }
         }
     }
 
-    /// Insert a data message into the unmatched buffer directly (used by
-    /// the engine when its idle loop pulls a data message that a future
-    /// matched receive will want).
-    pub fn stash(&mut self, src: usize, tag: Tag, data: Vec<f32>) {
-        self.unmatched.entry((src, tag)).or_default().push_back(data);
-    }
-
     /// Matched receive that yields to the caller whenever a control message
-    /// arrives instead of blocking through it: returns `Some(data)` when the
-    /// `(src, tag)` data message is available, or pushes exactly one control
-    /// message into `ctrl` and returns `None` so the caller can service it
-    /// (activation forwarding) and call again.
+    /// arrives instead of blocking through it: returns `Some(chunk)` when
+    /// the `(src, tag)` data message is available, or pushes exactly one
+    /// control message into `ctrl` and returns `None` so the caller can
+    /// service it (activation forwarding) and call again.
     pub fn recv_data_or_ctrl(
         &mut self,
         src: usize,
         tag: Tag,
         ctrl: &mut Vec<Message>,
-    ) -> Option<Vec<f32>> {
-        loop {
-            if let Some(q) = self.unmatched.get_mut(&(src, tag)) {
-                if let Some(data) = q.pop_front() {
-                    if q.is_empty() {
-                        self.unmatched.remove(&(src, tag));
-                    }
-                    return Some(data);
-                }
-            }
-            let msg = self.rx.recv().expect("endpoint mailbox closed while receiving");
-            match msg.payload {
-                Payload::Data(data) => {
-                    if msg.src == src && msg.tag == tag {
-                        return Some(data);
-                    }
-                    self.unmatched.entry((msg.src, msg.tag)).or_default().push_back(data);
-                }
-                _ => {
-                    ctrl.push(msg);
-                    return None;
-                }
+    ) -> Option<Chunk> {
+        match self.inbox.recv_data_or_ctrl_blocking(src, tag) {
+            Ok(chunk) => Some(chunk),
+            Err(msg) => {
+                ctrl.push(msg);
+                None
             }
         }
     }
 
-    /// Blocking receive of any message (engine idle loop).
-    pub fn recv_any(&mut self) -> Message {
-        // Drain buffered data first? Buffered data was already "received";
-        // the engine idle loop only cares about fresh control traffic, and
-        // buffered entries stay matched for future recv_data calls.
-        self.rx.recv().expect("endpoint mailbox closed")
+    /// Blocking receive of the next control message (engine idle loop).
+    /// Data messages are untouched: they wait in their lanes for the
+    /// matched receive of the schedule that wants them.
+    pub fn recv_ctrl(&mut self) -> Message {
+        self.inbox.recv_ctrl_blocking()
     }
 
-    /// Non-blocking receive of any message.
-    pub fn try_recv_any(&mut self) -> Option<Message> {
-        self.rx.try_recv().ok()
+    /// Non-blocking receive of a control message.
+    pub fn try_recv_ctrl(&mut self) -> Option<Message> {
+        self.inbox.try_pop_ctrl()
     }
 
     /// Symmetric exchange with `partner`: send our buffer, receive theirs.
@@ -243,15 +654,17 @@ impl Endpoint {
     /// mode, used by the synchronous baselines.
     pub fn sendrecv(&mut self, partner: usize, tag: Tag, data: Vec<f32>) -> Vec<f32> {
         self.send(partner, tag, data);
-        self.recv_data(partner, tag, |_, m| {
+        let chunk = self.recv_data(partner, tag, |_, m| {
             panic!("unexpected control message in direct mode: {m:?}")
-        })
+        });
+        chunk.into_vec()
     }
 
-    /// Number of unmatched buffered messages (test/debug hook: a clean
-    /// shutdown should leave zero for protocols that consume all traffic).
+    /// Number of data messages received but not yet consumed by a matched
+    /// receive (test/debug hook: a clean shutdown should leave zero for
+    /// protocols that consume all traffic).
     pub fn unmatched_len(&self) -> usize {
-        self.unmatched.values().map(|q| q.len()).sum()
+        self.inbox.pending_data()
     }
 }
 
@@ -321,9 +734,8 @@ mod tests {
             src: 0,
             tag: Tag::exchange(0, 0),
             payload: Payload::AppGroup { version: 9 },
-        })
-        .unwrap();
-        match e0.recv_any().payload {
+        });
+        match e0.recv_ctrl().payload {
             Payload::AppGroup { version } => assert_eq!(version, 9),
             other => panic!("unexpected {other:?}"),
         }
@@ -336,5 +748,87 @@ mod tests {
         e0.send(1, Tag::p2p(0, 0), vec![0.0; 100]);
         assert_eq!(e0.sent_bytes, 400);
         assert_eq!(e0.sent_msgs, 1);
+    }
+
+    #[test]
+    fn chunk_views_share_storage_without_copying() {
+        let buf = shared((0..10).map(|i| i as f32).collect());
+        let a = Chunk::range(buf.clone(), 0, 4);
+        let b = Chunk::range(buf.clone(), 4, 10);
+        assert_eq!(a.len(), 4);
+        assert_eq!(&a[..], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(&b[..], &[4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(Arc::strong_count(&buf), 3);
+        // Full-range sole-owner extraction is a move, not a copy.
+        drop((a, b));
+        let c = Chunk::full(buf);
+        let v = c.into_vec();
+        assert_eq!(v.len(), 10);
+    }
+
+    #[test]
+    fn chunked_send_is_refcounted_views() {
+        let mut eps = world(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            let buf = shared(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+            e1.send_chunk(0, Tag::exchange(0, 0), Chunk::range(buf.clone(), 0, 3));
+            e1.send_chunk(0, Tag::exchange(0, 1), Chunk::range(buf.clone(), 3, 5));
+            e1.sent_bytes
+        });
+        let c0 = e0.recv_data(1, Tag::exchange(0, 0), |_, _| {});
+        let c1 = e0.recv_data(1, Tag::exchange(0, 1), |_, _| {});
+        assert_eq!(&c0[..], &[1.0, 2.0, 3.0]);
+        assert_eq!(&c1[..], &[4.0, 5.0]);
+        assert_eq!(h.join().unwrap(), 20);
+    }
+
+    #[test]
+    fn pool_recycles_buffers_across_threads() {
+        let pool = BufferPool::new();
+        let a = pool.take(16);
+        let b = pool.take(16);
+        assert_eq!(pool.stats().allocs, 2);
+        // Drop on another thread still returns home.
+        let pa = Arc::new(a);
+        let h = {
+            let pa = pa.clone();
+            thread::spawn(move || drop(pa))
+        };
+        h.join().unwrap();
+        drop(pa);
+        drop(b);
+        let st = pool.stats();
+        assert_eq!(st.allocs, 2);
+        assert_eq!(st.free, 2);
+        // Subsequent takes are pool hits.
+        let c = pool.take(8);
+        assert_eq!(c.len(), 8);
+        assert_eq!(pool.stats().allocs, 2);
+    }
+
+    #[test]
+    fn pool_detach_via_into_data() {
+        let pool = BufferPool::new();
+        let v = pool.take(4).into_data();
+        assert_eq!(v.len(), 4);
+        drop(v);
+        // Detached buffers never return.
+        assert_eq!(pool.stats().free, 0);
+    }
+
+    #[test]
+    fn blocked_receiver_wakes_on_late_send() {
+        let mut eps = world(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            e1.send(0, Tag::sync(1, 0), vec![42.0]);
+        });
+        let got = e0.recv_data(1, Tag::sync(1, 0), |_, _| {});
+        assert_eq!(got, vec![42.0]);
+        h.join().unwrap();
     }
 }

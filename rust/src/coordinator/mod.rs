@@ -11,8 +11,9 @@
 //! module layout.
 
 pub use crate::collectives::engine::{
-    ActivationMode, CollectiveEngine, EngineConfig, EngineStats, GroupResult,
+    ActivationMode, CollectiveEngine, EngineConfig, EngineStats, GroupResult, StalenessStats,
 };
+pub use crate::comm::{BufferPool, Chunk, PoolStats, SharedBuf};
 pub use crate::optim::{run_training, Algorithm, EngineFactory, TrainConfig};
 pub use crate::sched::{
     schedule_iteration, FusionConfig, FusionMode, FusionPlan, LayerProfile, Timeline,

@@ -16,6 +16,14 @@
 //!        One discrete-event simulation run at any scale. --layered turns
 //!        on bucketed, overlap-scheduled exchanges; --config loads the
 //!        [fusion] TOML section (CLI flags override it).
+//!   bench  [--preset fig4|fig7|fig10|all] [--quick] [--out DIR] [--seed N]
+//!          [--check-baseline FILE]
+//!        Measured (wall-clock) overlap harness: real compute threads
+//!        against streamed chunk exchanges on the collective engine, plus
+//!        the simulator's layered-vs-flat comparison. Writes
+//!        BENCH_engine.json to --out. --check-baseline fails (exit 1) if
+//!        bytes-copied-per-iteration regresses >10% against the checked-in
+//!        baseline (the CI perf smoke job).
 //!   list
 //!        Show available models, algorithms, presets.
 
@@ -39,9 +47,12 @@ fn main() -> anyhow::Result<()> {
         Some("figure") => cmd_figure(&args),
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("bench") => cmd_bench(&args),
         Some("list") => cmd_list(),
         _ => {
-            eprintln!("usage: wagma <figure|train|simulate|list> [flags]  (see src/main.rs docs)");
+            eprintln!(
+                "usage: wagma <figure|train|simulate|bench|list> [flags]  (see src/main.rs docs)"
+            );
             std::process::exit(2);
         }
     }
@@ -218,6 +229,110 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     println!("iter time      : p50 {:.3} s  p95 {:.3} s  max {:.3} s", su.p50, su.p95, su.max);
     println!("mean skew      : {:.3} s", r.mean_skew);
     Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    use wagma::bench::measured_overlap::bench_preset;
+    use wagma::util::json::{num, obj, s, Json};
+
+    let quick = args.has("quick");
+    let out_dir = args.str_or("out", ".");
+    let seed = args.u64_or("seed", 42);
+    let which = args.str_or("preset", "all");
+    let names: Vec<String> = if which == "all" {
+        vec!["fig4".into(), "fig7".into(), "fig10".into()]
+    } else {
+        vec![which]
+    };
+    for n in &names {
+        if !preset_names().contains(&n.as_str()) {
+            anyhow::bail!("unknown bench preset {n:?} (fig4|fig7|fig10|all)");
+        }
+    }
+
+    println!("Measured-overlap bench ({}):", if quick { "quick" } else { "full" });
+    let cases: Vec<Json> = names.iter().map(|n| bench_preset(n, quick, seed)).collect();
+    let report = obj(vec![
+        ("generated_by", s("wagma bench")),
+        ("source", s("wall-clock")),
+        ("quick", Json::Bool(quick)),
+        ("seed", num(seed as f64)),
+        ("presets", Json::Arr(cases)),
+    ]);
+    std::fs::create_dir_all(&out_dir)?;
+    let path = std::path::Path::new(&out_dir).join("BENCH_engine.json");
+    std::fs::write(&path, report.to_string())?;
+    println!("wrote {path:?}");
+
+    if let Some(baseline_path) = args.get("check-baseline") {
+        check_bench_baseline(&report, baseline_path)?;
+    }
+    Ok(())
+}
+
+/// Perf-regression gate: fail if any preset's measured
+/// bytes-copied-per-iteration exceeds the checked-in baseline by >10%.
+/// (The copy counter is deterministic — code-structural, not timing — so
+/// this check is stable in CI.)
+fn check_bench_baseline(report: &wagma::util::json::Json, baseline_path: &str) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(baseline_path)?;
+    let baseline = wagma::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+    // Copied-bytes values depend on the bench shape (P, steps), so a
+    // full-mode run against a quick-shape baseline must not be reported
+    // as a regression.
+    let base_quick = baseline
+        .get("shape")
+        .and_then(|s| s.get("quick"))
+        .and_then(|v| v.as_bool());
+    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
+    if let Some(bq) = base_quick {
+        if bq != run_quick {
+            anyhow::bail!(
+                "baseline shape mismatch: {baseline_path} records a {} run but this is a {} run — \
+                 rerun with matching flags or regenerate the baseline",
+                if bq { "--quick" } else { "full" },
+                if run_quick { "--quick" } else { "full" },
+            );
+        }
+    }
+    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+    let mut failures = Vec::new();
+    for case in cases {
+        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+        let measured = case
+            .get("measured_layered")
+            .and_then(|m| m.get("copied_bytes_per_iter"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::INFINITY);
+        let Some(base) = baseline
+            .get(name)
+            .and_then(|b| b.get("copied_bytes_per_iter"))
+            .and_then(|v| v.as_f64())
+        else {
+            // A missing entry must not silently disable the gate.
+            failures.push(format!(
+                "{name}: no baseline entry in {baseline_path} — add one (measured {measured:.0} B/iter)"
+            ));
+            continue;
+        };
+        let limit = base * 1.10;
+        if measured > limit {
+            failures.push(format!(
+                "{name}: copied {measured:.0} B/iter exceeds baseline {base:.0} (+10% limit {limit:.0})"
+            ));
+        } else {
+            println!("baseline OK for {name}: {measured:.0} B/iter (baseline {base:.0})");
+            if measured < base * 0.9 {
+                println!("  (improved >10% — consider refreshing the baseline)");
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        anyhow::bail!("bytes-copied regression:\n{}", failures.join("\n"))
+    }
 }
 
 fn cmd_list() -> anyhow::Result<()> {

@@ -33,6 +33,8 @@ pub fn run_worker(
     for t in 0..cfg.steps {
         let t0 = Instant::now();
         let (g, loss) = engine.grad(&state.params, t);
+        // One counted copy into a pooled buffer; `g` itself is kept for
+        // the stale blend below, so a move is not possible.
         handle.publish(&g, t);
 
         let (g_avg, staleness): (Vec<f32>, u64) = if handle.config().is_sync_iter(t) {

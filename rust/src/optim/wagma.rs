@@ -38,8 +38,10 @@ pub fn run_worker(
         let t0 = Instant::now();
         // Lines 3–7: local update W'_t.
         let loss = engine.step(&mut state, cfg.lr, t);
-        let w_prime = state.params.clone();
-        handle.publish(&w_prime, t);
+        // One counted copy into a pooled buffer. The app must retain W'_t
+        // for the stale blend below, so a move (`publish_owned`) is not
+        // possible — but the seed's extra `state.params.clone()` is gone.
+        handle.publish(&state.params, t);
 
         let staleness;
         if handle.config().is_sync_iter(t) {
@@ -55,9 +57,10 @@ pub fn run_worker(
                 // Fresh contribution: W = W_sum / S.
                 state.params = res.sum.into_iter().map(|x| x / s).collect();
             } else {
-                // Stale contribution: W = (W_sum + W'_t) / (S+1).
+                // Stale contribution: W = (W_sum + W'_t) / (S+1), where
+                // `state.params` still holds W'_t.
                 let mut sum = res.sum;
-                add_assign(&mut sum, &w_prime);
+                add_assign(&mut sum, &state.params);
                 state.params = sum.into_iter().map(|x| x / (s + 1.0)).collect();
             }
         }

@@ -18,4 +18,4 @@ pub mod network;
 pub mod sim;
 
 pub use network::NetworkModel;
-pub use sim::{simulate, SimConfig, SimResult};
+pub use sim::{simulate, simulated_overlap_fraction, SimConfig, SimResult};

@@ -119,6 +119,14 @@ impl SimResult {
         (self.p * b * self.steps) as f64 / self.makespan
     }
 
+    /// Communication time not hidden under compute — the simulator-side
+    /// quantity the measured-overlap bench validates against wall clock:
+    /// `makespan - ideal_makespan` (the "exposed" cost above the paper's
+    /// ideal rectangle tops).
+    pub fn exposed_comm(&self) -> f64 {
+        (self.makespan - self.ideal_makespan).max(0.0)
+    }
+
     pub fn ideal_throughput(&self, b: usize) -> f64 {
         (self.p * b * self.steps) as f64 / self.ideal_makespan
     }
@@ -293,6 +301,25 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         iter_times,
         mean_skew: skew_acc / cfg.steps as f64,
     }
+}
+
+/// Simulator-side overlap validation hook for the measured bench: run the
+/// same configuration flat and layered and report the fraction of exposed
+/// communication the layered schedule hides,
+/// `1 - exposed(layered) / exposed(flat)`.
+pub fn simulated_overlap_fraction(cfg: &SimConfig) -> (SimResult, SimResult, f64) {
+    let mut flat_cfg = cfg.clone();
+    flat_cfg.fusion.layered = false;
+    let mut layered_cfg = cfg.clone();
+    layered_cfg.fusion.layered = true;
+    let flat = simulate(&flat_cfg);
+    let layered = simulate(&layered_cfg);
+    let frac = if flat.exposed_comm() > 0.0 {
+        1.0 - layered.exposed_comm() / flat.exposed_comm()
+    } else {
+        0.0
+    };
+    (flat, layered, frac)
 }
 
 /// Synchronous allreduce: everyone starts when the slowest arrives.
@@ -570,6 +597,16 @@ mod tests {
             );
             assert!(layered.makespan >= layered.ideal_makespan - 1e-9);
         }
+    }
+
+    #[test]
+    fn overlap_fraction_hook_positive_under_fig4() {
+        // The hook forces layered on/off itself; no fusion override needed.
+        let cfg = base(Algorithm::Wagma, 64);
+        let (flat, layered, frac) = simulated_overlap_fraction(&cfg);
+        assert!(flat.exposed_comm() > 0.0);
+        assert!(layered.exposed_comm() >= 0.0);
+        assert!(frac > 0.0 && frac <= 1.0, "overlap fraction {frac}");
     }
 
     #[test]

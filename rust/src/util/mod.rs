@@ -21,6 +21,19 @@ pub fn add_assign(dst: &mut [f32], src: &[f32]) {
     }
 }
 
+/// Elementwise `dst = a + b` in one pass (no intermediate copy). The
+/// reduction primitive of the zero-copy collective engine: `a` and `b` are
+/// shared (possibly in-flight) buffers that must not be mutated, `dst` is
+/// a pooled output buffer. Plain indexed loop so LLVM autovectorizes.
+#[inline]
+pub fn sum_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(dst.len(), a.len());
+    assert_eq!(dst.len(), b.len());
+    for i in 0..dst.len() {
+        dst[i] = a[i] + b[i];
+    }
+}
+
 /// Elementwise in-place `dst = (dst + src) * scale`.
 #[inline]
 pub fn add_scale(dst: &mut [f32], src: &[f32], scale: f32) {
@@ -67,6 +80,9 @@ mod tests {
         let mut d = vec![1.0f32, 2.0, 3.0];
         add_assign(&mut d, &[1.0, 1.0, 1.0]);
         assert_eq!(d, vec![2.0, 3.0, 4.0]);
+        let mut out = vec![0.0f32; 3];
+        sum_into(&mut out, &d, &[1.0, 2.0, 3.0]);
+        assert_eq!(out, vec![3.0, 5.0, 7.0]);
         add_scale(&mut d, &[0.0, 1.0, 2.0], 0.5);
         assert_eq!(d, vec![1.0, 2.0, 3.0]);
         scale(&mut d, 2.0);

@@ -313,6 +313,67 @@ fn initial_buffer_counts_as_stale() {
     }
 }
 
+/// Buffer-pool recycling under concurrent group exchanges: after a warmup
+/// window the pool's allocation count is fixed — steady-state iterations
+/// take every buffer from the free list (publish-by-move balances the
+/// result handed to the application, and in-flight exchange buffers return
+/// to their home pool when the partner drops them).
+#[test]
+fn buffer_pool_allocs_fixed_after_warmup() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc, Barrier};
+    let p = 4;
+    let dim = 512;
+    let warmup = 12u64;
+    let measured = 24u64;
+    let steps = warmup + measured;
+    let barrier = Arc::new(Barrier::new(p));
+    let warm_allocs = Arc::new(AtomicU64::new(0));
+    let final_allocs = Arc::new(AtomicU64::new(0));
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| CollectiveEngine::spawn(ep, cfg(p, 2, 0), vec![0.0; dim]))
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            let barrier = barrier.clone();
+            let warm_allocs = warm_allocs.clone();
+            let final_allocs = final_allocs.clone();
+            thread::spawn(move || {
+                for t in 0..steps {
+                    let w = vec![eng.rank() as f32 + t as f32; dim];
+                    eng.publish_owned(w, t);
+                    barrier.wait();
+                    let _ = eng.group_allreduce(t);
+                    barrier.wait();
+                    if t + 1 == warmup {
+                        warm_allocs.fetch_add(eng.pool_stats().allocs, Ordering::SeqCst);
+                    }
+                }
+                final_allocs.fetch_add(eng.pool_stats().allocs, Ordering::SeqCst);
+                eng.shutdown()
+            })
+        })
+        .collect();
+    for h in handles {
+        let st = h.join().unwrap();
+        assert_eq!(st.group_collectives, steps);
+        // publish_owned + refcount sends: zero payload memcpy end to end.
+        assert_eq!(st.copied_bytes, 0);
+    }
+    let warm = warm_allocs.load(Ordering::SeqCst);
+    let fin = final_allocs.load(Ordering::SeqCst);
+    assert!(warm > 0, "pool must have been exercised");
+    // No per-iteration allocations: over 24 post-warmup iterations × 4
+    // ranks, the allocation count may creep by at most a few high-water
+    // stragglers, never by O(iterations).
+    assert!(
+        fin - warm <= 2 * p as u64,
+        "pool allocations grew {warm} -> {fin} over {measured} iterations"
+    );
+}
+
 /// Engine statistics add up: group collectives + syncs == iterations, and
 /// byte accounting matches the schedule.
 #[test]

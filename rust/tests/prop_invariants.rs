@@ -140,6 +140,96 @@ fn prop_allreduce_algorithms_agree() {
     });
 }
 
+/// The engine's chunked (bucket-streamed) exchange path must reassemble
+/// bitwise-identically to the unchunked path, for arbitrary model sizes
+/// and chunk granularities: per element the butterfly performs the same
+/// additions in the same order, so the f32 results are exactly equal.
+#[test]
+fn prop_chunked_group_allreduce_bitwise_matches_unchunked() {
+    use std::sync::{Arc, Barrier};
+    use wagma::collectives::allreduce::AllreduceAlgo;
+    use wagma::collectives::engine::{ActivationMode, CollectiveEngine, EngineConfig};
+
+    // One barriered run: every rank publishes stamp-t data before any rank
+    // requests the collective, so all contributions are fresh and the
+    // per-rank group sums are deterministic.
+    fn run_world(
+        p: usize,
+        s: usize,
+        chunk_elems: usize,
+        steps: u64,
+        inputs: &Arc<Vec<Vec<Vec<f32>>>>, // [t][rank] -> model
+    ) -> Vec<Vec<Vec<f32>>> {
+        let cfg = EngineConfig {
+            p,
+            group_size: s,
+            tau: 0,
+            dynamic_groups: true,
+            sync_algo: AllreduceAlgo::Auto,
+            activation: ActivationMode::Solo,
+            chunk_elems,
+        };
+        let dim = inputs[0][0].len();
+        let barrier = Arc::new(Barrier::new(p));
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| CollectiveEngine::spawn(ep, cfg, vec![0.0; dim]))
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                let barrier = barrier.clone();
+                let inputs = inputs.clone();
+                std::thread::spawn(move || {
+                    let rank = eng.rank();
+                    let mut sums = Vec::with_capacity(steps as usize);
+                    for t in 0..steps {
+                        eng.publish_owned(inputs[t as usize][rank].clone(), t);
+                        barrier.wait();
+                        let res = eng.group_allreduce(t);
+                        sums.push(res.sum);
+                        barrier.wait();
+                    }
+                    let _ = eng.shutdown();
+                    (rank, sums)
+                })
+            })
+            .collect();
+        let mut out = vec![Vec::new(); p];
+        for h in handles {
+            let (rank, sums) = h.join().unwrap();
+            out[rank] = sums;
+        }
+        out
+    }
+
+    check_with(Config { cases: 10, ..Default::default() }, "chunked-vs-flat", |g| {
+        let p = g.pow2_in(2, 8);
+        let s = g.pow2_in(2, p);
+        let dim = g.usize_in(1, 96);
+        let chunk = g.usize_in(1, dim + 3);
+        let steps = 3u64;
+        let inputs: Arc<Vec<Vec<Vec<f32>>>> = Arc::new(
+            (0..steps)
+                .map(|_| (0..p).map(|_| g.vec_f32(dim)).collect())
+                .collect(),
+        );
+        let flat = run_world(p, s, 0, steps, &inputs);
+        let chunked = run_world(p, s, chunk, steps, &inputs);
+        for rank in 0..p {
+            for t in 0..steps as usize {
+                let (a, b) = (&flat[rank][t], &chunked[rank][t]);
+                prop_assert!(
+                    a == b,
+                    "P={p} S={s} dim={dim} chunk={chunk} rank={rank} t={t}: \
+                     chunked result diverges from flat"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
 /// GAE invariants: zero rewards + zero values => zero advantages; constant
 /// reward 1, gamma=lam=1, no dones => advantage telescopes to remaining
 /// reward sum + bootstrap.
