@@ -10,6 +10,7 @@ use wagma::collectives::allreduce::{allreduce_sum, allreduce_sum_ring};
 use wagma::collectives::engine::{ActivationMode, CollectiveEngine, EngineConfig};
 use wagma::collectives::AllreduceAlgo;
 use wagma::comm::world;
+use wagma::compress::Compression;
 
 fn bench_sync_allreduce(b: &mut Bencher, p: usize, n: usize, ring: bool) {
     let name = format!(
@@ -50,6 +51,7 @@ fn bench_group_allreduce(b: &mut Bencher, p: usize, s: usize, n: usize, iters: u
             sync_algo: AllreduceAlgo::Auto,
             activation: ActivationMode::Solo,
             chunk_elems: 0,
+            compression: Compression::None,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()

@@ -12,6 +12,7 @@ use std::time::Duration;
 use wagma::collectives::allreduce::AllreduceAlgo;
 use wagma::collectives::engine::{ActivationMode, CollectiveEngine, EngineConfig};
 use wagma::comm::world;
+use wagma::compress::Compression;
 
 fn main() {
     let p = 4;
@@ -25,6 +26,7 @@ fn main() {
         sync_algo: AllreduceAlgo::Auto,
         activation: ActivationMode::Solo,
         chunk_elems: 0,
+        compression: Compression::None,
     };
     println!("Fig. 3 demo: P=4, S=2, tau={tau}; rank 1 is the straggler\n");
     let (log_tx, log_rx) = channel::<(u64, usize, String)>();

@@ -3,8 +3,10 @@
 //! JSON report — used by every target in `rust/benches/`.
 //!
 //! [`measured_overlap`] is the wall-clock engine harness behind the
-//! `wagma bench` subcommand and `BENCH_engine.json`.
+//! `wagma bench` subcommand and `BENCH_engine.json`; [`calibrate`] fits
+//! `NetworkModel` α/β from the same harness (`wagma bench --calibrate`).
 
+pub mod calibrate;
 pub mod measured_overlap;
 
 use std::time::Instant;

@@ -18,6 +18,7 @@
 
 use std::sync::Arc;
 
+use crate::compress::{Compression, EncodeScratch};
 use crate::comm::{shared, BufferPool, Chunk, Endpoint, SharedBuf, Tag};
 use crate::topology::log2_exact;
 use crate::util::{add_assign, sum_into};
@@ -97,6 +98,33 @@ pub(crate) fn reduce_shared(pool: &BufferPool, lhs: SharedBuf, rhs: &[f32]) -> S
     }
 }
 
+/// The compressed counterpart of [`reduce_shared`]: combine an accumulator
+/// with a received **encoded** contribution via the fused decompress-sum.
+/// In place when the accumulator is uniquely owned; otherwise one pooled
+/// materialization (`out = lhs` then `out += decode(encoded)` — the
+/// sparse/quantized analogue of `sum_into`'s dense read-combine-write, so
+/// it is reduction work, not a counted copy). Either way the returned
+/// `Arc` is unique.
+pub(crate) fn decode_sum_shared(
+    pool: &BufferPool,
+    comp: Compression,
+    lhs: SharedBuf,
+    encoded: &[f32],
+) -> SharedBuf {
+    match Arc::try_unwrap(lhs) {
+        Ok(mut own) => {
+            comp.decode_add(encoded, own.data_mut());
+            Arc::new(own)
+        }
+        Err(held) => {
+            let mut out = pool.take(held.len());
+            out.data_mut().copy_from_slice(held.as_slice());
+            comp.decode_add(encoded, out.data_mut());
+            Arc::new(out)
+        }
+    }
+}
+
 /// Extract a final accumulator as a plain vector for the caller. After at
 /// least one [`reduce_shared`] the `Arc` is provably unique, so this is a
 /// move; degenerate schedules (zero phases) fall back to one counted copy.
@@ -170,6 +198,93 @@ pub(crate) fn ring_allreduce_segments(
     }
 
     // Reassemble the full vector (the one unavoidable copy of this path).
+    let mut out = pool.take(n);
+    for (c, seg) in segs.iter().enumerate() {
+        out.data_mut()[off(c)..off(c + 1)].copy_from_slice(seg.as_slice());
+    }
+    ep.copied_bytes += (n * 4) as u64;
+    out.into_data()
+}
+
+/// Compressed segmented ring allreduce: the [`ring_allreduce_segments`]
+/// schedule with every segment encoded before it travels.
+///
+/// * **Reduce-scatter**: each step sends `encode(segs[send_c])` and folds
+///   the received encoding into the local segment with the fused
+///   decompress-sum, so the segment owner ends with
+///   `own_exact + Σ decode(encode(partial))`.
+/// * **Allgather**: the owner broadcasts `encode(final_segment)` once and
+///   **adopts its own decode** — every rank, owner included, ends with the
+///   decode of the same encoding, so the synced model is *identical on all
+///   ranks* (the property WAGMA's every-τ synchronization exists to
+///   restore; lossy but rank-agreeing). Forwarders pass the received
+///   encoding along by reference — no re-encode, no divergence.
+///
+/// Per-element loss is bounded by the codec (exact for kept top-k entries,
+/// `scale/2` for q8) and applied once per segment, not once per hop.
+pub(crate) fn ring_allreduce_segments_compressed(
+    ep: &mut Endpoint,
+    version: u64,
+    contrib: SharedBuf,
+    comp: Compression,
+    scratch: &mut EncodeScratch,
+    mut recv: impl FnMut(&mut Endpoint, usize, Tag) -> Chunk,
+) -> Vec<f32> {
+    debug_assert!(!comp.is_none(), "use ring_allreduce_segments for the exact path");
+    let p = ep.p();
+    let rank = ep.rank();
+    let n = contrib.len();
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+    let off = |c: usize| -> usize { (n * c) / p };
+    let pool = ep.pool().clone();
+
+    let mut segs: Vec<Chunk> =
+        (0..p).map(|c| Chunk::range(contrib.clone(), off(c), off(c + 1))).collect();
+
+    // Reduce-scatter: encoded partial sums travel; the local segment folds
+    // each arrival in via the fused decompress-sum.
+    for s in 0..p - 1 {
+        let (send_c, recv_c, phase) = ring_step(rank, p, s, false);
+        let mut enc = pool.take(comp.encoded_words(segs[send_c].len()));
+        comp.encode(segs[send_c].as_slice(), enc.data_mut(), scratch);
+        ep.send_chunk(next, Tag::sync(version, phase), Chunk::full(Arc::new(enc)));
+        let rhs = recv(ep, prev, Tag::sync(version, phase));
+        let mut out = pool.take(segs[recv_c].len());
+        out.data_mut().copy_from_slice(segs[recv_c].as_slice());
+        comp.decode_add(rhs.as_slice(), out.data_mut());
+        segs[recv_c] = Chunk::full(Arc::new(out));
+    }
+
+    // Allgather: the owner encodes its finished segment once (and adopts
+    // the decode so it agrees with everyone else bitwise); every other rank
+    // forwards the received encoding untouched and stores its decode.
+    let mut fwd: Option<Chunk> = None;
+    for s in 0..p - 1 {
+        let (send_c, recv_c, phase) = ring_step(rank, p, s, true);
+        let enc_send = match fwd.take() {
+            Some(c) => c,
+            None => {
+                // First gather step: send_c is the segment this rank owns
+                // in full after the reduce-scatter.
+                let mut enc = pool.take(comp.encoded_words(segs[send_c].len()));
+                comp.encode(segs[send_c].as_slice(), enc.data_mut(), scratch);
+                let enc = Chunk::full(Arc::new(enc));
+                let mut own = pool.take(segs[send_c].len());
+                comp.decode_overwrite(enc.as_slice(), own.data_mut());
+                segs[send_c] = Chunk::full(Arc::new(own));
+                enc
+            }
+        };
+        ep.send_chunk(next, Tag::sync(version, phase), enc_send);
+        let rhs = recv(ep, prev, Tag::sync(version, phase));
+        let mut dec = pool.take(segs[recv_c].len());
+        comp.decode_overwrite(rhs.as_slice(), dec.data_mut());
+        segs[recv_c] = Chunk::full(Arc::new(dec));
+        fwd = Some(rhs);
+    }
+
+    // Reassemble (same single counted copy as the exact ring).
     let mut out = pool.take(n);
     for (c, seg) in segs.iter().enumerate() {
         out.data_mut()[off(c)..off(c + 1)].copy_from_slice(seg.as_slice());
@@ -282,6 +397,65 @@ mod tests {
             let (a, b) = h.join().unwrap();
             assert_eq!(a, vec![6.0]);
             assert_eq!(b, vec![60.0]);
+        }
+    }
+
+    fn run_ring_compressed(p: usize, n: usize, comp: Compression) -> Vec<Vec<f32>> {
+        let eps = world(p);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                thread::spawn(move || {
+                    let buf: Vec<f32> = (0..n).map(|i| (rank + i) as f32).collect();
+                    let contrib = shared(buf);
+                    let mut scratch = EncodeScratch::default();
+                    let out = ring_allreduce_segments_compressed(
+                        &mut ep, 0, contrib, comp, &mut scratch, recv_plain,
+                    );
+                    assert_eq!(ep.unmatched_len(), 0);
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    /// Compressed ring at top-k ratio 1.0 degenerates to the exact sum —
+    /// bitwise identical to the uncompressed ring on every rank.
+    #[test]
+    fn compressed_ring_ratio_one_is_bitwise_exact() {
+        for (p, n) in [(4usize, 64usize), (3, 10), (6, 97)] {
+            let out = run_ring_compressed(p, n, Compression::TopK { ratio: 1.0 });
+            let want = expected(p, n);
+            for buf in out {
+                for (a, b) in buf.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "P={p} N={n}");
+                }
+            }
+        }
+    }
+
+    /// Lossy compressed ring: every rank ends with the *identical* vector
+    /// (the allgather distributes one encoding that all ranks — owner
+    /// included — decode), and q8's loss stays within the per-hop bound.
+    #[test]
+    fn compressed_ring_is_rank_identical_and_bounded() {
+        let (p, n) = (4usize, 64usize);
+        let out = run_ring_compressed(p, n, Compression::QuantizeQ8);
+        for buf in &out[1..] {
+            for (a, b) in buf.iter().zip(&out[0]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "ranks disagree after compressed sync");
+            }
+        }
+        // Loss bound: p-1 reduce-scatter decodes + 1 allgather decode, each
+        // within scale/2 of its input; values here are O(p·n) so the summed
+        // result must still be close to the exact sum.
+        let want = expected(p, n);
+        let max_val = want.iter().cloned().fold(0.0f32, f32::max);
+        let scale_bound = (p as f32) * (max_val / 127.0);
+        for (a, b) in out[0].iter().zip(&want) {
+            assert!((a - b).abs() <= scale_bound, "{a} vs {b} (bound {scale_bound})");
         }
     }
 

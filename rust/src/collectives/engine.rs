@@ -62,8 +62,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::collectives::allreduce::{
-    reduce_shared, ring_allreduce_segments, shared_into_vec, AllreduceAlgo, RING_THRESHOLD,
+    decode_sum_shared, reduce_shared, ring_allreduce_segments,
+    ring_allreduce_segments_compressed, shared_into_vec, AllreduceAlgo, RING_THRESHOLD,
 };
+use crate::compress::{Compression, EncodeScratch};
 use crate::comm::{
     BufferPool, Chunk, Endpoint, MailboxSender, Message, Payload, PoolStats, SharedBuf, Tag,
 };
@@ -132,6 +134,17 @@ pub struct EngineConfig {
     /// the full flat payload. Chunks are range views of one shared buffer,
     /// not copies.
     pub chunk_elems: usize,
+    /// Per-bucket wire compression ([`crate::compress`]). With anything
+    /// other than [`Compression::None`] every butterfly phase encodes its
+    /// contribution (per chunk, so the fusion buckets are the compression
+    /// units) into a pooled buffer, sends the encoding, and folds the
+    /// partner's encoding in via the fused decompress-sum; the every-τ
+    /// global sync runs the compressed ring (rank-identical decode) for
+    /// ring-sized payloads and stays exact below [`RING_THRESHOLD`]
+    /// (latency-bound — compression buys nothing there).
+    /// `Compression::None` takes the exact pre-compression code paths,
+    /// bit-identical to the uncompressed build.
+    pub compression: Compression,
 }
 
 /// How a collective instance gets triggered.
@@ -169,8 +182,10 @@ impl EngineConfig {
 
     /// Effective chunk size for an `n`-element payload: honours
     /// `chunk_elems` but caps the chunk count so phase/chunk tags stay
-    /// disjoint (see [`chunk_tag`]).
-    fn effective_chunk(&self, n: usize) -> usize {
+    /// disjoint (see [`chunk_tag`]). Public so error-feedback callers can
+    /// model the engine's per-chunk encoding exactly
+    /// ([`crate::compress::ErrorFeedback::fold_chunked`]).
+    pub fn effective_chunk(&self, n: usize) -> usize {
         if self.chunk_elems == 0 || n <= self.chunk_elems {
             return 0; // unchunked
         }
@@ -444,6 +459,9 @@ struct EngineRun {
     app_sync: Option<u64>,
     /// Majority mode: arrival counts per version (leader only).
     arrivals: HashMap<u64, usize>,
+    /// Encoder workspace (top-k index selection), reused across phases so
+    /// steady-state compressed exchanges allocate nothing.
+    scratch: EncodeScratch,
     quit: bool,
     stats: EngineStats,
 }
@@ -499,6 +517,7 @@ fn engine_main(mut ep: Endpoint, cfg: EngineConfig, shared: Arc<EngineShared>) -
         app_group: None,
         app_sync: None,
         arrivals: HashMap::new(),
+        scratch: EncodeScratch::default(),
         quit: false,
         stats: EngineStats::default(),
     };
@@ -620,6 +639,60 @@ fn exchange_reduce_chunked(
     Arc::new(out)
 }
 
+/// One compressed unchunked butterfly phase: encode the accumulator into a
+/// pooled buffer, send the (shorter) encoding, and fold the partner's
+/// encoding in via the fused decompress-sum ([`decode_sum_shared`] — in
+/// place when the partner already released our buffer). `sent_bytes`
+/// therefore counts bytes-on-wire, not raw payload bytes.
+fn exchange_reduce_compressed(
+    ep: &mut Endpoint,
+    run: &mut EngineRun,
+    partner: usize,
+    tag: Tag,
+    acc: SharedBuf,
+) -> SharedBuf {
+    let comp = run.cfg.compression;
+    let mut enc = run.pool.take(comp.encoded_words(acc.len()));
+    comp.encode(acc.as_slice(), enc.data_mut(), &mut run.scratch);
+    ep.send_chunk(partner, tag, Chunk::full(Arc::new(enc)));
+    let rhs = recv_with_ctrl(ep, run, partner, tag);
+    decode_sum_shared(&run.pool, comp, acc, rhs.as_slice())
+}
+
+/// One compressed chunked butterfly phase: each chunk — the engine-level
+/// image of a fused gradient bucket — is encoded and sent independently
+/// (per-bucket compression), then the receives fold into one pooled output
+/// range by range.
+fn exchange_reduce_chunked_compressed(
+    ep: &mut Endpoint,
+    run: &mut EngineRun,
+    partner: usize,
+    v: u64,
+    r: u32,
+    chunk: usize,
+    acc: SharedBuf,
+) -> SharedBuf {
+    let comp = run.cfg.compression;
+    let n = acc.len();
+    let n_chunks = n.div_ceil(chunk);
+    for c in 0..n_chunks {
+        let lo = c * chunk;
+        let hi = (lo + chunk).min(n);
+        let mut enc = run.pool.take(comp.encoded_words(hi - lo));
+        comp.encode(&acc.as_slice()[lo..hi], enc.data_mut(), &mut run.scratch);
+        ep.send_chunk(partner, chunk_tag(v, r, c), Chunk::full(Arc::new(enc)));
+    }
+    let mut out = run.pool.take(n);
+    out.data_mut().copy_from_slice(acc.as_slice());
+    for c in 0..n_chunks {
+        let lo = c * chunk;
+        let hi = (lo + chunk).min(n);
+        let rhs = recv_with_ctrl(ep, run, partner, chunk_tag(v, r, c));
+        comp.decode_add(rhs.as_slice(), &mut out.data_mut()[lo..hi]);
+    }
+    Arc::new(out)
+}
+
 /// Execute the group allreduce schedule for `run.next`.
 fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
     let v = run.next;
@@ -649,12 +722,14 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
     // range views: all sends are issued up front so the partner can overlap
     // its reductions with our remaining traffic.
     let chunk = run.cfg.effective_chunk(acc.len());
+    let compressed = !run.cfg.compression.is_none();
     for r in 0..run.grouping.phases() {
         let partner = run.grouping.partner(ep.rank(), v, r);
-        acc = if chunk == 0 {
-            exchange_reduce(ep, run, partner, Tag::exchange(v, r), acc)
-        } else {
-            exchange_reduce_chunked(ep, run, partner, v, r, chunk, acc)
+        acc = match (chunk, compressed) {
+            (0, false) => exchange_reduce(ep, run, partner, Tag::exchange(v, r), acc),
+            (0, true) => exchange_reduce_compressed(ep, run, partner, Tag::exchange(v, r), acc),
+            (_, false) => exchange_reduce_chunked(ep, run, partner, v, r, chunk, acc),
+            (_, true) => exchange_reduce_chunked_compressed(ep, run, partner, v, r, chunk, acc),
         };
     }
 
@@ -682,7 +757,11 @@ fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
     let contrib: SharedBuf = run.shared.slot.lock().unwrap().buf.clone();
     let p = ep.p();
     let result: Vec<f32> = if p > 2 && contrib.len() >= RING_THRESHOLD {
-        ring_sync(ep, run, ts, contrib)
+        if run.cfg.compression.is_none() {
+            ring_sync(ep, run, ts, contrib)
+        } else {
+            ring_sync_compressed(ep, run, ts, contrib)
+        }
     } else if p > 1 {
         let log_p = log2_exact(p);
         let rank = ep.rank();
@@ -713,6 +792,30 @@ fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
 /// reference; the final reassembly is the sync path's single counted copy.
 fn ring_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64, contrib: SharedBuf) -> Vec<f32> {
     ring_allreduce_segments(ep, ts, contrib, |ep, src, tag| recv_with_ctrl(ep, run, src, tag))
+}
+
+/// Compressed τ-sync: the compressed ring core with the ctrl-aware
+/// receive. The allgather distributes one encoding per segment that every
+/// rank (owner included) decodes, so the synced model stays identical on
+/// all ranks — lossy, but rank-agreeing, which is the property the
+/// every-τ barrier exists to restore. Small payloads never reach here
+/// (the caller keeps them on the exact recursive-doubling path:
+/// latency-bound traffic gains nothing from compression).
+fn ring_sync_compressed(
+    ep: &mut Endpoint,
+    run: &mut EngineRun,
+    ts: u64,
+    contrib: SharedBuf,
+) -> Vec<f32> {
+    let comp = run.cfg.compression;
+    // The scratch moves out of `run` for the duration of the call: the
+    // receive closure needs `run` mutably for activation forwarding.
+    let mut scratch = std::mem::take(&mut run.scratch);
+    let out = ring_allreduce_segments_compressed(ep, ts, contrib, comp, &mut scratch, |ep, src, tag| {
+        recv_with_ctrl(ep, run, src, tag)
+    });
+    run.scratch = scratch;
+    out
 }
 
 /// Matched receive that keeps servicing control traffic (activation
@@ -749,6 +852,7 @@ mod tests {
             sync_algo: AllreduceAlgo::RecursiveDoubling,
             activation: ActivationMode::Solo,
             chunk_elems: 0,
+            compression: Compression::None,
         }
     }
 
@@ -1060,6 +1164,7 @@ mod majority_tests {
             sync_algo: AllreduceAlgo::Auto,
             activation: ActivationMode::Majority,
             chunk_elems: 0,
+            compression: Compression::None,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()
@@ -1113,6 +1218,7 @@ mod majority_tests {
             sync_algo: AllreduceAlgo::Auto,
             activation: ActivationMode::Majority,
             chunk_elems: 0,
+            compression: Compression::None,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()
@@ -1134,5 +1240,203 @@ mod majority_tests {
         let stats: Vec<EngineStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         let activations: u64 = stats.iter().map(|s| s.activations_sent).sum();
         assert_eq!(activations, steps, "one leader activation per version");
+    }
+}
+
+#[cfg(test)]
+mod compression_tests {
+    use super::*;
+    use crate::comm::world;
+    use std::sync::{Arc, Barrier};
+    use std::thread;
+
+    /// Barriered run: every rank publishes stamp-t data before any rank
+    /// requests the collective, so group sums are deterministic. Returns
+    /// per-rank (sums over steps, engine stats).
+    fn run_world(
+        cfg: EngineConfig,
+        dim: usize,
+        steps: u64,
+    ) -> Vec<(Vec<Vec<f32>>, EngineStats)> {
+        let p = cfg.p;
+        let barrier = Arc::new(Barrier::new(p));
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| CollectiveEngine::spawn(ep, cfg, vec![0.0; dim]))
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                let barrier = barrier.clone();
+                thread::spawn(move || {
+                    let rank = eng.rank();
+                    let mut outs = Vec::new();
+                    for t in 0..steps {
+                        let w: Vec<f32> = (0..dim)
+                            .map(|j| {
+                                ((rank * 31 + j * 7 + t as usize * 13) % 23) as f32 * 0.37 - 3.7
+                            })
+                            .collect();
+                        eng.publish_owned(w, t);
+                        barrier.wait();
+                        if eng.config().is_sync_iter(t) {
+                            outs.push(eng.global_sync(t));
+                        } else {
+                            outs.push(eng.group_allreduce(t).sum);
+                        }
+                        barrier.wait();
+                    }
+                    let st = eng.shutdown();
+                    (rank, outs, st)
+                })
+            })
+            .collect();
+        let mut res: Vec<(usize, Vec<Vec<f32>>, EngineStats)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        res.sort_by_key(|r| r.0);
+        res.into_iter().map(|(_, o, s)| (o, s)).collect()
+    }
+
+    fn cfg(p: usize, s: usize, tau: u64, chunk: usize, comp: Compression) -> EngineConfig {
+        EngineConfig {
+            p,
+            group_size: s,
+            tau,
+            dynamic_groups: true,
+            sync_algo: AllreduceAlgo::Auto,
+            activation: ActivationMode::Solo,
+            chunk_elems: chunk,
+            compression: comp,
+        }
+    }
+
+    /// Top-k at ratio 1.0 keeps every value bit-exactly and adds in the
+    /// same order as the dense reduce: compressed exchanges (chunked and
+    /// unchunked) are bitwise-identical to the uncompressed engine.
+    #[test]
+    fn ratio_one_topk_bitwise_matches_uncompressed() {
+        for chunk in [0usize, 5] {
+            let plain = run_world(cfg(4, 2, 3, chunk, Compression::None), 17, 6);
+            let topk =
+                run_world(cfg(4, 2, 3, chunk, Compression::TopK { ratio: 1.0 }), 17, 6);
+            for (rank, ((a, _), (b, _))) in plain.iter().zip(&topk).enumerate() {
+                for (t, (va, vb)) in a.iter().zip(b).enumerate() {
+                    for (x, y) in va.iter().zip(vb) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "rank {rank} t {t} chunk {chunk}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// `compression = "none"` IS the pre-compression engine: the group
+    /// sums equal the exactly-computed expected contributions (the guard
+    /// the acceptance criterion asks for, pinned against an independent
+    /// computation rather than a second engine run).
+    #[test]
+    fn none_matches_expected_group_sums_exactly() {
+        let p = 4;
+        let s = 2;
+        let dim = 9;
+        let steps = 4u64;
+        let grouping = Grouping::new(p, s);
+        let out = run_world(cfg(p, s, 0, 0, Compression::None), dim, steps);
+        for t in 0..steps {
+            for rank in 0..p {
+                let members = grouping.group_of(rank, t);
+                let want: Vec<f32> = (0..dim)
+                    .map(|j| {
+                        members
+                            .iter()
+                            .map(|&m| {
+                                ((m * 31 + j * 7 + t as usize * 13) % 23) as f32 * 0.37 - 3.7
+                            })
+                            .sum()
+                    })
+                    .collect();
+                assert_eq!(out[rank].0[t as usize], want, "rank {rank} t {t}");
+            }
+        }
+    }
+
+    /// Bytes-on-wire acceptance at the engine level: top-k ratio 0.1 cuts
+    /// `sent_bytes` by at least 4x on a group-collective schedule, and the
+    /// collectives still complete everywhere.
+    #[test]
+    fn topk_tenth_cuts_wire_bytes_4x() {
+        let dim = 4096;
+        let steps = 6u64;
+        let plain = run_world(cfg(4, 2, 0, 0, Compression::None), dim, steps);
+        let topk =
+            run_world(cfg(4, 2, 0, 0, Compression::TopK { ratio: 0.1 }), dim, steps);
+        let bytes = |runs: &[(Vec<Vec<f32>>, EngineStats)]| -> u64 {
+            runs.iter().map(|(_, st)| st.sent_bytes).sum()
+        };
+        let (raw, wire) = (bytes(&plain), bytes(&topk));
+        assert!(
+            raw as f64 / wire as f64 >= 4.0,
+            "wire reduction {raw} -> {wire} below 4x"
+        );
+        for (_, st) in &topk {
+            assert_eq!(st.group_collectives, steps);
+        }
+    }
+
+    /// The compressed τ-sync leaves every rank with the *identical* model
+    /// (one encoding per segment, decoded by everyone — owner included).
+    #[test]
+    fn compressed_sync_is_rank_identical() {
+        let dim = RING_THRESHOLD; // big enough for the ring path, P > 2
+        let tau = 2u64;
+        let steps = 4u64;
+        for comp in [Compression::QuantizeQ8, Compression::TopK { ratio: 0.1 }] {
+            let out = run_world(cfg(4, 2, tau, 0, comp), dim, steps);
+            for t in (0..steps).filter(|&t| (t + 1) % tau == 0) {
+                let first = &out[0].0[t as usize];
+                for (rank, (sums, _)) in out.iter().enumerate().skip(1) {
+                    for (x, y) in sums[t as usize].iter().zip(first) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "rank {rank} diverged at sync t={t} ({comp:?})"
+                        );
+                    }
+                }
+            }
+            for (_, st) in &out {
+                assert_eq!(st.global_syncs, 2);
+            }
+        }
+    }
+
+    /// Compressed exchanges draw encode buffers from the pool: allocations
+    /// stabilize after warmup instead of growing per phase.
+    #[test]
+    fn compressed_pool_allocs_stabilize() {
+        let out = run_world(
+            cfg(4, 2, 0, 0, Compression::TopK { ratio: 0.25 }),
+            512,
+            12,
+        );
+        let out_long = run_world(
+            cfg(4, 2, 0, 0, Compression::TopK { ratio: 0.25 }),
+            512,
+            24,
+        );
+        let allocs = |runs: &[(Vec<Vec<f32>>, EngineStats)]| -> u64 {
+            runs.iter().map(|(_, st)| st.pool_allocs).sum()
+        };
+        // Twice the steps must not mean twice the allocations: the pool
+        // absorbs the steady state (some warmup slack allowed).
+        assert!(
+            allocs(&out_long) < allocs(&out) * 2,
+            "allocs grew with steps: {} -> {}",
+            allocs(&out),
+            allocs(&out_long)
+        );
     }
 }

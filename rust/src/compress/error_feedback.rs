@@ -1,0 +1,216 @@
+//! Error-feedback accumulator for lossy gradient compression.
+//!
+//! Compression drops mass; error feedback delays it instead of losing it
+//! (Stich et al.; the DaSGD line shows such delayed corrections keep
+//! convergence intact — the same role staleness plays in WAGMA itself).
+//! Each worker folds the residual of its previous lossy publish into the
+//! next payload before it is compressed:
+//!
+//! ```text
+//! w̃_t      = w_t + e_{t-1}
+//! publish    compress(w̃_t)          (what the collective averages)
+//! e_t      = w̃_t - decompress(compress(w̃_t))
+//! ```
+//!
+//! For [`crate::compress::TopK`] the split is exact:
+//! `decompress(compress(w̃)) + e == w̃` elementwise (values ride the wire
+//! bit-exactly, the residual is the dropped complement) — the
+//! mass-conservation property pinned by the compression property tests.
+
+use crate::compress::{Compression, EncodeScratch};
+
+/// Per-worker residual carrier. Buffers are lazily sized on first use and
+/// reused forever after — steady-state folds allocate nothing.
+#[derive(Debug, Default)]
+pub struct ErrorFeedback {
+    residual: Vec<f32>,
+    encoded: Vec<f32>,
+    decoded: Vec<f32>,
+    scratch: EncodeScratch,
+    folds: u64,
+}
+
+impl ErrorFeedback {
+    pub fn new() -> ErrorFeedback {
+        ErrorFeedback::default()
+    }
+
+    /// Fold the carried residual into `w`, then recompute the residual of
+    /// compressing the result: `w += e; e = w - decompress(compress(w))`.
+    /// After this call `w` is the payload to publish (the engine performs
+    /// the wire encoding itself). No-op for [`Compression::None`].
+    pub fn fold(&mut self, comp: Compression, w: &mut [f32]) {
+        self.fold_chunked(comp, w, 0);
+    }
+
+    /// Like [`fold`](Self::fold), but matching the engine's *chunked*
+    /// encoding: the roundtrip runs independently on each `chunk_elems`
+    /// range (0 = whole vector), so the residual models exactly the
+    /// first-hop loss of a chunked exchange — per-chunk top-k keeps a
+    /// different set than whole-vector top-k would. (Losses the engine
+    /// applies to *partial sums* on later butterfly hops are inherently
+    /// multi-party and are not error-feedback-trackable.)
+    pub fn fold_chunked(&mut self, comp: Compression, w: &mut [f32], chunk_elems: usize) {
+        if comp.is_none() {
+            return;
+        }
+        let n = w.len();
+        self.residual.resize(n, 0.0);
+        for (x, e) in w.iter_mut().zip(self.residual.iter()) {
+            *x += *e;
+        }
+        let chunk = if chunk_elems == 0 || chunk_elems >= n { n.max(1) } else { chunk_elems };
+        self.decoded.resize(n, 0.0);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            self.encoded.resize(comp.encoded_words(hi - lo), 0.0);
+            comp.encode(&w[lo..hi], &mut self.encoded, &mut self.scratch);
+            comp.decode_overwrite(&self.encoded, &mut self.decoded[lo..hi]);
+            lo = hi;
+        }
+        for ((e, &x), &d) in self.residual.iter_mut().zip(w.iter()).zip(self.decoded.iter()) {
+            *e = x - d;
+        }
+        self.folds += 1;
+    }
+
+    /// Deliver the carried residual through a lossless transmission:
+    /// `w += e; e = 0`, charging no new residual. Used before the every-τ
+    /// sync, which carries the contribution in full (exact below the ring
+    /// threshold; the compressed ring's own segment loss is engine-side
+    /// multi-hop loss, outside the error-feedback contract) — folding the
+    /// usual roundtrip there would re-inject mass that was never dropped.
+    pub fn drain_into(&mut self, w: &mut [f32]) {
+        if self.residual.is_empty() {
+            return;
+        }
+        for (x, e) in w.iter_mut().zip(self.residual.iter_mut()) {
+            *x += *e;
+            *e = 0.0;
+        }
+    }
+
+    /// The residual carried into the next iteration.
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// L2 norm of the carried residual (metrics hook).
+    pub fn residual_norm(&self) -> f64 {
+        crate::util::l2_norm(&self.residual)
+    }
+
+    /// Folds performed so far.
+    pub fn folds(&self) -> u64 {
+        self.folds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_a_no_op() {
+        let mut ef = ErrorFeedback::new();
+        let mut w = vec![1.0f32, 2.0, 3.0];
+        ef.fold(Compression::None, &mut w);
+        assert_eq!(w, vec![1.0, 2.0, 3.0]);
+        assert!(ef.residual().is_empty());
+        assert_eq!(ef.folds(), 0);
+    }
+
+    #[test]
+    fn topk_mass_conservation_is_exact() {
+        // decompress(compress(w)) + residual == w, elementwise bitwise.
+        let comp = Compression::TopK { ratio: 0.3 };
+        let mut ef = ErrorFeedback::new();
+        let w0: Vec<f32> = (0..50).map(|i| ((i * 29) % 17) as f32 * 0.7 - 5.0).collect();
+        let mut w = w0.clone();
+        ef.fold(comp, &mut w);
+        assert_eq!(w, w0, "first fold has zero residual to add");
+        // Reconstruct decompress(compress(w)) from the residual identity.
+        for (i, (&x, &e)) in w.iter().zip(ef.residual()).enumerate() {
+            let decoded = x - e;
+            // Kept entries: residual exactly 0, decoded bit-equals x.
+            // Dropped entries: decoded exactly 0, residual bit-equals x.
+            assert!(
+                (e == 0.0 && decoded.to_bits() == x.to_bits()) || decoded == 0.0,
+                "element {i}: x={x} e={e}"
+            );
+            assert_eq!((decoded + e).to_bits(), x.to_bits(), "element {i}");
+        }
+    }
+
+    #[test]
+    fn residual_is_carried_into_the_next_fold() {
+        let comp = Compression::TopK { ratio: 0.5 };
+        let mut ef = ErrorFeedback::new();
+        let mut w = vec![10.0f32, 1.0, -8.0, 2.0];
+        ef.fold(comp, &mut w); // keeps 10, -8; residual [0, 1, 0, 2]
+        assert_eq!(ef.residual(), &[0.0, 1.0, 0.0, 2.0]);
+        let mut w2 = vec![0.0f32, 1.5, 0.0, 0.1];
+        ef.fold(comp, &mut w2);
+        // The carried residual was folded in before compression.
+        assert_eq!(w2, vec![0.0, 2.5, 0.0, 2.1]);
+        assert_eq!(ef.residual(), &[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(ef.folds(), 2);
+    }
+
+    #[test]
+    fn chunked_fold_models_per_chunk_keep_sets() {
+        // Whole-vector top-k (50% of 4 = 2) would keep {10, -8}; per-chunk
+        // top-k over 2-element chunks keeps one entry per chunk: {10, -8}
+        // in chunk 0? No — chunks are [10, 1] and [-8, 2]: keeps 10 and
+        // -8, residual [0, 1, 0, 2]. With chunks [1, 10] / [2, -8] the
+        // per-chunk winners change with layout; pin the first layout.
+        let comp = Compression::TopK { ratio: 0.5 };
+        let mut ef = ErrorFeedback::new();
+        let mut w = vec![10.0f32, 1.0, -8.0, 2.0];
+        ef.fold_chunked(comp, &mut w, 2);
+        assert_eq!(ef.residual(), &[0.0, 1.0, 0.0, 2.0]);
+        // A layout where the global and per-chunk keep sets differ:
+        // chunks [1, 2] and [8, 10] — per-chunk keeps 2 and 10 (one per
+        // chunk), while global top-2 would keep 8 and 10.
+        let mut ef2 = ErrorFeedback::new();
+        let mut w2 = vec![1.0f32, 2.0, 8.0, 10.0];
+        ef2.fold_chunked(comp, &mut w2, 2);
+        assert_eq!(ef2.residual(), &[1.0, 0.0, 8.0, 0.0]);
+        // chunk 0 (or >= n) degenerates to the whole-vector fold.
+        let mut ef3 = ErrorFeedback::new();
+        let mut w3 = vec![1.0f32, 2.0, 8.0, 10.0];
+        ef3.fold_chunked(comp, &mut w3, 0);
+        assert_eq!(ef3.residual(), &[1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn drain_delivers_and_clears_the_residual() {
+        let comp = Compression::TopK { ratio: 0.5 };
+        let mut ef = ErrorFeedback::new();
+        let mut w = vec![10.0f32, 1.0, -8.0, 2.0];
+        ef.fold(comp, &mut w); // residual [0, 1, 0, 2]
+        let mut sync_payload = vec![5.0f32, 5.0, 5.0, 5.0];
+        ef.drain_into(&mut sync_payload);
+        assert_eq!(sync_payload, vec![5.0, 6.0, 5.0, 7.0]);
+        assert_eq!(ef.residual(), &[0.0, 0.0, 0.0, 0.0]);
+        // Draining an empty accumulator is a no-op.
+        let mut fresh = ErrorFeedback::new();
+        let mut v = vec![1.0f32];
+        fresh.drain_into(&mut v);
+        assert_eq!(v, vec![1.0]);
+    }
+
+    #[test]
+    fn q8_residual_is_bounded_by_half_scale() {
+        let comp = Compression::QuantizeQ8;
+        let mut ef = ErrorFeedback::new();
+        let mut w: Vec<f32> = (0..33).map(|i| (i as f32 - 16.0) * 0.3).collect();
+        ef.fold(comp, &mut w);
+        let scale = 16.0 * 0.3 / 127.0;
+        for &e in ef.residual() {
+            assert!(e.abs() <= scale * 0.51, "residual {e} vs scale {scale}");
+        }
+        assert!(ef.residual_norm() >= 0.0);
+    }
+}

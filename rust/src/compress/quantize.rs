@@ -1,0 +1,155 @@
+//! Per-bucket 8-bit linear quantization.
+//!
+//! One f32 scale per bucket (`max|x| / 127`) and one signed 8-bit code per
+//! element, packed four to an f32 word (raw bit patterns — never used in
+//! arithmetic). Decode is `code · scale`, so the per-element round-trip
+//! error is at most `scale / 2`: every in-range `x / scale` lies within
+//! `[-127, 127]` and rounding to the nearest integer moves it by ≤ 0.5.
+
+use crate::compress::{Compressor, EncodeScratch};
+
+/// The 8-bit linear quantizer (stateless).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QuantizeQ8;
+
+/// Header words: element count + scale.
+const HEADER: usize = 2;
+
+/// i8 codes per packed f32 word.
+const PACK: usize = 4;
+
+impl Compressor for QuantizeQ8 {
+    fn name(&self) -> &'static str {
+        "q8"
+    }
+
+    fn encoded_words(&self, n: usize) -> usize {
+        HEADER + n.div_ceil(PACK)
+    }
+
+    fn encode(&self, input: &[f32], out: &mut [f32], _scratch: &mut EncodeScratch) {
+        let n = input.len();
+        assert_eq!(out.len(), self.encoded_words(n), "encode buffer sized by encoded_words");
+        let max_abs = input.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = max_abs / 127.0;
+        out[0] = f32::from_bits(n as u32);
+        out[1] = scale;
+        let inv = if scale > 0.0 { 1.0 / scale as f64 } else { 0.0 };
+        for (w, block) in out[HEADER..].iter_mut().zip(input.chunks(PACK)) {
+            let mut word = 0u32;
+            for (j, &x) in block.iter().enumerate() {
+                let code = (x as f64 * inv).round().clamp(-127.0, 127.0) as i32 as i8;
+                word |= (code as u8 as u32) << (8 * j);
+            }
+            *w = f32::from_bits(word);
+        }
+    }
+
+    fn decode_add(&self, encoded: &[f32], dst: &mut [f32]) {
+        let (n, scale) = decode_header(encoded);
+        assert_eq!(dst.len(), n, "decode target length");
+        for (w, block) in encoded[HEADER..].iter().zip(dst.chunks_mut(PACK)) {
+            let word = w.to_bits();
+            for (j, d) in block.iter_mut().enumerate() {
+                let code = ((word >> (8 * j)) & 0xFF) as u8 as i8;
+                *d += code as f32 * scale;
+            }
+        }
+    }
+
+    fn decode_overwrite(&self, encoded: &[f32], dst: &mut [f32]) {
+        let (n, scale) = decode_header(encoded);
+        assert_eq!(dst.len(), n, "decode target length");
+        for (w, block) in encoded[HEADER..].iter().zip(dst.chunks_mut(PACK)) {
+            let word = w.to_bits();
+            for (j, d) in block.iter_mut().enumerate() {
+                let code = ((word >> (8 * j)) & 0xFF) as u8 as i8;
+                *d = code as f32 * scale;
+            }
+        }
+    }
+}
+
+fn decode_header(encoded: &[f32]) -> (usize, f32) {
+    assert!(encoded.len() >= HEADER, "truncated q8 payload");
+    let n = encoded[0].to_bits() as usize;
+    assert_eq!(encoded.len(), HEADER + n.div_ceil(PACK), "q8 payload length");
+    (n, encoded[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(input: &[f32]) -> (Vec<f32>, f32) {
+        let q = QuantizeQ8;
+        let mut enc = vec![0.0f32; q.encoded_words(input.len())];
+        q.encode(input, &mut enc, &mut EncodeScratch::default());
+        let scale = enc[1];
+        let mut out = vec![f32::NAN; input.len()];
+        q.decode_overwrite(&enc, &mut out);
+        (out, scale)
+    }
+
+    #[test]
+    fn error_bounded_by_half_scale() {
+        let input: Vec<f32> = (0..1001).map(|i| ((i * 37) % 211) as f32 * 0.173 - 18.0).collect();
+        let (out, scale) = roundtrip(&input);
+        assert!(scale > 0.0);
+        // scale/2 plus a whisker of f32 rounding slack in decode's multiply.
+        let bound = scale as f64 * 0.5 * (1.0 + 1e-5);
+        for (i, (&x, &y)) in input.iter().zip(&out).enumerate() {
+            let err = (x as f64 - y as f64).abs();
+            assert!(err <= bound, "element {i}: |{x} - {y}| = {err} > {bound}");
+        }
+    }
+
+    #[test]
+    fn extremes_hit_full_code_range() {
+        let (out, scale) = roundtrip(&[1.0, -1.0, 0.0]);
+        assert_eq!(scale, 1.0 / 127.0);
+        assert_eq!(out, vec![1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn all_zero_input_decodes_to_zero() {
+        let (out, scale) = roundtrip(&[0.0; 17]);
+        assert_eq!(scale, 0.0);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn ragged_tail_packs_and_unpacks() {
+        for n in [1usize, 2, 3, 4, 5, 7, 9] {
+            let input: Vec<f32> = (0..n).map(|i| i as f32 - 1.5).collect();
+            let (out, scale) = roundtrip(&input);
+            for (&x, &y) in input.iter().zip(&out) {
+                assert!((x - y).abs() <= scale * 0.51, "n={n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_add_sums_into_accumulator() {
+        let q = QuantizeQ8;
+        let input = [127.0f32, -127.0, 0.0, 63.5];
+        let mut enc = vec![0.0f32; q.encoded_words(4)];
+        q.encode(&input, &mut enc, &mut EncodeScratch::default());
+        let mut acc = vec![1.0f32; 4];
+        q.decode_add(&enc, &mut acc);
+        assert_eq!(acc[0], 128.0);
+        assert_eq!(acc[1], -126.0);
+        assert_eq!(acc[2], 1.0);
+        assert!((acc[3] - 65.0).abs() <= 0.51);
+    }
+
+    #[test]
+    fn encoded_words_counts_header_and_packing() {
+        let q = QuantizeQ8;
+        assert_eq!(q.encoded_words(0), 2);
+        assert_eq!(q.encoded_words(1), 3);
+        assert_eq!(q.encoded_words(4), 3);
+        assert_eq!(q.encoded_words(5), 4);
+        assert_eq!(q.encoded_words(100), 2 + 25);
+    }
+}

@@ -1,0 +1,188 @@
+//! Magnitude top-k sparsification.
+//!
+//! Keeps the `⌈ratio·n⌉` largest-magnitude entries as `(index, value)`
+//! pairs, indices ascending. Values are carried bit-exactly, which gives
+//! the two invariants the rest of the system leans on:
+//!
+//! * **mass conservation** — `decode(encode(g)) + residual == g`
+//!   elementwise, where `residual` is `g` outside the kept set and zero
+//!   inside it (the [`crate::compress::ErrorFeedback`] contract);
+//! * **ratio 1.0 is exact** — all indices are kept in ascending order, so
+//!   `decode_add` performs the same per-element additions in the same
+//!   order as the uncompressed `sum_into` path: compressed exchanges at
+//!   ratio 1.0 are bitwise-identical to uncompressed ones.
+
+use crate::compress::{Compressor, EncodeScratch};
+
+/// Top-k codec at a fixed keep ratio (fraction of entries kept, in
+/// `(0, 1]`).
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    ratio: f64,
+}
+
+impl TopK {
+    pub fn new(ratio: f64) -> TopK {
+        assert!(ratio > 0.0 && ratio <= 1.0, "topk ratio {ratio} outside (0, 1]");
+        TopK { ratio }
+    }
+
+    /// Entries kept for an `n`-element input: `⌈ratio·n⌉`, at least 1.
+    pub fn k_of(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        ((self.ratio * n as f64).ceil() as usize).clamp(1, n)
+    }
+}
+
+/// Header words: element count + kept count.
+const HEADER: usize = 2;
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn encoded_words(&self, n: usize) -> usize {
+        HEADER + 2 * self.k_of(n)
+    }
+
+    fn encode(&self, input: &[f32], out: &mut [f32], scratch: &mut EncodeScratch) {
+        let n = input.len();
+        let k = self.k_of(n);
+        assert_eq!(out.len(), HEADER + 2 * k, "encode buffer sized by encoded_words");
+        out[0] = f32::from_bits(n as u32);
+        out[1] = f32::from_bits(k as u32);
+        let (idx_words, val_words) = out[HEADER..].split_at_mut(k);
+        if k == n {
+            // Degenerate keep-everything case: no selection, exact copy.
+            for (i, w) in idx_words.iter_mut().enumerate() {
+                *w = f32::from_bits(i as u32);
+            }
+            val_words.copy_from_slice(input);
+            return;
+        }
+        // Partial selection over a reused index workspace (allocation-free
+        // at steady state), then ascending index order so decode visits
+        // elements in the same order as a dense pass.
+        let idx = &mut scratch.idx;
+        idx.clear();
+        idx.extend(0..n as u32);
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            input[b as usize].abs().total_cmp(&input[a as usize].abs())
+        });
+        idx[..k].sort_unstable();
+        for j in 0..k {
+            idx_words[j] = f32::from_bits(idx[j]);
+            val_words[j] = input[idx[j] as usize];
+        }
+    }
+
+    fn decode_add(&self, encoded: &[f32], dst: &mut [f32]) {
+        let (n, k) = decode_header(encoded);
+        assert_eq!(dst.len(), n, "decode target length");
+        for j in 0..k {
+            let i = encoded[HEADER + j].to_bits() as usize;
+            dst[i] += encoded[HEADER + k + j];
+        }
+    }
+
+    fn decode_overwrite(&self, encoded: &[f32], dst: &mut [f32]) {
+        let (n, k) = decode_header(encoded);
+        assert_eq!(dst.len(), n, "decode target length");
+        dst.fill(0.0);
+        for j in 0..k {
+            let i = encoded[HEADER + j].to_bits() as usize;
+            dst[i] = encoded[HEADER + k + j];
+        }
+    }
+}
+
+fn decode_header(encoded: &[f32]) -> (usize, usize) {
+    assert!(encoded.len() >= HEADER, "truncated topk payload");
+    let n = encoded[0].to_bits() as usize;
+    let k = encoded[1].to_bits() as usize;
+    assert_eq!(encoded.len(), HEADER + 2 * k, "topk payload length");
+    assert!(k <= n, "topk k {k} > n {n}");
+    (n, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(c: &TopK, input: &[f32]) -> Vec<f32> {
+        let mut enc = vec![0.0f32; c.encoded_words(input.len())];
+        c.encode(input, &mut enc, &mut EncodeScratch::default());
+        let mut out = vec![f32::NAN; input.len()];
+        c.decode_overwrite(&enc, &mut out);
+        out
+    }
+
+    #[test]
+    fn keeps_the_largest_magnitudes_exactly() {
+        let c = TopK::new(0.4); // k = 2 of 5
+        let input = [0.1f32, -9.0, 0.2, 3.0, -0.3];
+        let out = roundtrip(&c, &input);
+        assert_eq!(out, vec![0.0, -9.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn ratio_one_is_identity_bitwise() {
+        let c = TopK::new(1.0);
+        let input: Vec<f32> = (0..97).map(|i| (i as f32 - 48.5) * 0.37).collect();
+        let out = roundtrip(&c, &input);
+        for (a, b) in input.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_add_accumulates_sparsely() {
+        let c = TopK::new(0.5); // k = 2 of 4
+        let input = [1.0f32, -4.0, 2.0, 0.5];
+        let mut enc = vec![0.0f32; c.encoded_words(4)];
+        c.encode(&input, &mut enc, &mut EncodeScratch::default());
+        let mut acc = vec![10.0f32; 4];
+        c.decode_add(&enc, &mut acc);
+        assert_eq!(acc, vec![10.0, 6.0, 12.0, 10.0]);
+    }
+
+    #[test]
+    fn k_and_encoded_words() {
+        let c = TopK::new(0.1);
+        assert_eq!(c.k_of(100), 10);
+        assert_eq!(c.k_of(5), 1);
+        assert_eq!(c.k_of(0), 0);
+        assert_eq!(c.encoded_words(100), 2 + 20);
+        // ceil: 101 elements keep 11.
+        assert_eq!(c.k_of(101), 11);
+        assert_eq!(TopK::new(1.0).k_of(7), 7);
+    }
+
+    #[test]
+    fn indices_survive_as_bit_patterns() {
+        // Large counts/indices (> 2^24, where f32 *values* lose integer
+        // exactness) must round-trip — they travel as raw bits, not
+        // numbers.
+        for n in [(1usize << 24) + 3, (1usize << 31) + 5] {
+            let w = f32::from_bits(n as u32);
+            assert_eq!(w.to_bits() as usize, n);
+        }
+    }
+
+    #[test]
+    fn scratch_is_reused_not_grown() {
+        let c = TopK::new(0.25);
+        let mut scratch = EncodeScratch::default();
+        let input: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut enc = vec![0.0f32; c.encoded_words(64)];
+        c.encode(&input, &mut enc, &mut scratch);
+        let cap = scratch.idx.capacity();
+        for _ in 0..5 {
+            c.encode(&input, &mut enc, &mut scratch);
+        }
+        assert_eq!(scratch.idx.capacity(), cap, "steady-state encode must not grow scratch");
+    }
+}

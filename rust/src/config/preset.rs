@@ -2,6 +2,7 @@
 //! section's parameters onto simulator and training configurations
 //! (DESIGN.md §4 experiment index).
 
+use crate::compress::Compression;
 use crate::data::ImbalanceModel;
 use crate::optim::Algorithm;
 use crate::sched::FusionConfig;
@@ -26,6 +27,9 @@ pub struct ExperimentPreset {
     /// Fusion/overlap knobs (flat by default so the paper figures are
     /// reproduced unchanged; the fusion figure/bench flips `layered` on).
     pub fusion: FusionConfig,
+    /// Per-bucket wire compression (off by default for the same reason;
+    /// the compression figure/bench turns it on explicitly).
+    pub compress: Compression,
 }
 
 const FIG4_ALGOS: &[Algorithm] = &[
@@ -70,6 +74,7 @@ pub fn preset(name: &str) -> Option<ExperimentPreset> {
             algos: FIG4_ALGOS,
             steps: 200,
             fusion: FusionConfig::default(),
+            compress: Compression::None,
         },
         // Fig. 7: Transformer/WMT17 throughput (τ=8, bucketed lengths).
         "fig7" => ExperimentPreset {
@@ -83,6 +88,7 @@ pub fn preset(name: &str) -> Option<ExperimentPreset> {
             algos: FIG7_ALGOS,
             steps: 200,
             fusion: FusionConfig::default(),
+            compress: Compression::None,
         },
         // Fig. 10: DDPPO/Habitat throughput (heavy-tailed collection).
         "fig10" => ExperimentPreset {
@@ -96,6 +102,7 @@ pub fn preset(name: &str) -> Option<ExperimentPreset> {
             algos: FIG10_ALGOS,
             steps: 100,
             fusion: FusionConfig::default(),
+            compress: Compression::None,
         },
         _ => return None,
     };
@@ -123,6 +130,7 @@ impl ExperimentPreset {
             net: NetworkModel::aries(),
             seed,
             fusion: self.fusion,
+            compress: self.compress,
         }
     }
 }

@@ -395,6 +395,108 @@ pub fn fig_fusion(out_dir: &str, quick: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Compression sweep (the `compress` subsystem's figure): simulated
+/// makespan and bytes-on-wire across compression ratio × τ × group size
+/// on the fig4/fig7/fig10 presets. Quantifies the volume lever next to
+/// WAGMA's scope lever: how much wire traffic the per-bucket codecs
+/// remove, at what makespan effect, as the sync period and group size
+/// vary.
+pub fn fig_compression(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+    use crate::compress::Compression;
+
+    let p = if quick { 16usize } else { 64 };
+    println!("== compress — per-bucket compression sweep (ratio × τ × group size, P={p}) ==");
+    let mut csv = CsvWriter::create(
+        Path::new(out_dir).join("compress.csv"),
+        &[
+            "preset",
+            "compression",
+            "topk_ratio",
+            "tau",
+            "group_size",
+            "makespan_s",
+            "wire_bytes_per_iter",
+            "wire_reduction_x",
+            "throughput",
+        ],
+    )?;
+    let codecs: Vec<Compression> = if quick {
+        vec![
+            Compression::None,
+            Compression::TopK { ratio: 0.1 },
+            Compression::QuantizeQ8,
+        ]
+    } else {
+        vec![
+            Compression::None,
+            Compression::TopK { ratio: 0.25 },
+            Compression::TopK { ratio: 0.1 },
+            Compression::TopK { ratio: 0.05 },
+            Compression::TopK { ratio: 0.01 },
+            Compression::QuantizeQ8,
+        ]
+    };
+    println!(
+        "{:<6} {:<6} {:>6} {:>4} {:>6} {:>12} {:>16} {:>10} {:>14}",
+        "preset", "codec", "ratio", "tau", "S", "makespan", "wire B/iter", "reduce", "throughput"
+    );
+    for name in ["fig4", "fig7", "fig10"] {
+        let pre = preset(name).ok_or_else(|| anyhow::anyhow!("missing preset {name}"))?;
+        let taus: Vec<u64> = if quick { vec![pre.tau] } else { vec![4, pre.tau, 25] };
+        let groups: Vec<usize> = if quick { vec![8] } else { vec![4, 8, 16] };
+        for &tau in &taus {
+            for &s in &groups {
+                let cell = |comp: Compression| -> crate::simulator::SimResult {
+                    let mut cfg = pre.sim_config(Algorithm::Wagma, p, 42);
+                    cfg.tau = tau;
+                    cfg.group_size = s.min(p);
+                    cfg.compress = comp;
+                    if quick {
+                        cfg.steps = 50;
+                    }
+                    simulate(&cfg)
+                };
+                let baseline = cell(Compression::None);
+                for &comp in &codecs {
+                    // The None row IS the baseline — don't simulate it twice.
+                    let r = if comp.is_none() { baseline.clone() } else { cell(comp) };
+                    let reduction = baseline.wire_bytes_per_iter / r.wire_bytes_per_iter;
+                    // Only top-k rows have a keep ratio; fabricating one
+                    // for none/q8 would corrupt ratio-faceted plots.
+                    let ratio = match comp {
+                        Compression::TopK { ratio } => format!("{ratio}"),
+                        _ => "-".to_string(),
+                    };
+                    println!(
+                        "{:<6} {:<6} {:>6} {:>4} {:>6} {:>11.3}s {:>16.0} {:>9.2}x {:>13.0}/s",
+                        name,
+                        comp.name(),
+                        ratio,
+                        tau,
+                        s.min(p),
+                        r.makespan,
+                        r.wire_bytes_per_iter,
+                        reduction,
+                        r.throughput(pre.batch),
+                    );
+                    csv.row(&[
+                        name.to_string(),
+                        comp.name().to_string(),
+                        ratio.clone(),
+                        tau.to_string(),
+                        s.min(p).to_string(),
+                        format!("{:.6}", r.makespan),
+                        format!("{:.0}", r.wire_bytes_per_iter),
+                        format!("{reduction:.4}"),
+                        format!("{:.1}", r.throughput(pre.batch)),
+                    ])?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Figs. 1–3: protocol demonstration traces (activation tree, dynamic
 /// grouping, straggler snapshot) — printed, not measured.
 pub fn fig_protocol_demos() {

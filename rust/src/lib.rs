@@ -11,7 +11,10 @@
 //!   grouping strategy ([`topology::grouping`]), WAGMA-SGD and six baseline
 //!   distributed optimizers ([`optim`]), the layer-aware gradient fusion
 //!   and communication-overlap scheduler ([`sched`]: MG-WFBP-style bucket
-//!   planning over per-layer backprop profiles), a discrete-event cluster
+//!   planning over per-layer backprop profiles), per-bucket gradient
+//!   compression with error feedback ([`compress`]: top-k / 8-bit
+//!   quantized wire encodings carried zero-copy through the engine), a
+//!   discrete-event cluster
 //!   simulator for at-scale experiments ([`simulator`], with a layered mode
 //!   that consumes the bucket timeline instead of one flat payload), and
 //!   the PJRT runtime that executes AOT-compiled models ([`runtime`]).
@@ -27,6 +30,7 @@
 
 pub mod bench;
 pub mod collectives;
+pub mod compress;
 pub mod coordinator;
 pub mod figures;
 pub mod comm;

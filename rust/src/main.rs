@@ -1,29 +1,41 @@
 //! `wagma` — the WAGMA-SGD launcher.
 //!
 //! Subcommands:
-//!   figure <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|ablation|fusion|all>
+//!   figure <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|ablation|fusion|compress|all>
 //!          [--out results] [--quick]
 //!        Regenerate the paper's figures (simulator sweeps, real training
 //!        convergence runs, distribution plots) plus the fusion/overlap
-//!        makespan study.
+//!        makespan study and the compression ratio × τ × group-size sweep.
 //!   train  --model <name> --algo <name> --p N --steps N [--lr F] [--tau N]
 //!          [--group-size N] [--static-groups] [--eval-every N] [--out results]
-//!        Real multi-worker training through the PJRT artifacts.
+//!          [--compression none|topk|q8] [--topk-ratio F]
+//!        Real multi-worker training through the PJRT artifacts. With
+//!        compression on, WAGMA/eager workers carry an error-feedback
+//!        residual and the engine sends per-bucket encoded payloads.
 //!   simulate --algo <name> --p N [--steps N] [--params N] [--tau N]
 //!            [--imbalance fig4|fig7|fig9|balanced] [--group-size N]
 //!            [--layered] [--fusion-mode flat|threshold|mgwfbp]
-//!            [--fusion-threshold-bytes N] [--config file.toml]
+//!            [--fusion-threshold-bytes N] [--compression none|topk|q8]
+//!            [--topk-ratio F] [--config file.toml]
 //!        One discrete-event simulation run at any scale. --layered turns
-//!        on bucketed, overlap-scheduled exchanges; --config loads the
-//!        [fusion] TOML section (CLI flags override it).
+//!        on bucketed, overlap-scheduled exchanges; --compression prices
+//!        per-bucket wire compression (δ codec term included) and reports
+//!        modelled bytes-on-wire; --config loads the [fusion] and
+//!        [compress] TOML sections (CLI flags override them).
 //!   bench  [--preset fig4|fig7|fig10|all] [--quick] [--out DIR] [--seed N]
-//!          [--check-baseline FILE]
+//!          [--compression none|topk|q8] [--topk-ratio F]
+//!          [--check-baseline FILE] [--check-compress-baseline FILE]
+//!          [--calibrate]
 //!        Measured (wall-clock) overlap harness: real compute threads
-//!        against streamed chunk exchanges on the collective engine, plus
-//!        the simulator's layered-vs-flat comparison. Writes
-//!        BENCH_engine.json to --out. --check-baseline fails (exit 1) if
-//!        bytes-copied-per-iteration regresses >10% against the checked-in
-//!        baseline (the CI perf smoke job).
+//!        against streamed chunk exchanges on the collective engine (with
+//!        and without per-bucket compression — default compressed arm is
+//!        top-k 0.1), plus the simulator's layered-vs-flat comparison.
+//!        Writes BENCH_engine.json to --out. --check-baseline fails
+//!        (exit 1) if bytes-copied-per-iteration regresses >10% against
+//!        the checked-in baseline; --check-compress-baseline does the same
+//!        for compressed bytes-on-wire (the CI perf smoke job runs both).
+//!        --calibrate instead runs serial collectives across payload sizes
+//!        and least-squares fits NetworkModel α/β from the timings.
 //!   list
 //!        Show available models, algorithms, presets.
 
@@ -37,6 +49,7 @@ use wagma::optim::pjrt_engine::{PjrtEngine, RlEngine};
 use wagma::config::TomlDoc;
 use wagma::optim::{run_training, Algorithm, TrainConfig};
 use wagma::runtime::{Manifest, ModelRuntime};
+use wagma::compress::Compression;
 use wagma::sched::FusionConfig;
 use wagma::simulator::{simulate, SimConfig};
 use wagma::util::cli::Args;
@@ -77,6 +90,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
             "fig4" | "fig7" | "fig10" => figures::fig_throughput(name, &out, quick),
             "fig6" | "fig9" => figures::fig_distribution(name, &out),
             "fusion" => figures::fig_fusion(&out, quick),
+            "compress" => figures::fig_compression(&out, quick),
             "fig5" => figures::fig5(&out, quick),
             "fig8" => figures::fig8(&out, quick),
             "fig11" => figures::fig11(&out, quick),
@@ -87,7 +101,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     if which == "all" {
         for name in [
             "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "ablation",
-            "fusion",
+            "fusion", "compress",
         ] {
             run(name)?;
             println!();
@@ -136,13 +150,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         seed,
         eval_every: args.u64_or("eval-every", (steps / 10).max(1)),
         fusion: FusionConfig::from_args(args),
+        compress: Compression::from_args(args),
         init,
     };
     println!(
-        "training {model} with {} on P={p} (S={}, tau={}) for {steps} steps ...",
+        "training {model} with {} on P={p} (S={}, tau={}, compression={}) for {steps} steps ...",
         algo.name(),
         cfg.resolved_group_size(),
-        cfg.tau
+        cfg.tau,
+        cfg.compress.name(),
     );
     let r = run_training(&cfg, factory);
     println!(
@@ -176,17 +192,22 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "balanced" => ImbalanceModel::Balanced { base: 0.4, jitter: 0.01 },
         other => anyhow::bail!("unknown imbalance model {other}"),
     };
-    // Fusion knobs: optional TOML `[fusion]` section as the base, CLI
-    // flags (--layered, --fusion-mode, --fusion-threshold-bytes) override.
-    let fusion_base = match args.get("config") {
+    // Fusion/compression knobs: optional TOML `[fusion]`/`[compress]`
+    // sections as the base, CLI flags (--layered, --fusion-mode,
+    // --fusion-threshold-bytes, --compression, --topk-ratio) override.
+    let (fusion_base, compress_base) = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
             let doc = TomlDoc::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-            FusionConfig::from_toml(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+            (
+                FusionConfig::from_toml(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?,
+                Compression::from_toml(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?,
+            )
         }
-        None => FusionConfig::default(),
+        None => (FusionConfig::default(), Compression::None),
     };
     let fusion = FusionConfig::from_args_with(args, fusion_base);
+    let compress = Compression::from_args_with(args, compress_base);
     let cfg = SimConfig {
         algo,
         p: args.usize_or("p", 64),
@@ -200,6 +221,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         imbalance,
         seed: args.u64_or("seed", 42),
         fusion,
+        compress,
         ..Default::default()
     };
     let b = args.usize_or("batch", 128);
@@ -218,6 +240,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             r.algo
         );
     }
+    if !cfg.compress.is_none() {
+        let codec = match cfg.compress {
+            Compression::TopK { ratio } => format!("topk (ratio {ratio})"),
+            other => other.name().to_string(),
+        };
+        println!("compression    : {codec}, wire {:.0} B/iter per rank", r.wire_bytes_per_iter);
+    }
     println!("ranks          : {}", r.p);
     println!("makespan       : {:.2} s  (ideal {:.2} s)", r.makespan, r.ideal_makespan);
     println!(
@@ -232,12 +261,41 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
-    use wagma::bench::measured_overlap::bench_preset;
+    use wagma::bench::calibrate::{calibrate, calibration_json};
+    use wagma::bench::measured_overlap::bench_preset_compressed;
     use wagma::util::json::{num, obj, s, Json};
 
     let quick = args.has("quick");
     let out_dir = args.str_or("out", ".");
     let seed = args.u64_or("seed", 42);
+
+    if args.has("calibrate") {
+        // Satellite of the compression PR / follow-up of PR 2: fit α/β
+        // from serial engine collectives across a payload ladder.
+        println!("Calibrating NetworkModel α/β ({} ladder)...", if quick { "quick" } else { "full" });
+        let (model, samples) = calibrate(quick, seed);
+        for sm in &samples {
+            println!("  {:>12.0} B  wait mean {:>10.3} µs", sm.bytes, sm.seconds * 1e6);
+        }
+        println!(
+            "suggested NetworkModel {{ alpha: {:.3e}, beta: {:.3e}, gamma: {:.3e}, contention: {}, delta: {:.3e} }}",
+            model.alpha, model.beta, model.gamma, model.contention, model.delta
+        );
+        println!(
+            "(α = {:.2} µs, β = 1/{:.1} GB/s; γ/contention/δ keep the Aries defaults)",
+            model.alpha * 1e6,
+            1.0 / model.beta / 1e9
+        );
+        std::fs::create_dir_all(&out_dir)?;
+        let path = std::path::Path::new(&out_dir).join("CALIBRATION.json");
+        std::fs::write(&path, calibration_json(&model, &samples).to_string())?;
+        println!("wrote {path:?}");
+        return Ok(());
+    }
+
+    // Compressed arm: top-k 0.1 unless overridden (`--compression none`
+    // drops the arm entirely).
+    let comp = Compression::from_args_with(args, Compression::TopK { ratio: 0.1 });
     let which = args.str_or("preset", "all");
     let names: Vec<String> = if which == "all" {
         vec!["fig4".into(), "fig7".into(), "fig10".into()]
@@ -251,12 +309,23 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
 
     println!("Measured-overlap bench ({}):", if quick { "quick" } else { "full" });
-    let cases: Vec<Json> = names.iter().map(|n| bench_preset(n, quick, seed)).collect();
+    let cases: Vec<Json> =
+        names.iter().map(|n| bench_preset_compressed(n, quick, seed, comp)).collect();
     let report = obj(vec![
         ("generated_by", s("wagma bench")),
         ("source", s("wall-clock")),
         ("quick", Json::Bool(quick)),
         ("seed", num(seed as f64)),
+        ("compression", s(comp.name())),
+        // Only meaningful for top-k; Null lets the ratio shape check in
+        // the compress gate skip for other codecs.
+        (
+            "topk_ratio",
+            match comp {
+                Compression::TopK { ratio } => num(ratio),
+                _ => Json::Null,
+            },
+        ),
         ("presets", Json::Arr(cases)),
     ]);
     std::fs::create_dir_all(&out_dir)?;
@@ -267,7 +336,97 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if let Some(baseline_path) = args.get("check-baseline") {
         check_bench_baseline(&report, baseline_path)?;
     }
+    if let Some(baseline_path) = args.get("check-compress-baseline") {
+        check_compress_baseline(&report, baseline_path)?;
+    }
     Ok(())
+}
+
+/// Perf-regression gate for the compression subsystem: fail if any
+/// preset's compressed bytes-on-wire per iteration exceeds the checked-in
+/// baseline by >10%. (`sent_bytes` counts data chunks whose number and
+/// encoded size are code-structural, so the gate is deterministic.)
+fn check_compress_baseline(
+    report: &wagma::util::json::Json,
+    baseline_path: &str,
+) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(baseline_path)?;
+    let baseline = wagma::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+    let base_quick = baseline
+        .get("shape")
+        .and_then(|s| s.get("quick"))
+        .and_then(|v| v.as_bool());
+    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
+    if let Some(bq) = base_quick {
+        if bq != run_quick {
+            anyhow::bail!(
+                "compress baseline shape mismatch: {baseline_path} records a {} run but this is a {} run",
+                if bq { "--quick" } else { "full" },
+                if run_quick { "--quick" } else { "full" },
+            );
+        }
+    }
+    if let (Some(bk), Some(rk)) = (
+        baseline.get("shape").and_then(|s| s.get("compression")).and_then(|v| v.as_str()),
+        report.get("compression").and_then(|v| v.as_str()),
+    ) {
+        if bk != rk {
+            anyhow::bail!(
+                "compress baseline codec mismatch: baseline {bk:?} vs run {rk:?} — rerun with matching --compression"
+            );
+        }
+    }
+    if let (Some(br), Some(rr)) = (
+        baseline.get("shape").and_then(|s| s.get("topk_ratio")).and_then(|v| v.as_f64()),
+        report.get("topk_ratio").and_then(|v| v.as_f64()),
+    ) {
+        // A different keep ratio changes the expected wire volume itself:
+        // comparing across ratios would mask regressions (smaller ratio)
+        // or report spurious ones (larger), so refuse like the other
+        // shape mismatches.
+        if (br - rr).abs() > 1e-9 {
+            anyhow::bail!(
+                "compress baseline ratio mismatch: baseline topk_ratio {br} vs run {rr} — rerun with matching --topk-ratio"
+            );
+        }
+    }
+    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+    let mut failures = Vec::new();
+    for case in cases {
+        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+        let measured = case
+            .get("measured_compressed")
+            .and_then(|m| m.get("sent_bytes_per_iter"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::INFINITY);
+        let Some(base) = baseline
+            .get(name)
+            .and_then(|b| b.get("sent_bytes_per_iter"))
+            .and_then(|v| v.as_f64())
+        else {
+            failures.push(format!(
+                "{name}: no compress baseline entry in {baseline_path} — add one (measured {measured:.0} B/iter)"
+            ));
+            continue;
+        };
+        let limit = base * 1.10;
+        if measured > limit {
+            failures.push(format!(
+                "{name}: compressed wire {measured:.0} B/iter exceeds baseline {base:.0} (+10% limit {limit:.0})"
+            ));
+        } else {
+            println!("compress baseline OK for {name}: {measured:.0} B/iter (baseline {base:.0})");
+            if measured < base * 0.9 {
+                println!("  (improved >10% — consider refreshing the baseline)");
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        anyhow::bail!("compressed bytes-on-wire regression:\n{}", failures.join("\n"))
+    }
 }
 
 /// Perf-regression gate: fail if any preset's measured

@@ -12,6 +12,7 @@
 use std::time::Instant;
 
 use crate::collectives::engine::CollectiveEngine;
+use crate::compress::ErrorFeedback;
 use crate::metrics::{RankMetrics, StepRecord};
 use crate::model::WorkerState;
 use crate::optim::engine::ComputeEngine;
@@ -30,12 +31,30 @@ pub fn run_worker(
     let mut metrics = RankMetrics { rank, ..Default::default() };
     let run_start = Instant::now();
 
+    // Error-feedback residual for compressed gradient publishes (the
+    // deep-gradient-compression recipe: fold the previous iteration's
+    // compression loss into this iteration's gradient before encoding).
+    let mut ef = ErrorFeedback::new();
+
     for t in 0..cfg.steps {
         let t0 = Instant::now();
         let (g, loss) = engine.grad(&state.params, t);
-        // One counted copy into a pooled buffer; `g` itself is kept for
-        // the stale blend below, so a move is not possible.
-        handle.publish(&g, t);
+        if cfg.compress.is_none() {
+            // One counted copy into a pooled buffer; `g` itself is kept
+            // for the stale blend below, so a move is not possible.
+            handle.publish(&g, t);
+        } else {
+            let mut gw = g.clone();
+            if handle.config().is_sync_iter(t) {
+                // Exact/rank-identical sync: deliver the delayed mass,
+                // charge no new residual (see wagma.rs).
+                ef.drain_into(&mut gw);
+            } else {
+                let chunk = handle.config().effective_chunk(gw.len());
+                ef.fold_chunked(cfg.compress, &mut gw, chunk);
+            }
+            handle.publish_owned(gw, t);
+        }
 
         let (g_avg, staleness): (Vec<f32>, u64) = if handle.config().is_sync_iter(t) {
             let sum = handle.global_sync(t);

@@ -14,6 +14,7 @@
 use std::time::Instant;
 
 use crate::collectives::engine::CollectiveEngine;
+use crate::compress::ErrorFeedback;
 use crate::metrics::{RankMetrics, StepRecord};
 use crate::model::WorkerState;
 use crate::optim::engine::ComputeEngine;
@@ -32,16 +33,40 @@ pub fn run_worker(
     let s = cfg.resolved_group_size() as f32;
     let mut state = WorkerState::new(cfg.init.clone());
     let mut metrics = RankMetrics { rank, ..Default::default() };
+    // With wire compression on, the published contribution carries the
+    // error-feedback residual of the previous lossy publish (dropped mass
+    // is delayed into the next iteration, never lost). The engine encodes
+    // per bucket on the wire; the worker's residual tracks the loss of its
+    // own contribution as the group sees it.
+    let mut ef = ErrorFeedback::new();
     let run_start = Instant::now();
 
     for t in 0..cfg.steps {
         let t0 = Instant::now();
         // Lines 3–7: local update W'_t.
         let loss = engine.step(&mut state, cfg.lr, t);
-        // One counted copy into a pooled buffer. The app must retain W'_t
-        // for the stale blend below, so a move (`publish_owned`) is not
-        // possible — but the seed's extra `state.params.clone()` is gone.
-        handle.publish(&state.params, t);
+        if cfg.compress.is_none() {
+            // One counted copy into a pooled buffer. The app must retain
+            // W'_t for the stale blend below, so a move (`publish_owned`)
+            // is not possible — but the seed's extra
+            // `state.params.clone()` is gone.
+            handle.publish(&state.params, t);
+        } else {
+            // The clone the exact path avoids is the residual-folded
+            // payload here: W'_t stays untouched for the stale blend.
+            let mut w = state.params.clone();
+            if handle.config().is_sync_iter(t) {
+                // The every-τ sync carries the contribution in full:
+                // deliver the delayed mass, charge no new residual
+                // (folding the group-path roundtrip here would re-inject
+                // mass the sync never dropped).
+                ef.drain_into(&mut w);
+            } else {
+                let chunk = handle.config().effective_chunk(w.len());
+                ef.fold_chunked(cfg.compress, &mut w, chunk);
+            }
+            handle.publish_owned(w, t);
+        }
 
         let staleness;
         if handle.config().is_sync_iter(t) {

@@ -19,6 +19,7 @@
 
 use std::str::FromStr;
 
+use crate::compress::Compression;
 use crate::config::TomlDoc;
 use crate::sched::profile::LayerProfile;
 use crate::simulator::NetworkModel;
@@ -183,10 +184,30 @@ impl FusionPlan {
         participants: usize,
         compute_seconds: f64,
     ) -> FusionPlan {
+        Self::build_compressed(profile, cfg, net, participants, compute_seconds, Compression::None)
+    }
+
+    /// [`FusionPlan::build`] with per-bucket wire compression priced into
+    /// the MG-WFBP cost model (the flat/threshold modes ignore the codec —
+    /// their partitions are size-driven, not cost-driven).
+    pub fn build_compressed(
+        profile: &LayerProfile,
+        cfg: &FusionConfig,
+        net: &NetworkModel,
+        participants: usize,
+        compute_seconds: f64,
+        compress: Compression,
+    ) -> FusionPlan {
         let plan = match cfg.mode {
             FusionMode::Flat => Self::flat(profile),
             FusionMode::Threshold => Self::threshold(profile, cfg.threshold_bytes),
-            FusionMode::MgWfbp => Self::mgwfbp(profile, net, participants, compute_seconds),
+            FusionMode::MgWfbp => Self::mgwfbp_compressed(
+                profile,
+                net,
+                participants,
+                compute_seconds,
+                compress,
+            ),
         };
         debug_assert!(plan.validate(profile).is_ok());
         plan
@@ -247,6 +268,23 @@ impl FusionPlan {
         participants: usize,
         compute_seconds: f64,
     ) -> FusionPlan {
+        Self::mgwfbp_compressed(profile, net, participants, compute_seconds, Compression::None)
+    }
+
+    /// MG-WFBP optimal merge with per-bucket wire compression priced in:
+    /// each candidate bucket costs
+    /// `net.allreduce_compressed(bytes, wire_bytes(bytes), participants)`,
+    /// so the DP sees both the smaller wire volume *and* the δ codec term
+    /// that compression adds per bucket — more, smaller buckets pay the
+    /// codec header/startup more often, exactly the tradeoff MG-WFBP's
+    /// cost-model-driven merging is meant to settle.
+    pub fn mgwfbp_compressed(
+        profile: &LayerProfile,
+        net: &NetworkModel,
+        participants: usize,
+        compute_seconds: f64,
+        compress: Compression,
+    ) -> FusionPlan {
         let l = profile.len();
         let participants = participants.max(2);
         let compute = compute_seconds.max(0.0);
@@ -264,7 +302,12 @@ impl FusionPlan {
             let ready = compute * profile.ready_frac(k - 1);
             for i in 0..k {
                 let bytes = pre[k] - pre[i];
-                let finish = best[i].max(ready) + net.allreduce(bytes, participants);
+                let comm = if compress.is_none() {
+                    net.allreduce(bytes, participants)
+                } else {
+                    net.allreduce_compressed(bytes, compress.wire_bytes(bytes), participants)
+                };
+                let finish = best[i].max(ready) + comm;
                 if finish < best[k] {
                     best[k] = finish;
                     cut[k] = i;
@@ -394,6 +437,25 @@ mod tests {
         let plan = FusionPlan::mgwfbp(&p, &net, 8, 0.0);
         plan.validate(&p).unwrap();
         assert_eq!(plan.num_buckets(), 1);
+    }
+
+    #[test]
+    fn mgwfbp_compressed_validates_and_prices_the_codec() {
+        let p = profile();
+        let net = NetworkModel::aries();
+        let comp = Compression::TopK { ratio: 0.1 };
+        let plan = FusionPlan::mgwfbp_compressed(&p, &net, 8, 0.4, comp);
+        plan.validate(&p).unwrap();
+        assert!(plan.num_buckets() >= 1 && plan.num_buckets() <= p.len());
+        // Compression::None delegates to the uncompressed DP exactly.
+        let none = FusionPlan::mgwfbp_compressed(&p, &net, 8, 0.4, Compression::None);
+        assert_eq!(none, FusionPlan::mgwfbp(&p, &net, 8, 0.4));
+        // build_compressed dispatches like build for the size-driven modes.
+        let cfg = FusionConfig { layered: true, ..Default::default() };
+        assert_eq!(
+            FusionPlan::build_compressed(&p, &cfg, &net, 8, 0.4, comp),
+            FusionPlan::build(&p, &cfg, &net, 8, 0.4),
+        );
     }
 
     #[test]

@@ -22,13 +22,37 @@ pub struct NetworkModel {
     /// the parallel efficiency"). This is what makes *group* collectives
     /// (small k) cheaper per byte than global ones, beyond phase count.
     pub contention: f64,
+    /// Per-byte (de)compression compute (seconds/byte) — the δ term. A
+    /// compressed exchange pays `delta` once per **raw** byte on each side
+    /// (encode reads the raw payload, decode writes it back), so shrinking
+    /// the wire volume is only worth it when
+    /// `wire·β_eff + 2·raw·δ < raw·β_eff` — the tradeoff
+    /// [`crate::sched::FusionPlan::mgwfbp_compressed`] and the simulator
+    /// price explicitly.
+    pub delta: f64,
+}
+
+/// Ceiling of log2(p) — the butterfly/recursive-doubling phase count for
+/// any `p >= 2` (non-powers-of-two pay a full extra phase, as in MPI's
+/// pre/post-processed recursive doubling).
+fn ceil_log2(p: usize) -> u32 {
+    debug_assert!(p >= 1);
+    usize::BITS - (p - 1).leading_zeros()
 }
 
 impl NetworkModel {
     /// Aries-like defaults (Piz Daint): α = 1.5 µs, 10 GB/s, ~8 GB/s
-    /// reduction rate, mild contention growth.
+    /// reduction rate, mild contention growth, ~20 GB/s single-core
+    /// codec throughput (top-k selection / int8 pack measured on Xeon-class
+    /// hosts lands in the 15–30 GB/s band).
     pub fn aries() -> NetworkModel {
-        NetworkModel { alpha: 1.5e-6, beta: 1.0 / 10e9, gamma: 1.0 / 8e9, contention: 0.12 }
+        NetworkModel {
+            alpha: 1.5e-6,
+            beta: 1.0 / 10e9,
+            gamma: 1.0 / 8e9,
+            contention: 0.12,
+            delta: 1.0 / 20e9,
+        }
     }
 
     fn beta_eff(&self, participants: usize) -> f64 {
@@ -48,13 +72,27 @@ impl NetworkModel {
         self.alpha + bytes as f64 * (self.beta_eff(participants) + self.gamma)
     }
 
+    /// One compressed butterfly exchange phase: `wire_bytes` travel and
+    /// are reduced, and each side pays the δ codec term on the **raw**
+    /// payload (encode our contribution + decode the partner's).
+    pub fn exchange_compressed(
+        &self,
+        raw_bytes: usize,
+        wire_bytes: usize,
+        participants: usize,
+    ) -> f64 {
+        self.exchange(wire_bytes, participants) + 2.0 * self.delta * raw_bytes as f64
+    }
+
     /// Recursive-doubling allreduce cost for `bytes` over `p` ranks,
-    /// assuming synchronized arrival: `log2(P) * exchange(N)`.
+    /// assuming synchronized arrival: `⌈log2(P)⌉ * exchange(N)`.
+    /// Non-powers-of-two pay the extra fold-in phase (the old
+    /// `trailing_zeros` form under-counted — one phase for p = 6).
     pub fn allreduce_rd(&self, bytes: usize, p: usize) -> f64 {
         if p <= 1 {
             return 0.0;
         }
-        (p.trailing_zeros() as f64) * self.exchange(bytes, p)
+        ceil_log2(p) as f64 * self.exchange(bytes, p)
     }
 
     /// Ring allreduce cost: `2 (P-1)` steps of `N/P` bytes.
@@ -66,17 +104,46 @@ impl NetworkModel {
         2.0 * (p - 1) as f64 * (self.alpha + chunk * (self.beta_eff(p) + self.gamma))
     }
 
+    /// Compressed ring allreduce: `2 (P-1)` steps whose segments travel at
+    /// `wire/P` bytes while the codec runs over the raw `N/P` segment on
+    /// both sides of every step (encode before send, decode-sum/adopt on
+    /// receive) — the engine's compressed τ-sync schedule.
+    pub fn allreduce_ring_compressed(
+        &self,
+        raw_bytes: usize,
+        wire_bytes: usize,
+        p: usize,
+    ) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let raw_seg = raw_bytes as f64 / p as f64;
+        let wire_seg = wire_bytes as f64 / p as f64;
+        2.0 * (p - 1) as f64
+            * (self.alpha + wire_seg * (self.beta_eff(p) + self.gamma) + 2.0 * self.delta * raw_seg)
+    }
+
     /// Best-of allreduce (what a tuned MPI would pick).
     pub fn allreduce(&self, bytes: usize, p: usize) -> f64 {
         self.allreduce_rd(bytes, p).min(self.allreduce_ring(bytes, p))
     }
 
-    /// Binomial-tree activation latency to depth `log2(P)`.
+    /// Best-of compressed allreduce: recursive doubling on wire-sized full
+    /// payloads vs the compressed ring, both carrying the δ codec term.
+    pub fn allreduce_compressed(&self, raw_bytes: usize, wire_bytes: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let rd = ceil_log2(p) as f64 * self.exchange_compressed(raw_bytes, wire_bytes, p);
+        rd.min(self.allreduce_ring_compressed(raw_bytes, wire_bytes, p))
+    }
+
+    /// Binomial-tree activation latency to depth `⌈log2(P)⌉`.
     pub fn activation(&self, p: usize) -> f64 {
         if p <= 1 {
             return 0.0;
         }
-        p.trailing_zeros() as f64 * self.alpha
+        ceil_log2(p) as f64 * self.alpha
     }
 }
 
@@ -96,6 +163,43 @@ mod tests {
         assert!(net.allreduce_rd(1 << 20, 256) > net.allreduce_rd(1 << 20, 16));
         assert!(net.p2p(1 << 20) > net.p2p(1 << 10));
         assert_eq!(net.allreduce(123, 1), 0.0);
+    }
+
+    /// Regression (ISSUE 3 satellite): `trailing_zeros` gave p = 6 a
+    /// single phase; recursive doubling needs ⌈log2(p)⌉ = 3.
+    #[test]
+    fn rd_phase_count_for_non_power_of_two() {
+        let net = NetworkModel::aries();
+        let bytes = 1 << 20;
+        let per_phase = net.exchange(bytes, 6);
+        assert!((net.allreduce_rd(bytes, 6) - 3.0 * per_phase).abs() < 1e-12);
+        // Monotone in p across the power-of-two boundary.
+        assert!(net.allreduce_rd(bytes, 6) >= net.allreduce_rd(bytes, 4));
+        assert!(net.allreduce_rd(bytes, 6) <= net.allreduce_rd(bytes, 8) + 1e-12);
+        // Powers of two unchanged: log2 phases exactly.
+        assert!((net.allreduce_rd(bytes, 8) - 3.0 * net.exchange(bytes, 8)).abs() < 1e-12);
+        assert_eq!(net.allreduce_rd(bytes, 1), 0.0);
+        // p = 2 is one phase.
+        assert!((net.allreduce_rd(bytes, 2) - net.exchange(bytes, 2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compressed_costs_trade_codec_for_bandwidth() {
+        let net = NetworkModel::aries();
+        // Bucket-sized payload at a 5x wire reduction: the δ term is paid
+        // but the bandwidth saving dominates.
+        let raw = 8 << 20;
+        let wire = raw / 5;
+        assert!(net.exchange_compressed(raw, wire, 8) < net.exchange(raw, 8));
+        assert!(net.allreduce_ring_compressed(raw, wire, 64) < net.allreduce_ring(raw, 64));
+        assert!(net.allreduce_compressed(raw, wire, 64) < net.allreduce(raw, 64));
+        // Degenerate wire == raw: compression only adds the codec cost.
+        let t = net.exchange_compressed(raw, raw, 8);
+        assert!((t - (net.exchange(raw, 8) + 2.0 * net.delta * raw as f64)).abs() < 1e-12);
+        // Tiny payload: latency-bound either way, compressed never wins by
+        // much and never goes negative.
+        assert!(net.exchange_compressed(64, 16, 8) > 0.0);
+        assert_eq!(net.allreduce_compressed(1024, 256, 1), 0.0);
     }
 
     #[test]

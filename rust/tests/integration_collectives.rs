@@ -7,6 +7,7 @@ use std::time::Duration;
 use wagma::collectives::allreduce::AllreduceAlgo;
 use wagma::collectives::engine::{ActivationMode, CollectiveEngine, EngineConfig, EngineStats};
 use wagma::comm::world;
+use wagma::compress::Compression;
 use wagma::topology::Grouping;
 
 fn cfg(p: usize, s: usize, tau: u64) -> EngineConfig {
@@ -18,6 +19,7 @@ fn cfg(p: usize, s: usize, tau: u64) -> EngineConfig {
         sync_algo: AllreduceAlgo::Auto,
         activation: ActivationMode::Solo,
         chunk_elems: 0,
+        compression: Compression::None,
     }
 }
 

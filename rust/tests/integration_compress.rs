@@ -1,0 +1,209 @@
+//! Property tests for the compression subsystem's invariants (ISSUE 3):
+//!
+//! * **Mass conservation** — for TopK, `decompress(compress(g)) + residual`
+//!   reproduces `g` bitwise (values ride the wire exactly; the
+//!   error-feedback accumulator carries the dropped complement).
+//! * **Quantization bound** — QuantizeQ8's round-trip error is at most
+//!   `scale / 2` per element.
+//! * **Ratio-1.0 exactness** — a compressed chunked engine exchange at
+//!   top-k ratio 1.0 is bitwise-identical to the uncompressed path, for
+//!   random worlds, models, and chunk granularities.
+
+use std::sync::{Arc, Barrier};
+
+use wagma::collectives::allreduce::AllreduceAlgo;
+use wagma::collectives::engine::{ActivationMode, CollectiveEngine, EngineConfig};
+use wagma::comm::world;
+use wagma::compress::{Compression, Compressor, EncodeScratch, QuantizeQ8, TopK};
+use wagma::prop_assert;
+use wagma::util::proptest::{check, check_with, Config};
+
+/// Mass conservation: for every element, `decode(encode(g))[i] + residual[i]`
+/// equals `g[i]` bitwise, where `residual = g - decode(encode(g))`.
+#[test]
+fn prop_topk_mass_conservation_bitwise() {
+    check("topk-mass-conservation", |g| {
+        let n = g.usize_in(1, 4 * g.size.max(1));
+        let ratio = g.f64_in(0.05, 1.0);
+        // Map the (measure-zero but theoretically possible) -0.0 to +0.0:
+        // IEEE addition folds -0.0 + 0.0 to +0.0, which is the one bit
+        // pattern the conservation identity cannot preserve.
+        let input: Vec<f32> =
+            g.vec_f32(n).into_iter().map(|x| if x == 0.0 { 0.0 } else { x }).collect();
+        let codec = TopK::new(ratio);
+        let mut enc = vec![0.0f32; codec.encoded_words(n)];
+        codec.encode(&input, &mut enc, &mut EncodeScratch::default());
+        let mut decoded = vec![f32::NAN; n];
+        codec.decode_overwrite(&enc, &mut decoded);
+        for i in 0..n {
+            let residual = input[i] - decoded[i];
+            // Kept entries decode bit-exactly (residual 0); dropped
+            // entries decode to 0 (residual carries the full value).
+            prop_assert!(
+                decoded[i].to_bits() == input[i].to_bits() || decoded[i] == 0.0,
+                "element {i}: decoded {} from {}",
+                decoded[i],
+                input[i]
+            );
+            let restored = decoded[i] + residual;
+            prop_assert!(
+                restored.to_bits() == input[i].to_bits(),
+                "element {i}: {} + {} != {} (n={n} ratio={ratio})",
+                decoded[i],
+                residual,
+                input[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+/// QuantizeQ8 round-trip error is bounded by `scale / 2` per element
+/// (plus a whisker of f32 slack from the decode multiply).
+#[test]
+fn prop_q8_roundtrip_error_bounded() {
+    check("q8-error-bound", |g| {
+        let n = g.usize_in(1, 8 * g.size.max(1));
+        let amp = g.f64_in(1e-3, 1e4) as f32;
+        let input: Vec<f32> = g.vec_f32(n).into_iter().map(|x| x * amp).collect();
+        let codec = QuantizeQ8;
+        let mut enc = vec![0.0f32; codec.encoded_words(n)];
+        codec.encode(&input, &mut enc, &mut EncodeScratch::default());
+        let scale = enc[1];
+        let max_abs = input.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        prop_assert!(
+            (scale - max_abs / 127.0).abs() <= max_abs * 1e-6,
+            "scale {scale} vs max|x|/127 {}",
+            max_abs / 127.0
+        );
+        let mut decoded = vec![f32::NAN; n];
+        codec.decode_overwrite(&enc, &mut decoded);
+        let bound = scale as f64 * 0.5 * (1.0 + 1e-5) + 1e-30;
+        for i in 0..n {
+            let err = (input[i] as f64 - decoded[i] as f64).abs();
+            prop_assert!(
+                err <= bound,
+                "element {i}: |{} - {}| = {err} > {bound}",
+                input[i],
+                decoded[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Folding the residual twice reproduces the full mass over two
+/// iterations: after compressing `w` then compressing a zero vector, the
+/// decoded outputs sum to `w` exactly (TopK keeps values bitwise and the
+/// two kept sets are complementary when ratio ≥ 0.5).
+#[test]
+fn prop_error_feedback_recovers_mass_within_two_folds() {
+    use wagma::compress::ErrorFeedback;
+    check_with(Config { cases: 64, ..Default::default() }, "ef-two-fold-recovery", |g| {
+        let n = g.usize_in(2, 2 * g.size.max(2));
+        let comp = Compression::TopK { ratio: 0.5 };
+        let mut ef = ErrorFeedback::new();
+        let w0: Vec<f32> =
+            g.vec_f32(n).into_iter().map(|x| if x == 0.0 { 0.0 } else { x }).collect();
+        let mut first = w0.clone();
+        ef.fold(comp, &mut first); // publishes w0; residual = dropped part
+        // The first fold published w0's top half; the residual carries the
+        // dropped half exactly.
+        let r1 = ef.residual().to_vec();
+        for i in 0..n {
+            let decoded = first[i] - r1[i];
+            prop_assert!(
+                (decoded + r1[i]).to_bits() == w0[i].to_bits(),
+                "fold 1 lost mass at {i}"
+            );
+        }
+        // Folding a zero follow-up publishes exactly the carried residual:
+        // its support (n - k ≤ k nonzeros) fits in the keep set, so the
+        // residual drains completely — no mass is ever lost, only delayed.
+        let mut second = vec![0.0f32; n];
+        ef.fold(comp, &mut second);
+        for (i, (&s2, &r)) in second.iter().zip(&r1).enumerate() {
+            prop_assert!(s2.to_bits() == r.to_bits(), "fold 2 payload at {i}: {s2} vs {r}");
+        }
+        prop_assert!(
+            ef.residual().iter().all(|&e| e == 0.0),
+            "residual not drained after two folds (n={n})"
+        );
+        Ok(())
+    });
+}
+
+/// Engine-level exactness: a compressed chunked exchange at top-k ratio
+/// 1.0 produces bitwise-identical group sums to the uncompressed path,
+/// for random (P, S, dim, chunk) worlds.
+#[test]
+fn prop_compressed_ratio_one_exchange_bitwise_identical() {
+    fn run_world(
+        p: usize,
+        s: usize,
+        chunk_elems: usize,
+        comp: Compression,
+        inputs: &Arc<Vec<Vec<f32>>>, // [rank] -> model
+    ) -> Vec<Vec<f32>> {
+        let cfg = EngineConfig {
+            p,
+            group_size: s,
+            tau: 0,
+            dynamic_groups: true,
+            sync_algo: AllreduceAlgo::Auto,
+            activation: ActivationMode::Solo,
+            chunk_elems,
+            compression: comp,
+        };
+        let dim = inputs[0].len();
+        let barrier = Arc::new(Barrier::new(p));
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| CollectiveEngine::spawn(ep, cfg, vec![0.0; dim]))
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                let barrier = barrier.clone();
+                let inputs = inputs.clone();
+                std::thread::spawn(move || {
+                    let rank = eng.rank();
+                    eng.publish_owned(inputs[rank].clone(), 0);
+                    barrier.wait();
+                    let sum = eng.group_allreduce(0).sum;
+                    let _ = eng.shutdown();
+                    (rank, sum)
+                })
+            })
+            .collect();
+        let mut out: Vec<(usize, Vec<f32>)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        out.sort_by_key(|r| r.0);
+        out.into_iter().map(|(_, v)| v).collect()
+    }
+
+    check_with(
+        Config { cases: 12, max_size: 24, ..Default::default() },
+        "compressed-ratio-one-exchange",
+        |g| {
+            let p = g.pow2_in(2, 8);
+            let s = g.pow2_in(2, p);
+            let dim = g.usize_in(1, 3 * g.size.max(1));
+            let chunk = if g.bool() { 0 } else { g.usize_in(1, dim) };
+            let inputs: Arc<Vec<Vec<f32>>> =
+                Arc::new((0..p).map(|_| g.vec_f32(dim)).collect());
+            let plain = run_world(p, s, chunk, Compression::None, &inputs);
+            let compressed =
+                run_world(p, s, chunk, Compression::TopK { ratio: 1.0 }, &inputs);
+            for (rank, (a, b)) in plain.iter().zip(&compressed).enumerate() {
+                for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                    prop_assert!(
+                        x.to_bits() == y.to_bits(),
+                        "P={p} S={s} dim={dim} chunk={chunk} rank={rank} elem {j}: {x} vs {y}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}

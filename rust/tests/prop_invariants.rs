@@ -3,6 +3,7 @@
 
 use wagma::collectives::allreduce::{allreduce_sum, allreduce_sum_ring};
 use wagma::comm::world;
+use wagma::compress::Compression;
 use wagma::prop_assert;
 use wagma::rl::ppo::gae;
 use wagma::sched::{FusionMode, FusionPlan, LayerProfile};
@@ -168,6 +169,7 @@ fn prop_chunked_group_allreduce_bitwise_matches_unchunked() {
             sync_algo: AllreduceAlgo::Auto,
             activation: ActivationMode::Solo,
             chunk_elems,
+            compression: Compression::None,
         };
         let dim = inputs[0][0].len();
         let barrier = Arc::new(Barrier::new(p));
