@@ -52,6 +52,7 @@ fn bench_group_allreduce(b: &mut Bencher, p: usize, s: usize, n: usize, iters: u
             activation: ActivationMode::Solo,
             chunk_elems: 0,
             compression: Compression::None,
+            trace: true,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()

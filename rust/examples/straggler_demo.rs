@@ -27,6 +27,7 @@ fn main() {
         activation: ActivationMode::Solo,
         chunk_elems: 0,
         compression: Compression::None,
+        trace: true,
     };
     println!("Fig. 3 demo: P=4, S=2, tau={tau}; rank 1 is the straggler\n");
     let (log_tx, log_rx) = channel::<(u64, usize, String)>();

@@ -41,8 +41,9 @@ use crate::config::preset;
 use crate::data::StepDelays;
 use crate::optim::Algorithm;
 use crate::sched::{FusionConfig, FusionPlan, LayerProfile};
-use crate::simulator::simulated_overlap_fraction;
+use crate::simulator::{simulated_overlap_fraction, NetworkModel};
 use crate::topology::{log2_exact, Grouping};
+use crate::trace::{attribute, now_ns, HistogramRegistry, Lane, TraceEvent, TraceKind};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::stats::Summary;
 
@@ -80,6 +81,11 @@ pub struct MeasuredRun {
     pub pool_allocs: u64,
     pub group_collectives: u64,
     pub global_syncs: u64,
+    /// Merged per-rank trace timelines (app + engine lanes), sorted by
+    /// start time.
+    pub trace: Vec<TraceEvent>,
+    /// Events lost to ring overflow across all ranks (0 at these scales).
+    pub dropped_trace_events: u64,
 }
 
 /// Spin-accurate busy wait (sleeps the bulk, spins the tail).
@@ -110,6 +116,7 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
         activation: ActivationMode::Solo,
         chunk_elems: cfg.chunk_elems,
         compression: cfg.compression,
+        trace: true,
     };
     let start = Instant::now();
     let engines: Vec<CollectiveEngine> = world(cfg.p)
@@ -128,11 +135,17 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
             let compute = compute.clone();
             thread::spawn(move || {
                 let rank = eng.rank();
+                let tracer = eng.tracer();
                 let mut waits = Vec::with_capacity(steps as usize);
                 let mut iters = Vec::with_capacity(steps as usize);
                 for t in 0..steps {
                     let it0 = Instant::now();
+                    let comp0 = now_ns();
                     busy_compute(Duration::from_secs_f64(compute[t as usize][rank]));
+                    let mut ev =
+                        TraceEvent::new(TraceKind::Compute, Lane::App, comp0, now_ns() - comp0);
+                    ev.version = t;
+                    tracer.record(ev);
                     let w = vec![rank as f32 + t as f32; dim];
                     let c0 = Instant::now();
                     eng.publish_owned(w, t);
@@ -146,19 +159,23 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
                     waits.push(c0.elapsed().as_secs_f64());
                     iters.push(it0.elapsed().as_secs_f64());
                 }
-                (waits, iters, eng.shutdown())
+                let stats = eng.shutdown();
+                (waits, iters, stats, tracer.drain())
             })
         })
         .collect();
     let mut waits = Vec::new();
     let mut iters = Vec::new();
     let mut stats: Vec<EngineStats> = Vec::new();
+    let mut trace = Vec::new();
     for h in handles {
-        let (w, i, st) = h.join().unwrap();
+        let (w, i, st, tr) = h.join().unwrap();
         waits.extend(w);
         iters.extend(i);
         stats.push(st);
+        trace.extend(tr);
     }
+    trace.sort_by_key(|e| (e.t_ns, e.rank, e.lane.index(), e.kind.index()));
     let rank_iters = (cfg.p as u64 * steps) as f64;
     MeasuredRun {
         wait: Summary::of(&waits),
@@ -170,6 +187,8 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
         pool_allocs: stats.iter().map(|s| s.pool_allocs).sum(),
         group_collectives: stats.iter().map(|s| s.group_collectives).sum(),
         global_syncs: stats.iter().map(|s| s.global_syncs).sum(),
+        trace,
+        dropped_trace_events: stats.iter().map(|s| s.dropped_trace_events).sum(),
     }
 }
 
@@ -267,6 +286,18 @@ pub fn bench_preset(name: &str, quick: bool, seed: u64) -> Json {
 /// carries measured bytes-on-wire and achieved overlap with and without
 /// compression. `Compression::None` skips the compressed arm.
 pub fn bench_preset_compressed(name: &str, quick: bool, seed: u64, comp: Compression) -> Json {
+    bench_preset_traced(name, quick, seed, comp).0
+}
+
+/// [`bench_preset_compressed`] that also hands back the layered run's
+/// merged trace timeline, for Chrome-trace export (`wagma bench --trace`)
+/// and the measured-vs-simulated attribution diff (`wagma trace`).
+pub fn bench_preset_traced(
+    name: &str,
+    quick: bool,
+    seed: u64,
+    comp: Compression,
+) -> (Json, Vec<TraceEvent>) {
     let case = preset_case(name, quick);
     let mk = |chunk_elems: usize, serial: bool, compression: Compression| -> MeasuredRun {
         let cfg = MeasuredConfig {
@@ -352,6 +383,26 @@ pub fn bench_preset_compressed(name: &str, quick: bool, seed: u64, comp: Compres
         );
     }
 
+    // Trace/attribution summary from the layered run's merged timeline.
+    // Span counts and bytes-on-wire are code-structural (same determinism
+    // argument as `sent_bytes`), so they are baseline-gateable; the wait
+    // percentiles and attribution seconds are wall-clock.
+    let att = attribute(&layered.trace, &NetworkModel::aries());
+    let wait_hist = HistogramRegistry::from_events(
+        layered.trace.iter().filter(|e| e.lane == Lane::App && e.kind == TraceKind::Wait),
+    );
+    let wh = wait_hist.kind(TraceKind::Wait);
+    let trace_json = obj(vec![
+        ("phase_spans", num(att.phase_spans as f64)),
+        ("tau_sync_spans", num(att.tau_sync_spans as f64)),
+        ("phase_wire_bytes", num(att.phase_wire_bytes as f64)),
+        ("sync_wire_bytes", num(att.sync_wire_bytes as f64)),
+        ("dropped_events", num(layered.dropped_trace_events as f64)),
+        ("wait_p50_s", num(wh.quantile(0.5) * 1e-9)),
+        ("wait_p99_s", num(wh.quantile(0.99) * 1e-9)),
+        ("attribution", att.to_json()),
+    ]);
+
     let run_json = |r: &MeasuredRun, ov: f64| {
         obj(vec![
             ("wait_p50_s", num(r.wait.p50)),
@@ -365,7 +416,7 @@ pub fn bench_preset_compressed(name: &str, quick: bool, seed: u64, comp: Compres
             ("overlap_fraction", num(ov)),
         ])
     };
-    obj(vec![
+    let json = obj(vec![
         ("preset", s(&case.name)),
         ("p", num(case.p as f64)),
         ("dim", num(case.dim as f64)),
@@ -400,6 +451,7 @@ pub fn bench_preset_compressed(name: &str, quick: bool, seed: u64, comp: Compres
                 .unwrap_or(Json::Null),
         ),
         ("serial_wait_p50_s", num(layered_serial.wait.p50)),
+        ("trace", trace_json),
         (
             "legacy_model",
             obj(vec![
@@ -437,7 +489,8 @@ pub fn bench_preset_compressed(name: &str, quick: bool, seed: u64, comp: Compres
                 })
                 .unwrap_or(Json::Null),
         ),
-    ])
+    ]);
+    (json, layered.trace)
 }
 
 #[cfg(test)]

@@ -70,6 +70,9 @@ use crate::comm::{
     BufferPool, Chunk, Endpoint, MailboxSender, Message, Payload, PoolStats, SharedBuf, Tag,
 };
 use crate::topology::{log2_exact, BinomialTree, Grouping};
+use crate::trace::{
+    now_ns, Lane, LogHistogram, TraceEvent, TraceKind, TraceRecorder, TRACE_RING_CAPACITY,
+};
 use crate::util::sum_into;
 
 /// Stamp of a send buffer that has never been published by the
@@ -145,6 +148,13 @@ pub struct EngineConfig {
     /// `Compression::None` takes the exact pre-compression code paths,
     /// bit-identical to the uncompressed build.
     pub compression: Compression,
+    /// Always-on tracing ([`crate::trace`]): one span per butterfly phase
+    /// and τ-sync on the engine lane, publish/wait spans on the app lane.
+    /// Recording is fixed-capacity drop-oldest with zero steady-state
+    /// allocations and never touches the data path (`copied_bytes` /
+    /// `pool_allocs` are bit-identical with tracing on or off); `false`
+    /// turns the recorder into a no-op.
+    pub trace: bool,
 }
 
 /// How a collective instance gets triggered.
@@ -222,7 +232,8 @@ struct ResultMaps {
     engine_done: bool,
 }
 
-/// Aggregate staleness counters (lock-free accessors for metrics).
+/// Aggregate staleness counters (cheap accessors for metrics; backed by
+/// the log-bucketed staleness histogram).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StalenessStats {
     pub count: u64,
@@ -246,12 +257,14 @@ struct EngineShared {
     results_cv: Condvar,
     /// Staleness samples since the last `staleness_samples` drain.
     staleness: Mutex<Vec<u64>>,
-    stale_count: AtomicU64,
-    stale_total: AtomicU64,
-    stale_max: AtomicU64,
+    /// Running staleness aggregates: the trace layer's log-bucketed
+    /// histogram (exact count/sum/max, bucketed quantiles).
+    staleness_hist: Mutex<LogHistogram>,
     /// Payload bytes the application-side API memcpy'd (the borrowing
     /// `publish`); merged into [`EngineStats::copied_bytes`] at shutdown.
     app_copied_bytes: AtomicU64,
+    /// Per-rank span recorder (app + engine lanes, lock-split).
+    trace: Arc<TraceRecorder>,
 }
 
 /// Handle owned by the application thread.
@@ -283,6 +296,13 @@ pub struct EngineStats {
     /// Fresh allocations the endpoint's buffer pool had to make (fixed
     /// after warmup when the application publishes by move).
     pub pool_allocs: u64,
+    /// Trace events lost to ring overflow (drop-oldest), both lanes.
+    pub dropped_trace_events: u64,
+    /// Engine-thread ns blocked in matched receives during group
+    /// butterfly phases (wait-for-peer; always counted, traced or not).
+    pub wait_group_ns: u64,
+    /// Engine-thread ns blocked in matched receives during every-τ syncs.
+    pub wait_sync_ns: u64,
 }
 
 impl CollectiveEngine {
@@ -300,10 +320,9 @@ impl CollectiveEngine {
             results: Mutex::new(ResultMaps::default()),
             results_cv: Condvar::new(),
             staleness: Mutex::new(Vec::new()),
-            stale_count: AtomicU64::new(0),
-            stale_total: AtomicU64::new(0),
-            stale_max: AtomicU64::new(0),
+            staleness_hist: Mutex::new(LogHistogram::default()),
             app_copied_bytes: AtomicU64::new(0),
+            trace: Arc::new(TraceRecorder::new(rank as u32, cfg.trace, TRACE_RING_CAPACITY)),
         });
         let to_engine = ep.self_sender();
         let sh = shared.clone();
@@ -345,9 +364,17 @@ impl CollectiveEngine {
 
     /// Install an already-shared buffer as the contribution for stamp `t`.
     pub fn publish_shared(&self, buf: SharedBuf, t: u64) {
-        let mut slot = self.shared.slot.lock().unwrap();
-        slot.buf = buf; // the superseded buffer retires to its home pool
-        slot.stamp = t;
+        let t0 = now_ns();
+        let bytes = (buf.len() * 4) as u64;
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.buf = buf; // the superseded buffer retires to its home pool
+            slot.stamp = t;
+        }
+        let mut ev = TraceEvent::new(TraceKind::Publish, Lane::App, t0, now_ns() - t0);
+        ev.version = t;
+        ev.bytes = bytes;
+        self.shared.trace.record(ev);
     }
 
     /// Wait-avoiding group allreduce for iteration `t`. Returns the group
@@ -356,6 +383,7 @@ impl CollectiveEngine {
     /// returns immediately with `contributed_stamp < t`.
     pub fn group_allreduce(&self, t: u64) -> GroupResult {
         debug_assert!(!self.cfg.is_sync_iter(t), "iteration {t} is a sync point");
+        let t0 = now_ns();
         // Wake the engine: request active participation.
         self.to_engine.send(Message {
             src: self.rank,
@@ -372,30 +400,39 @@ impl CollectiveEngine {
                 g = self.shared.results_cv.wait(g).unwrap();
             }
         };
+        // The request→result window is the rank's exposed communication.
+        let mut ev = TraceEvent::new(TraceKind::Wait, Lane::App, t0, now_ns() - t0);
+        ev.version = t;
+        self.shared.trace.record(ev);
         let s = r.staleness(t);
         self.shared.staleness.lock().unwrap().push(s);
-        self.shared.stale_count.fetch_add(1, Ordering::Relaxed);
-        self.shared.stale_total.fetch_add(s, Ordering::Relaxed);
-        self.shared.stale_max.fetch_max(s, Ordering::Relaxed);
+        self.shared.staleness_hist.lock().unwrap().record(s);
         r
     }
 
     /// Global synchronous allreduce for iteration `t` (Alg. 2 line 16).
     /// `w` must already be published. Returns the global sum over all P.
     pub fn global_sync(&self, t: u64) -> Vec<f32> {
+        let t0 = now_ns();
         self.to_engine.send(Message {
             src: self.rank,
             tag: Tag::sync(t, 0),
             payload: Payload::AppSync { version: t },
         });
-        let mut g = self.shared.results.lock().unwrap();
-        loop {
-            if let Some(r) = g.sync.remove(&t) {
-                return r;
+        let r = {
+            let mut g = self.shared.results.lock().unwrap();
+            loop {
+                if let Some(r) = g.sync.remove(&t) {
+                    break r;
+                }
+                assert!(!g.engine_done, "engine terminated with pending sync {t}");
+                g = self.shared.results_cv.wait(g).unwrap();
             }
-            assert!(!g.engine_done, "engine terminated with pending sync {t}");
-            g = self.shared.results_cv.wait(g).unwrap();
-        }
+        };
+        let mut ev = TraceEvent::new(TraceKind::Wait, Lane::App, t0, now_ns() - t0);
+        ev.version = t;
+        self.shared.trace.record(ev);
+        r
     }
 
     /// Staleness samples observed since the previous call (a cheap
@@ -405,13 +442,29 @@ impl CollectiveEngine {
         std::mem::take(&mut *self.shared.staleness.lock().unwrap())
     }
 
-    /// Running staleness aggregates (count / total / max), lock-free.
+    /// Running staleness aggregates (count / total / max), read off the
+    /// log-bucketed histogram's exact counters.
     pub fn staleness_stats(&self) -> StalenessStats {
-        StalenessStats {
-            count: self.shared.stale_count.load(Ordering::Relaxed),
-            total: self.shared.stale_total.load(Ordering::Relaxed),
-            max: self.shared.stale_max.load(Ordering::Relaxed),
-        }
+        let h = self.shared.staleness_hist.lock().unwrap();
+        StalenessStats { count: h.count(), total: h.sum(), max: h.max() }
+    }
+
+    /// The full staleness distribution (log-bucketed; exact
+    /// count/sum/min/max, quantiles to bucket resolution).
+    pub fn staleness_histogram(&self) -> LogHistogram {
+        self.shared.staleness_hist.lock().unwrap().clone()
+    }
+
+    /// Handle to this rank's span recorder. Clone-cheap (`Arc`); keep one
+    /// around to [`TraceRecorder::drain`] events after
+    /// [`shutdown`](Self::shutdown) has consumed the engine.
+    pub fn tracer(&self) -> Arc<TraceRecorder> {
+        self.shared.trace.clone()
+    }
+
+    /// Drain all trace events recorded so far (both lanes, time-sorted).
+    pub fn trace_events(&self) -> Vec<TraceEvent> {
+        self.shared.trace.drain()
     }
 
     /// The endpoint buffer pool's counters (test/bench hook).
@@ -464,6 +517,13 @@ struct EngineRun {
     scratch: EncodeScratch,
     quit: bool,
     stats: EngineStats,
+    /// Blocked-receive ns accumulated by `recv_with_ctrl` since the last
+    /// reset — read out per phase/sync to emit nested `Wait` spans.
+    phase_wait_ns: u64,
+    /// Codec encode ns accumulated by the compressed exchange paths.
+    phase_encode_ns: u64,
+    /// Codec decode/decompress-sum ns, likewise.
+    phase_decode_ns: u64,
 }
 
 /// Majority-mode arrival bookkeeping at the version leader: activate once
@@ -520,6 +580,9 @@ fn engine_main(mut ep: Endpoint, cfg: EngineConfig, shared: Arc<EngineShared>) -
         scratch: EncodeScratch::default(),
         quit: false,
         stats: EngineStats::default(),
+        phase_wait_ns: 0,
+        phase_encode_ns: 0,
+        phase_decode_ns: 0,
     };
 
     loop {
@@ -550,6 +613,7 @@ fn engine_main(mut ep: Endpoint, cfg: EngineConfig, shared: Arc<EngineShared>) -
     run.stats.copied_bytes =
         ep.copied_bytes + run.shared.app_copied_bytes.load(Ordering::Relaxed);
     run.stats.pool_allocs = run.pool.stats().allocs;
+    run.stats.dropped_trace_events = run.shared.trace.dropped();
     let mut g = run.shared.results.lock().unwrap();
     g.engine_done = true;
     drop(g);
@@ -653,10 +717,15 @@ fn exchange_reduce_compressed(
 ) -> SharedBuf {
     let comp = run.cfg.compression;
     let mut enc = run.pool.take(comp.encoded_words(acc.len()));
+    let e0 = now_ns();
     comp.encode(acc.as_slice(), enc.data_mut(), &mut run.scratch);
+    run.phase_encode_ns += now_ns() - e0;
     ep.send_chunk(partner, tag, Chunk::full(Arc::new(enc)));
     let rhs = recv_with_ctrl(ep, run, partner, tag);
-    decode_sum_shared(&run.pool, comp, acc, rhs.as_slice())
+    let d0 = now_ns();
+    let out = decode_sum_shared(&run.pool, comp, acc, rhs.as_slice());
+    run.phase_decode_ns += now_ns() - d0;
+    out
 }
 
 /// One compressed chunked butterfly phase: each chunk — the engine-level
@@ -679,7 +748,9 @@ fn exchange_reduce_chunked_compressed(
         let lo = c * chunk;
         let hi = (lo + chunk).min(n);
         let mut enc = run.pool.take(comp.encoded_words(hi - lo));
+        let e0 = now_ns();
         comp.encode(&acc.as_slice()[lo..hi], enc.data_mut(), &mut run.scratch);
+        run.phase_encode_ns += now_ns() - e0;
         ep.send_chunk(partner, chunk_tag(v, r, c), Chunk::full(Arc::new(enc)));
     }
     let mut out = run.pool.take(n);
@@ -688,9 +759,56 @@ fn exchange_reduce_chunked_compressed(
         let lo = c * chunk;
         let hi = (lo + chunk).min(n);
         let rhs = recv_with_ctrl(ep, run, partner, chunk_tag(v, r, c));
+        let d0 = now_ns();
         comp.decode_add(rhs.as_slice(), &mut out.data_mut()[lo..hi]);
+        run.phase_decode_ns += now_ns() - d0;
     }
     Arc::new(out)
+}
+
+/// Emit the span for one completed exchange phase / sync, plus nested
+/// `Wait`/`Encode`/`Decode` sub-spans aggregated from the accumulators
+/// (anchored at the span start, so nesting invariants hold by
+/// construction), and fold the blocked time into the per-phase stats.
+#[allow(clippy::too_many_arguments)]
+fn record_engine_span(
+    run: &mut EngineRun,
+    kind: TraceKind,
+    v: u64,
+    phase: u32,
+    t0: u64,
+    end: u64,
+    wire_bytes: u64,
+    passive: bool,
+) {
+    match kind {
+        TraceKind::TauSync => run.stats.wait_sync_ns += run.phase_wait_ns,
+        _ => run.stats.wait_group_ns += run.phase_wait_ns,
+    }
+    if run.shared.trace.is_enabled() {
+        let mut ev = TraceEvent::new(kind, Lane::Engine, t0, end - t0);
+        ev.version = v;
+        ev.phase = phase;
+        ev.bytes = wire_bytes;
+        ev.passive = passive;
+        run.shared.trace.record(ev);
+        for (sub, dur) in [
+            (TraceKind::Wait, run.phase_wait_ns),
+            (TraceKind::Encode, run.phase_encode_ns),
+            (TraceKind::Decode, run.phase_decode_ns),
+        ] {
+            if dur > 0 {
+                let mut ev = TraceEvent::new(sub, Lane::Engine, t0, dur.min(end - t0));
+                ev.version = v;
+                ev.phase = phase;
+                ev.passive = passive;
+                run.shared.trace.record(ev);
+            }
+        }
+    }
+    run.phase_wait_ns = 0;
+    run.phase_encode_ns = 0;
+    run.phase_decode_ns = 0;
 }
 
 /// Execute the group allreduce schedule for `run.next`.
@@ -699,6 +817,7 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
     // NOTE: v stays in `activated` until the schedule completes so that
     // quorum bookkeeping (majority mode) does not re-activate a version
     // that is mid-execution; both sets are cleared below.
+    let passive = run.app_group != Some(v);
     if run.app_group == Some(v) {
         run.app_group = None;
     } else {
@@ -725,12 +844,25 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
     let compressed = !run.cfg.compression.is_none();
     for r in 0..run.grouping.phases() {
         let partner = run.grouping.partner(ep.rank(), v, r);
+        let wire0 = ep.sent_bytes;
+        let t0 = now_ns();
         acc = match (chunk, compressed) {
             (0, false) => exchange_reduce(ep, run, partner, Tag::exchange(v, r), acc),
             (0, true) => exchange_reduce_compressed(ep, run, partner, Tag::exchange(v, r), acc),
             (_, false) => exchange_reduce_chunked(ep, run, partner, v, r, chunk, acc),
             (_, true) => exchange_reduce_chunked_compressed(ep, run, partner, v, r, chunk, acc),
         };
+        let end = now_ns();
+        record_engine_span(
+            run,
+            TraceKind::GroupExchangePhase,
+            v,
+            r,
+            t0,
+            end,
+            ep.sent_bytes - wire0,
+            passive,
+        );
     }
 
     run.stats.group_collectives += 1;
@@ -756,6 +888,8 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
 fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
     let contrib: SharedBuf = run.shared.slot.lock().unwrap().buf.clone();
     let p = ep.p();
+    let wire0 = ep.sent_bytes;
+    let t0 = now_ns();
     let result: Vec<f32> = if p > 2 && contrib.len() >= RING_THRESHOLD {
         if run.cfg.compression.is_none() {
             ring_sync(ep, run, ts, contrib)
@@ -775,6 +909,17 @@ fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
         ep.copied_bytes += (contrib.len() * 4) as u64;
         contrib.as_slice().to_vec()
     };
+    let end = now_ns();
+    record_engine_span(
+        run,
+        TraceKind::TauSync,
+        ts,
+        crate::trace::NO_PHASE,
+        t0,
+        end,
+        ep.sent_bytes - wire0,
+        false,
+    );
     run.stats.global_syncs += 1;
     // The sync is a barrier: every rank has executed all group versions
     // below ts, so the engine's next pointer can jump past it.
@@ -823,16 +968,19 @@ fn ring_sync_compressed(
 fn recv_with_ctrl(ep: &mut Endpoint, run: &mut EngineRun, src: usize, tag: Tag) -> Chunk {
     // We cannot borrow `run` inside the closure while also using it after,
     // so collect control messages and process them after each wait.
-    loop {
+    let w0 = now_ns();
+    let data = loop {
         let mut ctrl: Vec<Message> = Vec::new();
         let got = ep.recv_data_or_ctrl(src, tag, &mut ctrl);
         for m in ctrl {
             handle_ctrl(ep, run, m);
         }
         if let Some(data) = got {
-            return data;
+            break data;
         }
-    }
+    };
+    run.phase_wait_ns += now_ns() - w0;
+    data
 }
 
 #[cfg(test)]
@@ -853,6 +1001,7 @@ mod tests {
             activation: ActivationMode::Solo,
             chunk_elems: 0,
             compression: Compression::None,
+            trace: true,
         }
     }
 
@@ -1165,6 +1314,7 @@ mod majority_tests {
             activation: ActivationMode::Majority,
             chunk_elems: 0,
             compression: Compression::None,
+            trace: true,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()
@@ -1219,6 +1369,7 @@ mod majority_tests {
             activation: ActivationMode::Majority,
             chunk_elems: 0,
             compression: Compression::None,
+            trace: true,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()
@@ -1307,6 +1458,7 @@ mod compression_tests {
             activation: ActivationMode::Solo,
             chunk_elems: chunk,
             compression: comp,
+            trace: true,
         }
     }
 

@@ -131,6 +131,7 @@ impl ExperimentPreset {
             seed,
             fusion: self.fusion,
             compress: self.compress,
+            trace: false,
         }
     }
 }

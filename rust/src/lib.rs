@@ -44,4 +44,5 @@ pub mod runtime;
 pub mod sched;
 pub mod simulator;
 pub mod topology;
+pub mod trace;
 pub mod util;

@@ -8,34 +8,51 @@
 //!        makespan study and the compression ratio × τ × group-size sweep.
 //!   train  --model <name> --algo <name> --p N --steps N [--lr F] [--tau N]
 //!          [--group-size N] [--static-groups] [--eval-every N] [--out results]
-//!          [--compression none|topk|q8] [--topk-ratio F]
+//!          [--compression none|topk|q8] [--topk-ratio F] [--trace FILE]
 //!        Real multi-worker training through the PJRT artifacts. With
 //!        compression on, WAGMA/eager workers carry an error-feedback
 //!        residual and the engine sends per-bucket encoded payloads.
+//!        --trace exports the merged per-rank event timeline as a Chrome
+//!        trace-event JSON (open in chrome://tracing or ui.perfetto.dev)
+//!        and prints the wait-time attribution.
 //!   simulate --algo <name> --p N [--steps N] [--params N] [--tau N]
 //!            [--imbalance fig4|fig7|fig9|balanced] [--group-size N]
 //!            [--layered] [--fusion-mode flat|threshold|mgwfbp]
 //!            [--fusion-threshold-bytes N] [--compression none|topk|q8]
-//!            [--topk-ratio F] [--config file.toml]
+//!            [--topk-ratio F] [--config file.toml] [--trace FILE]
 //!        One discrete-event simulation run at any scale. --layered turns
 //!        on bucketed, overlap-scheduled exchanges; --compression prices
 //!        per-bucket wire compression (δ codec term included) and reports
 //!        modelled bytes-on-wire; --config loads the [fusion] and
-//!        [compress] TOML sections (CLI flags override them).
+//!        [compress] TOML sections (CLI flags override them). --trace
+//!        emits the analytic timeline in the same Chrome-trace schema as
+//!        the measured paths (and prints the attribution), so simulated
+//!        and measured runs diff component by component.
 //!   bench  [--preset fig4|fig7|fig10|all] [--quick] [--out DIR] [--seed N]
-//!          [--compression none|topk|q8] [--topk-ratio F]
+//!          [--compression none|topk|q8] [--topk-ratio F] [--trace FILE]
 //!          [--check-baseline FILE] [--check-compress-baseline FILE]
-//!          [--calibrate]
+//!          [--check-trace-baseline FILE] [--calibrate]
 //!        Measured (wall-clock) overlap harness: real compute threads
 //!        against streamed chunk exchanges on the collective engine (with
 //!        and without per-bucket compression — default compressed arm is
 //!        top-k 0.1), plus the simulator's layered-vs-flat comparison.
-//!        Writes BENCH_engine.json to --out. --check-baseline fails
+//!        Writes BENCH_engine.json to --out (now including per-preset
+//!        trace accounting + wait histograms). --check-baseline fails
 //!        (exit 1) if bytes-copied-per-iteration regresses >10% against
 //!        the checked-in baseline; --check-compress-baseline does the same
-//!        for compressed bytes-on-wire (the CI perf smoke job runs both).
-//!        --calibrate instead runs serial collectives across payload sizes
-//!        and least-squares fits NetworkModel α/β from the timings.
+//!        for compressed bytes-on-wire; --check-trace-baseline gates the
+//!        recorded span/bytes-on-wire accounting (the CI perf smoke job
+//!        runs all three). --trace writes one Chrome trace with a process
+//!        per preset. --calibrate instead runs serial collectives across
+//!        payload sizes and least-squares fits NetworkModel α/β.
+//!   trace  [--preset fig4|fig7|fig10] [--out DIR] [--seed N]
+//!          [--compression none|topk|q8] [--topk-ratio F]
+//!        Observability deep-dive for one preset: a quick-shaped measured
+//!        run on real engine threads plus the matching traced simulation.
+//!        Writes trace_measured_<preset>.json and trace_sim_<preset>.json
+//!        (Chrome trace-event format), prints each run's wait-time
+//!        attribution (wait-for-peer / codec / transfer / other), and the
+//!        sim-vs-measured decomposition diff.
 //!   list
 //!        Show available models, algorithms, presets.
 
@@ -61,10 +78,11 @@ fn main() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("bench") => cmd_bench(&args),
+        Some("trace") => cmd_trace(&args),
         Some("list") => cmd_list(),
         _ => {
             eprintln!(
-                "usage: wagma <figure|train|simulate|bench|list> [flags]  (see src/main.rs docs)"
+                "usage: wagma <figure|train|simulate|bench|trace|list> [flags]  (see src/main.rs docs)"
             );
             std::process::exit(2);
         }
@@ -177,6 +195,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         std::fs::write(&path, r.to_json().to_string())?;
         println!("wrote {path:?}");
     }
+    if let Some(path) = args.get("trace") {
+        use wagma::simulator::NetworkModel;
+        use wagma::trace::{attribute, to_chrome};
+        let events = r.trace_events();
+        std::fs::write(path, to_chrome(&events, &format!("train {model} {}", algo.name())).to_string())?;
+        println!("wrote Chrome trace {path:?} ({} events)", events.len());
+        print!("{}", attribute(&events, &NetworkModel::aries()).report(&format!("train {}", algo.name())));
+    }
     Ok(())
 }
 
@@ -222,6 +248,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         seed: args.u64_or("seed", 42),
         fusion,
         compress,
+        trace: args.get("trace").is_some(),
         ..Default::default()
     };
     let b = args.usize_or("batch", 128);
@@ -257,12 +284,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     );
     println!("iter time      : p50 {:.3} s  p95 {:.3} s  max {:.3} s", su.p50, su.p95, su.max);
     println!("mean skew      : {:.3} s", r.mean_skew);
+    if let Some(path) = args.get("trace") {
+        use wagma::trace::{attribute, to_chrome};
+        std::fs::write(path, to_chrome(&r.trace, &format!("simulate {}", r.algo)).to_string())?;
+        println!("wrote Chrome trace {path:?} ({} events)", r.trace.len());
+        print!("{}", attribute(&r.trace, &cfg.net).report(&format!("simulated {}", r.algo)));
+    }
     Ok(())
 }
 
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use wagma::bench::calibrate::{calibrate, calibration_json};
-    use wagma::bench::measured_overlap::bench_preset_compressed;
+    use wagma::bench::measured_overlap::bench_preset_traced;
     use wagma::util::json::{num, obj, s, Json};
 
     let quick = args.has("quick");
@@ -309,8 +342,13 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
 
     println!("Measured-overlap bench ({}):", if quick { "quick" } else { "full" });
-    let cases: Vec<Json> =
-        names.iter().map(|n| bench_preset_compressed(n, quick, seed, comp)).collect();
+    let mut cases: Vec<Json> = Vec::with_capacity(names.len());
+    let mut traces: Vec<(String, Vec<wagma::trace::TraceEvent>)> = Vec::with_capacity(names.len());
+    for n in &names {
+        let (json, trace) = bench_preset_traced(n, quick, seed, comp);
+        cases.push(json);
+        traces.push((n.clone(), trace));
+    }
     let report = obj(vec![
         ("generated_by", s("wagma bench")),
         ("source", s("wall-clock")),
@@ -333,13 +371,179 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     std::fs::write(&path, report.to_string())?;
     println!("wrote {path:?}");
 
+    if let Some(path) = args.get("trace") {
+        use wagma::simulator::NetworkModel;
+        use wagma::trace::{attribute, to_chrome_multi};
+        let procs: Vec<(&str, &[wagma::trace::TraceEvent])> =
+            traces.iter().map(|(n, t)| (n.as_str(), t.as_slice())).collect();
+        std::fs::write(path, to_chrome_multi(&procs).to_string())?;
+        let total: usize = traces.iter().map(|(_, t)| t.len()).sum();
+        println!("wrote Chrome trace {path:?} ({total} events, one process per preset)");
+        for (n, t) in &traces {
+            print!("{}", attribute(t, &NetworkModel::aries()).report(n));
+        }
+    }
+
     if let Some(baseline_path) = args.get("check-baseline") {
         check_bench_baseline(&report, baseline_path)?;
     }
     if let Some(baseline_path) = args.get("check-compress-baseline") {
         check_compress_baseline(&report, baseline_path)?;
     }
+    if let Some(baseline_path) = args.get("check-trace-baseline") {
+        check_trace_baseline(&report, baseline_path)?;
+    }
     Ok(())
+}
+
+/// `wagma trace` — observability deep-dive for one preset: one traced
+/// measured run (quick shape, real engine threads) and the matching
+/// traced simulation, exported in the same Chrome-trace schema, plus the
+/// wait-time attribution of each and their component-by-component diff.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use wagma::bench::measured_overlap::{
+        compute_matrix, preset_case, run_measured, MeasuredConfig,
+    };
+    use wagma::config::preset;
+    use wagma::trace::{attribute, render_diff, to_chrome, validate_schema};
+
+    let name = args.str_or("preset", "fig4");
+    let Some(pre) = preset(&name) else {
+        anyhow::bail!("unknown preset {name:?} (fig4|fig7|fig10)");
+    };
+    let out_dir = args.str_or("out", ".");
+    let seed = args.u64_or("seed", 42);
+    let comp = Compression::from_args_with(args, Compression::None);
+    std::fs::create_dir_all(&out_dir)?;
+
+    // Measured arm: the quick-shaped layered schedule on real threads
+    // (same shape the bench harness uses, so numbers line up).
+    let case = preset_case(&name, true);
+    println!(
+        "tracing measured run: {name} P{} dim {} steps {} (layered, compression {})",
+        case.p,
+        case.dim,
+        case.steps,
+        comp.name()
+    );
+    let measured = run_measured(&MeasuredConfig {
+        p: case.p,
+        group_size: case.group_size,
+        tau: case.tau,
+        dim: case.dim,
+        steps: case.steps,
+        chunk_elems: case.chunk_elems,
+        compression: comp,
+        compute: compute_matrix(&case, false, seed),
+    });
+    if measured.dropped_trace_events > 0 {
+        println!("note: {} events dropped to ring overflow", measured.dropped_trace_events);
+    }
+
+    // Simulated arm: the same shape on the analytic timeline. One schema,
+    // two producers — that is what makes the diff below meaningful.
+    let mut fusion = pre.fusion;
+    fusion.layered = true;
+    let sim_cfg = SimConfig {
+        algo: Algorithm::Wagma,
+        p: case.p,
+        steps: case.steps as usize,
+        model_bytes: case.dim * 4,
+        tau: case.tau,
+        group_size: case.group_size,
+        dynamic_groups: true,
+        imbalance: pre.imbalance,
+        seed,
+        fusion,
+        compress: comp,
+        trace: true,
+        ..Default::default()
+    };
+    let sim = simulate(&sim_cfg);
+
+    let m_att = attribute(&measured.trace, &sim_cfg.net);
+    let s_att = attribute(&sim.trace, &sim_cfg.net);
+    print!("{}", m_att.report(&format!("measured {name}")));
+    print!("{}", s_att.report(&format!("simulated {name}")));
+    print!("{}", render_diff(&m_att, &s_att));
+
+    for (tag, events) in [("measured", &measured.trace), ("sim", &sim.trace)] {
+        let doc = to_chrome(events, &format!("{tag} {name}"));
+        validate_schema(&doc).map_err(|e| anyhow::anyhow!("{tag} trace schema: {e}"))?;
+        let path = std::path::Path::new(&out_dir).join(format!("trace_{tag}_{name}.json"));
+        std::fs::write(&path, doc.to_string())?;
+        println!("wrote {path:?} ({} events)", events.len());
+    }
+    Ok(())
+}
+
+/// Trace-accounting gate: fail if any preset's recorded span counts or
+/// bytes-on-wire drift >10% above the checked-in baseline. The gated
+/// fields are code-structural (schedule shape × wire format) — the same
+/// determinism argument as `sent_bytes` — so in practice they reproduce
+/// exactly; the 10% headroom mirrors the other gates.
+fn check_trace_baseline(report: &wagma::util::json::Json, baseline_path: &str) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(baseline_path)?;
+    let baseline = wagma::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+    // Span counts scale with the bench shape (P, steps), so refuse to
+    // compare a full run against a quick baseline (and vice versa).
+    let base_quick = baseline
+        .get("shape")
+        .and_then(|s| s.get("quick"))
+        .and_then(|v| v.as_bool());
+    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
+    if let Some(bq) = base_quick {
+        if bq != run_quick {
+            anyhow::bail!(
+                "trace baseline shape mismatch: {baseline_path} records a {} run but this is a {} run",
+                if bq { "--quick" } else { "full" },
+                if run_quick { "--quick" } else { "full" },
+            );
+        }
+    }
+    const FIELDS: [&str; 4] =
+        ["phase_spans", "tau_sync_spans", "phase_wire_bytes", "sync_wire_bytes"];
+    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+    let mut failures = Vec::new();
+    for case in cases {
+        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+        let Some(base) = baseline.get(name) else {
+            // A missing entry must not silently disable the gate.
+            failures.push(format!("{name}: no trace baseline entry in {baseline_path} — add one"));
+            continue;
+        };
+        let mut ok = true;
+        for field in FIELDS {
+            let measured = case
+                .get("trace")
+                .and_then(|t| t.get(field))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::INFINITY);
+            let Some(b) = base.get(field).and_then(|v| v.as_f64()) else {
+                failures.push(format!(
+                    "{name}.{field}: missing from {baseline_path} (measured {measured:.0})"
+                ));
+                ok = false;
+                continue;
+            };
+            let limit = b * 1.10;
+            if measured > limit {
+                failures.push(format!(
+                    "{name}.{field}: {measured:.0} exceeds baseline {b:.0} (+10% limit {limit:.0})"
+                ));
+                ok = false;
+            }
+        }
+        if ok {
+            println!("trace baseline OK for {name} (spans + wire bytes within limits)");
+        }
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        anyhow::bail!("trace accounting regression:\n{}", failures.join("\n"))
+    }
 }
 
 /// Perf-regression gate for the compression subsystem: fail if any

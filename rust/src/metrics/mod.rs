@@ -4,6 +4,7 @@
 use std::io::Write;
 use std::path::Path;
 
+use crate::trace::TraceEvent;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::stats::Summary;
 
@@ -29,6 +30,9 @@ pub struct RankMetrics {
     /// Periodic evaluation metric (accuracy / eval loss / mean return),
     /// as (step, value).
     pub evals: Vec<(u64, f32)>,
+    /// Drained trace events (app + engine lanes) from this rank's
+    /// recorder; empty when tracing was disabled.
+    pub trace: Vec<TraceEvent>,
 }
 
 /// Merged result of a multi-rank training run.
@@ -110,6 +114,15 @@ impl TrainResult {
             .collect()
     }
 
+    /// All trace events across ranks, merged and sorted by start time
+    /// (ties broken by rank so the order is deterministic).
+    pub fn trace_events(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<TraceEvent> =
+            self.per_rank.iter().flat_map(|r| r.trace.iter().copied()).collect();
+        all.sort_by_key(|e| (e.t_ns, e.rank, e.lane.index(), e.kind.index()));
+        all
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("algo", s(&self.algo)),
@@ -179,6 +192,7 @@ mod tests {
             sent_msgs: 10,
             sent_bytes: 1000,
             evals: vec![(0, 0.1), (2, 0.5)],
+            trace: Vec::new(),
         };
         TrainResult {
             algo: "test".into(),

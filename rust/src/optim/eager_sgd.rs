@@ -18,6 +18,7 @@ use crate::model::WorkerState;
 use crate::optim::engine::ComputeEngine;
 use crate::optim::runner::TrainConfig;
 use crate::optim::sgd_momentum_update;
+use crate::trace::{now_ns, Lane, TraceEvent, TraceKind};
 use crate::util::add_assign;
 
 pub fn run_worker(
@@ -35,10 +36,15 @@ pub fn run_worker(
     // deep-gradient-compression recipe: fold the previous iteration's
     // compression loss into this iteration's gradient before encoding).
     let mut ef = ErrorFeedback::new();
+    let tracer = handle.tracer();
 
     for t in 0..cfg.steps {
         let t0 = Instant::now();
+        let c0 = now_ns();
         let (g, loss) = engine.grad(&state.params, t);
+        let mut ev = TraceEvent::new(TraceKind::Compute, Lane::App, c0, now_ns() - c0);
+        ev.version = t;
+        tracer.record(ev);
         if cfg.compress.is_none() {
             // One counted copy into a pooled buffer; `g` itself is kept
             // for the stale blend below, so a move is not possible.
@@ -87,5 +93,6 @@ pub fn run_worker(
     let stats = handle.shutdown();
     metrics.sent_msgs = stats.sent_msgs;
     metrics.sent_bytes = stats.sent_bytes;
+    metrics.trace = tracer.drain();
     (metrics, state.params)
 }

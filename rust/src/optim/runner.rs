@@ -152,6 +152,7 @@ impl TrainConfig {
             // independently-tagged chunks at the plan's granularity.
             chunk_elems: self.fusion.chunk_elems(),
             compression: self.compress,
+            trace: true,
         }
     }
 }

@@ -19,6 +19,7 @@ use crate::metrics::{RankMetrics, StepRecord};
 use crate::model::WorkerState;
 use crate::optim::engine::ComputeEngine;
 use crate::optim::runner::TrainConfig;
+use crate::trace::{now_ns, Lane, TraceEvent, TraceKind};
 use crate::util::add_assign;
 
 /// Run one WAGMA-SGD worker to completion. `handle` is this rank's
@@ -39,12 +40,17 @@ pub fn run_worker(
     // per bucket on the wire; the worker's residual tracks the loss of its
     // own contribution as the group sees it.
     let mut ef = ErrorFeedback::new();
+    let tracer = handle.tracer();
     let run_start = Instant::now();
 
     for t in 0..cfg.steps {
         let t0 = Instant::now();
+        let c0 = now_ns();
         // Lines 3–7: local update W'_t.
         let loss = engine.step(&mut state, cfg.lr, t);
+        let mut ev = TraceEvent::new(TraceKind::Compute, Lane::App, c0, now_ns() - c0);
+        ev.version = t;
+        tracer.record(ev);
         if cfg.compress.is_none() {
             // One counted copy into a pooled buffer. The app must retain
             // W'_t for the stale blend below, so a move (`publish_owned`)
@@ -102,5 +108,6 @@ pub fn run_worker(
     let stats = handle.shutdown();
     metrics.sent_msgs = stats.sent_msgs;
     metrics.sent_bytes = stats.sent_bytes;
+    metrics.trace = tracer.drain();
     (metrics, state.params)
 }

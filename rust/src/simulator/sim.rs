@@ -12,6 +12,7 @@ use crate::optim::Algorithm;
 use crate::sched::{Bucket, FusionConfig, FusionMode, FusionPlan, LayerProfile};
 use crate::simulator::network::NetworkModel;
 use crate::topology::{log2_exact, Grouping};
+use crate::trace::{Lane, TraceEvent, TraceKind};
 use crate::util::stats::Summary;
 
 /// Simulation configuration.
@@ -49,6 +50,11 @@ pub struct SimConfig {
     /// compresses. The direct-mode baselines (Allreduce-SGD, Local SGD,
     /// the gossip algorithms) stay uncompressed, as in the real runners.
     pub compress: Compression,
+    /// Emit the analytic timeline as [`TraceEvent`]s — the same schema the
+    /// real engine records — so one tool can diff simulated vs. measured
+    /// overlap per phase. Off by default: tracing a long run materializes
+    /// `O(steps · p · buckets · phases)` events.
+    pub trace: bool,
 }
 
 impl Default for SimConfig {
@@ -68,6 +74,7 @@ impl Default for SimConfig {
             seed: 42,
             fusion: FusionConfig::default(),
             compress: Compression::None,
+            trace: false,
         }
     }
 }
@@ -93,6 +100,9 @@ pub struct SimResult {
     /// engine paths this counts the *encoded* volume — the simulator-side
     /// counterpart of the measured harness's `sent_bytes_per_iter`.
     pub wire_bytes_per_iter: f64,
+    /// Analytic timeline in the engine's event schema (empty unless
+    /// `SimConfig::trace`), sorted by start time.
+    pub trace: Vec<TraceEvent>,
 }
 
 impl SimConfig {
@@ -213,6 +223,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     let mut skew_acc = 0.0;
     let mut prev_max = 0.0f64;
     let mut wire_total = 0.0f64;
+    let mut trace: Vec<TraceEvent> = Vec::new();
 
     for t in 0..cfg.steps {
         let compute = delays.sample_step();
@@ -228,6 +239,15 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         // Pre-compute app times: the bucket recurrence places per-bucket
         // gradient ready points inside the backward pass relative to these.
         let app_prev: Vec<f64> = app.clone();
+        if cfg.trace {
+            for i in 0..p {
+                let mut ev =
+                    TraceEvent::new(TraceKind::Compute, Lane::App, ns(app_prev[i]), ns(compute[i]));
+                ev.rank = i as u32;
+                ev.version = t as u64;
+                trace.push(ev);
+            }
+        }
 
         match cfg.algo {
             Algorithm::AllreduceSgd => {
@@ -299,6 +319,42 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                             *a = start + cost;
                         }
                     }
+                    // Engine-lane τ-sync spans: the barrier wait from each
+                    // rank's arrival to the slowest rank, then the
+                    // collective itself (only its exposed tail when the
+                    // layered schedule hid part of it under compute).
+                    if cfg.trace {
+                        let arrival_max =
+                            arrival.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                        let end = app[0];
+                        let sync_wire =
+                            iteration_wire_bytes(cfg, t, group_size, group_plan, engine_comp)
+                                as u64;
+                        for i in 0..p {
+                            let barrier = ns(arrival_max).saturating_sub(ns(arrival[i]));
+                            if barrier > 0 {
+                                let mut w = TraceEvent::new(
+                                    TraceKind::Wait,
+                                    Lane::Engine,
+                                    ns(arrival[i]),
+                                    barrier,
+                                );
+                                w.rank = i as u32;
+                                w.version = t as u64;
+                                trace.push(w);
+                            }
+                            let mut ts = TraceEvent::new(
+                                TraceKind::TauSync,
+                                Lane::Engine,
+                                ns(arrival_max),
+                                ns(end).saturating_sub(ns(arrival_max)),
+                            );
+                            ts.rank = i as u32;
+                            ts.version = t as u64;
+                            ts.bytes = sync_wire;
+                            trace.push(ts);
+                        }
+                    }
                     engine.copy_from_slice(&app);
                 } else {
                     layered_group_step(
@@ -314,7 +370,22 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                         &net,
                         p,
                         engine_comp,
+                        cfg.trace.then_some(&mut trace),
                     );
+                }
+            }
+        }
+        // App-lane wait spans — the exposed windows the attribution report
+        // decomposes: time between a rank's arrival at the communication
+        // call site and its app resuming.
+        if cfg.trace {
+            for i in 0..p {
+                let wait = ns(app[i]).saturating_sub(ns(arrival[i]));
+                if wait > 0 {
+                    let mut w = TraceEvent::new(TraceKind::Wait, Lane::App, ns(arrival[i]), wait);
+                    w.rank = i as u32;
+                    w.version = t as u64;
+                    trace.push(w);
                 }
             }
         }
@@ -322,6 +393,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         iter_times.push(cur_max - prev_max);
         prev_max = cur_max;
     }
+    trace.sort_by_key(|e| (e.t_ns, e.rank, e.lane.index(), e.kind.index()));
 
     SimResult {
         algo: cfg.algo.name().to_string(),
@@ -332,7 +404,13 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         iter_times,
         mean_skew: skew_acc / cfg.steps as f64,
         wire_bytes_per_iter: wire_total / cfg.steps as f64,
+        trace,
     }
+}
+
+/// Seconds → integer nanoseconds on the simulated event clock.
+fn ns(x: f64) -> u64 {
+    (x.max(0.0) * 1e9).round() as u64
 }
 
 /// Every-τ global allreduce cost under the engine's compression policy:
@@ -498,6 +576,7 @@ fn layered_group_step(
     net: &NetworkModel,
     p: usize,
     comp: Compression,
+    mut tr: Option<&mut Vec<TraceEvent>>,
 ) {
     let phases = log2_exact(s.min(p));
     for bucket in &plan.buckets {
@@ -511,6 +590,10 @@ fn layered_group_step(
         } else {
             net.exchange_compressed(bucket.bytes, comp.wire_bytes(bucket.bytes), s.min(p))
         };
+        let wire = comp.wire_bytes(bucket.bytes) as u64;
+        // Per-side δ codec time inside each phase (the `exchange_compressed`
+        // pricing pays it twice: encode ours, decode the partner's).
+        let codec = if comp.is_none() { 0u64 } else { ns(net.delta * bucket.bytes as f64) };
         for r in 0..phases {
             let prev = times.clone();
             for i in 0..p {
@@ -520,6 +603,35 @@ fn layered_group_step(
                     grouping.partner(i, t, r)
                 };
                 times[i] = prev[i].max(prev[partner]) + cost;
+                if let Some(sink) = tr.as_deref_mut() {
+                    let t0 = ns(prev[i]);
+                    // A rank whose bucket was not ready when activation
+                    // arrived contributes its stale payload passively.
+                    let passive = act < ready[i];
+                    let stamp = |mut ev: TraceEvent| {
+                        ev.rank = i as u32;
+                        ev.version = t;
+                        ev.phase = r;
+                        ev.passive = passive;
+                        ev
+                    };
+                    let mut ev = stamp(TraceEvent::new(
+                        TraceKind::GroupExchangePhase,
+                        Lane::Engine,
+                        t0,
+                        ns(times[i]) - t0,
+                    ));
+                    ev.bytes = wire;
+                    sink.push(ev);
+                    let wait = ns(prev[partner]).saturating_sub(t0);
+                    if wait > 0 {
+                        sink.push(stamp(TraceEvent::new(TraceKind::Wait, Lane::Engine, t0, wait)));
+                    }
+                    if codec > 0 {
+                        sink.push(stamp(TraceEvent::new(TraceKind::Encode, Lane::Engine, t0, codec)));
+                        sink.push(stamp(TraceEvent::new(TraceKind::Decode, Lane::Engine, t0, codec)));
+                    }
+                }
             }
         }
         engine.copy_from_slice(&times);

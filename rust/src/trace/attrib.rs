@@ -1,0 +1,351 @@
+//! Wait-time attribution: decompose each rank's exposed communication
+//! into wait-for-peer / codec / transfer components.
+//!
+//! The app-lane [`TraceKind::Wait`] spans are, by construction, exactly
+//! the time each rank's application was blocked on a collective result —
+//! its *exposed* communication. Attribution intersects the engine-lane
+//! spans with those windows and splits the exposed time into:
+//!
+//! * **wait-for-peer** — engine blocked in a matched receive (the
+//!   partner had not sent yet): skew, not network;
+//! * **codec** — compression encode + decode time (the δ term of the
+//!   compressed cost model);
+//! * **transfer** — the remainder of exchange/sync span time: actual
+//!   send/receive/reduce work. This is further priced into the network
+//!   model's α (per-message latency) and β (per-byte bandwidth) shares
+//!   using the recorded span/byte counts;
+//! * **other** — exposed time not covered by any engine span (request
+//!   routing, thread wakeup).
+//!
+//! The four components partition the exposed total exactly (each is an
+//! intersection with the same windows, and sub-spans nest inside their
+//! exchange spans), which is what makes the report trustworthy: a
+//! regression must show up in a named component.
+//!
+//! The simulator emits the same schema from its analytic timeline, so
+//! [`diff_json`] can compare a measured attribution against a simulated
+//! one component by component.
+
+use crate::simulator::NetworkModel;
+use crate::util::json::{num, obj, Json};
+
+use super::{Lane, TraceEvent, TraceKind};
+
+/// Attribution report over one event stream (all ranks).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Attribution {
+    /// Ranks contributing app-lane wait windows.
+    pub ranks: usize,
+    /// Total exposed communication: Σ app-lane `Wait` span durations (s).
+    pub exposed_s: f64,
+    /// Engine blocked on a peer inside the exposed windows (s).
+    pub wait_for_peer_s: f64,
+    /// Codec encode+decode inside the exposed windows (s).
+    pub codec_s: f64,
+    /// Exchange/sync span time inside the windows minus the two above (s).
+    pub transfer_s: f64,
+    /// Exposed time under no engine span at all (s).
+    pub other_s: f64,
+    /// Model-priced α (latency) share of `transfer_s`.
+    pub alpha_model_s: f64,
+    /// Model-priced β (bandwidth) share of `transfer_s`.
+    pub beta_model_s: f64,
+    /// Deterministic accounting: total butterfly-phase spans recorded.
+    pub phase_spans: u64,
+    /// Deterministic accounting: total every-τ sync spans recorded.
+    pub tau_sync_spans: u64,
+    /// Deterministic accounting: bytes-on-wire over all phase spans.
+    pub phase_wire_bytes: u64,
+    /// Deterministic accounting: bytes-on-wire over all sync spans.
+    pub sync_wire_bytes: u64,
+}
+
+impl Attribution {
+    /// Sum of the four components — equals `exposed_s` up to float
+    /// rounding (the partition property the 5% acceptance bound checks).
+    pub fn components_sum_s(&self) -> f64 {
+        self.wait_for_peer_s + self.codec_s + self.transfer_s + self.other_s
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("ranks", num(self.ranks as f64)),
+            ("exposed_s", num(self.exposed_s)),
+            ("wait_for_peer_s", num(self.wait_for_peer_s)),
+            ("codec_s", num(self.codec_s)),
+            ("transfer_s", num(self.transfer_s)),
+            ("other_s", num(self.other_s)),
+            ("alpha_model_s", num(self.alpha_model_s)),
+            ("beta_model_s", num(self.beta_model_s)),
+            ("components_sum_s", num(self.components_sum_s())),
+        ])
+    }
+
+    /// Terminal-friendly report.
+    pub fn report(&self, label: &str) -> String {
+        let share = |x: f64| if self.exposed_s > 0.0 { 100.0 * x / self.exposed_s } else { 0.0 };
+        let mut out = String::new();
+        out.push_str(&format!(
+            "wait-time attribution [{label}] — exposed comm {:.4} s over {} ranks\n",
+            self.exposed_s, self.ranks
+        ));
+        out.push_str(&format!(
+            "  wait-for-peer {:>9.4} s ({:5.1}%)\n",
+            self.wait_for_peer_s,
+            share(self.wait_for_peer_s)
+        ));
+        out.push_str(&format!(
+            "  codec (delta) {:>9.4} s ({:5.1}%)\n",
+            self.codec_s,
+            share(self.codec_s)
+        ));
+        out.push_str(&format!(
+            "  transfer      {:>9.4} s ({:5.1}%)  [model: alpha {:.2e} s / beta {:.2e} s]\n",
+            self.transfer_s,
+            share(self.transfer_s),
+            self.alpha_model_s,
+            self.beta_model_s
+        ));
+        out.push_str(&format!(
+            "  other         {:>9.4} s ({:5.1}%)\n",
+            self.other_s,
+            share(self.other_s)
+        ));
+        out
+    }
+}
+
+/// Overlap of `[a0, a1)` with the union of disjoint sorted `windows`.
+fn overlap_ns(windows: &[(u64, u64)], a0: u64, a1: u64) -> u64 {
+    if a1 <= a0 {
+        return 0;
+    }
+    // First window whose end is past the span start.
+    let start = windows.partition_point(|&(_, e)| e <= a0);
+    let mut total = 0u64;
+    for &(w0, w1) in &windows[start..] {
+        if w0 >= a1 {
+            break;
+        }
+        total += a1.min(w1).saturating_sub(a0.max(w0));
+    }
+    total
+}
+
+/// Compute the attribution over an event stream. Works identically for
+/// measured (wall-clock) and simulated (analytic) events — that is the
+/// point: both producers share one schema.
+pub fn attribute(events: &[TraceEvent], net: &NetworkModel) -> Attribution {
+    let mut att = Attribution::default();
+    let max_rank = events.iter().map(|e| e.rank).max().map_or(0, |r| r as usize + 1);
+    let mut windows: Vec<Vec<(u64, u64)>> = vec![Vec::new(); max_rank];
+    for ev in events {
+        match (ev.lane, ev.kind) {
+            (Lane::App, TraceKind::Wait) => {
+                windows[ev.rank as usize].push((ev.t_ns, ev.end_ns()));
+            }
+            (Lane::Engine, TraceKind::GroupExchangePhase) => {
+                att.phase_spans += 1;
+                att.phase_wire_bytes += ev.bytes;
+            }
+            (Lane::Engine, TraceKind::TauSync) => {
+                att.tau_sync_spans += 1;
+                att.sync_wire_bytes += ev.bytes;
+            }
+            _ => {}
+        }
+    }
+    let mut exposed = 0u64;
+    for w in &mut windows {
+        w.sort_unstable();
+        exposed += w.iter().map(|&(a, b)| b - a).sum::<u64>();
+    }
+    att.ranks = windows.iter().filter(|w| !w.is_empty()).count();
+    let (mut span_ov, mut wait_ov, mut codec_ov) = (0u64, 0u64, 0u64);
+    for ev in events {
+        if ev.lane != Lane::Engine {
+            continue;
+        }
+        let ov = overlap_ns(&windows[ev.rank as usize], ev.t_ns, ev.end_ns());
+        match ev.kind {
+            TraceKind::GroupExchangePhase | TraceKind::TauSync => span_ov += ov,
+            TraceKind::Wait => wait_ov += ov,
+            TraceKind::Encode | TraceKind::Decode => codec_ov += ov,
+            _ => {}
+        }
+    }
+    let sec = |ns: u64| ns as f64 / 1e9;
+    att.exposed_s = sec(exposed);
+    att.wait_for_peer_s = sec(wait_ov);
+    att.codec_s = sec(codec_ov);
+    // Sub-spans nest inside their exchange span, so span_ov bounds them;
+    // saturate anyway to keep the partition non-negative under rounding.
+    att.transfer_s = sec(span_ov.saturating_sub(wait_ov).saturating_sub(codec_ov));
+    att.other_s = sec(exposed.saturating_sub(span_ov));
+    // Price the transfer residual into the network model's α/β terms
+    // using the recorded message/byte accounting.
+    let alpha_w = (att.phase_spans + att.tau_sync_spans) as f64 * net.alpha;
+    let beta_w = (att.phase_wire_bytes + att.sync_wire_bytes) as f64 * net.beta;
+    if alpha_w + beta_w > 0.0 {
+        att.alpha_model_s = att.transfer_s * alpha_w / (alpha_w + beta_w);
+        att.beta_model_s = att.transfer_s * beta_w / (alpha_w + beta_w);
+    }
+    att
+}
+
+const COMPONENTS: [&str; 4] = ["wait_for_peer", "codec", "transfer", "other"];
+
+fn component(att: &Attribution, name: &str) -> f64 {
+    match name {
+        "wait_for_peer" => att.wait_for_peer_s,
+        "codec" => att.codec_s,
+        "transfer" => att.transfer_s,
+        "other" => att.other_s,
+        _ => unreachable!(),
+    }
+}
+
+/// Component-by-component diff of a measured attribution against a
+/// simulated one. Absolute seconds differ (the simulator models a
+/// cluster, the measured run is in-process threads), so the comparison
+/// is on each component's *share* of its own exposed total.
+pub fn diff_json(measured: &Attribution, simulated: &Attribution) -> Json {
+    let share = |att: &Attribution, x: f64| if att.exposed_s > 0.0 { x / att.exposed_s } else { 0.0 };
+    let comps = COMPONENTS.map(|name| {
+        let m = component(measured, name);
+        let s = component(simulated, name);
+        (
+            name,
+            obj(vec![
+                ("measured_s", num(m)),
+                ("simulated_s", num(s)),
+                ("measured_share", num(share(measured, m))),
+                ("simulated_share", num(share(simulated, s))),
+                ("share_delta", num(share(measured, m) - share(simulated, s))),
+            ]),
+        )
+    });
+    obj(vec![
+        ("measured_exposed_s", num(measured.exposed_s)),
+        ("simulated_exposed_s", num(simulated.exposed_s)),
+        ("components", obj(comps.into_iter().collect())),
+    ])
+}
+
+/// Terminal rendering of [`diff_json`].
+pub fn render_diff(measured: &Attribution, simulated: &Attribution) -> String {
+    let share = |att: &Attribution, x: f64| if att.exposed_s > 0.0 { 100.0 * x / att.exposed_s } else { 0.0 };
+    let mut out = String::from(
+        "sim-vs-measured exposed-comm decomposition (share of each run's exposed total):\n",
+    );
+    out.push_str(&format!(
+        "  {:<14} {:>12} {:>12} {:>8}\n",
+        "component", "measured", "simulated", "delta"
+    ));
+    for name in COMPONENTS {
+        let m = share(measured, component(measured, name));
+        let s = share(simulated, component(simulated, name));
+        out.push_str(&format!("  {name:<14} {m:>11.1}% {s:>11.1}% {:>7.1}%\n", m - s));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NO_VERSION;
+
+    fn ev(kind: TraceKind, lane: Lane, rank: u32, t: u64, dur: u64) -> TraceEvent {
+        let mut e = TraceEvent::new(kind, lane, t, dur);
+        e.rank = rank;
+        e
+    }
+
+    #[test]
+    fn overlap_respects_window_union() {
+        let w = vec![(10, 20), (30, 40)];
+        assert_eq!(overlap_ns(&w, 0, 5), 0);
+        assert_eq!(overlap_ns(&w, 0, 100), 20);
+        assert_eq!(overlap_ns(&w, 15, 35), 10);
+        assert_eq!(overlap_ns(&w, 20, 30), 0);
+        assert_eq!(overlap_ns(&w, 12, 12), 0);
+    }
+
+    #[test]
+    fn components_partition_exposed_exactly() {
+        // Rank 0: app waits [100, 1100). Engine: one phase span
+        // [200, 900) containing a 300 ns peer wait and 100 ns of codec.
+        let events = vec![
+            ev(TraceKind::Wait, Lane::App, 0, 100, 1000),
+            {
+                let mut e = ev(TraceKind::GroupExchangePhase, Lane::Engine, 0, 200, 700);
+                e.bytes = 4096;
+                e
+            },
+            ev(TraceKind::Wait, Lane::Engine, 0, 200, 300),
+            ev(TraceKind::Encode, Lane::Engine, 0, 200, 60),
+            ev(TraceKind::Decode, Lane::Engine, 0, 200, 40),
+        ];
+        let att = attribute(&events, &NetworkModel::aries());
+        assert!((att.exposed_s - 1000e-9).abs() < 1e-15);
+        assert!((att.wait_for_peer_s - 300e-9).abs() < 1e-15);
+        assert!((att.codec_s - 100e-9).abs() < 1e-15);
+        assert!((att.transfer_s - 300e-9).abs() < 1e-15);
+        assert!((att.other_s - 300e-9).abs() < 1e-15);
+        assert!((att.components_sum_s() - att.exposed_s).abs() < 1e-12 * att.exposed_s.max(1e-9));
+        assert!((att.alpha_model_s + att.beta_model_s - att.transfer_s).abs() < 1e-15);
+        assert_eq!(att.phase_spans, 1);
+        assert_eq!(att.phase_wire_bytes, 4096);
+    }
+
+    #[test]
+    fn engine_activity_outside_app_windows_is_hidden_not_exposed() {
+        // The engine runs a passive collective while the app computes:
+        // nothing of it lands in the exposed decomposition.
+        let events = vec![
+            ev(TraceKind::Compute, Lane::App, 0, 0, 1000),
+            ev(TraceKind::GroupExchangePhase, Lane::Engine, 0, 100, 500),
+            ev(TraceKind::Wait, Lane::App, 0, 2000, 10),
+        ];
+        let att = attribute(&events, &NetworkModel::aries());
+        assert!((att.exposed_s - 10e-9).abs() < 1e-15);
+        assert_eq!(att.transfer_s, 0.0);
+        assert!((att.other_s - 10e-9).abs() < 1e-15);
+        // ... but the deterministic accounting still sees the span.
+        assert_eq!(att.phase_spans, 1);
+    }
+
+    #[test]
+    fn multiple_ranks_sum() {
+        let mut events = Vec::new();
+        for r in 0..4u32 {
+            events.push(ev(TraceKind::Wait, Lane::App, r, 100 * r as u64, 50));
+        }
+        let att = attribute(&events, &NetworkModel::aries());
+        assert_eq!(att.ranks, 4);
+        assert!((att.exposed_s - 200e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn diff_shares_are_comparable() {
+        let events = vec![
+            ev(TraceKind::Wait, Lane::App, 0, 0, 100),
+            ev(TraceKind::TauSync, Lane::Engine, 0, 0, 100),
+        ];
+        let att = attribute(&events, &NetworkModel::aries());
+        let d = diff_json(&att, &att);
+        let t = d.get("components").unwrap().get("transfer").unwrap();
+        assert_eq!(t.get("share_delta").unwrap().as_f64(), Some(0.0));
+        assert!(render_diff(&att, &att).contains("transfer"));
+        // Versionless events attribute fine (no NaN from sentinels).
+        assert_eq!(events[0].version, NO_VERSION);
+        assert!(att.components_sum_s().is_finite());
+    }
+
+    #[test]
+    fn empty_stream_yields_zero_report() {
+        let att = attribute(&[], &NetworkModel::aries());
+        assert_eq!(att, Attribution::default());
+        assert!(att.report("empty").contains("0.0000 s"));
+    }
+}

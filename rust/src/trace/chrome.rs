@@ -1,0 +1,260 @@
+//! Chrome trace-event JSON export/import (via `util::json` — no serde).
+//!
+//! Each [`TraceEvent`] becomes one complete event (`"ph": "X"`) with
+//! microsecond `ts`/`dur`, `pid` = process (one per traced run when
+//! multiple runs share a file), and `tid` = `rank * 2 + lane` so every
+//! rank shows its app and engine lanes as adjacent tracks. Metadata
+//! events (`"ph": "M"`) name the processes and threads. The result opens
+//! directly in `chrome://tracing` or <https://ui.perfetto.dev>.
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::{Lane, TraceEvent, TraceKind, NO_PHASE, NO_VERSION};
+
+fn tid(ev: &TraceEvent) -> u32 {
+    ev.rank * 2 + ev.lane.index() as u32
+}
+
+fn event_json(ev: &TraceEvent, pid: u32) -> Json {
+    let mut args = vec![("bytes", num(ev.bytes as f64)), ("passive", Json::Bool(ev.passive))];
+    if ev.version != NO_VERSION {
+        args.push(("v", num(ev.version as f64)));
+    }
+    if ev.phase != NO_PHASE {
+        args.push(("phase", num(ev.phase as f64)));
+    }
+    obj(vec![
+        ("name", s(ev.kind.name())),
+        ("cat", s(ev.lane.name())),
+        ("ph", s("X")),
+        ("ts", num(ev.t_ns as f64 / 1000.0)),
+        ("dur", num(ev.dur_ns as f64 / 1000.0)),
+        ("pid", num(pid as f64)),
+        ("tid", num(tid(ev) as f64)),
+        ("args", obj(args)),
+    ])
+}
+
+fn metadata(name: &str, pid: u32, tid: Option<u32>, value: &str) -> Json {
+    let mut fields = vec![
+        ("name", s(name)),
+        ("ph", s("M")),
+        ("pid", num(pid as f64)),
+        ("args", obj(vec![("name", s(value))])),
+    ];
+    if let Some(t) = tid {
+        fields.push(("tid", num(t as f64)));
+    }
+    obj(fields)
+}
+
+/// Export one event stream as a Chrome trace-event document.
+pub fn to_chrome(events: &[TraceEvent], process: &str) -> Json {
+    to_chrome_multi(&[(process, events)])
+}
+
+/// Export several event streams (one `pid` each) into one document —
+/// used by `wagma bench --trace` to put every preset in the same file.
+pub fn to_chrome_multi(processes: &[(&str, &[TraceEvent])]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    for (pid, (name, events)) in processes.iter().enumerate() {
+        let pid = pid as u32;
+        out.push(metadata("process_name", pid, None, name));
+        let mut tids: Vec<(u32, u32, Lane)> = Vec::new();
+        for ev in *events {
+            if !tids.iter().any(|&(t, _, _)| t == tid(ev)) {
+                tids.push((tid(ev), ev.rank, ev.lane));
+            }
+        }
+        tids.sort_unstable_by_key(|&(t, _, _)| t);
+        for (t, rank, lane) in tids {
+            out.push(metadata("thread_name", pid, Some(t), &format!("rank {rank} {}", lane.name())));
+        }
+        out.extend(events.iter().map(|ev| event_json(ev, pid)));
+    }
+    obj(vec![("traceEvents", arr(out)), ("displayTimeUnit", s("ms"))])
+}
+
+fn field_f64(ev: &Json, key: &str) -> Result<f64, String> {
+    ev.get(key).and_then(Json::as_f64).ok_or_else(|| format!("event missing numeric {key:?}"))
+}
+
+/// Parse a Chrome trace-event document back into events (metadata events
+/// are skipped; `pid` is discarded — callers importing multi-process
+/// files should filter beforehand). Inverse of [`to_chrome`] for every
+/// event this crate emits.
+pub fn from_chrome(doc: &Json) -> Result<Vec<TraceEvent>, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing traceEvents array")?;
+    let mut out = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).ok_or("event missing ph")?;
+        if ph == "M" {
+            continue;
+        }
+        if ph != "X" {
+            return Err(format!("unsupported event phase {ph:?}"));
+        }
+        let name = ev.get("name").and_then(Json::as_str).ok_or("event missing name")?;
+        let kind = TraceKind::parse(name).ok_or_else(|| format!("unknown span kind {name:?}"))?;
+        let cat = ev.get("cat").and_then(Json::as_str).ok_or("event missing cat")?;
+        let lane = Lane::parse(cat).ok_or_else(|| format!("unknown lane {cat:?}"))?;
+        let tid = field_f64(ev, "tid")? as u64;
+        if tid % 2 != lane.index() as u64 {
+            return Err(format!("tid {tid} does not encode lane {cat:?}"));
+        }
+        let args = ev.get("args").ok_or("event missing args")?;
+        let mut e = TraceEvent::new(
+            kind,
+            lane,
+            (field_f64(ev, "ts")? * 1000.0).round() as u64,
+            (field_f64(ev, "dur")? * 1000.0).round() as u64,
+        );
+        e.rank = (tid / 2) as u32;
+        e.bytes = args.get("bytes").and_then(Json::as_f64).ok_or("args missing bytes")? as u64;
+        e.passive = args.get("passive").and_then(Json::as_bool).unwrap_or(false);
+        if let Some(v) = args.get("v").and_then(Json::as_f64) {
+            e.version = v as u64;
+        }
+        if let Some(p) = args.get("phase").and_then(Json::as_f64) {
+            e.phase = p as u32;
+        }
+        out.push(e);
+    }
+    Ok(out)
+}
+
+/// Validate that a document conforms to the event schema every producer
+/// in this crate (engine, workers, bench, simulator) emits: the property
+/// test runs this over both simulator-emitted and measured-emitted
+/// traces.
+pub fn validate_schema(doc: &Json) -> Result<(), String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing traceEvents array")?;
+    for (i, ev) in events.iter().enumerate() {
+        let fail = |msg: &str| Err(format!("event {i}: {msg}"));
+        let Some(ph) = ev.get("ph").and_then(Json::as_str) else {
+            return fail("missing ph");
+        };
+        match ph {
+            "M" => {
+                let name = ev.get("name").and_then(Json::as_str).unwrap_or("");
+                if !matches!(name, "process_name" | "thread_name") {
+                    return fail("unknown metadata record");
+                }
+            }
+            "X" => {
+                let name = ev.get("name").and_then(Json::as_str).unwrap_or("");
+                if TraceKind::parse(name).is_none() {
+                    return fail(&format!("unknown span kind {name:?}"));
+                }
+                let cat = ev.get("cat").and_then(Json::as_str).unwrap_or("");
+                if Lane::parse(cat).is_none() {
+                    return fail(&format!("unknown lane {cat:?}"));
+                }
+                for key in ["ts", "dur", "pid", "tid"] {
+                    if ev.get(key).and_then(Json::as_f64).is_none() {
+                        return fail(&format!("missing numeric {key:?}"));
+                    }
+                }
+                let Some(args) = ev.get("args") else {
+                    return fail("missing args");
+                };
+                if args.get("bytes").and_then(Json::as_f64).is_none() {
+                    return fail("args missing numeric \"bytes\"");
+                }
+                if args.get("passive").and_then(Json::as_bool).is_none() {
+                    return fail("args missing boolean \"passive\"");
+                }
+            }
+            other => return fail(&format!("unsupported phase {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let mut a = TraceEvent::new(TraceKind::Compute, Lane::App, 1_000, 2_000_000);
+        a.rank = 0;
+        a.version = 7;
+        let mut b = TraceEvent::new(TraceKind::GroupExchangePhase, Lane::Engine, 2_001_500, 350_000);
+        b.rank = 1;
+        b.version = 7;
+        b.phase = 2;
+        b.bytes = 65536;
+        b.passive = true;
+        let mut c = TraceEvent::new(TraceKind::Wait, Lane::App, 2_001_000, 400_123);
+        c.rank = 1;
+        vec![a, b, c]
+    }
+
+    #[test]
+    fn round_trips_through_json_text() {
+        let events = sample_events();
+        let doc = to_chrome(&events, "test");
+        // Through the actual serializer and parser, not just the tree.
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        validate_schema(&reparsed).unwrap();
+        let back = from_chrome(&reparsed).unwrap();
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn emits_thread_and_process_metadata() {
+        let doc = to_chrome(&sample_events(), "bench fig4");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert!(names.contains(&"bench fig4"));
+        assert!(names.contains(&"rank 0 app"));
+        assert!(names.contains(&"rank 1 engine"));
+    }
+
+    #[test]
+    fn multi_process_export_assigns_distinct_pids() {
+        let evs = sample_events();
+        let doc = to_chrome_multi(&[("fig4", &evs[..]), ("fig7", &evs[..])]);
+        validate_schema(&doc).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let pids: std::collections::BTreeSet<i64> = events
+            .iter()
+            .filter_map(|e| e.get("pid").and_then(Json::as_f64))
+            .map(|p| p as i64)
+            .collect();
+        assert_eq!(pids.into_iter().collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn validate_rejects_foreign_schema() {
+        let bad = Json::parse(r#"{"traceEvents":[{"name":"blorp","cat":"app","ph":"X","ts":0,"dur":1,"pid":0,"tid":0,"args":{"bytes":0,"passive":false}}]}"#).unwrap();
+        assert!(validate_schema(&bad).is_err());
+        let missing_args = Json::parse(
+            r#"{"traceEvents":[{"name":"wait","cat":"app","ph":"X","ts":0,"dur":1,"pid":0,"tid":0}]}"#,
+        )
+        .unwrap();
+        assert!(validate_schema(&missing_args).is_err());
+        assert!(validate_schema(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn sentinel_fields_are_omitted_not_mangled() {
+        let ev = TraceEvent::new(TraceKind::Publish, Lane::App, 5, 10);
+        let doc = to_chrome(&[ev], "t");
+        let txt = doc.to_string();
+        assert!(!txt.contains("18446744073709"), "NO_VERSION must not leak into JSON");
+        let back = from_chrome(&Json::parse(&txt).unwrap()).unwrap();
+        assert_eq!(back[0].version, NO_VERSION);
+        assert_eq!(back[0].phase, NO_PHASE);
+    }
+}

@@ -1,0 +1,270 @@
+//! Log-bucketed histograms and the shared percentile helper.
+//!
+//! [`LogHistogram`] buckets `u64` samples by bit length (powers of two):
+//! constant memory, O(1) record, exact count/sum/min/max, and quantiles
+//! accurate to the bucket's span. [`HistogramRegistry`] keeps one
+//! histogram per [`TraceKind`], fed by the recorder on every span.
+//!
+//! [`percentile_sorted`] is the single linear-interpolated percentile
+//! implementation in the tree; `util::stats` re-exports it, so the bench
+//! summaries and the trace registry agree on percentile semantics.
+
+use super::{TraceEvent, TraceKind, N_KINDS};
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Number of log2 buckets: bucket 0 holds the value 0, bucket `b ≥ 1`
+/// holds values with bit length `b`, i.e. `[2^(b-1), 2^b)`.
+const N_BUCKETS: usize = 65;
+
+/// Fixed-size log2-bucketed histogram of `u64` samples (durations in
+/// nanoseconds, staleness in iterations, ...). Zero allocations; merging
+/// two histograms is elementwise addition.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram { counts: [0; N_BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive value bounds of bucket `b`.
+fn bucket_bounds(b: usize) -> (u64, u64) {
+    if b == 0 {
+        (0, 0)
+    } else {
+        (1u64 << (b - 1), if b == 64 { u64::MAX } else { (1u64 << b) - 1 })
+    }
+}
+
+impl LogHistogram {
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all recorded samples (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Quantile estimate: locate the bucket holding rank `q·(count−1)`
+    /// and interpolate linearly across the bucket's value span. Exact for
+    /// q = 0 / q = 1 (tracked min/max); within a factor of 2 elsewhere.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c > target {
+                let (lo, hi) = bucket_bounds(b);
+                let idx_in = (target - cum) as f64;
+                let est = lo as f64 + (hi - lo) as f64 * ((idx_in + 0.5) / c as f64);
+                return est.clamp(self.min() as f64, self.max as f64);
+            }
+            cum += c;
+        }
+        self.max as f64
+    }
+}
+
+/// One [`LogHistogram`] per span kind — the registry the recorder feeds
+/// on every recorded event.
+#[derive(Debug, Clone, Default)]
+pub struct HistogramRegistry {
+    hists: [LogHistogram; N_KINDS],
+}
+
+impl HistogramRegistry {
+    pub fn record(&mut self, kind: TraceKind, v: u64) {
+        self.hists[kind.index()].record(v);
+    }
+
+    pub fn kind(&self, kind: TraceKind) -> &LogHistogram {
+        &self.hists[kind.index()]
+    }
+
+    pub fn merge(&mut self, other: &HistogramRegistry) {
+        for (a, b) in self.hists.iter_mut().zip(&other.hists) {
+            a.merge(b);
+        }
+    }
+
+    /// Build a registry of span durations from an event list (e.g. after
+    /// filtering by lane or rank).
+    pub fn from_events<'a, I: IntoIterator<Item = &'a TraceEvent>>(events: I) -> Self {
+        let mut out = HistogramRegistry::default();
+        for ev in events {
+            out.record(ev.kind, ev.dur_ns);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_moved_here_still_interpolates() {
+        let s: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert!((percentile_sorted(&s, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 1.0) - 100.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 0.5) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buckets_partition_u64() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        for b in 0..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(b);
+            assert_eq!(bucket_of(lo), b);
+            assert_eq!(bucket_of(hi), b);
+        }
+    }
+
+    #[test]
+    fn exact_aggregates() {
+        let mut h = LogHistogram::default();
+        for v in [5u64, 0, 100, 7, 3] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 115);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 23.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_within_bucket_resolution() {
+        let mut h = LogHistogram::default();
+        let mut xs: Vec<u64> = (1..=1000).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        xs.sort_unstable();
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let sorted: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+            let exact = percentile_sorted(&sorted, q);
+            let est = h.quantile(q);
+            // Log2 buckets: the estimate is within a factor of 2.
+            assert!(
+                est >= exact / 2.0 && est <= exact * 2.0,
+                "q={q}: est {est} vs exact {exact}"
+            );
+        }
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(1.0), 1000.0);
+    }
+
+    #[test]
+    fn merge_is_elementwise_sum() {
+        let mut a = LogHistogram::default();
+        let mut b = LogHistogram::default();
+        for v in 0..100u64 {
+            a.record(v);
+            b.record(v * 10);
+        }
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count(), 200);
+        assert_eq!(m.sum(), a.sum() + b.sum());
+        assert_eq!(m.min(), 0);
+        assert_eq!(m.max(), 990);
+    }
+
+    #[test]
+    fn registry_routes_by_kind() {
+        let mut r = HistogramRegistry::default();
+        r.record(TraceKind::Wait, 10);
+        r.record(TraceKind::Wait, 20);
+        r.record(TraceKind::Compute, 5);
+        assert_eq!(r.kind(TraceKind::Wait).count(), 2);
+        assert_eq!(r.kind(TraceKind::Wait).sum(), 30);
+        assert_eq!(r.kind(TraceKind::Compute).count(), 1);
+        assert_eq!(r.kind(TraceKind::Encode).count(), 0);
+    }
+
+    #[test]
+    fn empty_histogram_is_sane() {
+        let h = LogHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

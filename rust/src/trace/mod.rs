@@ -1,0 +1,425 @@
+//! Always-on tracing: per-rank event timelines with typed spans.
+//!
+//! Every rank records fixed-size [`TraceEvent`]s into a two-lane
+//! [`TraceRecorder`] — one ring per lane (application thread, engine
+//! thread), lock-split exactly like the engine's mailbox so the two
+//! threads never contend on a recording. Rings have fixed capacity and
+//! drop the **oldest** event on overflow (a counter reports how many were
+//! lost); events are `Copy` and the rings are pre-allocated, so the
+//! steady-state recording path performs zero allocations — cheap enough
+//! to leave on by default, matching the engine data path's contract.
+//!
+//! The same event schema is emitted by three producers:
+//!
+//! * the collective engine (`collectives/engine.rs`) — one
+//!   [`TraceKind::GroupExchangePhase`] span per butterfly phase (tagged
+//!   with bytes-on-wire and the activation-vs-passive role), one
+//!   [`TraceKind::TauSync`] span per every-τ barrier, plus aggregated
+//!   `Wait`/`Encode`/`Decode` sub-spans nested inside them;
+//! * the optimizer workers and the measured bench — `Compute`, `Publish`
+//!   and app-side `Wait` spans (the app `Wait` span *is* the rank's
+//!   exposed communication time);
+//! * the simulator — the identical schema derived from its analytic
+//!   timeline, so one tool ([`attrib`]) can diff simulated vs. measured
+//!   overlap component by component.
+//!
+//! Export is Chrome trace-event JSON ([`chrome`]), viewable in
+//! `chrome://tracing` or Perfetto; [`hist`] holds the log-bucketed
+//! histogram registry that replaces ad-hoc percentile math in the bench.
+
+pub mod attrib;
+pub mod chrome;
+pub mod hist;
+
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+pub use attrib::{attribute, diff_json, render_diff, Attribution};
+pub use chrome::{from_chrome, to_chrome, to_chrome_multi, validate_schema};
+pub use hist::{percentile_sorted, HistogramRegistry, LogHistogram};
+
+/// Sentinel: event not associated with a collective version.
+pub const NO_VERSION: u64 = u64::MAX;
+/// Sentinel: event not associated with a butterfly phase / ring segment.
+pub const NO_PHASE: u32 = u32::MAX;
+
+/// Per-lane ring capacity (events). At the bench/train scales in this
+/// repo a rank records a handful of events per iteration, so 8 Ki events
+/// per lane covers thousands of iterations before drop-oldest kicks in.
+pub const TRACE_RING_CAPACITY: usize = 8192;
+
+/// Typed span kinds — the closed event schema shared by the engine, the
+/// workers, the bench, and the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TraceKind {
+    /// Application forward/backward (or bench busy-loop) work.
+    Compute,
+    /// Installing a contribution into the engine send slot.
+    Publish,
+    /// One butterfly phase of a group allreduce (engine lane).
+    GroupExchangePhase,
+    /// The every-τ global synchronization (engine lane).
+    TauSync,
+    /// Codec encode time (compression), nested in its exchange span.
+    Encode,
+    /// Codec decode/decompress-sum time, nested in its exchange span.
+    Decode,
+    /// Blocked time. App lane: waiting on a collective result (this is
+    /// the rank's exposed communication). Engine lane: blocked in a
+    /// matched receive waiting for a peer (nested in its exchange span).
+    Wait,
+}
+
+/// Number of span kinds (array-indexed registries).
+pub const N_KINDS: usize = 7;
+
+impl TraceKind {
+    pub const ALL: [TraceKind; N_KINDS] = [
+        TraceKind::Compute,
+        TraceKind::Publish,
+        TraceKind::GroupExchangePhase,
+        TraceKind::TauSync,
+        TraceKind::Encode,
+        TraceKind::Decode,
+        TraceKind::Wait,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            TraceKind::Compute => 0,
+            TraceKind::Publish => 1,
+            TraceKind::GroupExchangePhase => 2,
+            TraceKind::TauSync => 3,
+            TraceKind::Encode => 4,
+            TraceKind::Decode => 5,
+            TraceKind::Wait => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Compute => "compute",
+            TraceKind::Publish => "publish",
+            TraceKind::GroupExchangePhase => "group_exchange_phase",
+            TraceKind::TauSync => "tau_sync",
+            TraceKind::Encode => "encode",
+            TraceKind::Decode => "decode",
+            TraceKind::Wait => "wait",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        TraceKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// Which thread of the rank recorded the event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Lane {
+    /// The application (training/bench) thread.
+    App,
+    /// The communication engine thread.
+    Engine,
+}
+
+impl Lane {
+    pub const ALL: [Lane; 2] = [Lane::App, Lane::Engine];
+
+    pub fn index(self) -> usize {
+        match self {
+            Lane::App => 0,
+            Lane::Engine => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::App => "app",
+            Lane::Engine => "engine",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Lane> {
+        Lane::ALL.into_iter().find(|l| l.name() == s)
+    }
+}
+
+/// One recorded span. `Copy` and fixed-size so the recording ring never
+/// allocates; all optional associations use numeric sentinels
+/// ([`NO_VERSION`], [`NO_PHASE`]) instead of `Option` to keep the layout
+/// flat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    pub lane: Lane,
+    /// Recording rank (stamped by the recorder).
+    pub rank: u32,
+    /// Span start, nanoseconds since the process-wide trace epoch.
+    pub t_ns: u64,
+    /// Span duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Collective version / training iteration ([`NO_VERSION`] if none).
+    pub version: u64,
+    /// Butterfly phase or ring-segment index ([`NO_PHASE`] if none).
+    pub phase: u32,
+    /// Bytes attributed to the span: bytes-on-wire for exchange/sync
+    /// spans, payload bytes for publish spans, 0 otherwise.
+    pub bytes: u64,
+    /// True when the rank joined this collective passively (contributed a
+    /// stale buffer after a peer's activation) rather than as activator
+    /// or fresh participant.
+    pub passive: bool,
+}
+
+impl TraceEvent {
+    /// A span with no collective association; set `version`/`phase`/
+    /// `bytes`/`passive` on the returned value as needed.
+    pub fn new(kind: TraceKind, lane: Lane, t_ns: u64, dur_ns: u64) -> TraceEvent {
+        TraceEvent {
+            kind,
+            lane,
+            rank: 0,
+            t_ns,
+            dur_ns,
+            version: NO_VERSION,
+            phase: NO_PHASE,
+            bytes: 0,
+            passive: false,
+        }
+    }
+
+    /// Span end (ns since epoch).
+    pub fn end_ns(&self) -> u64 {
+        self.t_ns + self.dur_ns
+    }
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide trace epoch: the instant of the first `now_ns` call.
+/// All ranks/threads stamp against the same epoch so cross-rank
+/// timelines line up in the exported trace.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process-wide trace epoch.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Fixed-capacity ring of events: overflow overwrites the **oldest**
+/// event and bumps the dropped counter. The backing `Vec` is reserved at
+/// construction and never reallocates.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Index of the oldest event once the ring is full.
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn with_capacity(cap: usize) -> TraceRing {
+        TraceRing { buf: Vec::with_capacity(cap), cap, head: 0, dropped: 0 }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.cap == 0 {
+            self.dropped += 1;
+        } else if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain surviving events oldest-first, leaving the ring empty (the
+    /// dropped counter is preserved).
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+        out
+    }
+}
+
+struct LaneState {
+    ring: TraceRing,
+    hist: HistogramRegistry,
+}
+
+/// Per-rank recorder: one ring + histogram registry per lane, each behind
+/// its own mutex (lock-split — the app and engine threads record into
+/// disjoint locks and never contend). Disabled recorders no-op without
+/// touching any lock state beyond the initial flag check.
+pub struct TraceRecorder {
+    rank: u32,
+    enabled: bool,
+    lanes: [Mutex<LaneState>; 2],
+}
+
+impl TraceRecorder {
+    pub fn new(rank: u32, enabled: bool, capacity: usize) -> TraceRecorder {
+        let mk = || {
+            Mutex::new(LaneState {
+                ring: TraceRing::with_capacity(if enabled { capacity } else { 0 }),
+                hist: HistogramRegistry::default(),
+            })
+        };
+        TraceRecorder { rank, enabled, lanes: [mk(), mk()] }
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one span (the recorder stamps its own rank). No-op when
+    /// tracing is disabled.
+    pub fn record(&self, mut ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        ev.rank = self.rank;
+        let mut lane = self.lanes[ev.lane.index()].lock().unwrap();
+        lane.hist.record(ev.kind, ev.dur_ns);
+        lane.ring.push(ev);
+    }
+
+    /// Total events lost to ring overflow, both lanes.
+    pub fn dropped(&self) -> u64 {
+        self.lanes.iter().map(|l| l.lock().unwrap().ring.dropped()).sum()
+    }
+
+    /// Drain both lanes, merged and sorted by start time.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for l in &self.lanes {
+            out.extend(l.lock().unwrap().ring.drain());
+        }
+        out.sort_by_key(|e| (e.t_ns, e.lane.index(), e.kind.index()));
+        out
+    }
+
+    /// Merged duration histograms over both lanes (survives `drain`).
+    pub fn histograms(&self) -> HistogramRegistry {
+        let mut out = HistogramRegistry::default();
+        for l in &self.lanes {
+            out.merge(&l.lock().unwrap().hist);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64) -> TraceEvent {
+        TraceEvent::new(TraceKind::Compute, Lane::App, t, 1)
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let mut r = TraceRing::with_capacity(4);
+        for t in 0..10 {
+            r.push(ev(t));
+        }
+        assert_eq!(r.dropped(), 6);
+        assert_eq!(r.len(), 4);
+        let out = r.drain();
+        // Drop-oldest: the survivors are the newest 4, in order.
+        let ts: Vec<u64> = out.iter().map(|e| e.t_ns).collect();
+        assert_eq!(ts, vec![6, 7, 8, 9]);
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 6, "drain preserves the dropped counter");
+    }
+
+    #[test]
+    fn ring_order_preserved_below_capacity() {
+        let mut r = TraceRing::with_capacity(8);
+        for t in [3u64, 1, 4, 1, 5] {
+            r.push(ev(t));
+        }
+        assert_eq!(r.dropped(), 0);
+        let ts: Vec<u64> = r.drain().iter().map(|e| e.t_ns).collect();
+        assert_eq!(ts, vec![3, 1, 4, 1, 5], "insertion order, not sorted");
+    }
+
+    #[test]
+    fn zero_capacity_ring_drops_everything() {
+        let mut r = TraceRing::with_capacity(0);
+        for t in 0..5 {
+            r.push(ev(t));
+        }
+        assert_eq!(r.dropped(), 5);
+        assert!(r.drain().is_empty());
+    }
+
+    #[test]
+    fn recorder_stamps_rank_and_merges_lanes_sorted() {
+        let rec = TraceRecorder::new(3, true, 16);
+        rec.record(TraceEvent::new(TraceKind::Wait, Lane::Engine, 20, 5));
+        rec.record(TraceEvent::new(TraceKind::Compute, Lane::App, 10, 5));
+        let out = rec.drain();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|e| e.rank == 3));
+        assert_eq!(out[0].kind, TraceKind::Compute);
+        assert_eq!(out[1].kind, TraceKind::Wait);
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let rec = TraceRecorder::new(0, false, 16);
+        for t in 0..100 {
+            rec.record(ev(t));
+        }
+        assert!(rec.drain().is_empty());
+        assert_eq!(rec.histograms().kind(TraceKind::Compute).count(), 0);
+    }
+
+    #[test]
+    fn histograms_survive_drain() {
+        let rec = TraceRecorder::new(0, true, 4);
+        for t in 0..10 {
+            rec.record(ev(t));
+        }
+        let _ = rec.drain();
+        // All 10 durations were histogrammed even though 6 events dropped.
+        assert_eq!(rec.histograms().kind(TraceKind::Compute).count(), 10);
+        assert_eq!(rec.dropped(), 6);
+    }
+
+    #[test]
+    fn kind_and_lane_names_round_trip() {
+        for k in TraceKind::ALL {
+            assert_eq!(TraceKind::parse(k.name()), Some(k));
+        }
+        for l in Lane::ALL {
+            assert_eq!(Lane::parse(l.name()), Some(l));
+        }
+        assert_eq!(TraceKind::parse("nope"), None);
+    }
+}

@@ -1,4 +1,11 @@
 //! Summary statistics used by the metrics recorders and bench harness.
+//!
+//! The percentile implementation lives in the trace layer's histogram
+//! registry ([`crate::trace::hist`]) and is re-exported here, so every
+//! percentile in the tree — bench summaries, trace histograms, staleness
+//! aggregates — shares one tested helper.
+
+pub use crate::trace::hist::percentile_sorted;
 
 /// Online mean/variance accumulator (Welford).
 #[derive(Debug, Clone, Default)]
@@ -77,21 +84,6 @@ impl Summary {
             p99: percentile_sorted(&s, 0.99),
             max: *s.last().unwrap(),
         }
-    }
-}
-
-/// Linear-interpolated percentile of an ascending-sorted slice.
-pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
-    let q = q.clamp(0.0, 1.0);
-    let pos = q * (sorted.len() - 1) as f64;
-    let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    if lo == hi {
-        sorted[lo]
-    } else {
-        let frac = pos - lo as f64;
-        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
     }
 }
 

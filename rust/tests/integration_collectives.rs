@@ -20,6 +20,7 @@ fn cfg(p: usize, s: usize, tau: u64) -> EngineConfig {
         activation: ActivationMode::Solo,
         chunk_elems: 0,
         compression: Compression::None,
+        trace: true,
     }
 }
 

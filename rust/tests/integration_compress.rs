@@ -154,6 +154,7 @@ fn prop_compressed_ratio_one_exchange_bitwise_identical() {
             activation: ActivationMode::Solo,
             chunk_elems,
             compression: comp,
+            trace: true,
         };
         let dim = inputs[0].len();
         let barrier = Arc::new(Barrier::new(p));

@@ -1,0 +1,284 @@
+//! Integration tests for the always-on tracing layer: recorder overhead
+//! invariants on the real engine, Chrome-trace export of measured and
+//! simulated timelines, wait-time attribution, and the schema parity
+//! that makes the sim-vs-measured diff meaningful.
+
+use std::thread;
+
+use wagma::collectives::allreduce::AllreduceAlgo;
+use wagma::collectives::engine::{
+    ActivationMode, CollectiveEngine, EngineConfig, EngineStats,
+};
+use wagma::comm::world;
+use wagma::compress::Compression;
+use wagma::simulator::{simulate, NetworkModel, SimConfig};
+use wagma::trace::{
+    attribute, from_chrome, now_ns, to_chrome, validate_schema, Lane, TraceEvent, TraceKind,
+};
+
+fn cfg(p: usize, s: usize, tau: u64, trace: bool) -> EngineConfig {
+    EngineConfig {
+        p,
+        group_size: s,
+        tau,
+        dynamic_groups: true,
+        sync_algo: AllreduceAlgo::Auto,
+        activation: ActivationMode::Solo,
+        chunk_elems: 0,
+        compression: Compression::None,
+        trace,
+    }
+}
+
+/// Run a WAGMA-style loop and hand back per-rank (stats, drained events).
+fn run_world(c: EngineConfig, dim: usize, steps: u64) -> Vec<(EngineStats, Vec<TraceEvent>)> {
+    let engines: Vec<CollectiveEngine> = world(c.p)
+        .into_iter()
+        .map(|ep| {
+            let r = ep.rank() as f32;
+            CollectiveEngine::spawn(ep, c, vec![r; dim])
+        })
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            thread::spawn(move || {
+                let tracer = eng.tracer();
+                for t in 0..steps {
+                    // "Compute": building the payload, recorded the way the
+                    // real workers record their gradient step.
+                    let c0 = now_ns();
+                    let w = vec![eng.rank() as f32 + t as f32; dim];
+                    let mut ev = TraceEvent::new(TraceKind::Compute, Lane::App, c0, now_ns() - c0);
+                    ev.version = t;
+                    tracer.record(ev);
+                    eng.publish(&w, t);
+                    if eng.config().is_sync_iter(t) {
+                        let _ = eng.global_sync(t);
+                    } else {
+                        let _ = eng.group_allreduce(t);
+                    }
+                }
+                let stats = eng.shutdown();
+                (stats, tracer.drain())
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Recording must be accounting-invisible: the engine's deterministic
+/// counters are bit-identical with tracing on or off. P = 1 keeps the
+/// whole schedule serial (no refcount races), so every counter —
+/// including pool allocations — is exactly reproducible.
+#[test]
+fn tracing_toggle_leaves_engine_accounting_identical() {
+    let run = |trace: bool| run_world(cfg(1, 1, 3, trace), 256, 9);
+    let traced = run(true);
+    let plain = run(false);
+    assert_eq!(traced.len(), 1);
+    let (ts, tev) = &traced[0];
+    let (ps, pev) = &plain[0];
+    assert_eq!(ts.copied_bytes, ps.copied_bytes, "copied_bytes must not depend on tracing");
+    assert_eq!(ts.pool_allocs, ps.pool_allocs, "pool_allocs must not depend on tracing");
+    assert_eq!(ts.sent_bytes, ps.sent_bytes);
+    assert_eq!(ts.sent_msgs, ps.sent_msgs);
+    assert_eq!(ts.group_collectives, ps.group_collectives);
+    // Disabled recorder: truly off, not just unread.
+    assert!(pev.is_empty(), "disabled tracing must record nothing");
+    assert_eq!(ps.dropped_trace_events, 0);
+    // Enabled recorder: app-lane spans for every publish and result wait,
+    // plus an engine-lane span per tau sync (S = 1 has no exchange phases).
+    assert_eq!(tev.iter().filter(|e| e.kind == TraceKind::Publish).count(), 9);
+    assert_eq!(
+        tev.iter().filter(|e| e.lane == Lane::App && e.kind == TraceKind::Wait).count(),
+        9
+    );
+    assert_eq!(tev.iter().filter(|e| e.kind == TraceKind::TauSync).count(), 3);
+    assert_eq!(ts.dropped_trace_events, 0);
+}
+
+/// Every engine phase of a multi-rank run shows up in the timeline with
+/// correct nesting, and the attribution partitions each rank's exposed
+/// wait exactly.
+#[test]
+fn engine_trace_covers_every_phase_and_attributes_waits() {
+    let p = 4;
+    let steps = 9u64; // tau = 3: syncs at t = 2, 5, 8; 6 group collectives
+    let out = run_world(cfg(p, 2, 3, true), 128, steps);
+    let mut all: Vec<TraceEvent> = Vec::new();
+    for (rank, (stats, events)) in out.iter().enumerate() {
+        let phases: Vec<&TraceEvent> = events
+            .iter()
+            .filter(|e| e.kind == TraceKind::GroupExchangePhase)
+            .collect();
+        // S = 2 → one butterfly phase per group collective per rank.
+        assert_eq!(phases.len() as u64, stats.group_collectives, "rank {rank}");
+        assert!(phases.iter().all(|e| e.lane == Lane::Engine && e.bytes > 0));
+        assert_eq!(
+            events.iter().filter(|e| e.kind == TraceKind::TauSync).count(),
+            3,
+            "rank {rank}"
+        );
+        // Engine-lane sub-spans nest inside some parent span window.
+        for sub in events.iter().filter(|e| {
+            e.lane == Lane::Engine
+                && matches!(e.kind, TraceKind::Wait | TraceKind::Encode | TraceKind::Decode)
+        }) {
+            assert!(
+                events.iter().any(|parent| {
+                    matches!(parent.kind, TraceKind::GroupExchangePhase | TraceKind::TauSync)
+                        && parent.lane == Lane::Engine
+                        && parent.t_ns <= sub.t_ns
+                        && sub.end_ns() <= parent.end_ns()
+                }),
+                "rank {rank}: engine sub-span escapes its parent"
+            );
+        }
+        // The always-on counters agree with the recorded wait spans: the
+        // stats side never under-reports what the trace shows.
+        let traced_wait: u64 = events
+            .iter()
+            .filter(|e| e.lane == Lane::Engine && e.kind == TraceKind::Wait)
+            .map(|e| e.dur_ns)
+            .sum();
+        assert!(
+            stats.wait_group_ns + stats.wait_sync_ns >= traced_wait,
+            "rank {rank}: wait counters {} + {} < traced {traced_wait}",
+            stats.wait_group_ns,
+            stats.wait_sync_ns
+        );
+        all.extend(events.iter().copied());
+    }
+    all.sort_by_key(|e| (e.t_ns, e.rank, e.lane.index(), e.kind.index()));
+    let att = attribute(&all, &NetworkModel::aries());
+    assert_eq!(att.ranks, p);
+    assert_eq!(att.phase_spans, out.iter().map(|(s, _)| s.group_collectives).sum::<u64>());
+    assert_eq!(att.tau_sync_spans, 3 * p as u64);
+    assert!(att.exposed_s > 0.0);
+    // Acceptance bound: the four components partition the exposed total
+    // (exact by construction; 5% is the paper-facing tolerance).
+    let err = (att.components_sum_s() - att.exposed_s).abs() / att.exposed_s;
+    assert!(err < 0.05, "attribution partition error {err}");
+}
+
+/// Chrome export of a real engine run is schema-valid and round-trips
+/// through the hand-rolled JSON layer without losing events.
+#[test]
+fn measured_trace_round_trips_through_chrome_json() {
+    let out = run_world(cfg(2, 2, 4, true), 64, 8);
+    let mut all: Vec<TraceEvent> = out.into_iter().flat_map(|(_, ev)| ev).collect();
+    all.sort_by_key(|e| (e.t_ns, e.rank, e.lane.index(), e.kind.index()));
+    let doc = to_chrome(&all, "test run");
+    validate_schema(&doc).expect("chrome schema");
+    // Serialize → parse → decode: the µs round-trip must preserve every
+    // event (ns granularity survives the fixed-point µs encoding).
+    let text = doc.to_string();
+    let parsed = wagma::util::json::Json::parse(&text).expect("parse");
+    let mut back = from_chrome(&parsed).expect("decode");
+    back.sort_by_key(|e| (e.t_ns, e.rank, e.lane.index(), e.kind.index()));
+    assert_eq!(back, all);
+}
+
+/// Schema parity: the simulator's analytic timeline and the measured
+/// engine timeline speak the same schema — same event kinds on the same
+/// lanes, valid under the same Chrome export, attributable by the same
+/// function. Swept over shapes/seeds property-style.
+#[test]
+fn sim_and_measured_traces_share_one_schema() {
+    use std::collections::BTreeSet;
+    let lane_kinds = |events: &[TraceEvent]| -> BTreeSet<(usize, usize)> {
+        events.iter().map(|e| (e.lane.index(), e.kind.index())).collect()
+    };
+
+    let out = run_world(cfg(4, 2, 3, true), 128, 9);
+    let mut measured: Vec<TraceEvent> = out.into_iter().flat_map(|(_, ev)| ev).collect();
+    measured.sort_by_key(|e| (e.t_ns, e.rank, e.lane.index(), e.kind.index()));
+    let measured_kinds = lane_kinds(&measured);
+
+    for seed in [1u64, 7, 42] {
+        for p in [4usize, 8] {
+            let sim_cfg = SimConfig {
+                algo: wagma::optim::Algorithm::Wagma,
+                p,
+                steps: 9,
+                model_bytes: 1 << 16,
+                tau: 3,
+                seed,
+                trace: true,
+                ..Default::default()
+            };
+            let r = simulate(&sim_cfg);
+            assert!(!r.trace.is_empty(), "sim must emit events when traced");
+            // Same canonical ordering contract as the measured merge.
+            assert!(r
+                .trace
+                .windows(2)
+                .all(|w| (w[0].t_ns, w[0].rank, w[0].lane.index(), w[0].kind.index())
+                    <= (w[1].t_ns, w[1].rank, w[1].lane.index(), w[1].kind.index())));
+            // Every (lane, kind) the simulator emits also occurs in the
+            // measured timeline: the sim speaks a subset of one schema,
+            // never a dialect (it has no Publish/Encode/Decode here, the
+            // measured run has no extras the schema lacks).
+            let sim_kinds = lane_kinds(&r.trace);
+            assert!(
+                sim_kinds.is_subset(&measured_kinds),
+                "sim kinds {sim_kinds:?} not a subset of measured {measured_kinds:?}"
+            );
+            for core in [
+                (Lane::App.index(), TraceKind::Compute.index()),
+                (Lane::Engine.index(), TraceKind::GroupExchangePhase.index()),
+                (Lane::Engine.index(), TraceKind::TauSync.index()),
+            ] {
+                assert!(sim_kinds.contains(&core), "sim missing core kind {core:?}");
+            }
+            // Both exports validate, and one attribution implementation
+            // serves both producers.
+            let doc = to_chrome(&r.trace, "sim");
+            validate_schema(&doc).expect("sim chrome schema");
+            let att = attribute(&r.trace, &sim_cfg.net);
+            assert!(att.components_sum_s().is_finite());
+            if att.exposed_s > 0.0 {
+                let err = (att.components_sum_s() - att.exposed_s).abs() / att.exposed_s;
+                assert!(err < 0.05, "sim attribution partition error {err}");
+            }
+            assert!(att.phase_spans > 0);
+        }
+    }
+
+    let doc = to_chrome(&measured, "measured");
+    validate_schema(&doc).expect("measured chrome schema");
+}
+
+/// Simulated codec spans: with wire compression on, the simulator prices
+/// encode/decode (the δ term) as nested engine spans, and the attribution
+/// picks them up as a codec component.
+#[test]
+fn simulated_compression_yields_codec_component() {
+    let sim_cfg = SimConfig {
+        algo: wagma::optim::Algorithm::Wagma,
+        p: 4,
+        steps: 8,
+        model_bytes: 1 << 20,
+        tau: 4,
+        seed: 3,
+        compress: Compression::TopK { ratio: 0.1 },
+        trace: true,
+        ..Default::default()
+    };
+    let r = simulate(&sim_cfg);
+    let enc = r.trace.iter().filter(|e| e.kind == TraceKind::Encode).count();
+    let dec = r.trace.iter().filter(|e| e.kind == TraceKind::Decode).count();
+    assert!(enc > 0 && enc == dec, "codec spans: {enc} encode vs {dec} decode");
+    // Codec spans nest inside their phase span.
+    for e in r.trace.iter().filter(|e| e.kind == TraceKind::Encode) {
+        assert!(r.trace.iter().any(|ph| {
+            ph.kind == TraceKind::GroupExchangePhase
+                && ph.rank == e.rank
+                && ph.t_ns <= e.t_ns
+                && e.end_ns() <= ph.end_ns()
+        }));
+    }
+    let att = attribute(&r.trace, &sim_cfg.net);
+    assert!(att.codec_s >= 0.0 && att.components_sum_s().is_finite());
+}

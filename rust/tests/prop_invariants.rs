@@ -170,6 +170,7 @@ fn prop_chunked_group_allreduce_bitwise_matches_unchunked() {
             activation: ActivationMode::Solo,
             chunk_elems,
             compression: Compression::None,
+            trace: true,
         };
         let dim = inputs[0][0].len();
         let barrier = Arc::new(Barrier::new(p));
