@@ -41,6 +41,32 @@ use std::fmt;
 use std::ops::Deref;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Typed error returned by the deadline receive paths: the deadline
+/// elapsed with no matching message. Carries what the receive was waiting
+/// for so callers (the engine's suspicion machinery) can attribute the
+/// timeout to a peer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvTimeout {
+    /// A matched data receive timed out waiting on `(src, tag)`.
+    Data { src: usize, tag: Tag },
+    /// A control receive timed out with no control traffic pending.
+    Ctrl,
+}
+
+impl fmt::Display for RecvTimeout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecvTimeout::Data { src, tag } => {
+                write!(f, "receive deadline elapsed waiting on rank {src} for {tag:?}")
+            }
+            RecvTimeout::Ctrl => write!(f, "receive deadline elapsed waiting for control traffic"),
+        }
+    }
+}
+
+impl std::error::Error for RecvTimeout {}
 
 /// What a message is for. Collective schedules never confuse traffic from
 /// different collective families because the kind is part of the match.
@@ -468,6 +494,34 @@ impl MailboxShared {
         got
     }
 
+    /// [`MailboxShared::wait_round`] with a deadline: parks at most until
+    /// `deadline` (via `Condvar::wait_timeout`). The missed-wakeup
+    /// argument is unchanged — a timeout-expired return simply hands
+    /// control back to the caller's retry loop, which re-attempts once
+    /// more before declaring the deadline missed.
+    fn wait_round_deadline<T>(
+        &self,
+        deadline: Instant,
+        mut attempt: impl FnMut(&Self) -> Option<T>,
+    ) -> Option<T> {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let guard = self.wake.lock().unwrap();
+        let got = attempt(self);
+        if got.is_none() {
+            let now = Instant::now();
+            if now < deadline {
+                let (guard, _timed_out) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+                drop(guard);
+            } else {
+                drop(guard);
+            }
+        } else {
+            drop(guard);
+        }
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+        got
+    }
+
     /// Non-blocking matched receive. Pending control traffic is drained
     /// before data — activations and app requests must never queue behind
     /// bulk payloads (the old single-FIFO delivered them in arrival order;
@@ -500,6 +554,41 @@ impl MailboxShared {
             }
             if let Some(m) = self.wait_round(|s| s.try_pop_ctrl()) {
                 return m;
+            }
+        }
+    }
+
+    /// [`MailboxShared::recv_data_or_ctrl_blocking`] bounded by `deadline`.
+    fn recv_data_or_ctrl_deadline(
+        &self,
+        src: usize,
+        tag: Tag,
+        deadline: Instant,
+    ) -> Result<Result<Chunk, Message>, RecvTimeout> {
+        loop {
+            if let Some(r) = self.try_recv_matched(src, tag) {
+                return Ok(r);
+            }
+            if Instant::now() >= deadline {
+                return Err(RecvTimeout::Data { src, tag });
+            }
+            if let Some(r) = self.wait_round_deadline(deadline, |s| s.try_recv_matched(src, tag)) {
+                return Ok(r);
+            }
+        }
+    }
+
+    /// [`MailboxShared::recv_ctrl_blocking`] bounded by `deadline`.
+    fn recv_ctrl_deadline(&self, deadline: Instant) -> Result<Message, RecvTimeout> {
+        loop {
+            if let Some(m) = self.try_pop_ctrl() {
+                return Ok(m);
+            }
+            if Instant::now() >= deadline {
+                return Err(RecvTimeout::Ctrl);
+            }
+            if let Some(m) = self.wait_round_deadline(deadline, |s| s.try_pop_ctrl()) {
+                return Ok(m);
             }
         }
     }
@@ -637,11 +726,56 @@ impl Endpoint {
         }
     }
 
+    /// Deadline-bounded matched receive: like [`Endpoint::recv_data`], but
+    /// gives up with a typed [`RecvTimeout`] if `(src, tag)` has not
+    /// arrived by `deadline`. A peer that never sends can no longer hang
+    /// the calling thread forever — the engine's degraded exchange paths
+    /// build on this.
+    pub fn recv_deadline(
+        &mut self,
+        src: usize,
+        tag: Tag,
+        deadline: Instant,
+        mut on_ctrl: impl FnMut(&mut Self, Message),
+    ) -> Result<Chunk, RecvTimeout> {
+        loop {
+            match self.inbox.recv_data_or_ctrl_deadline(src, tag, deadline)? {
+                Ok(chunk) => return Ok(chunk),
+                Err(msg) => on_ctrl(self, msg),
+            }
+        }
+    }
+
+    /// Deadline-bounded form of [`Endpoint::recv_data_or_ctrl`]: yields
+    /// `Ok(Some(chunk))` on a match, `Ok(None)` after pushing exactly one
+    /// control message into `ctrl`, or `Err(RecvTimeout)` once `deadline`
+    /// passes with neither.
+    pub fn recv_data_or_ctrl_deadline(
+        &mut self,
+        src: usize,
+        tag: Tag,
+        deadline: Instant,
+        ctrl: &mut Vec<Message>,
+    ) -> Result<Option<Chunk>, RecvTimeout> {
+        match self.inbox.recv_data_or_ctrl_deadline(src, tag, deadline)? {
+            Ok(chunk) => Ok(Some(chunk)),
+            Err(msg) => {
+                ctrl.push(msg);
+                Ok(None)
+            }
+        }
+    }
+
     /// Blocking receive of the next control message (engine idle loop).
     /// Data messages are untouched: they wait in their lanes for the
     /// matched receive of the schedule that wants them.
     pub fn recv_ctrl(&mut self) -> Message {
         self.inbox.recv_ctrl_blocking()
+    }
+
+    /// Deadline-bounded form of [`Endpoint::recv_ctrl`].
+    pub fn recv_ctrl_deadline(&mut self, deadline: Instant) -> Result<Message, RecvTimeout> {
+        self.inbox.recv_ctrl_deadline(deadline)
     }
 
     /// Non-blocking receive of a control message.
@@ -816,6 +950,83 @@ mod tests {
         drop(v);
         // Detached buffers never return.
         assert_eq!(pool.stats().free, 0);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_with_typed_error() {
+        let mut eps = world(2);
+        let mut e0 = eps.remove(0);
+        let tag = Tag::exchange(5, 0);
+        let t0 = Instant::now();
+        let deadline = t0 + std::time::Duration::from_millis(30);
+        let err = e0.recv_deadline(1, tag, deadline, |_, _| {}).unwrap_err();
+        assert_eq!(err, RecvTimeout::Data { src: 1, tag });
+        let waited = t0.elapsed();
+        assert!(waited >= std::time::Duration::from_millis(30), "returned early: {waited:?}");
+        assert!(waited < std::time::Duration::from_secs(5), "hung: {waited:?}");
+        // The error is a real `std::error::Error` with a useful message.
+        let msg = err.to_string();
+        assert!(msg.contains("rank 1"), "{msg}");
+    }
+
+    #[test]
+    fn recv_deadline_returns_data_sent_before_deadline() {
+        let mut eps = world(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            e1.send(0, Tag::sync(2, 0), vec![7.0]);
+        });
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        let got = e0.recv_deadline(1, Tag::sync(2, 0), deadline, |_, _| {}).unwrap();
+        assert_eq!(got, vec![7.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_deadline_still_services_ctrl_traffic() {
+        let mut eps = world(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            e1.send_ctrl(0, Payload::Activation { root: 1, version: 4 });
+            e1.send(0, Tag::exchange(4, 0), vec![9.0]);
+        });
+        let mut acts = Vec::new();
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        let data = e0
+            .recv_deadline(1, Tag::exchange(4, 0), deadline, |_, m| {
+                if let Payload::Activation { root, version } = m.payload {
+                    acts.push((root, version));
+                }
+            })
+            .unwrap();
+        assert_eq!(data, vec![9.0]);
+        assert_eq!(acts, vec![(1, 4)]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_ctrl_deadline_times_out_and_delivers() {
+        let mut eps = world(1);
+        let mut e0 = eps.pop().unwrap();
+        let err =
+            e0.recv_ctrl_deadline(Instant::now() + std::time::Duration::from_millis(20));
+        assert_eq!(err.unwrap_err(), RecvTimeout::Ctrl);
+        let tx = e0.self_sender();
+        tx.send(Message {
+            src: 0,
+            tag: Tag::exchange(0, 0),
+            payload: Payload::AppSync { version: 2 },
+        });
+        let msg = e0
+            .recv_ctrl_deadline(Instant::now() + std::time::Duration::from_secs(10))
+            .unwrap();
+        match msg.payload {
+            Payload::AppSync { version } => assert_eq!(version, 2),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]
