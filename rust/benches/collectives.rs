@@ -53,6 +53,8 @@ fn bench_group_allreduce(b: &mut Bencher, p: usize, s: usize, n: usize, iters: u
             chunk_elems: 0,
             compression: Compression::None,
             trace: true,
+            recv_deadline_ns: 0,
+            recv_retries: 0,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()

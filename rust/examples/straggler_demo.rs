@@ -28,6 +28,8 @@ fn main() {
         chunk_elems: 0,
         compression: Compression::None,
         trace: true,
+        recv_deadline_ns: 0,
+        recv_retries: 0,
     };
     println!("Fig. 3 demo: P=4, S=2, tau={tau}; rank 1 is the straggler\n");
     let (log_tx, log_rx) = channel::<(u64, usize, String)>();

@@ -117,6 +117,8 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
         chunk_elems: cfg.chunk_elems,
         compression: cfg.compression,
         trace: true,
+        recv_deadline_ns: 0,
+        recv_retries: 0,
     };
     let start = Instant::now();
     let engines: Vec<CollectiveEngine> = world(cfg.p)

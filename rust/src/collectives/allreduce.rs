@@ -168,22 +168,45 @@ pub(crate) fn ring_allreduce_segments(
     ep: &mut Endpoint,
     version: u64,
     contrib: SharedBuf,
+    recv: impl FnMut(&mut Endpoint, usize, Tag) -> Chunk,
+) -> Vec<f32> {
+    let members: Vec<usize> = (0..ep.p()).collect();
+    ring_allreduce_segments_over(ep, version, contrib, &members, recv)
+}
+
+/// [`ring_allreduce_segments`] generalized over an explicit (sorted)
+/// participant list — the elastic-membership τ-sync re-segments the model
+/// over the *survivors* instead of all `P` ranks. The schedule is the
+/// ordinary ring on the participants' *indices* (ring position = index in
+/// `members`, neighbours = adjacent members), so with `members == 0..P`
+/// this is byte-for-byte the classic full ring. The caller must appear in
+/// `members` and all members must drive the same list (deterministic:
+/// survivor sets come from the shared [`crate::fault::FaultPlan`] oracle).
+pub(crate) fn ring_allreduce_segments_over(
+    ep: &mut Endpoint,
+    version: u64,
+    contrib: SharedBuf,
+    members: &[usize],
     mut recv: impl FnMut(&mut Endpoint, usize, Tag) -> Chunk,
 ) -> Vec<f32> {
-    let p = ep.p();
-    let rank = ep.rank();
+    let k = members.len();
+    let idx = members
+        .iter()
+        .position(|&m| m == ep.rank())
+        .expect("ring caller must be in the member list");
+    debug_assert!(k >= 2, "degenerate rings are the caller's fast path");
     let n = contrib.len();
-    let next = (rank + 1) % p;
-    let prev = (rank + p - 1) % p;
+    let next = members[(idx + 1) % k];
+    let prev = members[(idx + k - 1) % k];
     // Chunk boundaries: segment c covers [off(c), off(c+1)).
-    let off = |c: usize| -> usize { (n * c) / p };
+    let off = |c: usize| -> usize { (n * c) / k };
     let pool = ep.pool().clone();
 
     let mut segs: Vec<Chunk> =
-        (0..p).map(|c| Chunk::range(contrib.clone(), off(c), off(c + 1))).collect();
+        (0..k).map(|c| Chunk::range(contrib.clone(), off(c), off(c + 1))).collect();
     for gather in [false, true] {
-        for s in 0..p - 1 {
-            let (send_c, recv_c, phase) = ring_step(rank, p, s, gather);
+        for s in 0..k - 1 {
+            let (send_c, recv_c, phase) = ring_step(idx, k, s, gather);
             ep.send_chunk(next, Tag::sync(version, phase), segs[send_c].clone());
             let rhs = recv(ep, prev, Tag::sync(version, phase));
             debug_assert_eq!(rhs.len(), segs[recv_c].len());
@@ -228,24 +251,45 @@ pub(crate) fn ring_allreduce_segments_compressed(
     contrib: SharedBuf,
     comp: Compression,
     scratch: &mut EncodeScratch,
+    recv: impl FnMut(&mut Endpoint, usize, Tag) -> Chunk,
+) -> Vec<f32> {
+    let members: Vec<usize> = (0..ep.p()).collect();
+    ring_allreduce_segments_compressed_over(ep, version, contrib, comp, scratch, &members, recv)
+}
+
+/// [`ring_allreduce_segments_compressed`] over an explicit participant
+/// list — see [`ring_allreduce_segments_over`] for the membership
+/// contract.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn ring_allreduce_segments_compressed_over(
+    ep: &mut Endpoint,
+    version: u64,
+    contrib: SharedBuf,
+    comp: Compression,
+    scratch: &mut EncodeScratch,
+    members: &[usize],
     mut recv: impl FnMut(&mut Endpoint, usize, Tag) -> Chunk,
 ) -> Vec<f32> {
     debug_assert!(!comp.is_none(), "use ring_allreduce_segments for the exact path");
-    let p = ep.p();
-    let rank = ep.rank();
+    let k = members.len();
+    let idx = members
+        .iter()
+        .position(|&m| m == ep.rank())
+        .expect("ring caller must be in the member list");
+    debug_assert!(k >= 2, "degenerate rings are the caller's fast path");
     let n = contrib.len();
-    let next = (rank + 1) % p;
-    let prev = (rank + p - 1) % p;
-    let off = |c: usize| -> usize { (n * c) / p };
+    let next = members[(idx + 1) % k];
+    let prev = members[(idx + k - 1) % k];
+    let off = |c: usize| -> usize { (n * c) / k };
     let pool = ep.pool().clone();
 
     let mut segs: Vec<Chunk> =
-        (0..p).map(|c| Chunk::range(contrib.clone(), off(c), off(c + 1))).collect();
+        (0..k).map(|c| Chunk::range(contrib.clone(), off(c), off(c + 1))).collect();
 
     // Reduce-scatter: encoded partial sums travel; the local segment folds
     // each arrival in via the fused decompress-sum.
-    for s in 0..p - 1 {
-        let (send_c, recv_c, phase) = ring_step(rank, p, s, false);
+    for s in 0..k - 1 {
+        let (send_c, recv_c, phase) = ring_step(idx, k, s, false);
         let mut enc = pool.take(comp.encoded_words(segs[send_c].len()));
         comp.encode(segs[send_c].as_slice(), enc.data_mut(), scratch);
         ep.send_chunk(next, Tag::sync(version, phase), Chunk::full(Arc::new(enc)));
@@ -260,8 +304,8 @@ pub(crate) fn ring_allreduce_segments_compressed(
     // the decode so it agrees with everyone else bitwise); every other rank
     // forwards the received encoding untouched and stores its decode.
     let mut fwd: Option<Chunk> = None;
-    for s in 0..p - 1 {
-        let (send_c, recv_c, phase) = ring_step(rank, p, s, true);
+    for s in 0..k - 1 {
+        let (send_c, recv_c, phase) = ring_step(idx, k, s, true);
         let enc_send = match fwd.take() {
             Some(c) => c,
             None => {
@@ -307,6 +351,8 @@ pub fn allreduce_sum_ring(ep: &mut Endpoint, buf: &mut Vec<f32>, version: u64) {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
     use crate::comm::world;
     use std::thread;
@@ -456,6 +502,53 @@ mod tests {
         let scale_bound = (p as f32) * (max_val / 127.0);
         for (a, b) in out[0].iter().zip(&want) {
             assert!((a - b).abs() <= scale_bound, "{a} vs {b} (bound {scale_bound})");
+        }
+    }
+
+    /// Survivor ring: the member-parameterized core over a strict subset
+    /// of the world sums exactly over the participants, and every
+    /// participant ends with the identical (bitwise) vector — the
+    /// elastic τ-sync's contract after a rank death.
+    #[test]
+    fn ring_over_survivors_sums_and_agrees() {
+        let p = 4;
+        let n = 37;
+        let members = vec![0usize, 2, 3]; // rank 1 is "dead"
+        let eps = world(p);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                let members = members.clone();
+                thread::spawn(move || {
+                    if !members.contains(&rank) {
+                        return None; // the dead rank sends nothing
+                    }
+                    let buf: Vec<f32> = (0..n).map(|i| (rank + i) as f32).collect();
+                    let out = ring_allreduce_segments_over(
+                        &mut ep,
+                        0,
+                        shared(buf),
+                        &members,
+                        recv_plain,
+                    );
+                    assert_eq!(ep.unmatched_len(), 0);
+                    Some(out)
+                })
+            })
+            .collect();
+        let outs: Vec<Vec<f32>> =
+            handles.into_iter().filter_map(|h| h.join().unwrap()).collect();
+        assert_eq!(outs.len(), members.len());
+        // sum over members of (m + i)
+        let want: Vec<f32> = (0..n)
+            .map(|i| members.iter().map(|&m| (m + i) as f32).sum())
+            .collect();
+        for out in &outs {
+            assert_eq!(out.len(), n);
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "survivors must agree bitwise");
+            }
         }
     }
 

@@ -55,20 +55,38 @@
 //! residual memcpy'd payload bytes (ring reassembly, the borrowing
 //! `publish`), which the measured-overlap bench compares against the
 //! pre-refactor engine's per-phase clones.
+//!
+//! ## Failure model & degraded paths
+//!
+//! With a [`FaultPlan`] installed ([`CollectiveEngine::spawn_with_faults`])
+//! the engine survives a messy fleet: group-phase receives are
+//! deadline-bounded with exponential-backoff retries; a peer that misses
+//! its window is marked *suspect* and its butterfly phase completes as
+//! **identity** (the accumulator passes through unchanged — counted in
+//! [`EngineStats::skipped_phases`]/[`EngineStats::degraded_iters`]); a
+//! plan-crashed rank fail-stops at its crash iteration (broadcasting a
+//! death notice, then going dark), and the every-τ sync re-forms over the
+//! survivors — recursive doubling over survivor indices or a re-segmented
+//! survivor ring — so all survivors hold bit-identical models after the
+//! first post-failure sync. An empty plan with `recv_deadline_ns == 0`
+//! takes literally the pre-fault code paths (bit-identical counters).
+//! See `collectives/README.md` § "Failure model & degraded paths".
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::collectives::allreduce::{
-    decode_sum_shared, reduce_shared, ring_allreduce_segments,
-    ring_allreduce_segments_compressed, shared_into_vec, AllreduceAlgo, RING_THRESHOLD,
+    decode_sum_shared, reduce_shared, ring_allreduce_segments_compressed_over,
+    ring_allreduce_segments_over, shared_into_vec, AllreduceAlgo, RING_THRESHOLD,
 };
 use crate::compress::{Compression, EncodeScratch};
 use crate::comm::{
     BufferPool, Chunk, Endpoint, MailboxSender, Message, Payload, PoolStats, SharedBuf, Tag,
 };
+use crate::fault::{FaultPlan, Membership};
 use crate::topology::{log2_exact, BinomialTree, Grouping};
 use crate::trace::{
     now_ns, Lane, LogHistogram, TraceEvent, TraceKind, TraceRecorder, TRACE_RING_CAPACITY,
@@ -155,6 +173,20 @@ pub struct EngineConfig {
     /// `pool_allocs` are bit-identical with tracing on or off); `false`
     /// turns the recorder into a no-op.
     pub trace: bool,
+    /// Bounded-receive deadline for group butterfly phases, in
+    /// nanoseconds. `0` (the default everywhere) keeps the legacy
+    /// unbounded blocking receive; when a non-empty [`FaultPlan`] is
+    /// installed and this stays `0`, the plan's own
+    /// [`FaultPlan::deadline_ns`] applies. τ-sync receives always park in
+    /// deadline-sized rounds but retry without limit — the sync is the
+    /// recovery barrier and must complete over the survivors.
+    pub recv_deadline_ns: u64,
+    /// Extra bounded-retry attempts after the first deadline expires on a
+    /// group-phase receive, each waiting `deadline · 2^attempt`
+    /// (exponential backoff). `0` means a single attempt. When the whole
+    /// budget expires the peer is marked suspect and the phase completes
+    /// as identity.
+    pub recv_retries: u32,
 }
 
 /// How a collective instance gets triggered.
@@ -251,15 +283,26 @@ impl StalenessStats {
     }
 }
 
+/// The staleness log: the drainable sample buffer and the running
+/// log-bucketed histogram live under **one** mutex so a sample is pushed
+/// and histogrammed atomically. (They used to be two locks; a
+/// `staleness_samples` drain could then slip between a push and its
+/// histogram record and observe more drained samples than the aggregates
+/// admitted — the accessors were not read-consistent.)
+#[derive(Default)]
+struct StalenessLog {
+    /// Samples since the last `staleness_samples` drain.
+    samples: Vec<u64>,
+    /// Running aggregates (exact count/sum/max, bucketed quantiles).
+    hist: LogHistogram,
+}
+
 struct EngineShared {
     slot: Mutex<SendSlot>,
     results: Mutex<ResultMaps>,
     results_cv: Condvar,
-    /// Staleness samples since the last `staleness_samples` drain.
-    staleness: Mutex<Vec<u64>>,
-    /// Running staleness aggregates: the trace layer's log-bucketed
-    /// histogram (exact count/sum/max, bucketed quantiles).
-    staleness_hist: Mutex<LogHistogram>,
+    /// Staleness samples + running aggregates, one lock (read-consistent).
+    staleness: Mutex<StalenessLog>,
     /// Payload bytes the application-side API memcpy'd (the borrowing
     /// `publish`); merged into [`EngineStats::copied_bytes`] at shutdown.
     app_copied_bytes: AtomicU64,
@@ -303,12 +346,32 @@ pub struct EngineStats {
     pub wait_group_ns: u64,
     /// Engine-thread ns blocked in matched receives during every-τ syncs.
     pub wait_sync_ns: u64,
+    /// Butterfly phases that completed as identity because the peer was
+    /// dead or suspect (fault injection / elastic membership).
+    pub skipped_phases: u64,
+    /// Group collectives in which at least one phase was skipped.
+    pub degraded_iters: u64,
 }
 
 impl CollectiveEngine {
     /// Spawn the engine thread for `ep`. `init_buf` seeds the send slot
-    /// (the initial model, stamp [`STAMP_INITIAL`]).
+    /// (the initial model, stamp [`STAMP_INITIAL`]). No faults: identical
+    /// to [`spawn_with_faults`](Self::spawn_with_faults) with an empty
+    /// plan (which takes literally the pre-fault code paths).
     pub fn spawn(ep: Endpoint, cfg: EngineConfig, init_buf: Vec<f32>) -> CollectiveEngine {
+        CollectiveEngine::spawn_with_faults(ep, cfg, init_buf, Arc::new(FaultPlan::none()))
+    }
+
+    /// Spawn the engine thread with a [`FaultPlan`] installed: the engine
+    /// consults the plan for its own fail-stop schedule, derives the
+    /// deterministic membership view from it at every version boundary,
+    /// and injects link drops/jitter into its group phases.
+    pub fn spawn_with_faults(
+        ep: Endpoint,
+        cfg: EngineConfig,
+        init_buf: Vec<f32>,
+        faults: Arc<FaultPlan>,
+    ) -> CollectiveEngine {
         let rank = ep.rank();
         assert_eq!(ep.p(), cfg.p);
         let pool = ep.pool().clone();
@@ -319,8 +382,7 @@ impl CollectiveEngine {
             }),
             results: Mutex::new(ResultMaps::default()),
             results_cv: Condvar::new(),
-            staleness: Mutex::new(Vec::new()),
-            staleness_hist: Mutex::new(LogHistogram::default()),
+            staleness: Mutex::new(StalenessLog::default()),
             app_copied_bytes: AtomicU64::new(0),
             trace: Arc::new(TraceRecorder::new(rank as u32, cfg.trace, TRACE_RING_CAPACITY)),
         });
@@ -328,7 +390,7 @@ impl CollectiveEngine {
         let sh = shared.clone();
         let join = std::thread::Builder::new()
             .name(format!("wagma-engine-{rank}"))
-            .spawn(move || engine_main(ep, cfg, sh))
+            .spawn(move || engine_main(ep, cfg, sh, faults))
             .expect("spawn engine thread");
         CollectiveEngine { shared, to_engine, pool, rank, cfg, join: Some(join) }
     }
@@ -405,8 +467,13 @@ impl CollectiveEngine {
         ev.version = t;
         self.shared.trace.record(ev);
         let s = r.staleness(t);
-        self.shared.staleness.lock().unwrap().push(s);
-        self.shared.staleness_hist.lock().unwrap().record(s);
+        // Single lock: the sample and its histogram entry land atomically,
+        // so a concurrent `staleness_samples` drain can never observe one
+        // without the other.
+        let mut log = self.shared.staleness.lock().unwrap();
+        log.samples.push(s);
+        log.hist.record(s);
+        drop(log);
         r
     }
 
@@ -439,20 +506,23 @@ impl CollectiveEngine {
     /// buffer swap — nothing is cloned under the lock). Use
     /// [`staleness_stats`](Self::staleness_stats) for running aggregates.
     pub fn staleness_samples(&self) -> Vec<u64> {
-        std::mem::take(&mut *self.shared.staleness.lock().unwrap())
+        std::mem::take(&mut self.shared.staleness.lock().unwrap().samples)
     }
 
     /// Running staleness aggregates (count / total / max), read off the
-    /// log-bucketed histogram's exact counters.
+    /// log-bucketed histogram's exact counters. Consistent with
+    /// [`staleness_samples`](Self::staleness_samples): both live under one
+    /// lock, so `stats().count` is always ≥ the number of samples drained
+    /// so far, and exactly equal once publishing has quiesced.
     pub fn staleness_stats(&self) -> StalenessStats {
-        let h = self.shared.staleness_hist.lock().unwrap();
-        StalenessStats { count: h.count(), total: h.sum(), max: h.max() }
+        let log = self.shared.staleness.lock().unwrap();
+        StalenessStats { count: log.hist.count(), total: log.hist.sum(), max: log.hist.max() }
     }
 
     /// The full staleness distribution (log-bucketed; exact
     /// count/sum/min/max, quantiles to bucket resolution).
     pub fn staleness_histogram(&self) -> LogHistogram {
-        self.shared.staleness_hist.lock().unwrap().clone()
+        self.shared.staleness.lock().unwrap().hist.clone()
     }
 
     /// Handle to this rank's span recorder. Clone-cheap (`Arc`); keep one
@@ -524,6 +594,18 @@ struct EngineRun {
     phase_encode_ns: u64,
     /// Codec decode/decompress-sum ns, likewise.
     phase_decode_ns: u64,
+    /// The installed fault schedule (empty for `spawn`).
+    faults: Arc<FaultPlan>,
+    /// This rank's view of every peer's health. Deterministically refreshed
+    /// from the plan at each version boundary, locally downgraded to
+    /// `Suspect` on exchange deadline expiry, healed at sync completion.
+    membership: Membership,
+    /// This rank has fail-stopped per the plan: death notice sent, all
+    /// pending work dropped, only control traffic (waiting for Quit) left.
+    crashed: bool,
+    /// Set by `recv_exchange` when the bounded receive gave up on a
+    /// partner; consumed per phase by `execute_group`.
+    phase_skipped: bool,
 }
 
 /// Majority-mode arrival bookkeeping at the version leader: activate once
@@ -560,8 +642,14 @@ fn app_group_request(ep: &mut Endpoint, run: &mut EngineRun, version: u64) {
     }
 }
 
-fn engine_main(mut ep: Endpoint, cfg: EngineConfig, shared: Arc<EngineShared>) -> EngineStats {
+fn engine_main(
+    mut ep: Endpoint,
+    cfg: EngineConfig,
+    shared: Arc<EngineShared>,
+    faults: Arc<FaultPlan>,
+) -> EngineStats {
     let pool = ep.pool().clone();
+    let membership = Membership::new(cfg.p);
     let mut run = EngineRun {
         cfg,
         grouping: if cfg.dynamic_groups {
@@ -583,6 +671,10 @@ fn engine_main(mut ep: Endpoint, cfg: EngineConfig, shared: Arc<EngineShared>) -
         phase_wait_ns: 0,
         phase_encode_ns: 0,
         phase_decode_ns: 0,
+        faults,
+        membership,
+        crashed: false,
+        phase_skipped: false,
     };
 
     loop {
@@ -590,6 +682,26 @@ fn engine_main(mut ep: Endpoint, cfg: EngineConfig, shared: Arc<EngineShared>) -
         loop {
             let want_active = run.app_group == Some(run.next);
             let want_passive = run.activated.contains(&run.next);
+            // Fail-stop check at the version boundary: once the plan says
+            // this rank is dead, it must not execute (even passively) —
+            // a crashed rank silently joining a butterfly would hang its
+            // partners' bounded receives for nothing. Announce instead.
+            if !run.crashed {
+                if let Some(ci) = run.faults.crash_iter(ep.rank()) {
+                    let group_due = (want_active || want_passive) && run.next >= ci;
+                    let sync_due = run.app_sync.is_some_and(|ts| ts >= ci);
+                    if group_due || sync_due {
+                        crash_self(&mut ep, &mut run);
+                    }
+                }
+            }
+            if run.crashed {
+                // Drop all pending work; stay responsive to ctrl (Quit).
+                run.app_group = None;
+                run.app_sync = None;
+                run.activated.clear();
+                break;
+            }
             if want_active || want_passive {
                 execute_group(&mut ep, &mut run, want_active && !want_passive);
             } else if let Some(ts) = run.app_sync.take() {
@@ -647,36 +759,145 @@ fn handle_ctrl(ep: &mut Endpoint, run: &mut EngineRun, msg: Message) {
         Payload::AppSync { version } => {
             run.app_sync = Some(version);
         }
+        Payload::Dead { rank } => {
+            run.membership.mark_dead(rank);
+        }
         Payload::Quit => {
             run.quit = true;
         }
     }
 }
 
-fn forward_activation(ep: &mut Endpoint, run: &EngineRun, root: usize, version: u64) {
-    for child in run.tree.children(root, ep.rank()) {
-        ep.send_ctrl(child, Payload::Activation { root, version });
+/// Fail-stop this rank per its fault plan: broadcast the death notice once
+/// so peers need not burn a full deadline discovering us, then go silent.
+fn crash_self(ep: &mut Endpoint, run: &mut EngineRun) {
+    run.crashed = true;
+    let me = ep.rank();
+    for peer in 0..run.cfg.p {
+        if peer != me {
+            ep.send_ctrl(peer, Payload::Dead { rank: me });
+        }
     }
+    if run.shared.trace.is_enabled() {
+        let now = now_ns();
+        let mut ev = TraceEvent::new(TraceKind::Fault, Lane::Engine, now, 0);
+        ev.version = run.next;
+        run.shared.trace.record(ev);
+    }
+}
+
+/// Forward an activation down our subtree, routing around dead children:
+/// a dead child's own children are adopted so the broadcast still reaches
+/// every live rank.
+fn forward_activation(ep: &mut Endpoint, run: &EngineRun, root: usize, version: u64) {
+    let mut stack = run.tree.children(root, ep.rank());
+    while let Some(child) = stack.pop() {
+        if run.membership.is_dead(child) {
+            stack.extend(run.tree.children(root, child));
+        } else {
+            ep.send_ctrl(child, Payload::Activation { root, version });
+        }
+    }
+}
+
+/// Effective deadline for group-phase receives: explicit config wins;
+/// otherwise a non-empty fault plan supplies its detection deadline; with
+/// neither, `0` selects the literal pre-fault unbounded path (bit-identical
+/// behavior and counters for fault-free runs).
+fn group_deadline_ns(run: &EngineRun) -> u64 {
+    if run.cfg.recv_deadline_ns > 0 {
+        run.cfg.recv_deadline_ns
+    } else if !run.faults.is_empty() {
+        run.faults.deadline_ns()
+    } else {
+        0
+    }
+}
+
+/// Group-phase receive: unbounded (ctrl-aware) when no deadline is
+/// configured, otherwise bounded with exponential backoff across
+/// `cfg.recv_retries` extra attempts. Giving up marks the partner
+/// `Suspect` and sets `run.phase_skipped` so the caller completes the
+/// phase as identity; a successful receive heals a suspected partner.
+fn recv_exchange(ep: &mut Endpoint, run: &mut EngineRun, partner: usize, tag: Tag) -> Option<Chunk> {
+    let deadline = group_deadline_ns(run);
+    if deadline == 0 {
+        return Some(recv_with_ctrl(ep, run, partner, tag));
+    }
+    let w0 = now_ns();
+    let mut attempt: u32 = 0;
+    let data = 'attempts: loop {
+        if run.membership.is_down(partner) {
+            // Known-down partner (death notice, or an earlier chunk of
+            // this phase already timed out): don't burn another deadline.
+            break None;
+        }
+        let wait_ns = deadline.saturating_mul(1u64 << attempt.min(20));
+        let until = Instant::now() + Duration::from_nanos(wait_ns);
+        loop {
+            let mut ctrl: Vec<Message> = Vec::new();
+            match ep.recv_data_or_ctrl_deadline(partner, tag, until, &mut ctrl) {
+                Ok(Some(data)) => {
+                    for m in ctrl {
+                        handle_ctrl(ep, run, m);
+                    }
+                    break 'attempts Some(data);
+                }
+                Ok(None) => {
+                    for m in ctrl {
+                        handle_ctrl(ep, run, m);
+                    }
+                    if run.membership.is_dead(partner) {
+                        break 'attempts None;
+                    }
+                }
+                Err(_) => {
+                    if attempt >= run.cfg.recv_retries {
+                        break 'attempts None;
+                    }
+                    attempt += 1;
+                    continue 'attempts;
+                }
+            }
+        }
+    };
+    run.phase_wait_ns += now_ns() - w0;
+    match &data {
+        Some(_) => run.membership.heal(partner),
+        None => {
+            run.membership.mark_suspect(partner);
+            run.phase_skipped = true;
+        }
+    }
+    data
 }
 
 /// One unchunked butterfly phase: refcount send, ctrl-aware receive, fused
 /// reduce ([`reduce_shared`] — in place when the partner already released
-/// our buffer, else one pooled `sum_into` pass).
+/// our buffer, else one pooled `sum_into` pass). `dropped` simulates the
+/// outbound link losing our contribution (the send is suppressed); a
+/// receive that gives up completes the phase as identity.
 fn exchange_reduce(
     ep: &mut Endpoint,
     run: &mut EngineRun,
     partner: usize,
     tag: Tag,
     acc: SharedBuf,
+    dropped: bool,
 ) -> SharedBuf {
-    ep.send_chunk(partner, tag, Chunk::full(acc.clone()));
-    let rhs = recv_with_ctrl(ep, run, partner, tag);
-    reduce_shared(&run.pool, acc, rhs.as_slice())
+    if !dropped {
+        ep.send_chunk(partner, tag, Chunk::full(acc.clone()));
+    }
+    match recv_exchange(ep, run, partner, tag) {
+        Some(rhs) => reduce_shared(&run.pool, acc, rhs.as_slice()),
+        None => acc,
+    }
 }
 
 /// One chunked butterfly phase: all sends are issued up front as range
 /// views so the partner can overlap its reductions with our remaining
 /// traffic; receives reduce range-by-range into one pooled output.
+#[allow(clippy::too_many_arguments)]
 fn exchange_reduce_chunked(
     ep: &mut Endpoint,
     run: &mut EngineRun,
@@ -685,20 +906,29 @@ fn exchange_reduce_chunked(
     r: u32,
     chunk: usize,
     acc: SharedBuf,
+    dropped: bool,
 ) -> SharedBuf {
     let n = acc.len();
     let n_chunks = n.div_ceil(chunk);
-    for c in 0..n_chunks {
-        let lo = c * chunk;
-        let hi = (lo + chunk).min(n);
-        ep.send_chunk(partner, chunk_tag(v, r, c), Chunk::range(acc.clone(), lo, hi));
+    if !dropped {
+        for c in 0..n_chunks {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            ep.send_chunk(partner, chunk_tag(v, r, c), Chunk::range(acc.clone(), lo, hi));
+        }
     }
     let mut out = run.pool.take(n);
     for c in 0..n_chunks {
         let lo = c * chunk;
         let hi = (lo + chunk).min(n);
-        let rhs = recv_with_ctrl(ep, run, partner, chunk_tag(v, r, c));
-        sum_into(&mut out.data_mut()[lo..hi], &acc.as_slice()[lo..hi], rhs.as_slice());
+        match recv_exchange(ep, run, partner, chunk_tag(v, r, c)) {
+            Some(rhs) => {
+                sum_into(&mut out.data_mut()[lo..hi], &acc.as_slice()[lo..hi], rhs.as_slice());
+            }
+            // Any chunk timing out degrades the whole phase to identity:
+            // a half-reduced accumulator is neither our model nor a sum.
+            None => return acc,
+        }
     }
     Arc::new(out)
 }
@@ -714,24 +944,32 @@ fn exchange_reduce_compressed(
     partner: usize,
     tag: Tag,
     acc: SharedBuf,
+    dropped: bool,
 ) -> SharedBuf {
     let comp = run.cfg.compression;
-    let mut enc = run.pool.take(comp.encoded_words(acc.len()));
-    let e0 = now_ns();
-    comp.encode(acc.as_slice(), enc.data_mut(), &mut run.scratch);
-    run.phase_encode_ns += now_ns() - e0;
-    ep.send_chunk(partner, tag, Chunk::full(Arc::new(enc)));
-    let rhs = recv_with_ctrl(ep, run, partner, tag);
-    let d0 = now_ns();
-    let out = decode_sum_shared(&run.pool, comp, acc, rhs.as_slice());
-    run.phase_decode_ns += now_ns() - d0;
-    out
+    if !dropped {
+        let mut enc = run.pool.take(comp.encoded_words(acc.len()));
+        let e0 = now_ns();
+        comp.encode(acc.as_slice(), enc.data_mut(), &mut run.scratch);
+        run.phase_encode_ns += now_ns() - e0;
+        ep.send_chunk(partner, tag, Chunk::full(Arc::new(enc)));
+    }
+    match recv_exchange(ep, run, partner, tag) {
+        Some(rhs) => {
+            let d0 = now_ns();
+            let out = decode_sum_shared(&run.pool, comp, acc, rhs.as_slice());
+            run.phase_decode_ns += now_ns() - d0;
+            out
+        }
+        None => acc,
+    }
 }
 
 /// One compressed chunked butterfly phase: each chunk — the engine-level
 /// image of a fused gradient bucket — is encoded and sent independently
 /// (per-bucket compression), then the receives fold into one pooled output
 /// range by range.
+#[allow(clippy::too_many_arguments)]
 fn exchange_reduce_chunked_compressed(
     ep: &mut Endpoint,
     run: &mut EngineRun,
@@ -740,28 +978,35 @@ fn exchange_reduce_chunked_compressed(
     r: u32,
     chunk: usize,
     acc: SharedBuf,
+    dropped: bool,
 ) -> SharedBuf {
     let comp = run.cfg.compression;
     let n = acc.len();
     let n_chunks = n.div_ceil(chunk);
-    for c in 0..n_chunks {
-        let lo = c * chunk;
-        let hi = (lo + chunk).min(n);
-        let mut enc = run.pool.take(comp.encoded_words(hi - lo));
-        let e0 = now_ns();
-        comp.encode(&acc.as_slice()[lo..hi], enc.data_mut(), &mut run.scratch);
-        run.phase_encode_ns += now_ns() - e0;
-        ep.send_chunk(partner, chunk_tag(v, r, c), Chunk::full(Arc::new(enc)));
+    if !dropped {
+        for c in 0..n_chunks {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut enc = run.pool.take(comp.encoded_words(hi - lo));
+            let e0 = now_ns();
+            comp.encode(&acc.as_slice()[lo..hi], enc.data_mut(), &mut run.scratch);
+            run.phase_encode_ns += now_ns() - e0;
+            ep.send_chunk(partner, chunk_tag(v, r, c), Chunk::full(Arc::new(enc)));
+        }
     }
     let mut out = run.pool.take(n);
     out.data_mut().copy_from_slice(acc.as_slice());
     for c in 0..n_chunks {
         let lo = c * chunk;
         let hi = (lo + chunk).min(n);
-        let rhs = recv_with_ctrl(ep, run, partner, chunk_tag(v, r, c));
-        let d0 = now_ns();
-        comp.decode_add(rhs.as_slice(), &mut out.data_mut()[lo..hi]);
-        run.phase_decode_ns += now_ns() - d0;
+        match recv_exchange(ep, run, partner, chunk_tag(v, r, c)) {
+            Some(rhs) => {
+                let d0 = now_ns();
+                comp.decode_add(rhs.as_slice(), &mut out.data_mut()[lo..hi]);
+                run.phase_decode_ns += now_ns() - d0;
+            }
+            None => return acc,
+        }
     }
     Arc::new(out)
 }
@@ -812,8 +1057,15 @@ fn record_engine_span(
 }
 
 /// Execute the group allreduce schedule for `run.next`.
+///
+/// Degraded paths: the deterministic membership view is refreshed from the
+/// fault plan at the version boundary; phases whose partner is `Dead` or
+/// `Suspect` (or whose bounded receive gives up) complete as **identity** —
+/// the accumulator passes through unchanged, counted in `skipped_phases`,
+/// and the iteration is counted once in `degraded_iters`.
 fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
     let v = run.next;
+    run.membership.apply_plan(&run.faults, v);
     // NOTE: v stays in `activated` until the schedule completes so that
     // quorum bookkeeping (majority mode) does not re-activate a version
     // that is mid-execution; both sets are cleared below.
@@ -842,17 +1094,59 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
     // its reductions with our remaining traffic.
     let chunk = run.cfg.effective_chunk(acc.len());
     let compressed = !run.cfg.compression.is_none();
+    let deadline = group_deadline_ns(run);
+    let mut skipped_iter = false;
     for r in 0..run.grouping.phases() {
         let partner = run.grouping.partner(ep.rank(), v, r);
         let wire0 = ep.sent_bytes;
         let t0 = now_ns();
+        if run.membership.is_down(partner) {
+            // Degraded phase: the down peer contributes identity. No
+            // traffic is posted at all — a dead partner never drains it
+            // and a suspect one gets healed via the sync path, not here.
+            run.stats.skipped_phases += 1;
+            skipped_iter = true;
+            if run.shared.trace.is_enabled() {
+                let mut ev = TraceEvent::new(TraceKind::Fault, Lane::Engine, t0, now_ns() - t0);
+                ev.version = v;
+                ev.phase = r;
+                ev.passive = passive;
+                run.shared.trace.record(ev);
+            }
+            continue;
+        }
+        // Inbound-link jitter: injected as real engine-thread latency so
+        // it shows up in partners' wait attribution like a slow link would.
+        let jitter = run.faults.jitter_s(partner, ep.rank(), v);
+        if jitter > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(jitter));
+        }
+        // Outbound-link drop: only injected when a deadline bounds the
+        // partner's receive, so a lost contribution degrades the partner's
+        // phase instead of deadlocking it.
+        let dropped = deadline > 0 && run.faults.drop_link(ep.rank(), partner, v, r);
         acc = match (chunk, compressed) {
-            (0, false) => exchange_reduce(ep, run, partner, Tag::exchange(v, r), acc),
-            (0, true) => exchange_reduce_compressed(ep, run, partner, Tag::exchange(v, r), acc),
-            (_, false) => exchange_reduce_chunked(ep, run, partner, v, r, chunk, acc),
-            (_, true) => exchange_reduce_chunked_compressed(ep, run, partner, v, r, chunk, acc),
+            (0, false) => exchange_reduce(ep, run, partner, Tag::exchange(v, r), acc, dropped),
+            (0, true) => {
+                exchange_reduce_compressed(ep, run, partner, Tag::exchange(v, r), acc, dropped)
+            }
+            (_, false) => exchange_reduce_chunked(ep, run, partner, v, r, chunk, acc, dropped),
+            (_, true) => {
+                exchange_reduce_chunked_compressed(ep, run, partner, v, r, chunk, acc, dropped)
+            }
         };
         let end = now_ns();
+        if std::mem::take(&mut run.phase_skipped) {
+            run.stats.skipped_phases += 1;
+            skipped_iter = true;
+            if run.shared.trace.is_enabled() {
+                let mut ev = TraceEvent::new(TraceKind::Fault, Lane::Engine, t0, end - t0);
+                ev.version = v;
+                ev.phase = r;
+                ev.passive = passive;
+                run.shared.trace.record(ev);
+            }
+        }
         record_engine_span(
             run,
             TraceKind::GroupExchangePhase,
@@ -863,6 +1157,9 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
             ep.sent_bytes - wire0,
             passive,
         );
+    }
+    if skipped_iter {
+        run.stats.degraded_iters += 1;
     }
 
     run.stats.group_collectives += 1;
@@ -886,29 +1183,50 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
 /// bandwidth-optimal ring for model-sized payloads, recursive doubling for
 /// tiny ones (perf pass; EXPERIMENTS.md §Perf).
 fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
+    run.membership.apply_plan(&run.faults, ts);
     let contrib: SharedBuf = run.shared.slot.lock().unwrap().buf.clone();
-    let p = ep.p();
+    let survivors = run.membership.survivors();
+    let k = survivors.len();
     let wire0 = ep.sent_bytes;
     let t0 = now_ns();
-    let result: Vec<f32> = if p > 2 && contrib.len() >= RING_THRESHOLD {
+    // Survivor-only schedules. All survivors compute the same `survivors`
+    // list from the same plan at the same version, so they pick the same
+    // branch and the same peer ordering — which is what makes the synced
+    // model bit-identical across survivors even after failures. The sync
+    // *never* skips: receives here are the unbounded ctrl-aware kind
+    // (fail-stop is deterministic, so every awaited peer is live).
+    let result: Vec<f32> = if k <= 1 {
+        ep.copied_bytes += (contrib.len() * 4) as u64;
+        contrib.as_slice().to_vec()
+    } else if k > 2 && contrib.len() >= RING_THRESHOLD {
         if run.cfg.compression.is_none() {
-            ring_sync(ep, run, ts, contrib)
+            ring_sync(ep, run, ts, contrib, &survivors)
         } else {
-            ring_sync_compressed(ep, run, ts, contrib)
+            ring_sync_compressed(ep, run, ts, contrib, &survivors)
         }
-    } else if p > 1 {
-        let log_p = log2_exact(p);
-        let rank = ep.rank();
+    } else if k.is_power_of_two() {
+        let idx = survivors
+            .iter()
+            .position(|&m| m == ep.rank())
+            .expect("sync caller must be a survivor");
         let mut acc = contrib;
-        for k in 0..log_p {
-            let partner = rank ^ (1usize << k);
-            acc = exchange_reduce(ep, run, partner, Tag::sync(ts, k), acc);
+        for kb in 0..log2_exact(k) {
+            let partner = survivors[idx ^ (1usize << kb)];
+            ep.send_chunk(partner, Tag::sync(ts, kb), Chunk::full(acc.clone()));
+            let rhs = recv_with_ctrl(ep, run, partner, Tag::sync(ts, kb));
+            acc = reduce_shared(&run.pool, acc, rhs.as_slice());
         }
         shared_into_vec(acc, &mut ep.copied_bytes)
     } else {
-        ep.copied_bytes += (contrib.len() * 4) as u64;
-        contrib.as_slice().to_vec()
+        // Small payload, non-power-of-two survivor count: gather at the
+        // lowest survivor, which sums in member order and broadcasts the
+        // bytes — trivially rank-identical.
+        star_sync(ep, run, ts, contrib, &survivors)
     };
+    // Sync completion proves liveness of every survivor: any `Suspect`
+    // verdicts accumulated from group-phase deadlines this τ window were
+    // transient — clear them so degradation stays bounded to the window.
+    run.membership.heal_all();
     let end = now_ns();
     record_engine_span(
         run,
@@ -935,8 +1253,46 @@ fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
 /// so activation traffic keeps flowing during the barrier. Segment sums
 /// come from the endpoint's pool and allgather segments are adopted by
 /// reference; the final reassembly is the sync path's single counted copy.
-fn ring_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64, contrib: SharedBuf) -> Vec<f32> {
-    ring_allreduce_segments(ep, ts, contrib, |ep, src, tag| recv_with_ctrl(ep, run, src, tag))
+fn ring_sync(
+    ep: &mut Endpoint,
+    run: &mut EngineRun,
+    ts: u64,
+    contrib: SharedBuf,
+    members: &[usize],
+) -> Vec<f32> {
+    ring_allreduce_segments_over(ep, ts, contrib, members, |ep, src, tag| {
+        recv_with_ctrl(ep, run, src, tag)
+    })
+}
+
+/// Degraded-sync fallback for payloads below the ring threshold when the
+/// survivor count is not a power of two: gather at `members[0]`, reduce in
+/// member order, broadcast the result bytes. O(k) messages — fine for the
+/// small payloads this branch is reserved for.
+fn star_sync(
+    ep: &mut Endpoint,
+    run: &mut EngineRun,
+    ts: u64,
+    contrib: SharedBuf,
+    members: &[usize],
+) -> Vec<f32> {
+    let root = members[0];
+    if ep.rank() == root {
+        let mut acc = contrib;
+        for &m in &members[1..] {
+            let rhs = recv_with_ctrl(ep, run, m, Tag::sync(ts, 0));
+            acc = reduce_shared(&run.pool, acc, rhs.as_slice());
+        }
+        for &m in &members[1..] {
+            ep.send_chunk(m, Tag::sync(ts, 1), Chunk::full(acc.clone()));
+        }
+        shared_into_vec(acc, &mut ep.copied_bytes)
+    } else {
+        ep.send_chunk(root, Tag::sync(ts, 0), Chunk::full(contrib));
+        let res = recv_with_ctrl(ep, run, root, Tag::sync(ts, 1));
+        ep.copied_bytes += (res.as_slice().len() * 4) as u64;
+        res.as_slice().to_vec()
+    }
 }
 
 /// Compressed τ-sync: the compressed ring core with the ctrl-aware
@@ -951,14 +1307,21 @@ fn ring_sync_compressed(
     run: &mut EngineRun,
     ts: u64,
     contrib: SharedBuf,
+    members: &[usize],
 ) -> Vec<f32> {
     let comp = run.cfg.compression;
     // The scratch moves out of `run` for the duration of the call: the
     // receive closure needs `run` mutably for activation forwarding.
     let mut scratch = std::mem::take(&mut run.scratch);
-    let out = ring_allreduce_segments_compressed(ep, ts, contrib, comp, &mut scratch, |ep, src, tag| {
-        recv_with_ctrl(ep, run, src, tag)
-    });
+    let out = ring_allreduce_segments_compressed_over(
+        ep,
+        ts,
+        contrib,
+        comp,
+        &mut scratch,
+        members,
+        |ep, src, tag| recv_with_ctrl(ep, run, src, tag),
+    );
     run.scratch = scratch;
     out
 }
@@ -985,6 +1348,7 @@ fn recv_with_ctrl(ep: &mut Endpoint, run: &mut EngineRun, src: usize, tag: Tag) 
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::comm::world;
     use crate::util::add_assign;
@@ -1002,6 +1366,8 @@ mod tests {
             chunk_elems: 0,
             compression: Compression::None,
             trace: true,
+            recv_deadline_ns: 0,
+            recv_retries: 0,
         }
     }
 
@@ -1291,10 +1657,67 @@ mod tests {
             h.join().unwrap();
         }
     }
+
+    /// Regression: the sample log and the running histogram live under
+    /// ONE lock, so a concurrent drain can never observe a sample whose
+    /// histogram entry has not landed yet (with the old two-mutex scheme
+    /// a `staleness_samples` swap could slip between the push and the
+    /// record, leaving `stats.count` behind the drained total).
+    #[test]
+    fn staleness_stats_consistent_under_concurrent_drain() {
+        use std::sync::{Arc, Barrier};
+        let p = 2;
+        let steps = 200u64;
+        let barrier = Arc::new(Barrier::new(p));
+        let engines: Vec<Arc<CollectiveEngine>> = world(p)
+            .into_iter()
+            .map(|ep| Arc::new(CollectiveEngine::spawn(ep, cfg(p, 2, 0), vec![0.0])))
+            .collect();
+        let probe = engines[0].clone();
+        let prober = thread::spawn(move || {
+            let mut drained_total = 0u64;
+            loop {
+                drained_total += probe.staleness_samples().len() as u64;
+                let stats = probe.staleness_stats();
+                assert!(
+                    stats.count >= drained_total,
+                    "histogram count {} behind drained samples {drained_total}",
+                    stats.count
+                );
+                if stats.count >= steps {
+                    break drained_total;
+                }
+                thread::yield_now();
+            }
+        });
+        let workers: Vec<_> = engines
+            .iter()
+            .map(|eng| {
+                let eng = eng.clone();
+                let barrier = barrier.clone();
+                thread::spawn(move || {
+                    for t in 0..steps {
+                        eng.publish(&[1.0], t);
+                        barrier.wait();
+                        let _ = eng.group_allreduce(t);
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        let drained_total = prober.join().unwrap();
+        let rest = engines[0].staleness_samples().len() as u64;
+        assert_eq!(drained_total + rest, steps, "every sample drained exactly once");
+        assert_eq!(engines[0].staleness_stats().count, steps);
+        // Engines shut down via Drop (Arc-held: `shutdown` needs ownership).
+    }
 }
 
 #[cfg(test)]
 mod majority_tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::comm::world;
     use std::thread;
@@ -1315,6 +1738,8 @@ mod majority_tests {
             chunk_elems: 0,
             compression: Compression::None,
             trace: true,
+            recv_deadline_ns: 0,
+            recv_retries: 0,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()
@@ -1370,6 +1795,8 @@ mod majority_tests {
             chunk_elems: 0,
             compression: Compression::None,
             trace: true,
+            recv_deadline_ns: 0,
+            recv_retries: 0,
         };
         let engines: Vec<CollectiveEngine> = world(p)
             .into_iter()
@@ -1396,6 +1823,7 @@ mod majority_tests {
 
 #[cfg(test)]
 mod compression_tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::comm::world;
     use std::sync::{Arc, Barrier};
@@ -1459,6 +1887,8 @@ mod compression_tests {
             chunk_elems: chunk,
             compression: comp,
             trace: true,
+            recv_deadline_ns: 0,
+            recv_retries: 0,
         }
     }
 

@@ -8,6 +8,13 @@
 //!   can participate in collectives *passively* on behalf of a busy
 //!   application thread, triggered by activation messages traveling down
 //!   binomial trees.
+//!
+//! See `README.md` in this directory for the architecture, the
+//! compressed data path, and the failure model / degraded paths.
+
+// Hot-path panics are lint debt: every `unwrap` on the engine thread is
+// a potential abort that faults can now actually trigger.
+#![warn(clippy::unwrap_used)]
 
 pub mod allreduce;
 pub mod engine;

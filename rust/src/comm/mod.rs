@@ -36,6 +36,10 @@
 //! content — tags, versions, activation control messages, schedule
 //! ordering — is identical; only the transport differs.
 
+// Hot-path panics are lint debt here: every `unwrap` in the mailbox or
+// endpoint is a potential engine-thread abort under faults.
+#![warn(clippy::unwrap_used)]
+
 use std::collections::VecDeque;
 use std::fmt;
 use std::ops::Deref;
@@ -372,6 +376,10 @@ pub enum Payload {
     /// Application thread → its own engine: run the global synchronous
     /// allreduce for iteration `version` (the every-τ model synchronization).
     AppSync { version: u64 },
+    /// Death notice: `rank` has fail-stopped and will send nothing more.
+    /// Broadcast once by a crashing rank's engine (fault injection) so
+    /// peers can mark it dead without burning a detection deadline.
+    Dead { rank: usize },
     /// Tear down the engine loop.
     Quit,
 }
@@ -804,6 +812,8 @@ impl Endpoint {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
     use std::thread;
 

@@ -1,0 +1,455 @@
+//! Deterministic fault injection for the engine and the simulator.
+//!
+//! A [`FaultPlan`] is a *seeded, declarative* description of everything
+//! that goes wrong in a run: per-rank fail-stop crashes at a given
+//! iteration, transient compute stalls, a per-rank compute-skew
+//! multiplier, and per-link jitter/drop. Both the real collective engine
+//! ([`crate::collectives::engine`]) and the discrete-event simulator
+//! ([`crate::simulator`]) consume the same plan, so every messy-fleet
+//! scenario is reproducible bit-for-bit and priceable analytically.
+//!
+//! Determinism is the load-bearing property: the plan is **stateless**.
+//! Randomized faults (jitter, drops) are pure hash functions of
+//! `(seed, src, dst, iteration[, phase])` — there is no RNG stream to
+//! advance, so the engine's racy thread interleavings and the
+//! simulator's sequential replay observe the *same* faults, and any
+//! rank can evaluate any other rank's faults locally. That is what lets
+//! [`Membership::apply_plan`] act as a shared membership oracle: all
+//! survivors derive identical survivor sets at every version boundary
+//! without a consensus round, which in turn is what keeps survivor
+//! models rank-identical after the first post-failure τ-sync.
+//!
+//! The failure model is **deterministic fail-stop**: a crashed rank
+//! stops sending anything (data and control) from its crash iteration
+//! onward and never recovers. Transient faults (stalls, jitter, drops)
+//! delay or suppress individual messages; the engine's bounded-retry
+//! receive turns those into *suspect* peers whose butterfly phase
+//! completes as identity (see `collectives/README.md`, "Failure model &
+//! degraded paths").
+
+use std::fmt;
+
+/// A fail-stop crash: `rank` executes nothing from `at_iter` on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Crash {
+    pub rank: usize,
+    /// First iteration (collective version) the rank does NOT execute.
+    pub at_iter: u64,
+}
+
+/// A transient stall: `rank`'s compute takes `seconds` longer for every
+/// iteration `t` with `from <= t < to`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stall {
+    pub rank: usize,
+    pub from: u64,
+    pub to: u64,
+    pub seconds: f64,
+}
+
+/// Per-link fault knobs, applied to group-exchange traffic (never to
+/// τ-sync traffic — the sync is the recovery barrier and must converge).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFaults {
+    /// Upper bound of the per-message uniform extra latency, seconds.
+    pub jitter_s: f64,
+    /// Probability a group-exchange phase's payload is dropped on a
+    /// given (src, dst, iteration, phase) link event, in `[0, 1]`.
+    pub drop_prob: f64,
+}
+
+impl Default for LinkFaults {
+    fn default() -> Self {
+        LinkFaults { jitter_s: 0.0, drop_prob: 0.0 }
+    }
+}
+
+/// Default receive deadline when a plan is active but no explicit
+/// deadline was configured: 50 ms.
+pub const DEFAULT_DEADLINE_S: f64 = 0.05;
+
+/// A deterministic, seeded fault scenario. See the module docs for the
+/// determinism contract. `FaultPlan::none()` (= `Default`) injects
+/// nothing and keeps every engine/simulator code path bit-identical to
+/// a fault-free build.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the stateless per-event hashes (jitter, drops).
+    pub seed: u64,
+    pub crashes: Vec<Crash>,
+    pub stalls: Vec<Stall>,
+    /// Per-rank compute-time multiplier; empty means all `1.0`.
+    pub skew: Vec<f64>,
+    pub link: LinkFaults,
+    /// Receive deadline (seconds) the engine and the simulator charge
+    /// for detecting a missing peer. Shared so the simulated
+    /// Allreduce-SGD stall penalty matches the engine's configured
+    /// patience. Not part of [`is_empty`](Self::is_empty).
+    pub deadline_s: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            crashes: Vec::new(),
+            stalls: Vec::new(),
+            skew: Vec::new(),
+            link: LinkFaults::default(),
+            deadline_s: DEFAULT_DEADLINE_S,
+        }
+    }
+}
+
+/// SplitMix64 finalizer — the stateless hash behind jitter/drop draws.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to a uniform draw in `[0, 1)`.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, default deadline.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// No faults configured at all (the deadline is a detection knob,
+    /// not a fault, and does not count).
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty()
+            && self.stalls.is_empty()
+            && self.skew.iter().all(|&s| s == 1.0)
+            && self.link.jitter_s == 0.0
+            && self.link.drop_prob == 0.0
+    }
+
+    /// First iteration `rank` does not execute, if it crashes at all.
+    pub fn crash_iter(&self, rank: usize) -> Option<u64> {
+        self.crashes.iter().filter(|c| c.rank == rank).map(|c| c.at_iter).min()
+    }
+
+    /// Is `rank` crashed at (the start of) iteration `t`?
+    pub fn crash_at(&self, rank: usize, t: u64) -> bool {
+        self.crash_iter(rank).is_some_and(|ci| t >= ci)
+    }
+
+    /// Compute-time multiplier for `rank` (`1.0` when unspecified).
+    pub fn skew_of(&self, rank: usize) -> f64 {
+        self.skew.get(rank).copied().unwrap_or(1.0)
+    }
+
+    /// Extra compute seconds `rank` loses at iteration `t` (summed over
+    /// overlapping stall windows).
+    pub fn stall_s(&self, rank: usize, t: u64) -> f64 {
+        self.stalls
+            .iter()
+            .filter(|s| s.rank == rank && s.from <= t && t < s.to)
+            .map(|s| s.seconds)
+            .sum()
+    }
+
+    /// Chain the seed with per-event coordinates into one hash.
+    fn mix(&self, vals: [u64; 4]) -> u64 {
+        let mut h = splitmix64(self.seed ^ 0xD6E8_FEB8_6659_FD93);
+        for v in vals {
+            h = splitmix64(h ^ v);
+        }
+        h
+    }
+
+    /// Deterministic extra latency (seconds) on the `src -> dst` link
+    /// for iteration `t`, uniform in `[0, jitter_s)`.
+    pub fn jitter_s(&self, src: usize, dst: usize, t: u64) -> f64 {
+        if self.link.jitter_s <= 0.0 {
+            return 0.0;
+        }
+        unit(self.mix([src as u64, dst as u64, t, 0x4A17])) * self.link.jitter_s
+    }
+
+    /// Deterministic drop decision for the payload of butterfly phase
+    /// `r` of iteration `t` on the `src -> dst` link.
+    pub fn drop_link(&self, src: usize, dst: usize, t: u64, r: u32) -> bool {
+        self.link.drop_prob > 0.0
+            && unit(self.mix([src as u64, dst as u64, t, 0xD0_0000 | r as u64]))
+                < self.link.drop_prob
+    }
+
+    /// The configured detection deadline in nanoseconds.
+    pub fn deadline_ns(&self) -> u64 {
+        (self.deadline_s.max(0.0) * 1e9) as u64
+    }
+
+    /// Canonical smoke scenario: the last rank fail-stops halfway
+    /// through the run.
+    pub fn crash_mid(p: usize, steps: u64, seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            crashes: vec![Crash { rank: p.saturating_sub(1), at_iter: steps / 2 }],
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Parse a CLI fault spec. Accepted: `none` (or empty), `crash@mid`,
+    /// `crash@N` (last rank fail-stops at iteration `N`).
+    pub fn parse(spec: &str, p: usize, steps: u64, seed: u64) -> Result<FaultPlan, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultPlan { seed, ..FaultPlan::default() });
+        }
+        if let Some(at) = spec.strip_prefix("crash@") {
+            if at == "mid" {
+                return Ok(FaultPlan::crash_mid(p, steps, seed));
+            }
+            let at_iter: u64 = at
+                .parse()
+                .map_err(|_| format!("bad fault spec {spec:?}: crash@<iter|mid>"))?;
+            return Ok(FaultPlan {
+                seed,
+                crashes: vec![Crash { rank: p.saturating_sub(1), at_iter }],
+                ..FaultPlan::default()
+            });
+        }
+        Err(format!("unknown fault spec {spec:?} (try: none, crash@mid, crash@<iter>)"))
+    }
+}
+
+/// Health of a peer as seen by one rank's engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerState {
+    /// Responding normally.
+    Healthy,
+    /// Missed a bounded-retry receive window; its phases complete as
+    /// identity until it is heard from again.
+    Suspect,
+    /// Fail-stopped (plan-declared or death-notice). Terminal.
+    Dead,
+}
+
+impl fmt::Display for PeerState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            PeerState::Healthy => "healthy",
+            PeerState::Suspect => "suspect",
+            PeerState::Dead => "dead",
+        })
+    }
+}
+
+/// Per-rank membership view: one [`PeerState`] per rank.
+///
+/// Dead is terminal; Suspect heals on the next successful receive. The
+/// *deterministic* transitions (plan-declared crashes, applied at every
+/// version-execution boundary via [`apply_plan`](Self::apply_plan)) are
+/// what survivor bit-identity rests on — all live ranks derive the same
+/// survivor set for a given version without communicating. Suspect is a
+/// local, possibly-spurious judgement and deliberately never influences
+/// the τ-sync participant set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    states: Vec<PeerState>,
+}
+
+impl Membership {
+    pub fn new(p: usize) -> Membership {
+        Membership { states: vec![PeerState::Healthy; p] }
+    }
+
+    pub fn state(&self, rank: usize) -> PeerState {
+        self.states[rank]
+    }
+
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.states[rank] == PeerState::Dead
+    }
+
+    /// Dead or currently suspect — skip this peer's butterfly phase.
+    pub fn is_down(&self, rank: usize) -> bool {
+        self.states[rank] != PeerState::Healthy
+    }
+
+    pub fn mark_dead(&mut self, rank: usize) {
+        self.states[rank] = PeerState::Dead;
+    }
+
+    /// Suspect a peer after a missed deadline window (no-op if Dead).
+    pub fn mark_suspect(&mut self, rank: usize) {
+        if self.states[rank] == PeerState::Healthy {
+            self.states[rank] = PeerState::Suspect;
+        }
+    }
+
+    /// A successful receive clears suspicion (Dead stays Dead).
+    pub fn heal(&mut self, rank: usize) {
+        if self.states[rank] == PeerState::Suspect {
+            self.states[rank] = PeerState::Healthy;
+        }
+    }
+
+    /// Clear every `Suspect` verdict (Dead stays Dead). Called when a
+    /// global sync completes: its unbounded receives prove every awaited
+    /// survivor live, so lingering suspicions were transient.
+    pub fn heal_all(&mut self) {
+        for s in &mut self.states {
+            if *s == PeerState::Suspect {
+                *s = PeerState::Healthy;
+            }
+        }
+    }
+
+    /// Fold the plan's fail-stop schedule in at a version boundary:
+    /// every rank whose crash iteration is `<= v` is Dead before any
+    /// rank executes version `v`. Deterministic — see the type docs.
+    pub fn apply_plan(&mut self, plan: &FaultPlan, v: u64) {
+        for c in &plan.crashes {
+            if c.at_iter <= v && c.rank < self.states.len() {
+                self.states[c.rank] = PeerState::Dead;
+            }
+        }
+    }
+
+    /// Sorted ranks not known dead (Suspect counts as surviving: only
+    /// the deterministic Dead state may shrink the sync participant
+    /// set, or survivor sets could disagree across ranks).
+    pub fn survivors(&self) -> Vec<usize> {
+        (0..self.states.len()).filter(|&r| !self.is_dead(r)).collect()
+    }
+
+    pub fn dead_count(&self) -> usize {
+        self.states.iter().filter(|&&s| s == PeerState::Dead).count()
+    }
+
+    pub fn all_alive(&self) -> bool {
+        self.dead_count() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty_and_injects_nothing() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        assert_eq!(plan.crash_iter(0), None);
+        assert!(!plan.crash_at(3, 100));
+        assert_eq!(plan.skew_of(7), 1.0);
+        assert_eq!(plan.stall_s(0, 5), 0.0);
+        assert_eq!(plan.jitter_s(0, 1, 9), 0.0);
+        assert!(!plan.drop_link(0, 1, 9, 2));
+        assert_eq!(plan.deadline_ns(), 50_000_000);
+    }
+
+    #[test]
+    fn explicit_unit_skew_still_empty() {
+        let plan = FaultPlan { skew: vec![1.0; 8], ..FaultPlan::default() };
+        assert!(plan.is_empty());
+        let plan = FaultPlan { skew: vec![1.0, 2.0], ..FaultPlan::default() };
+        assert!(!plan.is_empty());
+        assert_eq!(plan.skew_of(1), 2.0);
+        assert_eq!(plan.skew_of(5), 1.0, "out of range defaults to 1.0");
+    }
+
+    #[test]
+    fn crash_semantics() {
+        let plan = FaultPlan::crash_mid(4, 12, 42);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.crash_iter(3), Some(6));
+        assert_eq!(plan.crash_iter(0), None);
+        assert!(!plan.crash_at(3, 5));
+        assert!(plan.crash_at(3, 6));
+        assert!(plan.crash_at(3, 11));
+        assert!(!plan.crash_at(2, 11));
+    }
+
+    #[test]
+    fn stall_window_sums() {
+        let plan = FaultPlan {
+            stalls: vec![
+                Stall { rank: 1, from: 2, to: 5, seconds: 0.1 },
+                Stall { rank: 1, from: 4, to: 6, seconds: 0.2 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.stall_s(1, 1), 0.0);
+        assert_eq!(plan.stall_s(1, 2), 0.1);
+        assert!((plan.stall_s(1, 4) - 0.3).abs() < 1e-12, "windows overlap");
+        assert_eq!(plan.stall_s(1, 5), 0.2);
+        assert_eq!(plan.stall_s(1, 6), 0.0, "`to` is exclusive");
+        assert_eq!(plan.stall_s(0, 4), 0.0);
+    }
+
+    #[test]
+    fn jitter_and_drop_are_deterministic_and_bounded() {
+        let plan = FaultPlan {
+            seed: 7,
+            link: LinkFaults { jitter_s: 0.002, drop_prob: 0.5 },
+            ..FaultPlan::default()
+        };
+        for t in 0..50u64 {
+            let j = plan.jitter_s(1, 2, t);
+            assert!((0.0..0.002).contains(&j), "jitter {j} out of bounds");
+            assert_eq!(j, plan.jitter_s(1, 2, t), "stateless: same event, same draw");
+            assert_eq!(plan.drop_link(2, 3, t, 1), plan.drop_link(2, 3, t, 1));
+        }
+        // Different seeds decorrelate.
+        let other = FaultPlan { seed: 8, ..plan.clone() };
+        let same = (0..50u64).filter(|&t| plan.jitter_s(1, 2, t) == other.jitter_s(1, 2, t)).count();
+        assert!(same < 5, "seeds should decorrelate draws");
+        // Roughly half the links drop at p = 0.5.
+        let drops = (0..200u64).filter(|&t| plan.drop_link(0, 1, t, 0)).count();
+        assert!((50..150).contains(&drops), "drop rate wildly off: {drops}/200");
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert!(FaultPlan::parse("none", 4, 12, 1).unwrap().is_empty());
+        assert!(FaultPlan::parse("", 4, 12, 1).unwrap().is_empty());
+        let mid = FaultPlan::parse("crash@mid", 4, 12, 1).unwrap();
+        assert_eq!(mid.crash_iter(3), Some(6));
+        let at = FaultPlan::parse("crash@9", 8, 20, 1).unwrap();
+        assert_eq!(at.crash_iter(7), Some(9));
+        assert!(FaultPlan::parse("garbage", 4, 12, 1).is_err());
+        assert!(FaultPlan::parse("crash@soon", 4, 12, 1).is_err());
+    }
+
+    #[test]
+    fn membership_transitions() {
+        let mut m = Membership::new(4);
+        assert!(m.all_alive());
+        assert_eq!(m.survivors(), vec![0, 1, 2, 3]);
+        m.mark_suspect(2);
+        assert!(m.is_down(2));
+        assert!(!m.is_dead(2));
+        assert_eq!(m.survivors(), vec![0, 1, 2, 3], "suspect still counts as survivor");
+        m.heal(2);
+        assert_eq!(m.state(2), PeerState::Healthy);
+        m.mark_dead(3);
+        m.mark_suspect(3);
+        m.heal(3);
+        assert!(m.is_dead(3), "dead is terminal");
+        assert_eq!(m.survivors(), vec![0, 1, 2]);
+        assert_eq!(m.dead_count(), 1);
+    }
+
+    #[test]
+    fn apply_plan_is_a_shared_oracle() {
+        let plan = FaultPlan::crash_mid(4, 12, 0);
+        let mut a = Membership::new(4);
+        let mut b = Membership::new(4);
+        a.apply_plan(&plan, 5);
+        b.apply_plan(&plan, 5);
+        assert!(a.all_alive());
+        a.apply_plan(&plan, 6);
+        b.apply_plan(&plan, 6);
+        assert_eq!(a, b);
+        assert_eq!(a.survivors(), vec![0, 1, 2]);
+    }
+}

@@ -13,8 +13,10 @@
 //!   and communication-overlap scheduler ([`sched`]: MG-WFBP-style bucket
 //!   planning over per-layer backprop profiles), per-bucket gradient
 //!   compression with error feedback ([`compress`]: top-k / 8-bit
-//!   quantized wire encodings carried zero-copy through the engine), a
-//!   discrete-event cluster
+//!   quantized wire encodings carried zero-copy through the engine),
+//!   deterministic fault injection and elastic membership ([`fault`]:
+//!   seeded crash/stall/skew/jitter plans consumed by both the engine
+//!   and the simulator), a discrete-event cluster
 //!   simulator for at-scale experiments ([`simulator`], with a layered mode
 //!   that consumes the bucket timeline instead of one flat payload), and
 //!   the PJRT runtime that executes AOT-compiled models ([`runtime`]).
@@ -36,6 +38,7 @@ pub mod figures;
 pub mod comm;
 pub mod config;
 pub mod data;
+pub mod fault;
 pub mod metrics;
 pub mod model;
 pub mod optim;

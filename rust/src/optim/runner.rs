@@ -153,6 +153,8 @@ impl TrainConfig {
             chunk_elems: self.fusion.chunk_elems(),
             compression: self.compress,
             trace: true,
+            recv_deadline_ns: 0,
+            recv_retries: 0,
         }
     }
 }

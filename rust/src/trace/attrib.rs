@@ -58,6 +58,14 @@ pub struct Attribution {
     pub phase_wire_bytes: u64,
     /// Deterministic accounting: bytes-on-wire over all sync spans.
     pub sync_wire_bytes: u64,
+    /// Fault/degraded spans recorded ([`TraceKind::Fault`]): skipped
+    /// butterfly phases, crash markers, simulator fault penalties. Side
+    /// accounting — fault spans do NOT enter the four-way partition.
+    pub fault_spans: u64,
+    /// Total duration of those fault spans (s): time attributable to
+    /// injected faults (deadlines burned on missing peers, modeled
+    /// stall penalties).
+    pub degraded_s: f64,
 }
 
 impl Attribution {
@@ -78,6 +86,8 @@ impl Attribution {
             ("alpha_model_s", num(self.alpha_model_s)),
             ("beta_model_s", num(self.beta_model_s)),
             ("components_sum_s", num(self.components_sum_s())),
+            ("fault_spans", num(self.fault_spans as f64)),
+            ("degraded_s", num(self.degraded_s)),
         ])
     }
 
@@ -111,6 +121,12 @@ impl Attribution {
             self.other_s,
             share(self.other_s)
         ));
+        if self.fault_spans > 0 {
+            out.push_str(&format!(
+                "  faults        {:>9.4} s degraded over {} fault spans (side accounting)\n",
+                self.degraded_s, self.fault_spans
+            ));
+        }
         out
     }
 }
@@ -151,6 +167,10 @@ pub fn attribute(events: &[TraceEvent], net: &NetworkModel) -> Attribution {
             (Lane::Engine, TraceKind::TauSync) => {
                 att.tau_sync_spans += 1;
                 att.sync_wire_bytes += ev.bytes;
+            }
+            (_, TraceKind::Fault) => {
+                att.fault_spans += 1;
+                att.degraded_s += ev.dur_ns as f64 / 1e9;
             }
             _ => {}
         }
@@ -296,6 +316,22 @@ mod tests {
         assert!((att.alpha_model_s + att.beta_model_s - att.transfer_s).abs() < 1e-15);
         assert_eq!(att.phase_spans, 1);
         assert_eq!(att.phase_wire_bytes, 4096);
+    }
+
+    #[test]
+    fn fault_spans_are_side_accounting_only() {
+        let events = vec![
+            ev(TraceKind::Wait, Lane::App, 0, 0, 1000),
+            ev(TraceKind::Fault, Lane::Engine, 0, 100, 400),
+        ];
+        let att = attribute(&events, &NetworkModel::aries());
+        assert_eq!(att.fault_spans, 1);
+        assert!((att.degraded_s - 400e-9).abs() < 1e-15);
+        // The four-way partition is untouched: with no exchange spans the
+        // whole window stays `other`, fault time is reported beside it.
+        assert!((att.components_sum_s() - att.exposed_s).abs() < 1e-15);
+        assert!((att.other_s - 1000e-9).abs() < 1e-15);
+        assert!(att.report("faulty").contains("fault spans"));
     }
 
     #[test]

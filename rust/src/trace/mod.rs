@@ -68,10 +68,17 @@ pub enum TraceKind {
     /// the rank's exposed communication). Engine lane: blocked in a
     /// matched receive waiting for a peer (nested in its exchange span).
     Wait,
+    /// An injected-fault / degraded event (engine lane or simulator):
+    /// a butterfly phase completed as identity because its peer was
+    /// dead or suspect, a rank crash took effect, or the simulator
+    /// charged a fault penalty. The span duration is the degraded time
+    /// (deadline burned waiting on a missing peer; 0 for instantaneous
+    /// markers like plan-declared deaths).
+    Fault,
 }
 
 /// Number of span kinds (array-indexed registries).
-pub const N_KINDS: usize = 7;
+pub const N_KINDS: usize = 8;
 
 impl TraceKind {
     pub const ALL: [TraceKind; N_KINDS] = [
@@ -82,6 +89,7 @@ impl TraceKind {
         TraceKind::Encode,
         TraceKind::Decode,
         TraceKind::Wait,
+        TraceKind::Fault,
     ];
 
     pub fn index(self) -> usize {
@@ -93,6 +101,7 @@ impl TraceKind {
             TraceKind::Encode => 4,
             TraceKind::Decode => 5,
             TraceKind::Wait => 6,
+            TraceKind::Fault => 7,
         }
     }
 
@@ -105,6 +114,7 @@ impl TraceKind {
             TraceKind::Encode => "encode",
             TraceKind::Decode => "decode",
             TraceKind::Wait => "wait",
+            TraceKind::Fault => "fault",
         }
     }
 

@@ -21,6 +21,8 @@ fn cfg(p: usize, s: usize, tau: u64) -> EngineConfig {
         chunk_elems: 0,
         compression: Compression::None,
         trace: true,
+        recv_deadline_ns: 0,
+        recv_retries: 0,
     }
 }
 

@@ -155,6 +155,8 @@ fn prop_compressed_ratio_one_exchange_bitwise_identical() {
             chunk_elems,
             compression: comp,
             trace: true,
+            recv_deadline_ns: 0,
+            recv_retries: 0,
         };
         let dim = inputs[0].len();
         let barrier = Arc::new(Barrier::new(p));

@@ -27,6 +27,8 @@ fn cfg(p: usize, s: usize, tau: u64, trace: bool) -> EngineConfig {
         chunk_elems: 0,
         compression: Compression::None,
         trace,
+        recv_deadline_ns: 0,
+        recv_retries: 0,
     }
 }
 

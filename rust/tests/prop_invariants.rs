@@ -171,6 +171,8 @@ fn prop_chunked_group_allreduce_bitwise_matches_unchunked() {
             chunk_elems,
             compression: Compression::None,
             trace: true,
+            recv_deadline_ns: 0,
+            recv_retries: 0,
         };
         let dim = inputs[0][0].len();
         let barrier = Arc::new(Barrier::new(p));
