@@ -7,6 +7,7 @@
 //! | Local SGD (H)   | decentralized, S=P  | none      | models   |
 //! | D-PSGD          | ring, S=3           | none      | models   |
 //! | AD-PSGD         | pairwise, S=2       | unbounded | models   |
+//! | PairAveraging   | hypercube pair, S=2 | none      | models   |
 //! | SGP             | directed exp., S=k+1| none      | models (push-sum) |
 //! | eager-SGD       | global partial      | bounded   | gradients|
 //! | **WAGMA-SGD**   | **group, S=√P**     | **bounded (τ)** | **models** |
@@ -32,6 +33,7 @@ pub mod dpsgd;
 pub mod eager_sgd;
 pub mod engine;
 pub mod local_sgd;
+pub mod pair_avg;
 pub mod pjrt_engine;
 pub mod runner;
 pub mod sgp;

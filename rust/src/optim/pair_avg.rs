@@ -1,0 +1,85 @@
+//! Pair averaging: the simplest decentralized model-averaging baseline.
+//! Each iteration every rank takes a local step, then averages its model
+//! with exactly ONE partner — the rotating hypercube neighbor
+//! `rank ^ (1 << (t mod log2 P))` — so over any window of log2 P steps
+//! information from every rank mixes into every other (a deterministic,
+//! synchronous cousin of AD-PSGD's random pairwise gossip). Quorum size 2:
+//! each step blocks on a single partner, which makes the algorithm cheap
+//! but *fault-brittle* — one dead rank stalls its partner every iteration,
+//! the property the elastic-membership comparison exercises.
+
+use std::time::Instant;
+
+use crate::comm::{Endpoint, Tag};
+use crate::metrics::{RankMetrics, StepRecord};
+use crate::model::WorkerState;
+use crate::optim::engine::ComputeEngine;
+use crate::optim::runner::TrainConfig;
+use crate::topology::log2_exact;
+
+/// The deterministic rotating hypercube partner of `rank` at iteration `t`
+/// (`p` must be a power of two; with `p == 1` there is no partner).
+pub fn partner_of(rank: usize, t: u64, p: usize) -> usize {
+    let log_p = log2_exact(p);
+    rank ^ (1usize << (t % u64::from(log_p)) as usize)
+}
+
+pub fn run_worker(
+    mut ep: Endpoint,
+    mut engine: Box<dyn ComputeEngine>,
+    cfg: &TrainConfig,
+) -> (RankMetrics, Vec<f32>) {
+    let rank = ep.rank();
+    let p = cfg.p;
+    let mut state = WorkerState::new(cfg.init.clone());
+    let mut metrics = RankMetrics { rank, ..Default::default() };
+    let run_start = Instant::now();
+
+    for t in 0..cfg.steps {
+        let t0 = Instant::now();
+        let loss = engine.step(&mut state, cfg.lr, t);
+        if p > 1 {
+            let partner = partner_of(rank, t, p);
+            ep.send(partner, Tag::p2p(t, 0), state.params.clone());
+            let theirs = ep.recv_data(partner, Tag::p2p(t, 0), |_, m| {
+                panic!("unexpected ctrl in pair_avg: {m:?}")
+            });
+            for (mine, other) in state.params.iter_mut().zip(&theirs) {
+                *mine = (*mine + *other) * 0.5;
+            }
+        }
+        metrics.steps.push(StepRecord { t, loss, wall: t0.elapsed().as_secs_f64(), staleness: 0 });
+        if cfg.eval_every != 0 && (t + 1) % cfg.eval_every == 0 {
+            if let Some(v) = engine.eval(&state.params) {
+                metrics.evals.push((t, v));
+            }
+        }
+    }
+
+    metrics.total_seconds = run_start.elapsed().as_secs_f64();
+    metrics.sent_msgs = ep.sent_msgs;
+    metrics.sent_bytes = ep.sent_bytes;
+    (metrics, state.params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partner_is_an_involution_and_rotates() {
+        let p = 8;
+        for t in 0..6u64 {
+            for rank in 0..p {
+                let q = partner_of(rank, t, p);
+                assert_ne!(q, rank);
+                assert_eq!(partner_of(q, t, p), rank, "pairing must be symmetric");
+            }
+        }
+        // The partner dimension rotates with period log2 P.
+        assert_eq!(partner_of(0, 0, p), 1);
+        assert_eq!(partner_of(0, 1, p), 2);
+        assert_eq!(partner_of(0, 2, p), 4);
+        assert_eq!(partner_of(0, 3, p), 1);
+    }
+}

@@ -10,7 +10,7 @@ use crate::comm::world;
 use crate::compress::Compression;
 use crate::metrics::TrainResult;
 use crate::optim::engine::EngineFactory;
-use crate::optim::{adpsgd, allreduce_sgd, dpsgd, eager_sgd, local_sgd, sgp, wagma};
+use crate::optim::{adpsgd, allreduce_sgd, dpsgd, eager_sgd, local_sgd, pair_avg, sgp, wagma};
 use crate::sched::FusionConfig;
 use crate::topology::Grouping;
 
@@ -24,6 +24,9 @@ pub enum Algorithm {
     AdPsgd,
     Sgp,
     EagerSgd,
+    /// One-partner model averaging on a rotating hypercube pairing
+    /// (robustness baseline: cheapest coordination, most fault-brittle).
+    PairAveraging,
 }
 
 impl Algorithm {
@@ -36,10 +39,11 @@ impl Algorithm {
             Algorithm::AdPsgd => "adpsgd",
             Algorithm::Sgp => "sgp",
             Algorithm::EagerSgd => "eager_sgd",
+            Algorithm::PairAveraging => "pair_avg",
         }
     }
 
-    pub fn all() -> [Algorithm; 7] {
+    pub fn all() -> [Algorithm; 8] {
         [
             Algorithm::Wagma,
             Algorithm::AllreduceSgd,
@@ -48,6 +52,7 @@ impl Algorithm {
             Algorithm::AdPsgd,
             Algorithm::Sgp,
             Algorithm::EagerSgd,
+            Algorithm::PairAveraging,
         ]
     }
 }
@@ -64,6 +69,7 @@ impl FromStr for Algorithm {
             "adpsgd" | "ad-psgd" => Ok(Algorithm::AdPsgd),
             "sgp" => Ok(Algorithm::Sgp),
             "eager" | "eager_sgd" | "eager-sgd" => Ok(Algorithm::EagerSgd),
+            "pair" | "pair_avg" | "pair-avg" | "pair_averaging" => Ok(Algorithm::PairAveraging),
             other => Err(format!("unknown algorithm {other:?}")),
         }
     }
@@ -197,7 +203,11 @@ pub fn run_training(cfg: &TrainConfig, factory: EngineFactory) -> TrainResult {
                 }));
             }
         }
-        Algorithm::AllreduceSgd | Algorithm::LocalSgd | Algorithm::DPsgd | Algorithm::Sgp => {
+        Algorithm::AllreduceSgd
+        | Algorithm::LocalSgd
+        | Algorithm::DPsgd
+        | Algorithm::Sgp
+        | Algorithm::PairAveraging => {
             for ep in world(cfg.p) {
                 let rank = ep.rank();
                 let cfg = cfg.clone();
@@ -208,6 +218,7 @@ pub fn run_training(cfg: &TrainConfig, factory: EngineFactory) -> TrainResult {
                         Algorithm::AllreduceSgd => allreduce_sgd::run_worker(ep, engine, &cfg),
                         Algorithm::LocalSgd => local_sgd::run_worker(ep, engine, &cfg),
                         Algorithm::DPsgd => dpsgd::run_worker(ep, engine, &cfg),
+                        Algorithm::PairAveraging => pair_avg::run_worker(ep, engine, &cfg),
                         _ => sgp::run_worker(ep, engine, &cfg),
                     }
                 }));
@@ -271,7 +282,7 @@ mod tests {
 
     #[test]
     fn every_algorithm_reduces_global_loss() {
-        // Convergence smoke for all 7 optimizers: distance of the mean
+        // Convergence smoke for all 8 optimizers: distance of the mean
         // final model to the known global optimum must be small.
         let opt = QuadraticEngine::global_optimum(16, 42);
         for algo in Algorithm::all() {

@@ -8,7 +8,8 @@
 use crate::collectives::allreduce::RING_THRESHOLD;
 use crate::compress::Compression;
 use crate::data::{ImbalanceModel, StepDelays};
-use crate::optim::Algorithm;
+use crate::fault::FaultPlan;
+use crate::optim::{pair_avg, Algorithm};
 use crate::sched::{Bucket, FusionConfig, FusionMode, FusionPlan, LayerProfile};
 use crate::simulator::network::NetworkModel;
 use crate::topology::{log2_exact, Grouping};
@@ -55,6 +56,11 @@ pub struct SimConfig {
     /// overlap per phase. Off by default: tracing a long run materializes
     /// `O(steps · p · buckets · phases)` events.
     pub trace: bool,
+    /// Deterministic fault schedule (crashes, stalls, skew, link jitter) —
+    /// the same [`FaultPlan`] the real engine consumes. An empty plan is
+    /// arithmetically invisible: every fault adjustment is guarded, so
+    /// fault-free results stay bit-identical to the pre-fault simulator.
+    pub faults: FaultPlan,
 }
 
 impl Default for SimConfig {
@@ -75,6 +81,7 @@ impl Default for SimConfig {
             fusion: FusionConfig::default(),
             compress: Compression::None,
             trace: false,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -226,21 +233,68 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
     let mut trace: Vec<TraceEvent> = Vec::new();
 
     for t in 0..cfg.steps {
-        let compute = delays.sample_step();
+        let mut compute = delays.sample_step();
+        // Fault arithmetic. Every adjustment is guarded so an empty plan
+        // leaves each f64 bit-identical to the pre-fault simulator.
+        for i in 0..p {
+            let skew = cfg.faults.skew_of(i);
+            if skew != 1.0 {
+                compute[i] *= skew;
+            }
+            let stall = cfg.faults.stall_s(i, t as u64);
+            if stall > 0.0 {
+                compute[i] += stall;
+            }
+            // Inbound link jitter, hashed on the rank's predecessor link —
+            // the simulator-level image of the engine's per-link jitter.
+            let jitter = cfg.faults.jitter_s((i + p - 1) % p, i, t as u64);
+            if jitter > 0.0 {
+                compute[i] += jitter;
+            }
+        }
+        // Fail-stop mask: a crashed rank freezes (no compute, no traffic)
+        // and is excluded from every fold below. With no crashes the mask
+        // is all-true and the filtered folds reduce the same sequences.
+        let alive: Vec<bool> = (0..p).map(|i| !cfg.faults.crash_at(i, t as u64)).collect();
+        let any_dead = alive.iter().any(|&a| !a);
         wire_total += iteration_wire_bytes(cfg, t, group_size, group_plan, engine_comp);
-        let start_min = app.iter().cloned().fold(f64::INFINITY, f64::min);
-        let start_max = app.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let start_min = masked(&app, &alive).fold(f64::INFINITY, f64::min);
+        let start_max = masked(&app, &alive).fold(f64::NEG_INFINITY, f64::max);
         skew_acc += start_max - start_min;
         for i in 0..p {
-            ideal[i] += compute[i];
+            if alive[i] {
+                ideal[i] += compute[i];
+            }
         }
         // Arrival of each app at the communication call site.
         let arrival: Vec<f64> = (0..p).map(|i| app[i] + compute[i]).collect();
+        // Failure-detection penalty the *synchronous* baselines pay every
+        // iteration once any rank is dead: without wait-avoidance the
+        // collective blocks a full deadline before re-forming.
+        let penalty = if any_dead { cfg.faults.deadline_s.max(0.0) } else { 0.0 };
+        if cfg.trace {
+            for i in 0..p {
+                if cfg.faults.crash_iter(i) == Some(t as u64) {
+                    let mut ev = TraceEvent::new(
+                        TraceKind::Fault,
+                        Lane::Engine,
+                        ns(app[i]),
+                        ns(cfg.faults.deadline_s.max(0.0)),
+                    );
+                    ev.rank = i as u32;
+                    ev.version = t as u64;
+                    trace.push(ev);
+                }
+            }
+        }
         // Pre-compute app times: the bucket recurrence places per-bucket
         // gradient ready points inside the backward pass relative to these.
         let app_prev: Vec<f64> = app.clone();
         if cfg.trace {
             for i in 0..p {
+                if !alive[i] {
+                    continue;
+                }
                 let mut ev =
                     TraceEvent::new(TraceKind::Compute, Lane::App, ns(app_prev[i]), ns(compute[i]));
                 ev.rank = i as u32;
@@ -253,10 +307,11 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
             Algorithm::AllreduceSgd => {
                 if let Some(plan) = &layered {
                     layered_sync_allreduce_step(
-                        &mut app, &app_prev, &compute, plan, &net, p, Compression::None,
+                        &mut app, &app_prev, &compute, plan, &net, p, Compression::None, &alive,
+                        penalty,
                     );
                 } else {
-                    sync_allreduce_step(&mut app, &arrival, net.allreduce(n, p));
+                    sync_allreduce_step(&mut app, &arrival, net.allreduce(n, p), &alive, penalty);
                 }
             }
             Algorithm::LocalSgd => {
@@ -265,12 +320,19 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                     if let Some(plan) = &layered {
                         layered_sync_allreduce_step(
                             &mut app, &app_prev, &compute, plan, &net, p, Compression::None,
+                            &alive, penalty,
                         );
                     } else {
-                        sync_allreduce_step(&mut app, &arrival, net.allreduce(n, p));
+                        sync_allreduce_step(
+                            &mut app, &arrival, net.allreduce(n, p), &alive, penalty,
+                        );
                     }
                 } else {
-                    app.copy_from_slice(&arrival);
+                    for i in 0..p {
+                        if alive[i] {
+                            app[i] = arrival[i];
+                        }
+                    }
                 }
             }
             Algorithm::DPsgd => {
@@ -279,10 +341,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                 // slowest rank arrives; communication is only the two
                 // neighbor exchanges.
                 let cost = 2.0 * net.exchange(n, 3);
-                let start = arrival.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                for a in app.iter_mut() {
-                    *a = start + cost;
-                }
+                sync_allreduce_step(&mut app, &arrival, cost, &alive, penalty);
             }
             Algorithm::Sgp => {
                 // SGP is likewise synchronous per iteration (Table I:
@@ -290,10 +349,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                 let k = cfg.sgp_neighbors.max(1);
                 let _ = log2_exact(p); // graph validity
                 let cost = k as f64 * net.exchange(n, k + 1);
-                let start = arrival.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                for a in app.iter_mut() {
-                    *a = start + cost;
-                }
+                sync_allreduce_step(&mut app, &arrival, cost, &alive, penalty);
             }
             Algorithm::AdPsgd => {
                 // Fully asynchronous: communication overlaps compute; the
@@ -301,36 +357,64 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                 // serialization at the receiving host, not overlappable).
                 let blend = n as f64 * net.gamma;
                 for i in 0..p {
-                    app[i] = arrival[i] + blend;
+                    if alive[i] {
+                        app[i] = arrival[i] + blend;
+                    }
+                }
+            }
+            Algorithm::PairAveraging => {
+                // One blocking partner per iteration on the rotating
+                // hypercube pairing. Quorum 2 makes the baseline cheap but
+                // brittle: a dead partner stalls the survivor a full
+                // detection deadline, every time the rotation lands on it.
+                let cost = net.exchange(n, 2);
+                for i in 0..p {
+                    if !alive[i] {
+                        continue;
+                    }
+                    if p == 1 {
+                        app[i] = arrival[i];
+                        continue;
+                    }
+                    let q = pair_avg::partner_of(i, t as u64, p);
+                    app[i] = if alive[q] {
+                        arrival[i].max(arrival[q]) + cost
+                    } else {
+                        arrival[i] + cfg.faults.deadline_s.max(0.0)
+                    };
                 }
             }
             Algorithm::Wagma | Algorithm::EagerSgd => {
                 let s = if cfg.algo == Algorithm::EagerSgd { p } else { group_size };
                 let is_sync = cfg.tau != 0 && (t as u64 + 1) % cfg.tau == 0;
                 if is_sync {
+                    // The τ-sync re-forms over survivors without a
+                    // detection stall: membership is deterministic from
+                    // the shared plan (no penalty — the wait-avoiding
+                    // contrast the elastic figure quantifies).
                     if let Some(plan) = &layered {
                         layered_sync_allreduce_step(
-                            &mut app, &app_prev, &compute, plan, &net, p, engine_comp,
+                            &mut app, &app_prev, &compute, plan, &net, p, engine_comp, &alive,
+                            0.0,
                         );
                     } else {
                         let cost = sync_allreduce_cost(&net, n, p, engine_comp);
-                        let start = arrival.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                        for a in app.iter_mut() {
-                            *a = start + cost;
-                        }
+                        sync_allreduce_step(&mut app, &arrival, cost, &alive, 0.0);
                     }
                     // Engine-lane τ-sync spans: the barrier wait from each
                     // rank's arrival to the slowest rank, then the
                     // collective itself (only its exposed tail when the
                     // layered schedule hid part of it under compute).
                     if cfg.trace {
-                        let arrival_max =
-                            arrival.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                        let end = app[0];
+                        let arrival_max = masked(&arrival, &alive).fold(f64::NEG_INFINITY, f64::max);
+                        let end = (0..p).find(|&i| alive[i]).map_or(app[0], |i| app[i]);
                         let sync_wire =
                             iteration_wire_bytes(cfg, t, group_size, group_plan, engine_comp)
                                 as u64;
                         for i in 0..p {
+                            if !alive[i] {
+                                continue;
+                            }
                             let barrier = ns(arrival_max).saturating_sub(ns(arrival[i]));
                             if barrier > 0 {
                                 let mut w = TraceEvent::new(
@@ -370,6 +454,7 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                         &net,
                         p,
                         engine_comp,
+                        &alive,
                         cfg.trace.then_some(&mut trace),
                     );
                 }
@@ -380,6 +465,9 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         // call site and its app resuming.
         if cfg.trace {
             for i in 0..p {
+                if !alive[i] {
+                    continue;
+                }
                 let wait = ns(app[i]).saturating_sub(ns(arrival[i]));
                 if wait > 0 {
                     let mut w = TraceEvent::new(TraceKind::Wait, Lane::App, ns(arrival[i]), wait);
@@ -411,6 +499,14 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
 /// Seconds → integer nanoseconds on the simulated event clock.
 fn ns(x: f64) -> u64 {
     (x.max(0.0) * 1e9).round() as u64
+}
+
+/// Iterate the values of `v` whose rank is alive. Folding over this (rather
+/// than the whole slice) keeps dead ranks from dragging a frozen timestamp
+/// into cluster-wide maxima; with everyone alive it visits exactly the same
+/// values in the same order, so fault-free runs stay bit-identical.
+fn masked<'a>(v: &'a [f64], alive: &'a [bool]) -> impl Iterator<Item = f64> + 'a {
+    v.iter().zip(alive).filter(|(_, &a)| a).map(|(x, _)| *x)
 }
 
 /// Every-τ global allreduce cost under the engine's compression policy:
@@ -460,6 +556,7 @@ fn iteration_wire_bytes(
         Algorithm::DPsgd => 2.0 * n as f64,
         Algorithm::Sgp => cfg.sgp_neighbors.max(1) as f64 * n as f64,
         Algorithm::AdPsgd => n as f64,
+        Algorithm::PairAveraging => n as f64,
         Algorithm::Wagma | Algorithm::EagerSgd => {
             let s = if cfg.algo == Algorithm::EagerSgd { p } else { group_size };
             let is_sync = cfg.tau != 0 && (t as u64 + 1) % cfg.tau == 0;
@@ -500,11 +597,19 @@ pub fn simulated_overlap_fraction(cfg: &SimConfig) -> (SimResult, SimResult, f64
     (flat, layered, frac)
 }
 
-/// Synchronous allreduce: everyone starts when the slowest arrives.
-fn sync_allreduce_step(app: &mut [f64], arrival: &[f64], cost: f64) {
-    let start = arrival.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    for a in app.iter_mut() {
-        *a = start + cost;
+/// Synchronous allreduce: everyone starts when the slowest *surviving*
+/// rank arrives. `penalty` is the per-iteration detection stall a
+/// synchronous collective pays once membership has shrunk (it must time
+/// out on the dead rank every round); it is `0.0` in fault-free runs and
+/// the addition is skipped entirely then so timings stay bit-identical.
+fn sync_allreduce_step(app: &mut [f64], arrival: &[f64], cost: f64, alive: &[bool], penalty: f64) {
+    let start = masked(arrival, alive).fold(f64::NEG_INFINITY, f64::max);
+    for (i, a) in app.iter_mut().enumerate() {
+        if !alive[i] {
+            continue;
+        }
+        let v = start + cost;
+        *a = if penalty > 0.0 { v + penalty } else { v };
     }
 }
 
@@ -515,6 +620,7 @@ fn sync_allreduce_step(app: &mut [f64], arrival: &[f64], cost: f64) {
 /// every rank's bucket is ready AND the previous bucket finished (one
 /// serial communication engine, as in MG-WFBP). The iteration ends at
 /// `max(last bucket finish, slowest compute)`.
+#[allow(clippy::too_many_arguments)]
 fn layered_sync_allreduce_step(
     app: &mut [f64],
     app_prev: &[f64],
@@ -523,10 +629,13 @@ fn layered_sync_allreduce_step(
     net: &NetworkModel,
     p: usize,
     comp: Compression,
+    alive: &[bool],
+    penalty: f64,
 ) {
     let mut finish = f64::NEG_INFINITY;
     for b in &plan.buckets {
         let ready = (0..p)
+            .filter(|&i| alive[i])
             .map(|i| app_prev[i] + compute[i] * b.ready_frac)
             .fold(f64::NEG_INFINITY, f64::max);
         let start = ready.max(finish);
@@ -538,11 +647,15 @@ fn layered_sync_allreduce_step(
         finish = start + comm;
     }
     let arrival_max = (0..p)
+        .filter(|&i| alive[i])
         .map(|i| app_prev[i] + compute[i])
         .fold(f64::NEG_INFINITY, f64::max);
     let end = finish.max(arrival_max);
-    for a in app.iter_mut() {
-        *a = end;
+    for (i, a) in app.iter_mut().enumerate() {
+        if !alive[i] {
+            continue;
+        }
+        *a = if penalty > 0.0 { end + penalty } else { end };
     }
 }
 
@@ -576,15 +689,19 @@ fn layered_group_step(
     net: &NetworkModel,
     p: usize,
     comp: Compression,
+    alive: &[bool],
     mut tr: Option<&mut Vec<TraceEvent>>,
 ) {
     let phases = log2_exact(s.min(p));
     for bucket in &plan.buckets {
         let ready: Vec<f64> =
             (0..p).map(|i| app_prev[i] + compute[i] * bucket.ready_frac).collect();
-        let activator = ready.iter().cloned().fold(f64::INFINITY, f64::min);
+        let activator = masked(&ready, alive).fold(f64::INFINITY, f64::min);
         let act = activator + net.activation(p);
-        let mut times: Vec<f64> = (0..p).map(|i| engine[i].max(ready[i].min(act))).collect();
+        // A dead rank's engine lane is frozen; it neither joins nor delays.
+        let mut times: Vec<f64> = (0..p)
+            .map(|i| if alive[i] { engine[i].max(ready[i].min(act)) } else { engine[i] })
+            .collect();
         let cost = if comp.is_none() {
             net.exchange(bucket.bytes, s.min(p))
         } else {
@@ -597,11 +714,29 @@ fn layered_group_step(
         for r in 0..phases {
             let prev = times.clone();
             for i in 0..p {
+                if !alive[i] {
+                    continue;
+                }
                 let partner = if s >= p {
                     i ^ (1usize << r)
                 } else {
                     grouping.partner(i, t, r)
                 };
+                if !alive[partner] {
+                    // Degraded phase: the exchange with a dead partner
+                    // completes as identity (the engine's skipped_phases
+                    // path) — no cost, no progress from that peer.
+                    times[i] = prev[i];
+                    if let Some(sink) = tr.as_deref_mut() {
+                        let mut ev =
+                            TraceEvent::new(TraceKind::Fault, Lane::Engine, ns(prev[i]), 0);
+                        ev.rank = i as u32;
+                        ev.version = t;
+                        ev.phase = r;
+                        sink.push(ev);
+                    }
+                    continue;
+                }
                 times[i] = prev[i].max(prev[partner]) + cost;
                 if let Some(sink) = tr.as_deref_mut() {
                     let t0 = ns(prev[i]);
@@ -637,7 +772,9 @@ fn layered_group_step(
         engine.copy_from_slice(&times);
     }
     for i in 0..p {
-        app[i] = arrival[i].max(engine[i]);
+        if alive[i] {
+            app[i] = arrival[i].max(engine[i]);
+        }
     }
 }
 
@@ -915,5 +1052,103 @@ mod tests {
         let r = simulate(&cfg);
         assert!(r.makespan.is_finite() && r.makespan > 0.0);
         assert_eq!(r.iter_times.len(), 50);
+    }
+
+    /// An empty fault plan is arithmetically invisible: every timing is
+    /// bit-identical to the pre-fault simulator, even with a nonzero
+    /// detection deadline configured (the deadline only prices *observed*
+    /// faults, it is not a standing tax).
+    #[test]
+    fn empty_fault_plan_is_bitwise_neutral() {
+        use crate::fault::FaultPlan;
+        for algo in Algorithm::all() {
+            let plain = simulate(&base(algo, 16));
+            let armed = simulate(&SimConfig {
+                faults: FaultPlan { deadline_s: 0.123, ..FaultPlan::none() },
+                ..base(algo, 16)
+            });
+            assert_eq!(plain.makespan, armed.makespan, "{}", algo.name());
+            assert_eq!(plain.iter_times, armed.iter_times, "{}", algo.name());
+            assert_eq!(plain.mean_skew, armed.mean_skew, "{}", algo.name());
+            assert_eq!(plain.wire_bytes_per_iter, armed.wire_bytes_per_iter, "{}", algo.name());
+        }
+    }
+
+    /// The elastic-membership contrast the figure quantifies: after a
+    /// mid-run crash, synchronous Allreduce-SGD pays at least the full
+    /// detection deadline every remaining iteration, while wait-avoiding
+    /// WAGMA (deterministic membership, no detection stall) loses far
+    /// less. PairAveraging sits in between: only the rotation slots that
+    /// land on the dead rank stall.
+    #[test]
+    fn crashes_price_synchronous_baselines_a_deadline_per_iter() {
+        use crate::fault::{Crash, FaultPlan};
+        let p = 16;
+        let steps = 60;
+        let crash_at = 30u64;
+        let deadline = 0.25;
+        let plan = FaultPlan {
+            crashes: vec![Crash { rank: 5, at_iter: crash_at }],
+            deadline_s: deadline,
+            ..FaultPlan::none()
+        };
+        let run = |algo: Algorithm, faults: FaultPlan| {
+            simulate(&SimConfig {
+                imbalance: ImbalanceModel::Balanced { base: 0.4, jitter: 0.0 },
+                steps,
+                faults,
+                ..base(algo, p)
+            })
+        };
+        let post_crash_iters = (steps as u64 - crash_at) as f64;
+
+        let ar_plain = run(Algorithm::AllreduceSgd, FaultPlan::none());
+        let ar_fault = run(Algorithm::AllreduceSgd, plan.clone());
+        let ar_loss = ar_fault.makespan - ar_plain.makespan;
+        assert!(
+            ar_loss >= deadline * post_crash_iters - 1e-6,
+            "allreduce lost {ar_loss} over {post_crash_iters} iters (deadline {deadline})"
+        );
+
+        let wg_plain = run(Algorithm::Wagma, FaultPlan::none());
+        let wg_fault = run(Algorithm::Wagma, plan.clone());
+        let wg_loss = (wg_fault.makespan - wg_plain.makespan).max(0.0);
+        assert!(
+            wg_loss < deadline * post_crash_iters * 0.25,
+            "wagma lost {wg_loss}, expected far less than allreduce's {ar_loss}"
+        );
+
+        let pa_plain = run(Algorithm::PairAveraging, FaultPlan::none());
+        let pa_fault = run(Algorithm::PairAveraging, plan);
+        let pa_loss = pa_fault.makespan - pa_plain.makespan;
+        assert!(pa_loss > 0.0, "pair averaging must stall on its dead partner");
+        assert!(
+            pa_loss < ar_loss,
+            "pair averaging ({pa_loss}) should lose less than full-barrier allreduce ({ar_loss})"
+        );
+    }
+
+    /// Dead ranks stop contributing to skew/ideal folds and their lanes
+    /// freeze, but survivors keep making progress and makespan stays
+    /// monotone in time.
+    #[test]
+    fn survivors_keep_progressing_after_crash() {
+        use crate::fault::{Crash, FaultPlan};
+        let cfg = SimConfig {
+            steps: 40,
+            faults: FaultPlan {
+                crashes: vec![Crash { rank: 3, at_iter: 20 }],
+                deadline_s: 0.05,
+                ..FaultPlan::none()
+            },
+            ..base(Algorithm::Wagma, 16)
+        };
+        let r = simulate(&cfg);
+        assert!(r.makespan.is_finite() && r.makespan > 0.0);
+        assert_eq!(r.iter_times.len(), 40);
+        assert!(r.iter_times.iter().all(|t| *t >= -1e-9), "time went backwards");
+        // Post-crash iterations still advance the cluster clock.
+        let tail: f64 = r.iter_times[20..].iter().sum();
+        assert!(tail > 0.0, "no progress after the crash");
     }
 }
