@@ -65,6 +65,7 @@ pub fn calibrate(quick: bool, seed: u64) -> (NetworkModel, Vec<CalSample>) {
             chunk_elems: 0,
             compression: Compression::None,
             compute: vec![vec![0.0; p]; steps as usize],
+            faults: crate::fault::FaultPlan::none(),
         };
         let run = run_measured(&cfg);
         samples.push(CalSample { bytes: (dim * 4) as f64, seconds: run.wait.mean });

@@ -39,6 +39,7 @@ use crate::comm::world;
 use crate::compress::Compression;
 use crate::config::preset;
 use crate::data::StepDelays;
+use crate::fault::FaultPlan;
 use crate::optim::Algorithm;
 use crate::sched::{FusionConfig, FusionPlan, LayerProfile};
 use crate::simulator::{simulated_overlap_fraction, NetworkModel};
@@ -62,6 +63,11 @@ pub struct MeasuredConfig {
     /// Per-step, per-rank compute seconds (steps × p). Empty inner values
     /// are not allowed; use zeros for a serial reference.
     pub compute: Vec<Vec<f64>>,
+    /// Deterministic fault schedule. A crashed rank's application stops
+    /// issuing collectives from its crash iteration; survivors route
+    /// around it via the plan-derived membership view. The empty plan
+    /// takes literally the pre-fault engine paths.
+    pub faults: FaultPlan,
 }
 
 /// Wall-clock measurements aggregated over all ranks.
@@ -86,6 +92,16 @@ pub struct MeasuredRun {
     pub trace: Vec<TraceEvent>,
     /// Events lost to ring overflow across all ranks (0 at these scales).
     pub dropped_trace_events: u64,
+    /// Butterfly phases completed as identity (dead/suspect peer), all
+    /// ranks. Deterministic for plan-declared crashes.
+    pub skipped_phases: u64,
+    /// Group collectives with at least one skipped phase, all ranks.
+    pub degraded_iters: u64,
+    /// Application iterations actually executed across all ranks (crashed
+    /// ranks stop at their crash iteration).
+    pub survivor_steps: u64,
+    /// Engine-thread ns blocked in group-phase receives, all ranks.
+    pub wait_group_ns: u64,
 }
 
 /// Spin-accurate busy wait (sleeps the bulk, spins the tail).
@@ -118,14 +134,20 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
         compression: cfg.compression,
         trace: true,
         recv_deadline_ns: 0,
-        recv_retries: 0,
+        // With a live fault plan the group receives are deadline-bounded
+        // (the plan's deadline); generous retries keep transient
+        // scheduling hiccups on a loaded CI box from registering as
+        // spurious suspects. Irrelevant when the plan is empty (the
+        // effective deadline is 0 = the legacy blocking path).
+        recv_retries: if cfg.faults.is_empty() { 0 } else { 5 },
     };
+    let faults = std::sync::Arc::new(cfg.faults.clone());
     let start = Instant::now();
     let engines: Vec<CollectiveEngine> = world(cfg.p)
         .into_iter()
         .map(|ep| {
             let r = ep.rank() as f32;
-            CollectiveEngine::spawn(ep, ecfg, vec![r; cfg.dim])
+            CollectiveEngine::spawn_with_faults(ep, ecfg, vec![r; cfg.dim], faults.clone())
         })
         .collect();
     let compute = std::sync::Arc::new(cfg.compute.clone());
@@ -135,12 +157,20 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
         .into_iter()
         .map(|eng| {
             let compute = compute.clone();
+            let faults = faults.clone();
             thread::spawn(move || {
                 let rank = eng.rank();
+                let crash = faults.crash_iter(rank);
                 let tracer = eng.tracer();
                 let mut waits = Vec::with_capacity(steps as usize);
                 let mut iters = Vec::with_capacity(steps as usize);
                 for t in 0..steps {
+                    if crash.is_some_and(|ci| t >= ci) {
+                        // Fail-stop: the application issues nothing from
+                        // its crash iteration on; survivors route around
+                        // it via the plan-derived membership view.
+                        break;
+                    }
                     let it0 = Instant::now();
                     let comp0 = now_ns();
                     busy_compute(Duration::from_secs_f64(compute[t as usize][rank]));
@@ -170,8 +200,10 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
     let mut iters = Vec::new();
     let mut stats: Vec<EngineStats> = Vec::new();
     let mut trace = Vec::new();
+    let mut survivor_steps = 0u64;
     for h in handles {
         let (w, i, st, tr) = h.join().unwrap();
+        survivor_steps += w.len() as u64;
         waits.extend(w);
         iters.extend(i);
         stats.push(st);
@@ -191,6 +223,10 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
         global_syncs: stats.iter().map(|s| s.global_syncs).sum(),
         trace,
         dropped_trace_events: stats.iter().map(|s| s.dropped_trace_events).sum(),
+        skipped_phases: stats.iter().map(|s| s.skipped_phases).sum(),
+        degraded_iters: stats.iter().map(|s| s.degraded_iters).sum(),
+        survivor_steps,
+        wait_group_ns: stats.iter().map(|s| s.wait_group_ns).sum(),
     }
 }
 
@@ -311,6 +347,7 @@ pub fn bench_preset_traced(
             chunk_elems,
             compression,
             compute: compute_matrix(&case, serial, seed),
+            faults: FaultPlan::none(),
         };
         run_measured(&cfg)
     };
@@ -495,6 +532,69 @@ pub fn bench_preset_traced(
     (json, layered.trace)
 }
 
+/// Fault-injection smoke for one preset: the layered measured schedule
+/// under the preset's imbalance, with a plan-declared fail-stop
+/// (`wagma bench --faults`). Returns the JSON object embedded in
+/// `BENCH_faults.json` and prints a summary row.
+///
+/// The gate-worthy fields (`skipped_phases`, `degraded_iters`,
+/// `survivor_steps`) are membership-structural, not timing-dependent:
+/// plan-declared crashes flip the shared membership view at the crash
+/// iteration on every rank, so each survivor skips exactly the butterfly
+/// phases whose partner is dead — the same determinism argument as
+/// `copied_bytes`. Timing noise can only add *extra* suspect-skips on
+/// top (hence the baseline check uses a lower bound plus a slack factor,
+/// not equality).
+pub fn bench_fault_preset(name: &str, quick: bool, seed: u64, spec: &str) -> anyhow::Result<Json> {
+    let case = preset_case(name, quick);
+    let plan = FaultPlan::parse(spec, case.p, case.steps, seed)
+        .map_err(|e| anyhow::anyhow!("bad --faults spec {spec:?}: {e}"))?;
+    let crash = plan.crashes.first().copied();
+    let cfg = MeasuredConfig {
+        p: case.p,
+        group_size: case.group_size,
+        tau: case.tau,
+        dim: case.dim,
+        steps: case.steps,
+        chunk_elems: case.chunk_elems,
+        compression: Compression::None,
+        compute: compute_matrix(&case, false, seed),
+        faults: plan.clone(),
+    };
+    let r = run_measured(&cfg);
+    println!(
+        "{:<6} P{} {:<10} crash {}  skipped phases {:>3}  degraded iters {:>3}  survivor steps {:>4}  wait p99 {:.3} ms  group wait {:.3} ms",
+        case.name,
+        case.p,
+        spec,
+        crash.map(|c| format!("r{}@{}", c.rank, c.at_iter)).unwrap_or_else(|| "-".into()),
+        r.skipped_phases,
+        r.degraded_iters,
+        r.survivor_steps,
+        r.wait.p99 * 1e3,
+        r.wait_group_ns as f64 * 1e-6,
+    );
+    Ok(obj(vec![
+        ("preset", s(&case.name)),
+        ("p", num(case.p as f64)),
+        ("steps", num(case.steps as f64)),
+        ("tau", num(case.tau as f64)),
+        ("group_size", num(case.group_size as f64)),
+        ("spec", s(spec)),
+        ("crash_rank", crash.map(|c| num(c.rank as f64)).unwrap_or(Json::Null)),
+        ("crash_at", crash.map(|c| num(c.at_iter as f64)).unwrap_or(Json::Null)),
+        ("deadline_s", num(plan.deadline_s)),
+        ("skipped_phases", num(r.skipped_phases as f64)),
+        ("degraded_iters", num(r.degraded_iters as f64)),
+        ("survivor_steps", num(r.survivor_steps as f64)),
+        ("group_collectives", num(r.group_collectives as f64)),
+        ("global_syncs", num(r.global_syncs as f64)),
+        ("wait_p99_s", num(r.wait.p99)),
+        ("wait_group_s", num(r.wait_group_ns as f64 * 1e-9)),
+        ("wall_seconds", num(r.wall_seconds)),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -512,6 +612,7 @@ mod tests {
             chunk_elems: 16,
             compression: Compression::None,
             compute: vec![vec![0.0005; p]; steps as usize],
+            faults: FaultPlan::none(),
         };
         let r = run_measured(&cfg);
         assert_eq!(r.group_collectives + r.global_syncs, steps * p as u64);
@@ -558,6 +659,7 @@ mod tests {
                 chunk_elems: 1024,
                 compression,
                 compute: vec![vec![0.0; p]; steps as usize],
+                faults: FaultPlan::none(),
             })
         };
         let plain = mk(Compression::None);

@@ -19,18 +19,40 @@ use crate::util::stats::{ascii_histogram, Summary};
 /// figures (sleeps shrink 20×; ratios between algorithms are preserved).
 pub const TIME_SCALE: f64 = 0.05;
 
+/// Open a figure CSV under `out_dir`, refusing to clobber an existing
+/// output unless `force` — figure series are expensive to regenerate and
+/// silently overwriting them loses the previous sweep. Shared by every
+/// figure harness so the `--force` contract is uniform.
+pub fn create_csv(
+    out_dir: &str,
+    name: &str,
+    header: &[&str],
+    force: bool,
+) -> anyhow::Result<CsvWriter> {
+    let path = Path::new(out_dir).join(name);
+    if path.exists() && !force {
+        anyhow::bail!(
+            "refusing to overwrite existing output {} (pass --force to regenerate)",
+            path.display()
+        );
+    }
+    Ok(CsvWriter::create(path, header)?)
+}
+
 /// Throughput figures (Fig. 4 / 7 / 10): simulator sweep over
 /// (algorithm × node count).
-pub fn fig_throughput(name: &str, out_dir: &str, quick: bool) -> anyhow::Result<()> {
+pub fn fig_throughput(name: &str, out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
     let p = preset(name).ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
     println!("== {} — {} ==", p.name, p.description);
     println!(
         "{:<14} {:>6} {:>16} {:>16} {:>10} {:>10}",
         "algorithm", "P", "throughput/s", "ideal/s", "eff", "skew(s)"
     );
-    let mut csv = CsvWriter::create(
-        Path::new(out_dir).join(format!("{name}.csv")),
+    let mut csv = create_csv(
+        out_dir,
+        &format!("{name}.csv"),
         &["algo", "p", "throughput", "ideal_throughput", "efficiency", "mean_skew_s"],
+        force,
     )?;
     let counts: Vec<usize> =
         if quick { p.node_counts.iter().copied().take(2).collect() } else { p.node_counts.to_vec() };
@@ -69,7 +91,7 @@ pub fn fig_throughput(name: &str, out_dir: &str, quick: bool) -> anyhow::Result<
 /// Fig. 6 / Fig. 9: per-step runtime distributions of the two imbalanced
 /// workloads (bucketed sentence lengths; heavy-tailed experience
 /// collection).
-pub fn fig_distribution(name: &str, out_dir: &str) -> anyhow::Result<()> {
+pub fn fig_distribution(name: &str, out_dir: &str, force: bool) -> anyhow::Result<()> {
     let (model, label) = match name {
         "fig6" => (ImbalanceModel::fig7(), "Transformer per-step runtime (bucketed lengths)"),
         "fig9" => (ImbalanceModel::fig9(), "RL experience-collection runtime (heavy tail)"),
@@ -84,7 +106,7 @@ pub fn fig_distribution(name: &str, out_dir: &str) -> anyhow::Result<()> {
         s.n, s.mean, s.p50, s.p95, s.p99, s.max
     );
     println!("{}", ascii_histogram(&samples, 16, 50));
-    let mut csv = CsvWriter::create(Path::new(out_dir).join(format!("{name}.csv")), &["seconds"])?;
+    let mut csv = create_csv(out_dir, &format!("{name}.csv"), &["seconds"], force)?;
     for x in &samples {
         csv.rowf(&[*x])?;
     }
@@ -106,13 +128,16 @@ pub fn convergence_sweep(
     lr: f32,
     imbalance: ImbalanceModel,
     out_dir: &str,
+    force: bool,
 ) -> anyhow::Result<Vec<TrainResult>> {
     let init = ModelRuntime::load(artifacts_dir, model)?.init_params()?;
     let is_rl = model.starts_with("policy");
     let mut results = Vec::new();
-    let mut csv = CsvWriter::create(
-        Path::new(out_dir).join(format!("{figure}.csv")),
+    let mut csv = create_csv(
+        out_dir,
+        &format!("{figure}.csv"),
         &["algo", "step", "metric", "wall_s", "train_loss"],
+        force,
     )?;
 
     for &algo in algos {
@@ -176,7 +201,7 @@ pub fn convergence_sweep(
 }
 
 /// Fig. 5 analogue: classifier accuracy under the Fig. 4 imbalance.
-pub fn fig5(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+pub fn fig5(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
     let steps = if quick { 60 } else { 400 };
     let algos = [
         Algorithm::Wagma,
@@ -199,12 +224,13 @@ pub fn fig5(out_dir: &str, quick: bool) -> anyhow::Result<()> {
         0.05,
         ImbalanceModel::fig4(),
         out_dir,
+        force,
     )?;
     Ok(())
 }
 
 /// Fig. 8 analogue: LM eval loss under bucketed-length imbalance.
-pub fn fig8(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+pub fn fig8(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
     let steps = if quick { 40 } else { 200 };
     let algos = [
         Algorithm::Wagma,
@@ -226,12 +252,13 @@ pub fn fig8(out_dir: &str, quick: bool) -> anyhow::Result<()> {
         0.1,
         ImbalanceModel::fig7(),
         out_dir,
+        force,
     )?;
     Ok(())
 }
 
 /// Fig. 11 analogue: RL mean return vs time (heavy-tailed collection).
-pub fn fig11(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+pub fn fig11(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
     let steps = if quick { 40 } else { 300 };
     let algos = [
         Algorithm::Wagma,
@@ -252,19 +279,22 @@ pub fn fig11(out_dir: &str, quick: bool) -> anyhow::Result<()> {
         0.003,
         ImbalanceModel::fig9(),
         out_dir,
+        force,
     )?;
     Ok(())
 }
 
 /// Ablations ❶–❹ (paper §V-B): WAGMA variants on the classifier.
-pub fn ablation(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+pub fn ablation(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
     let steps = if quick { 60 } else { 400 };
     let p = 16;
     let init = ModelRuntime::load("artifacts", "mlp_small")?.init_params()?;
     println!("== ablation — WAGMA design choices (P={p}, mlp_small) ==");
-    let mut csv = CsvWriter::create(
-        Path::new(out_dir).join("ablation.csv"),
+    let mut csv = create_csv(
+        out_dir,
+        "ablation.csv",
         &["variant", "final_metric", "mean_staleness"],
+        force,
     )?;
 
     struct Variant {
@@ -332,15 +362,17 @@ pub fn ablation(out_dir: &str, quick: bool) -> anyhow::Result<()> {
 /// makespan of flat vs layered exchanges on the fig4 preset, across fusion
 /// modes and bucket thresholds. Quantifies how much communication the
 /// bucket timeline hides under backprop.
-pub fn fig_fusion(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+pub fn fig_fusion(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
     use crate::sched::{FusionConfig, FusionMode, FusionPlan, LayerProfile};
 
     let pre = preset("fig4").ok_or_else(|| anyhow::anyhow!("fig4 preset missing"))?;
     let p = 64usize;
     println!("== fusion — layered gradient fusion & overlap vs flat payloads (fig4, P={p}) ==");
-    let mut csv = CsvWriter::create(
-        Path::new(out_dir).join("fusion.csv"),
+    let mut csv = create_csv(
+        out_dir,
+        "fusion.csv",
         &["algo", "mode", "threshold_bytes", "buckets", "makespan_s", "flat_makespan_s", "speedup"],
+        force,
     )?;
     let profile = LayerProfile::for_model_bytes(pre.model_params * 4);
     let thresholds: &[usize] =
@@ -401,13 +433,14 @@ pub fn fig_fusion(out_dir: &str, quick: bool) -> anyhow::Result<()> {
 /// WAGMA's scope lever: how much wire traffic the per-bucket codecs
 /// remove, at what makespan effect, as the sync period and group size
 /// vary.
-pub fn fig_compression(out_dir: &str, quick: bool) -> anyhow::Result<()> {
+pub fn fig_compression(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
     use crate::compress::Compression;
 
     let p = if quick { 16usize } else { 64 };
     println!("== compress — per-bucket compression sweep (ratio × τ × group size, P={p}) ==");
-    let mut csv = CsvWriter::create(
-        Path::new(out_dir).join("compress.csv"),
+    let mut csv = create_csv(
+        out_dir,
+        "compress.csv",
         &[
             "preset",
             "compression",
@@ -419,6 +452,7 @@ pub fn fig_compression(out_dir: &str, quick: bool) -> anyhow::Result<()> {
             "wire_reduction_x",
             "throughput",
         ],
+        force,
     )?;
     let codecs: Vec<Compression> = if quick {
         vec![
@@ -490,6 +524,141 @@ pub fn fig_compression(out_dir: &str, quick: bool) -> anyhow::Result<()> {
                         format!("{reduction:.4}"),
                         format!("{:.1}", r.throughput(pre.batch)),
                     ])?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Elastic-membership study (the fault subsystem's figure): simulated
+/// makespan under crash-time × compute-skew × link-jitter scenarios on
+/// the fig4/fig7/fig10 presets, comparing wait-avoiding WAGMA against
+/// synchronous Allreduce-SGD and the fault-brittle PairAveraging
+/// baseline. The headline contrast: after a mid-run fail-stop, the
+/// synchronous baseline stalls at least one full detection deadline per
+/// remaining iteration, while WAGMA's deterministic membership re-forms
+/// groups without a detection stall.
+pub fn fig_elastic(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
+    use crate::fault::{Crash, FaultPlan, LinkFaults, DEFAULT_DEADLINE_S};
+
+    let p = 16usize;
+    let steps: usize = if quick { 50 } else { 200 };
+    let deadline = DEFAULT_DEADLINE_S;
+    let algos = [Algorithm::Wagma, Algorithm::AllreduceSgd, Algorithm::PairAveraging];
+    println!(
+        "== elastic — membership churn sweep (crash × skew × jitter, P={p}, deadline={deadline}s) =="
+    );
+    let mut csv = create_csv(
+        out_dir,
+        "elastic.csv",
+        &[
+            "preset",
+            "algo",
+            "scenario",
+            "crash_at",
+            "skew",
+            "jitter_s",
+            "deadline_s",
+            "makespan_s",
+            "clean_makespan_s",
+            "loss_s",
+            "loss_per_post_crash_iter_s",
+            "throughput",
+        ],
+        force,
+    )?;
+
+    // Scenario grid. `crash` fail-stops the last rank mid-run; `skew`
+    // slows rank 0 by the multiplier; `jitter` puts uniform extra latency
+    // on every link. Quick keeps the axes but trims the cross-product.
+    let crashes: &[Option<u64>] = &[None, Some(steps as u64 / 2)];
+    let skews: &[f64] = if quick { &[1.0] } else { &[1.0, 2.0] };
+    let jitters: &[f64] = if quick { &[0.0] } else { &[0.0, 0.001] };
+
+    println!(
+        "{:<6} {:<14} {:<22} {:>11} {:>11} {:>9} {:>14}",
+        "preset", "algorithm", "scenario", "makespan", "clean", "loss", "loss/iter(post)"
+    );
+    for name in ["fig4", "fig7", "fig10"] {
+        let pre = preset(name).ok_or_else(|| anyhow::anyhow!("missing preset {name}"))?;
+        for &algo in &algos {
+            let run = |plan: FaultPlan| {
+                let mut cfg = pre.sim_config(algo, p, 42);
+                cfg.steps = steps;
+                cfg.faults = plan;
+                simulate(&cfg)
+            };
+            let clean = run(FaultPlan::none());
+            for &crash in crashes {
+                for &skew in skews {
+                    for &jitter in jitters {
+                        let mut plan = FaultPlan { seed: 42, deadline_s: deadline, ..FaultPlan::none() };
+                        let mut labels: Vec<String> = Vec::new();
+                        if let Some(at) = crash {
+                            plan.crashes.push(Crash { rank: p - 1, at_iter: at });
+                            labels.push(format!("crash@{at}"));
+                        }
+                        if skew != 1.0 {
+                            let mut s = vec![1.0; p];
+                            s[0] = skew;
+                            plan.skew = s;
+                            labels.push(format!("skew{skew}x"));
+                        }
+                        if jitter > 0.0 {
+                            plan.link = LinkFaults { jitter_s: jitter, drop_prob: 0.0 };
+                            labels.push(format!("jitter{}ms", jitter * 1e3));
+                        }
+                        let scenario =
+                            if labels.is_empty() { "clean".to_string() } else { labels.join("+") };
+                        let r = if plan.is_empty() { clean.clone() } else { run(plan) };
+                        let loss = r.makespan - clean.makespan;
+                        let post_iters = crash.map(|at| steps as f64 - at as f64);
+                        let loss_per_iter = post_iters.map(|n| loss / n);
+                        println!(
+                            "{:<6} {:<14} {:<22} {:>10.3}s {:>10.3}s {:>8.3}s {:>14}",
+                            name,
+                            algo.name(),
+                            scenario,
+                            r.makespan,
+                            clean.makespan,
+                            loss,
+                            loss_per_iter
+                                .map(|l| format!("{l:.4}s"))
+                                .unwrap_or_else(|| "-".to_string()),
+                        );
+                        csv.row(&[
+                            name.to_string(),
+                            algo.name().to_string(),
+                            scenario,
+                            crash.map(|a| a.to_string()).unwrap_or_else(|| "-".to_string()),
+                            format!("{skew}"),
+                            format!("{jitter}"),
+                            format!("{deadline}"),
+                            format!("{:.6}", r.makespan),
+                            format!("{:.6}", clean.makespan),
+                            format!("{loss:.6}"),
+                            loss_per_iter
+                                .map(|l| format!("{l:.6}"))
+                                .unwrap_or_else(|| "-".to_string()),
+                            format!("{:.1}", r.throughput(pre.batch)),
+                        ])?;
+                        // The acceptance contrast, printed where it holds:
+                        // a crashed peer costs the synchronous baseline at
+                        // least the full detection deadline every iteration.
+                        if algo == Algorithm::AllreduceSgd
+                            && crash.is_some()
+                            && skew == 1.0
+                            && jitter == 0.0
+                        {
+                            let lpi = loss_per_iter.unwrap_or(0.0);
+                            println!(
+                                "       -> allreduce loses {lpi:.4}s/iter post-crash \
+                                 (>= deadline {deadline}s: {})",
+                                lpi >= deadline - 1e-9
+                            );
+                        }
+                    }
                 }
             }
         }

@@ -1,11 +1,14 @@
 //! `wagma` — the WAGMA-SGD launcher.
 //!
 //! Subcommands:
-//!   figure <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|ablation|fusion|compress|all>
-//!          [--out results] [--quick]
+//!   figure <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|ablation|fusion|compress|elastic|all>
+//!          [--out results] [--quick] [--force]
 //!        Regenerate the paper's figures (simulator sweeps, real training
 //!        convergence runs, distribution plots) plus the fusion/overlap
-//!        makespan study and the compression ratio × τ × group-size sweep.
+//!        makespan study, the compression ratio × τ × group-size sweep,
+//!        and the elastic-membership fault study (crash × skew × jitter;
+//!        WAGMA vs Allreduce-SGD vs PairAveraging). Existing CSV outputs
+//!        are never overwritten unless --force is passed.
 //!   train  --model <name> --algo <name> --p N --steps N [--lr F] [--tau N]
 //!          [--group-size N] [--static-groups] [--eval-every N] [--out results]
 //!          [--compression none|topk|q8] [--topk-ratio F] [--trace FILE]
@@ -32,6 +35,7 @@
 //!          [--compression none|topk|q8] [--topk-ratio F] [--trace FILE]
 //!          [--check-baseline FILE] [--check-compress-baseline FILE]
 //!          [--check-trace-baseline FILE] [--calibrate]
+//!          [--faults none|crash@mid|crash@N] [--check-faults-baseline FILE]
 //!        Measured (wall-clock) overlap harness: real compute threads
 //!        against streamed chunk exchanges on the collective engine (with
 //!        and without per-bucket compression — default compressed arm is
@@ -45,6 +49,11 @@
 //!        runs all three). --trace writes one Chrome trace with a process
 //!        per preset. --calibrate instead runs serial collectives across
 //!        payload sizes and least-squares fits NetworkModel α/β.
+//!        --faults instead runs the fault-injection smoke: each preset's
+//!        layered schedule with a plan-declared fail-stop, written to
+//!        BENCH_faults.json; --check-faults-baseline gates the
+//!        membership-structural counters (skipped phases, degraded
+//!        iters, survivor steps) against a checked-in baseline.
 //!   trace  [--preset fig4|fig7|fig10] [--out DIR] [--seed N]
 //!          [--compression none|topk|q8] [--topk-ratio F]
 //!        Observability deep-dive for one preset: a quick-shaped measured
@@ -98,6 +107,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         .to_string();
     let out = args.str_or("out", "results");
     let quick = args.has("quick");
+    let force = args.has("force");
     std::fs::create_dir_all(&out)?;
     let run = |name: &str| -> anyhow::Result<()> {
         match name {
@@ -105,21 +115,22 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
                 figures::fig_protocol_demos();
                 Ok(())
             }
-            "fig4" | "fig7" | "fig10" => figures::fig_throughput(name, &out, quick),
-            "fig6" | "fig9" => figures::fig_distribution(name, &out),
-            "fusion" => figures::fig_fusion(&out, quick),
-            "compress" => figures::fig_compression(&out, quick),
-            "fig5" => figures::fig5(&out, quick),
-            "fig8" => figures::fig8(&out, quick),
-            "fig11" => figures::fig11(&out, quick),
-            "ablation" => figures::ablation(&out, quick),
+            "fig4" | "fig7" | "fig10" => figures::fig_throughput(name, &out, quick, force),
+            "fig6" | "fig9" => figures::fig_distribution(name, &out, force),
+            "fusion" => figures::fig_fusion(&out, quick, force),
+            "compress" => figures::fig_compression(&out, quick, force),
+            "elastic" => figures::fig_elastic(&out, quick, force),
+            "fig5" => figures::fig5(&out, quick, force),
+            "fig8" => figures::fig8(&out, quick, force),
+            "fig11" => figures::fig11(&out, quick, force),
+            "ablation" => figures::ablation(&out, quick, force),
             other => anyhow::bail!("unknown figure {other}"),
         }
     };
     if which == "all" {
         for name in [
             "fig1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "ablation",
-            "fusion", "compress",
+            "fusion", "compress", "elastic",
         ] {
             run(name)?;
             println!();
@@ -326,6 +337,45 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
 
+    if let Some(spec) = args.get("faults") {
+        // Robustness smoke: the measured layered schedule per preset with
+        // a plan-declared fail-stop, gated on membership-structural
+        // counters (skipped phases / degraded iters / survivor steps).
+        use wagma::bench::measured_overlap::bench_fault_preset;
+        let which = args.str_or("preset", "all");
+        let names: Vec<String> = if which == "all" {
+            vec!["fig4".into(), "fig7".into(), "fig10".into()]
+        } else {
+            vec![which]
+        };
+        for n in &names {
+            if !preset_names().contains(&n.as_str()) {
+                anyhow::bail!("unknown bench preset {n:?} (fig4|fig7|fig10|all)");
+            }
+        }
+        println!("Fault-injection bench ({}, faults {spec}):", if quick { "quick" } else { "full" });
+        let mut cases: Vec<Json> = Vec::with_capacity(names.len());
+        for n in &names {
+            cases.push(bench_fault_preset(n, quick, seed, spec)?);
+        }
+        let report = obj(vec![
+            ("generated_by", s("wagma bench --faults")),
+            ("source", s("wall-clock")),
+            ("quick", Json::Bool(quick)),
+            ("seed", num(seed as f64)),
+            ("spec", s(spec)),
+            ("presets", Json::Arr(cases)),
+        ]);
+        std::fs::create_dir_all(&out_dir)?;
+        let path = std::path::Path::new(&out_dir).join("BENCH_faults.json");
+        std::fs::write(&path, report.to_string())?;
+        println!("wrote {path:?}");
+        if let Some(baseline_path) = args.get("check-faults-baseline") {
+            check_faults_baseline(&report, baseline_path)?;
+        }
+        return Ok(());
+    }
+
     // Compressed arm: top-k 0.1 unless overridden (`--compression none`
     // drops the arm entirely).
     let comp = Compression::from_args_with(args, Compression::TopK { ratio: 0.1 });
@@ -435,6 +485,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         chunk_elems: case.chunk_elems,
         compression: comp,
         compute: compute_matrix(&case, false, seed),
+        faults: wagma::fault::FaultPlan::none(),
     });
     if measured.dropped_trace_events > 0 {
         println!("note: {} events dropped to ring overflow", measured.dropped_trace_events);
@@ -695,6 +746,98 @@ fn check_bench_baseline(report: &wagma::util::json::Json, baseline_path: &str) -
         Ok(())
     } else {
         anyhow::bail!("bytes-copied regression:\n{}", failures.join("\n"))
+    }
+}
+
+/// Gate `wagma bench --faults` against a checked-in baseline. The gated
+/// counters are membership-structural for plan-declared crashes (see
+/// `bench_fault_preset`): `survivor_steps` is exact; `skipped_phases` and
+/// `degraded_iters` have a hard lower bound (the plan's deterministic
+/// skips must all happen) plus 1.5x slack upward, since scheduling noise
+/// on a loaded CI box can only *add* suspect-skips, never remove
+/// plan-mandated ones.
+fn check_faults_baseline(report: &wagma::util::json::Json, baseline_path: &str) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(baseline_path)?;
+    let baseline = wagma::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+    let shape = baseline.get("shape");
+    let base_quick = shape.and_then(|s| s.get("quick")).and_then(|v| v.as_bool());
+    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
+    if let Some(bq) = base_quick {
+        if bq != run_quick {
+            anyhow::bail!(
+                "baseline shape mismatch: {baseline_path} records a {} run but this is a {} run — \
+                 rerun with matching flags or regenerate the baseline",
+                if bq { "--quick" } else { "full" },
+                if run_quick { "--quick" } else { "full" },
+            );
+        }
+    }
+    let base_spec = shape.and_then(|s| s.get("spec")).and_then(|v| v.as_str());
+    let run_spec = report.get("spec").and_then(|v| v.as_str()).unwrap_or("");
+    if let Some(bs) = base_spec {
+        if bs != run_spec {
+            anyhow::bail!(
+                "baseline fault-spec mismatch: {baseline_path} records {bs:?} but this run used {run_spec:?}"
+            );
+        }
+    }
+    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+    let mut failures = Vec::new();
+    for case in cases {
+        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+        let counter = |key: &str| -> f64 {
+            case.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+        };
+        let Some(base) = baseline.get(name) else {
+            // A missing entry must not silently disable the gate.
+            failures.push(format!(
+                "{name}: no baseline entry in {baseline_path} — add one (measured skipped_phases {} degraded_iters {} survivor_steps {})",
+                counter("skipped_phases"),
+                counter("degraded_iters"),
+                counter("survivor_steps"),
+            ));
+            continue;
+        };
+        let mut case_failures = Vec::new();
+        for key in ["skipped_phases", "degraded_iters"] {
+            let measured = counter(key);
+            let Some(b) = base.get(key).and_then(|v| v.as_f64()) else {
+                case_failures.push(format!("{name}: baseline entry lacks {key}"));
+                continue;
+            };
+            if measured.is_nan() || measured < b {
+                case_failures.push(format!(
+                    "{name}: {key} {measured} below plan-mandated minimum {b} — degraded paths not taken"
+                ));
+            } else if measured > b * 1.5 {
+                case_failures.push(format!(
+                    "{name}: {key} {measured} exceeds baseline {b} by more than 1.5x — spurious suspects"
+                ));
+            }
+        }
+        let measured = counter("survivor_steps");
+        match base.get("survivor_steps").and_then(|v| v.as_f64()) {
+            Some(b) if measured == b => {}
+            Some(b) => case_failures.push(format!(
+                "{name}: survivor_steps {measured} != expected {b} (exact: crash iteration is plan-declared)"
+            )),
+            None => case_failures.push(format!("{name}: baseline entry lacks survivor_steps")),
+        }
+        if case_failures.is_empty() {
+            println!(
+                "fault baseline OK for {name}: skipped_phases {} degraded_iters {} survivor_steps {}",
+                counter("skipped_phases"),
+                counter("degraded_iters"),
+                counter("survivor_steps"),
+            );
+        }
+        failures.extend(case_failures);
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        anyhow::bail!("fault-smoke regression:\n{}", failures.join("\n"))
     }
 }
 

@@ -1,0 +1,220 @@
+//! Integration tests for elastic membership + fault injection: survivors
+//! of plan-declared crashes stay rank-identical, degraded paths are
+//! actually taken, and the fault machinery is bit-neutral when disabled.
+#![allow(clippy::unwrap_used)]
+
+use std::sync::{Arc, Barrier};
+use std::thread;
+
+use wagma::collectives::allreduce::AllreduceAlgo;
+use wagma::collectives::engine::{ActivationMode, CollectiveEngine, EngineConfig, EngineStats};
+use wagma::comm::world;
+use wagma::compress::Compression;
+use wagma::fault::{Crash, FaultPlan};
+
+fn cfg(p: usize, s: usize, tau: u64, retries: u32) -> EngineConfig {
+    EngineConfig {
+        p,
+        group_size: s,
+        tau,
+        dynamic_groups: true,
+        sync_algo: AllreduceAlgo::Auto,
+        activation: ActivationMode::Solo,
+        chunk_elems: 0,
+        compression: Compression::None,
+        trace: false,
+        recv_deadline_ns: 0,
+        recv_retries: retries,
+    }
+}
+
+/// Tentpole acceptance: with k = 1 < group_size crashes declared in the
+/// plan, the run completes without hanging, every survivor holds a
+/// bit-identical model at every τ-sync after the failure, the degraded
+/// butterfly path is taken exactly as the plan mandates, and no survivor
+/// blocks past the bounded-retry budget on the dead peer.
+#[test]
+fn survivors_bit_identical_after_plan_declared_crash() {
+    let p = 8;
+    let s = 2;
+    let tau = 4u64;
+    let steps = 16u64;
+    let dim = 32;
+    let crash_rank = 7;
+    let crash_at = 6u64;
+    let retries = 2u32;
+    let plan = Arc::new(FaultPlan {
+        seed: 11,
+        crashes: vec![Crash { rank: crash_rank, at_iter: crash_at }],
+        ..FaultPlan::none()
+    });
+    let engines: Vec<CollectiveEngine> = world(p)
+        .into_iter()
+        .map(|ep| {
+            let r = ep.rank() as f32;
+            CollectiveEngine::spawn_with_faults(
+                ep,
+                cfg(p, s, tau, retries),
+                vec![r; dim],
+                plan.clone(),
+            )
+        })
+        .collect();
+    let handles: Vec<_> = engines
+        .into_iter()
+        .map(|eng| {
+            let plan = plan.clone();
+            thread::spawn(move || {
+                let rank = eng.rank();
+                let crash = plan.crash_iter(rank);
+                let mut w = vec![rank as f32 + 0.5; dim];
+                let mut sync_snapshots: Vec<Vec<u32>> = Vec::new();
+                for t in 0..steps {
+                    if crash.is_some_and(|ci| t >= ci) {
+                        break;
+                    }
+                    for x in w.iter_mut() {
+                        *x += 1.0;
+                    }
+                    eng.publish(&w, t);
+                    if eng.config().is_sync_iter(t) {
+                        let sum = eng.global_sync(t);
+                        // Same divisor on every rank keeps the post-sync
+                        // model a pure function of the (shared) sum.
+                        w = sum.iter().map(|x| x / p as f32).collect();
+                        sync_snapshots.push(w.iter().map(|x| x.to_bits()).collect());
+                    } else {
+                        let res = eng.group_allreduce(t);
+                        if res.is_fresh(t) {
+                            w = res.sum.iter().map(|x| x / s as f32).collect();
+                        }
+                    }
+                }
+                (rank, sync_snapshots, eng.shutdown())
+            })
+        })
+        .collect();
+    let mut outs: Vec<(usize, Vec<Vec<u32>>, EngineStats)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    outs.sort_by_key(|o| o.0);
+
+    // Syncs land at t = 3, 7, 11, 15; the crash at t = 6 means every
+    // survivor sees all four, the crashed rank only the first.
+    let survivors: Vec<_> = outs.iter().filter(|o| o.0 != crash_rank).collect();
+    assert_eq!(survivors.len(), p - 1);
+    let reference = &survivors[0].1;
+    assert_eq!(reference.len(), (steps / tau) as usize);
+    for (rank, snaps, _) in &survivors {
+        assert_eq!(
+            snaps, reference,
+            "rank {rank} diverged from rank {} at a τ-sync",
+            survivors[0].0
+        );
+    }
+    assert_eq!(outs[crash_rank].1.len(), 1, "crashed rank stops after the first sync");
+
+    // Degraded paths were taken, deterministically: each post-crash group
+    // iteration (t ∈ {6,8,9,10,12,13,14}) pairs exactly one survivor with
+    // the dead rank, whose single S=2 butterfly phase completes as
+    // identity. Timing noise can only add skips on top.
+    let skipped: u64 = outs.iter().map(|o| o.2.skipped_phases).sum();
+    let degraded: u64 = outs.iter().map(|o| o.2.degraded_iters).sum();
+    assert!(skipped >= 7, "expected ≥7 plan-mandated skipped phases, got {skipped}");
+    assert!(degraded >= 7, "expected ≥7 degraded group iterations, got {degraded}");
+
+    // Bounded waiting: a plan-declared death is visible in the membership
+    // view at the version boundary, so the skip should not even burn a
+    // deadline — but allow the full per-phase retry budget
+    // (deadline · (2^(retries+1) − 1)) for every step before calling it a
+    // regression. Blocking *unboundedly* would hang the test instead.
+    let budget_per_phase = plan.deadline_ns() * ((1u64 << (retries + 1)) - 1);
+    for (rank, _, st) in &outs {
+        assert!(
+            st.wait_group_ns <= steps * budget_per_phase,
+            "rank {rank} group-phase wait {} ns exceeds the {} ns retry budget",
+            st.wait_group_ns,
+            steps * budget_per_phase
+        );
+    }
+}
+
+/// The empty plan must be bit-neutral: `spawn_with_faults` with
+/// `FaultPlan::none()` takes literally the pre-fault engine paths, so the
+/// deterministic byte counters of a lockstep run are identical to the
+/// plain `spawn` run's.
+#[test]
+fn empty_fault_plan_keeps_counters_bit_identical() {
+    let p = 4;
+    let s = 2;
+    let tau = 3u64;
+    let steps = 12u64;
+    let dim = 256;
+
+    let run_once = |with_plan: bool| -> Vec<EngineStats> {
+        let barrier = Arc::new(Barrier::new(p));
+        let engines: Vec<CollectiveEngine> = world(p)
+            .into_iter()
+            .map(|ep| {
+                let init = vec![ep.rank() as f32; dim];
+                if with_plan {
+                    CollectiveEngine::spawn_with_faults(
+                        ep,
+                        cfg(p, s, tau, 0),
+                        init,
+                        Arc::new(FaultPlan::none()),
+                    )
+                } else {
+                    CollectiveEngine::spawn(ep, cfg(p, s, tau, 0), init)
+                }
+            })
+            .collect();
+        let handles: Vec<_> = engines
+            .into_iter()
+            .map(|eng| {
+                let barrier = barrier.clone();
+                thread::spawn(move || {
+                    let rank = eng.rank();
+                    for t in 0..steps {
+                        let w = vec![rank as f32 + t as f32; dim];
+                        eng.publish_owned(w, t);
+                        // Lockstep: quiesce every iteration so both runs
+                        // execute the same collective sequence.
+                        barrier.wait();
+                        if eng.config().is_sync_iter(t) {
+                            let _ = eng.global_sync(t);
+                        } else {
+                            let _ = eng.group_allreduce(t);
+                        }
+                        barrier.wait();
+                    }
+                    (rank, eng.shutdown())
+                })
+            })
+            .collect();
+        let mut outs: Vec<(usize, EngineStats)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        outs.sort_by_key(|o| o.0);
+        outs.into_iter().map(|o| o.1).collect()
+    };
+
+    let plain = run_once(false);
+    let gated = run_once(true);
+    // `sent_msgs` is excluded: it counts activation ctrl messages, whose
+    // fan-out depends on which rank's broadcast wins the race. The data
+    // counters below are code-structural.
+    for (rank, (a, b)) in plain.iter().zip(&gated).enumerate() {
+        assert_eq!(a.copied_bytes, b.copied_bytes, "rank {rank} copied_bytes");
+        assert_eq!(a.sent_bytes, b.sent_bytes, "rank {rank} sent_bytes");
+        assert_eq!(b.skipped_phases, 0, "rank {rank} skipped a phase with no faults");
+        assert_eq!(b.degraded_iters, 0, "rank {rank} degraded with no faults");
+    }
+    // The pool's high-water mark is coupled to intra-iteration message
+    // interleaving, so totals may creep by a few stragglers between runs —
+    // but never by O(iterations).
+    let pa: u64 = plain.iter().map(|s| s.pool_allocs).sum();
+    let pb: u64 = gated.iter().map(|s| s.pool_allocs).sum();
+    assert!(
+        pa.abs_diff(pb) <= 2 * p as u64,
+        "pool allocations diverged with an empty plan: {pa} vs {pb}"
+    );
+}
