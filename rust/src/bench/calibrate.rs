@@ -1,20 +1,29 @@
-//! α/β calibration from the measured-overlap harness (`wagma bench
+//! α/β/δ calibration from the measured-overlap harness (`wagma bench
 //! --calibrate`) — closes the PR 2 ROADMAP follow-up ("calibrate the
-//! `NetworkModel` α/β terms against the measured harness").
+//! `NetworkModel` α/β terms against the measured harness") and its
+//! compression-PR extension (the measured δ codec term).
 //!
 //! The harness runs *serial* (zero-compute) group collectives across a
 //! ladder of payload sizes on real engine threads, so every rank arrives
 //! together and the measured per-op wait is the full collective latency.
 //! With group size 2 each op is exactly one exchange, so the Hockney
-//! model predicts `wait(n) = α + 4n·β`. A least-squares affine fit of
-//! the (bytes, seconds) samples yields α (intercept) and β (slope) for
-//! this host's in-memory transport; γ/contention/δ keep the Aries
-//! defaults (they need reduction- and codec-specific microbenchmarks).
+//! model predicts `wait(n) = α + n·β` (n in wire bytes). A least-squares
+//! affine fit of the dense (bytes, seconds) samples yields α (intercept)
+//! and β (slope) for this host's in-memory transport.
+//!
+//! A second, *compressed* rung re-runs the same ladder with the Q8
+//! quantizer — chosen over top-k because its wire size is a deterministic
+//! function of the payload (`2 + ⌈n/4⌉` words), so the rung isolates the
+//! codec: `wait_c(raw) = α + wire·β + 2·raw·δ` (encode ours + decode the
+//! partner's, each touching every raw byte — the exact pricing of
+//! [`NetworkModel::exchange_compressed`]). Solving per rung and averaging
+//! gives δ; γ/contention keep the Aries defaults (they need
+//! reduction-specific microbenchmarks).
 
 use crate::bench::measured_overlap::{run_measured, MeasuredConfig};
 use crate::compress::Compression;
 use crate::simulator::NetworkModel;
-use crate::util::json::{num, obj, Json};
+use crate::util::json::{num, obj, s, Json};
 
 /// One calibration point: payload bytes per exchange and the measured
 /// mean collective wait.
@@ -44,9 +53,40 @@ pub fn fit_alpha_beta(samples: &[CalSample]) -> (f64, f64) {
     (alpha, beta.max(0.0))
 }
 
-/// Run the calibration ladder and return the fitted model plus the raw
-/// samples (for the JSON report).
-pub fn calibrate(quick: bool, seed: u64) -> (NetworkModel, Vec<CalSample>) {
+/// One compressed (Q8) rung: raw payload bytes, the codec's deterministic
+/// wire bytes, and the measured mean collective wait.
+#[derive(Debug, Clone, Copy)]
+pub struct CompressedCalSample {
+    pub raw_bytes: f64,
+    pub wire_bytes: f64,
+    pub seconds: f64,
+}
+
+/// Solve the codec term from the compressed rungs, given the dense-rung
+/// α/β: each rung predicts `seconds = α + wire·β + 2·raw·δ`, so
+/// `δ = (seconds - α - wire·β) / (2·raw)`; the rungs are averaged and the
+/// result clamped at 0 (sub-noise codecs just mean δ is unmeasurably
+/// small on this host, not negative).
+pub fn fit_delta(alpha: f64, beta: f64, samples: &[CompressedCalSample]) -> f64 {
+    assert!(!samples.is_empty(), "need at least one compressed rung");
+    let sum: f64 = samples
+        .iter()
+        .map(|s| (s.seconds - alpha - beta * s.wire_bytes) / (2.0 * s.raw_bytes))
+        .sum();
+    (sum / samples.len() as f64).max(0.0)
+}
+
+/// Fitted model plus the raw rungs behind it (for the JSON report).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub model: NetworkModel,
+    pub samples: Vec<CalSample>,
+    pub compressed: Vec<CompressedCalSample>,
+}
+
+/// Run the calibration ladder (dense rungs for α/β, Q8 rungs for δ) and
+/// return the fit plus the raw samples.
+pub fn calibrate(quick: bool, seed: u64) -> Calibration {
     let p = 4usize;
     let steps: u64 = if quick { 20 } else { 60 };
     let dims: &[usize] = if quick {
@@ -54,45 +94,89 @@ pub fn calibrate(quick: bool, seed: u64) -> (NetworkModel, Vec<CalSample>) {
     } else {
         &[4096, 16384, 65536, 262_144, 1_048_576]
     };
-    let mut samples = Vec::with_capacity(dims.len());
-    for &dim in dims {
-        let cfg = MeasuredConfig {
-            p,
-            group_size: 2, // exactly one exchange per op: wait = α + 4n·β
-            tau: 0,
-            dim,
-            steps,
-            chunk_elems: 0,
-            compression: Compression::None,
-            compute: vec![vec![0.0; p]; steps as usize],
-            faults: crate::fault::FaultPlan::none(),
-        };
-        let run = run_measured(&cfg);
-        samples.push(CalSample { bytes: (dim * 4) as f64, seconds: run.wait.mean });
-    }
+    let run_ladder = |compression: Compression| -> Vec<(usize, f64)> {
+        dims.iter()
+            .map(|&dim| {
+                let cfg = MeasuredConfig {
+                    p,
+                    group_size: 2, // exactly one exchange per op
+                    tau: 0,
+                    dim,
+                    steps,
+                    chunk_elems: 0,
+                    compression,
+                    compute: vec![vec![0.0; p]; steps as usize],
+                    faults: crate::fault::FaultPlan::none(),
+                };
+                (dim, run_measured(&cfg).wait.mean)
+            })
+            .collect()
+    };
+    let samples: Vec<CalSample> = run_ladder(Compression::None)
+        .into_iter()
+        .map(|(dim, seconds)| CalSample { bytes: (dim * 4) as f64, seconds })
+        .collect();
     let (alpha, beta) = fit_alpha_beta(&samples);
+    let q8 = Compression::QuantizeQ8;
+    let compressed: Vec<CompressedCalSample> = run_ladder(q8)
+        .into_iter()
+        .map(|(dim, seconds)| CompressedCalSample {
+            raw_bytes: (dim * 4) as f64,
+            wire_bytes: q8.wire_bytes(dim * 4) as f64,
+            seconds,
+        })
+        .collect();
+    let delta = fit_delta(alpha, beta, &compressed);
     let aries = NetworkModel::aries();
     let _ = seed; // the serial ladder is compute-free; kept for CLI symmetry
-    (
-        NetworkModel { alpha, beta, gamma: aries.gamma, contention: aries.contention, delta: aries.delta },
+    Calibration {
+        model: NetworkModel {
+            alpha,
+            beta,
+            gamma: aries.gamma,
+            contention: aries.contention,
+            delta,
+        },
         samples,
-    )
+        compressed,
+    }
 }
 
 /// JSON report for `wagma bench --calibrate`.
-pub fn calibration_json(model: &NetworkModel, samples: &[CalSample]) -> Json {
+pub fn calibration_json(cal: &Calibration) -> Json {
+    let model = &cal.model;
     obj(vec![
         ("alpha_s", num(model.alpha)),
         ("beta_s_per_byte", num(model.beta)),
         ("gamma_s_per_byte", num(model.gamma)),
         ("contention", num(model.contention)),
         ("delta_s_per_byte", num(model.delta)),
+        // α/β/δ come from this host's ladder; γ/contention are still the
+        // Aries defaults.
+        ("delta_source", s("measured")),
         (
             "samples",
             Json::Arr(
-                samples
+                cal.samples
                     .iter()
-                    .map(|s| obj(vec![("bytes", num(s.bytes)), ("wait_mean_s", num(s.seconds))]))
+                    .map(|sm| {
+                        obj(vec![("bytes", num(sm.bytes)), ("wait_mean_s", num(sm.seconds))])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "compressed_samples",
+            Json::Arr(
+                cal.compressed
+                    .iter()
+                    .map(|sm| {
+                        obj(vec![
+                            ("raw_bytes", num(sm.raw_bytes)),
+                            ("wire_bytes", num(sm.wire_bytes)),
+                            ("wait_mean_s", num(sm.seconds)),
+                        ])
+                    })
                     .collect(),
             ),
         ),
@@ -128,17 +212,49 @@ mod tests {
         assert!(b > 0.0);
     }
 
+    /// `fit_delta` recovers an exactly-affine codec term from synthetic
+    /// rungs priced by the model it inverts.
+    #[test]
+    fn fit_delta_recovers_codec_term() {
+        let (alpha, beta, delta) = (2.0e-6, 1.0 / 8e9, 1.0 / 16e9);
+        let rungs: Vec<CompressedCalSample> = [16384.0f64, 131072.0, 1048576.0]
+            .iter()
+            .map(|&raw| {
+                let wire = raw / 4.0 + 8.0; // q8-shaped: quarter the bytes + header
+                CompressedCalSample {
+                    raw_bytes: raw,
+                    wire_bytes: wire,
+                    seconds: alpha + beta * wire + 2.0 * delta * raw,
+                }
+            })
+            .collect();
+        let d = fit_delta(alpha, beta, &rungs);
+        assert!((d - delta).abs() / delta < 1e-9, "delta {d} vs {delta}");
+        // Sub-noise rungs clamp to zero rather than going negative.
+        let noisy = [CompressedCalSample { raw_bytes: 4096.0, wire_bytes: 1032.0, seconds: 0.0 }];
+        assert_eq!(fit_delta(alpha, beta, &noisy), 0.0);
+    }
+
     /// End-to-end smoke on the real harness (quick ladder): the fit must
     /// be finite, non-negative, and in a plausible band for in-memory
     /// transport (β far above a real NIC's, α in the sub-millisecond
-    /// range).
+    /// range). δ is measured (clamped ≥ 0) and reported as such.
     #[test]
     fn calibrate_smoke() {
-        let (model, samples) = calibrate(true, 1);
-        assert_eq!(samples.len(), 3);
+        let cal = calibrate(true, 1);
+        assert_eq!(cal.samples.len(), 3);
+        assert_eq!(cal.compressed.len(), 3);
+        let model = &cal.model;
         assert!(model.alpha >= 0.0 && model.alpha < 0.05, "alpha {}", model.alpha);
         assert!(model.beta >= 0.0 && model.beta.is_finite());
-        let j = calibration_json(&model, &samples).to_string();
+        assert!(model.delta >= 0.0 && model.delta.is_finite(), "delta {}", model.delta);
+        // The Q8 rung really shrinks the wire.
+        for c in &cal.compressed {
+            assert!(c.wire_bytes < c.raw_bytes / 3.0, "q8 wire {} raw {}", c.wire_bytes, c.raw_bytes);
+        }
+        let j = calibration_json(&cal).to_string();
         assert!(j.contains("alpha_s"));
+        assert!(j.contains("delta_source") && j.contains("measured"), "{j}");
+        assert!(j.contains("compressed_samples"));
     }
 }

@@ -29,6 +29,7 @@
 //! increments are code-structural, not timing-dependent), which is what
 //! makes the CI regression check against a checked-in baseline sound.
 
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -43,6 +44,7 @@ use crate::fault::FaultPlan;
 use crate::optim::Algorithm;
 use crate::sched::{FusionConfig, FusionPlan, LayerProfile};
 use crate::simulator::{simulated_overlap_fraction, NetworkModel};
+use crate::telemetry::TelemetryRegistry;
 use crate::topology::{log2_exact, Grouping};
 use crate::trace::{attribute, now_ns, HistogramRegistry, Lane, TraceEvent, TraceKind};
 use crate::util::json::{num, obj, s, Json};
@@ -83,6 +85,10 @@ pub struct MeasuredRun {
     /// application publishes by move).
     pub copied_bytes_per_iter: f64,
     pub sent_bytes_per_iter: f64,
+    /// Total data-payload bytes on the wire across all ranks, exact
+    /// (ctrl frames carry no payload, so this is deterministic and equals
+    /// the sum of the telemetry registry's per-rank `wire_bytes`).
+    pub sent_bytes_total: u64,
     /// Pool misses across all ranks (fixed after warmup).
     pub pool_allocs: u64,
     pub group_collectives: u64,
@@ -121,6 +127,18 @@ fn busy_compute(d: Duration) {
 /// Run `cfg.steps` WAGMA-style iterations (publish → group allreduce, with
 /// the every-τ global sync) on real engine threads and measure.
 pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
+    run_measured_with(cfg, None)
+}
+
+/// [`run_measured`] with a live-telemetry registry attached to every
+/// engine: steps, wait attribution, wire bytes, membership, and staleness
+/// stream into `telemetry` while the run is in flight (atomics only — the
+/// measured counters are bit-identical with and without it). The registry
+/// must be sized for `cfg.p` ranks.
+pub fn run_measured_with(
+    cfg: &MeasuredConfig,
+    telemetry: Option<Arc<TelemetryRegistry>>,
+) -> MeasuredRun {
     assert_eq!(cfg.compute.len(), cfg.steps as usize, "one compute row per step");
     assert!(cfg.compute.iter().all(|row| row.len() == cfg.p));
     let ecfg = EngineConfig {
@@ -141,16 +159,22 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
         // effective deadline is 0 = the legacy blocking path).
         recv_retries: if cfg.faults.is_empty() { 0 } else { 5 },
     };
-    let faults = std::sync::Arc::new(cfg.faults.clone());
+    let faults = Arc::new(cfg.faults.clone());
     let start = Instant::now();
     let engines: Vec<CollectiveEngine> = world(cfg.p)
         .into_iter()
         .map(|ep| {
             let r = ep.rank() as f32;
-            CollectiveEngine::spawn_with_faults(ep, ecfg, vec![r; cfg.dim], faults.clone())
+            CollectiveEngine::spawn_instrumented(
+                ep,
+                ecfg,
+                vec![r; cfg.dim],
+                faults.clone(),
+                telemetry.clone(),
+            )
         })
         .collect();
-    let compute = std::sync::Arc::new(cfg.compute.clone());
+    let compute = Arc::new(cfg.compute.clone());
     let dim = cfg.dim;
     let steps = cfg.steps;
     let handles: Vec<_> = engines
@@ -218,6 +242,7 @@ pub fn run_measured(cfg: &MeasuredConfig) -> MeasuredRun {
         copied_bytes_per_iter: stats.iter().map(|s| s.copied_bytes).sum::<u64>() as f64
             / rank_iters,
         sent_bytes_per_iter: stats.iter().map(|s| s.sent_bytes).sum::<u64>() as f64 / rank_iters,
+        sent_bytes_total: stats.iter().map(|s| s.sent_bytes).sum(),
         pool_allocs: stats.iter().map(|s| s.pool_allocs).sum(),
         group_collectives: stats.iter().map(|s| s.group_collectives).sum(),
         global_syncs: stats.iter().map(|s| s.global_syncs).sum(),
@@ -336,6 +361,22 @@ pub fn bench_preset_traced(
     seed: u64,
     comp: Compression,
 ) -> (Json, Vec<TraceEvent>) {
+    bench_preset_instrumented(name, quick, seed, comp, None)
+}
+
+/// [`bench_preset_traced`] with a live-telemetry registry attached to the
+/// *layered* (headline) arm, so a sampler/scrape endpoint observes the
+/// measurement while it runs. The reference arms stay uninstrumented —
+/// their counters would pollute the per-rank registry with runs that are
+/// not the one being dashboarded. The registry must be sized for the
+/// case's `p` ([`preset_case`]).
+pub fn bench_preset_instrumented(
+    name: &str,
+    quick: bool,
+    seed: u64,
+    comp: Compression,
+    telemetry: Option<Arc<TelemetryRegistry>>,
+) -> (Json, Vec<TraceEvent>) {
     let case = preset_case(name, quick);
     let mk = |chunk_elems: usize, serial: bool, compression: Compression| -> MeasuredRun {
         let cfg = MeasuredConfig {
@@ -351,7 +392,20 @@ pub fn bench_preset_traced(
         };
         run_measured(&cfg)
     };
-    let layered = mk(case.chunk_elems, false, Compression::None);
+    let layered = run_measured_with(
+        &MeasuredConfig {
+            p: case.p,
+            group_size: case.group_size,
+            tau: case.tau,
+            dim: case.dim,
+            steps: case.steps,
+            chunk_elems: case.chunk_elems,
+            compression: Compression::None,
+            compute: compute_matrix(&case, false, seed),
+            faults: FaultPlan::none(),
+        },
+        telemetry,
+    );
     let flat = mk(0, false, Compression::None);
     let layered_serial = mk(case.chunk_elems, true, Compression::None);
     let flat_serial = mk(0, true, Compression::None);
@@ -490,6 +544,18 @@ pub fn bench_preset_traced(
                 .unwrap_or(Json::Null),
         ),
         ("serial_wait_p50_s", num(layered_serial.wait.p50)),
+        // Deterministic snapshot counters for the layered (telemetered)
+        // arm — the values `--check-telemetry-baseline` gates. `steps`
+        // is application iterations across all ranks; `wire_bytes` is
+        // total data payload on the wire (ctrl frames are free), which
+        // equals the sum of the live registry's per-rank `wire_bytes`.
+        (
+            "telemetry",
+            obj(vec![
+                ("steps", num(layered.survivor_steps as f64)),
+                ("wire_bytes", num(layered.sent_bytes_total as f64)),
+            ]),
+        ),
         ("trace", trace_json),
         (
             "legacy_model",

@@ -86,7 +86,8 @@ use crate::compress::{Compression, EncodeScratch};
 use crate::comm::{
     BufferPool, Chunk, Endpoint, MailboxSender, Message, Payload, PoolStats, SharedBuf, Tag,
 };
-use crate::fault::{FaultPlan, Membership};
+use crate::fault::{FaultPlan, Membership, PeerState};
+use crate::telemetry::TelemetryRegistry;
 use crate::topology::{log2_exact, BinomialTree, Grouping};
 use crate::trace::{
     now_ns, Lane, LogHistogram, TraceEvent, TraceKind, TraceRecorder, TRACE_RING_CAPACITY,
@@ -308,6 +309,11 @@ struct EngineShared {
     app_copied_bytes: AtomicU64,
     /// Per-rank span recorder (app + engine lanes, lock-split).
     trace: Arc<TraceRecorder>,
+    /// Live-telemetry registry (None when the run is not instrumented).
+    /// Publishing is atomics-only, so it neither copies nor allocates —
+    /// the P=1 bit-identity test pins `copied_bytes`/`pool_allocs` equal
+    /// with and without a registry installed.
+    telemetry: Option<Arc<TelemetryRegistry>>,
 }
 
 /// Handle owned by the application thread.
@@ -372,8 +378,26 @@ impl CollectiveEngine {
         init_buf: Vec<f32>,
         faults: Arc<FaultPlan>,
     ) -> CollectiveEngine {
+        CollectiveEngine::spawn_instrumented(ep, cfg, init_buf, faults, None)
+    }
+
+    /// Spawn with an optional live-telemetry registry installed: the app
+    /// API publishes steps/staleness/exposed wait and the engine thread
+    /// publishes per-class wait, bytes-on-wire, degraded-mode counters,
+    /// and membership verdicts into the rank slots. `None` is bit-wise
+    /// the uninstrumented engine.
+    pub fn spawn_instrumented(
+        ep: Endpoint,
+        cfg: EngineConfig,
+        init_buf: Vec<f32>,
+        faults: Arc<FaultPlan>,
+        telemetry: Option<Arc<TelemetryRegistry>>,
+    ) -> CollectiveEngine {
         let rank = ep.rank();
         assert_eq!(ep.p(), cfg.p);
+        if let Some(t) = &telemetry {
+            assert_eq!(t.p(), cfg.p, "telemetry registry sized for a different world");
+        }
         let pool = ep.pool().clone();
         let shared = Arc::new(EngineShared {
             slot: Mutex::new(SendSlot {
@@ -385,6 +409,7 @@ impl CollectiveEngine {
             staleness: Mutex::new(StalenessLog::default()),
             app_copied_bytes: AtomicU64::new(0),
             trace: Arc::new(TraceRecorder::new(rank as u32, cfg.trace, TRACE_RING_CAPACITY)),
+            telemetry,
         });
         let to_engine = ep.self_sender();
         let sh = shared.clone();
@@ -463,10 +488,17 @@ impl CollectiveEngine {
             }
         };
         // The request→result window is the rank's exposed communication.
-        let mut ev = TraceEvent::new(TraceKind::Wait, Lane::App, t0, now_ns() - t0);
+        let wait_ns = now_ns() - t0;
+        let mut ev = TraceEvent::new(TraceKind::Wait, Lane::App, t0, wait_ns);
         ev.version = t;
         self.shared.trace.record(ev);
         let s = r.staleness(t);
+        if let Some(tel) = &self.shared.telemetry {
+            let slot = tel.rank(self.rank);
+            slot.add_step();
+            slot.add_wait_app_ns(wait_ns);
+            slot.add_staleness(s);
+        }
         // Single lock: the sample and its histogram entry land atomically,
         // so a concurrent `staleness_samples` drain can never observe one
         // without the other.
@@ -496,9 +528,15 @@ impl CollectiveEngine {
                 g = self.shared.results_cv.wait(g).unwrap();
             }
         };
-        let mut ev = TraceEvent::new(TraceKind::Wait, Lane::App, t0, now_ns() - t0);
+        let wait_ns = now_ns() - t0;
+        let mut ev = TraceEvent::new(TraceKind::Wait, Lane::App, t0, wait_ns);
         ev.version = t;
         self.shared.trace.record(ev);
+        if let Some(tel) = &self.shared.telemetry {
+            let slot = tel.rank(self.rank);
+            slot.add_step();
+            slot.add_wait_app_ns(wait_ns);
+        }
         r
     }
 
@@ -606,6 +644,36 @@ struct EngineRun {
     /// Set by `recv_exchange` when the bounded receive gave up on a
     /// partner; consumed per phase by `execute_group`.
     phase_skipped: bool,
+    /// Live-telemetry registry (clone of the shared handle, kept here so
+    /// the hot paths skip the `shared` indirection).
+    telemetry: Option<Arc<TelemetryRegistry>>,
+}
+
+impl EngineRun {
+    /// Publish blocked-receive time into the *waited-on* rank's slot:
+    /// the fleet's wait-for-peer distribution accumulates on the rank
+    /// being waited for, which is what the straggler detector thresholds.
+    fn telemetry_wait_for(&self, partner: usize, ns: u64) {
+        if let Some(t) = &self.telemetry {
+            t.rank(partner).record_wait_for_ns(ns);
+        }
+    }
+
+    /// Mirror a deterministic membership view into the registry. Healthy
+    /// is *not* pushed from here — a plan view saying healthy must not
+    /// clear a locally-observed suspect verdict; heals flow from
+    /// successful receives and sync completion.
+    fn telemetry_membership(&self, membership: &Membership, p: usize) {
+        if let Some(t) = &self.telemetry {
+            for r in 0..p {
+                match membership.state(r) {
+                    PeerState::Dead => t.rank(r).mark_dead(),
+                    PeerState::Suspect => t.rank(r).mark_suspect(),
+                    PeerState::Healthy => {}
+                }
+            }
+        }
+    }
 }
 
 /// Majority-mode arrival bookkeeping at the version leader: activate once
@@ -650,6 +718,7 @@ fn engine_main(
 ) -> EngineStats {
     let pool = ep.pool().clone();
     let membership = Membership::new(cfg.p);
+    let telemetry = shared.telemetry.clone();
     let mut run = EngineRun {
         cfg,
         grouping: if cfg.dynamic_groups {
@@ -675,6 +744,7 @@ fn engine_main(
         membership,
         crashed: false,
         phase_skipped: false,
+        telemetry,
     };
 
     loop {
@@ -726,6 +796,9 @@ fn engine_main(
         ep.copied_bytes + run.shared.app_copied_bytes.load(Ordering::Relaxed);
     run.stats.pool_allocs = run.pool.stats().allocs;
     run.stats.dropped_trace_events = run.shared.trace.dropped();
+    if let Some(t) = &run.telemetry {
+        t.add_dropped_trace_events(run.stats.dropped_trace_events);
+    }
     let mut g = run.shared.results.lock().unwrap();
     g.engine_done = true;
     drop(g);
@@ -761,6 +834,9 @@ fn handle_ctrl(ep: &mut Endpoint, run: &mut EngineRun, msg: Message) {
         }
         Payload::Dead { rank } => {
             run.membership.mark_dead(rank);
+            if let Some(t) = &run.telemetry {
+                t.rank(rank).mark_dead();
+            }
         }
         Payload::Quit => {
             run.quit = true;
@@ -773,6 +849,9 @@ fn handle_ctrl(ep: &mut Endpoint, run: &mut EngineRun, msg: Message) {
 fn crash_self(ep: &mut Endpoint, run: &mut EngineRun) {
     run.crashed = true;
     let me = ep.rank();
+    if let Some(t) = &run.telemetry {
+        t.rank(me).mark_dead();
+    }
     for peer in 0..run.cfg.p {
         if peer != me {
             ep.send_ctrl(peer, Payload::Dead { rank: me });
@@ -861,11 +940,21 @@ fn recv_exchange(ep: &mut Endpoint, run: &mut EngineRun, partner: usize, tag: Ta
             }
         }
     };
-    run.phase_wait_ns += now_ns() - w0;
+    let waited = now_ns() - w0;
+    run.phase_wait_ns += waited;
+    run.telemetry_wait_for(partner, waited);
     match &data {
-        Some(_) => run.membership.heal(partner),
+        Some(_) => {
+            run.membership.heal(partner);
+            if let Some(t) = &run.telemetry {
+                t.rank(partner).heal();
+            }
+        }
         None => {
             run.membership.mark_suspect(partner);
+            if let Some(t) = &run.telemetry {
+                t.rank(partner).mark_suspect();
+            }
             run.phase_skipped = true;
         }
     }
@@ -1030,6 +1119,14 @@ fn record_engine_span(
         TraceKind::TauSync => run.stats.wait_sync_ns += run.phase_wait_ns,
         _ => run.stats.wait_group_ns += run.phase_wait_ns,
     }
+    if let Some(t) = &run.telemetry {
+        let slot = t.rank(run.shared.trace.rank() as usize);
+        match kind {
+            TraceKind::TauSync => slot.add_wait_sync_ns(run.phase_wait_ns),
+            _ => slot.add_wait_group_ns(run.phase_wait_ns),
+        }
+        slot.add_wire_bytes(wire_bytes);
+    }
     if run.shared.trace.is_enabled() {
         let mut ev = TraceEvent::new(kind, Lane::Engine, t0, end - t0);
         ev.version = v;
@@ -1066,6 +1163,7 @@ fn record_engine_span(
 fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
     let v = run.next;
     run.membership.apply_plan(&run.faults, v);
+    run.telemetry_membership(&run.membership, run.cfg.p);
     // NOTE: v stays in `activated` until the schedule completes so that
     // quorum bookkeeping (majority mode) does not re-activate a version
     // that is mid-execution; both sets are cleared below.
@@ -1106,6 +1204,9 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
             // and a suspect one gets healed via the sync path, not here.
             run.stats.skipped_phases += 1;
             skipped_iter = true;
+            if let Some(t) = &run.telemetry {
+                t.rank(ep.rank()).add_skipped_phases(1);
+            }
             if run.shared.trace.is_enabled() {
                 let mut ev = TraceEvent::new(TraceKind::Fault, Lane::Engine, t0, now_ns() - t0);
                 ev.version = v;
@@ -1139,6 +1240,9 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
         if std::mem::take(&mut run.phase_skipped) {
             run.stats.skipped_phases += 1;
             skipped_iter = true;
+            if let Some(t) = &run.telemetry {
+                t.rank(ep.rank()).add_skipped_phases(1);
+            }
             if run.shared.trace.is_enabled() {
                 let mut ev = TraceEvent::new(TraceKind::Fault, Lane::Engine, t0, end - t0);
                 ev.version = v;
@@ -1160,6 +1264,9 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
     }
     if skipped_iter {
         run.stats.degraded_iters += 1;
+        if let Some(t) = &run.telemetry {
+            t.rank(ep.rank()).add_degraded_iter();
+        }
     }
 
     run.stats.group_collectives += 1;
@@ -1184,6 +1291,7 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
 /// tiny ones (perf pass; EXPERIMENTS.md §Perf).
 fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
     run.membership.apply_plan(&run.faults, ts);
+    run.telemetry_membership(&run.membership, run.cfg.p);
     let contrib: SharedBuf = run.shared.slot.lock().unwrap().buf.clone();
     let survivors = run.membership.survivors();
     let k = survivors.len();
@@ -1227,6 +1335,11 @@ fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
     // verdicts accumulated from group-phase deadlines this τ window were
     // transient — clear them so degradation stays bounded to the window.
     run.membership.heal_all();
+    if let Some(t) = &run.telemetry {
+        for r in 0..run.cfg.p {
+            t.rank(r).heal();
+        }
+    }
     let end = now_ns();
     record_engine_span(
         run,
@@ -1342,7 +1455,9 @@ fn recv_with_ctrl(ep: &mut Endpoint, run: &mut EngineRun, src: usize, tag: Tag) 
             break data;
         }
     };
-    run.phase_wait_ns += now_ns() - w0;
+    let waited = now_ns() - w0;
+    run.phase_wait_ns += waited;
+    run.telemetry_wait_for(src, waited);
     data
 }
 

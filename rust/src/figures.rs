@@ -39,6 +39,43 @@ pub fn create_csv(
     Ok(CsvWriter::create(path, header)?)
 }
 
+/// Rolling telemetry for a simulator figure sweep: counts solved cells,
+/// the harness's own wall-clock, and the modelled bytes-on-wire each cell
+/// moved (`wire_bytes_per_iter × P × steps`). Every sweep ends with the
+/// same `[telemetry]` summary line the instrumented `train`/`bench` paths
+/// emit, so figure regeneration cost shows up in the same vocabulary as
+/// live runs.
+struct SweepTelemetry {
+    started: std::time::Instant,
+    cells: usize,
+    wire_bytes: f64,
+}
+
+impl SweepTelemetry {
+    fn start() -> Self {
+        Self { started: std::time::Instant::now(), cells: 0, wire_bytes: 0.0 }
+    }
+
+    /// Record one solved sweep cell (one printed/CSV row).
+    fn record(&mut self, r: &crate::simulator::SimResult) {
+        self.cells += 1;
+        self.wire_bytes += r.wire_bytes_per_iter * r.p as f64 * r.steps as f64;
+    }
+
+    /// The sweep's final summary line.
+    fn finish(self, figure: &str) {
+        let wall = self.started.elapsed().as_secs_f64().max(1e-9);
+        println!(
+            "[telemetry] {figure}: {} cells in {:.2}s ({:.1} cells/s), \
+             total modelled wire {:.3e} B",
+            self.cells,
+            wall,
+            self.cells as f64 / wall,
+            self.wire_bytes,
+        );
+    }
+}
+
 /// Throughput figures (Fig. 4 / 7 / 10): simulator sweep over
 /// (algorithm × node count).
 pub fn fig_throughput(name: &str, out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
@@ -56,6 +93,7 @@ pub fn fig_throughput(name: &str, out_dir: &str, quick: bool, force: bool) -> an
     )?;
     let counts: Vec<usize> =
         if quick { p.node_counts.iter().copied().take(2).collect() } else { p.node_counts.to_vec() };
+    let mut tele = SweepTelemetry::start();
     for &n in &counts {
         for &algo in p.algos {
             let mut cfg = p.sim_config(algo, n, 42);
@@ -63,6 +101,7 @@ pub fn fig_throughput(name: &str, out_dir: &str, quick: bool, force: bool) -> an
                 cfg.steps = 50;
             }
             let r = simulate(&cfg);
+            tele.record(&r);
             let thr = r.throughput(p.batch);
             let ideal = r.ideal_throughput(p.batch);
             println!(
@@ -85,6 +124,7 @@ pub fn fig_throughput(name: &str, out_dir: &str, quick: bool, force: bool) -> an
         }
         println!();
     }
+    tele.finish(name);
     Ok(())
 }
 
@@ -381,6 +421,7 @@ pub fn fig_fusion(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()>
         "{:<14} {:<10} {:>14} {:>8} {:>12} {:>12} {:>8}",
         "algorithm", "mode", "threshold", "buckets", "makespan", "flat", "speedup"
     );
+    let mut tele = SweepTelemetry::start();
     for &algo in &[Algorithm::Wagma, Algorithm::AllreduceSgd] {
         let mut flat_cfg = pre.sim_config(algo, p, 42);
         if quick {
@@ -400,7 +441,9 @@ pub fn fig_fusion(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()>
                     cfg.imbalance.mean(),
                 )
                 .num_buckets();
-                let makespan = simulate(&cfg).makespan;
+                let r = simulate(&cfg);
+                tele.record(&r);
+                let makespan = r.makespan;
                 let speedup = flat / makespan;
                 println!(
                     "{:<14} {:<10} {:>14} {:>8} {:>11.3}s {:>11.3}s {:>7.2}x",
@@ -424,6 +467,7 @@ pub fn fig_fusion(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()>
             }
         }
     }
+    tele.finish("fusion");
     Ok(())
 }
 
@@ -474,6 +518,7 @@ pub fn fig_compression(out_dir: &str, quick: bool, force: bool) -> anyhow::Resul
         "{:<6} {:<6} {:>6} {:>4} {:>6} {:>12} {:>16} {:>10} {:>14}",
         "preset", "codec", "ratio", "tau", "S", "makespan", "wire B/iter", "reduce", "throughput"
     );
+    let mut tele = SweepTelemetry::start();
     for name in ["fig4", "fig7", "fig10"] {
         let pre = preset(name).ok_or_else(|| anyhow::anyhow!("missing preset {name}"))?;
         let taus: Vec<u64> = if quick { vec![pre.tau] } else { vec![4, pre.tau, 25] };
@@ -494,6 +539,7 @@ pub fn fig_compression(out_dir: &str, quick: bool, force: bool) -> anyhow::Resul
                 for &comp in &codecs {
                     // The None row IS the baseline — don't simulate it twice.
                     let r = if comp.is_none() { baseline.clone() } else { cell(comp) };
+                    tele.record(&r);
                     let reduction = baseline.wire_bytes_per_iter / r.wire_bytes_per_iter;
                     // Only top-k rows have a keep ratio; fabricating one
                     // for none/q8 would corrupt ratio-faceted plots.
@@ -528,6 +574,7 @@ pub fn fig_compression(out_dir: &str, quick: bool, force: bool) -> anyhow::Resul
             }
         }
     }
+    tele.finish("compress");
     Ok(())
 }
 
@@ -580,6 +627,7 @@ pub fn fig_elastic(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()
         "{:<6} {:<14} {:<22} {:>11} {:>11} {:>9} {:>14}",
         "preset", "algorithm", "scenario", "makespan", "clean", "loss", "loss/iter(post)"
     );
+    let mut tele = SweepTelemetry::start();
     for name in ["fig4", "fig7", "fig10"] {
         let pre = preset(name).ok_or_else(|| anyhow::anyhow!("missing preset {name}"))?;
         for &algo in &algos {
@@ -612,6 +660,7 @@ pub fn fig_elastic(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()
                         let scenario =
                             if labels.is_empty() { "clean".to_string() } else { labels.join("+") };
                         let r = if plan.is_empty() { clean.clone() } else { run(plan) };
+                        tele.record(&r);
                         let loss = r.makespan - clean.makespan;
                         let post_iters = crash.map(|at| steps as f64 - at as f64);
                         let loss_per_iter = post_iters.map(|n| loss / n);
@@ -663,6 +712,7 @@ pub fn fig_elastic(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()
             }
         }
     }
+    tele.finish("elastic");
     Ok(())
 }
 

@@ -46,6 +46,7 @@ pub mod rl;
 pub mod runtime;
 pub mod sched;
 pub mod simulator;
+pub mod telemetry;
 pub mod topology;
 pub mod trace;
 pub mod util;

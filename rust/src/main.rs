@@ -12,17 +12,22 @@
 //!   train  --model <name> --algo <name> --p N --steps N [--lr F] [--tau N]
 //!          [--group-size N] [--static-groups] [--eval-every N] [--out results]
 //!          [--compression none|topk|q8] [--topk-ratio F] [--trace FILE]
+//!          [--telemetry FILE] [--metrics-addr HOST:PORT] [--top]
 //!        Real multi-worker training through the PJRT artifacts. With
 //!        compression on, WAGMA/eager workers carry an error-feedback
 //!        residual and the engine sends per-bucket encoded payloads.
 //!        --trace exports the merged per-rank event timeline as a Chrome
 //!        trace-event JSON (open in chrome://tracing or ui.perfetto.dev)
-//!        and prints the wait-time attribution.
+//!        and prints the wait-time attribution. --telemetry streams
+//!        sampler snapshots as JSON lines; --metrics-addr serves live
+//!        Prometheus exposition (plus /snapshot.json for `wagma top
+//!        --addr`); --top redraws the dashboard on stderr each window.
 //!   simulate --algo <name> --p N [--steps N] [--params N] [--tau N]
 //!            [--imbalance fig4|fig7|fig9|balanced] [--group-size N]
 //!            [--layered] [--fusion-mode flat|threshold|mgwfbp]
 //!            [--fusion-threshold-bytes N] [--compression none|topk|q8]
 //!            [--topk-ratio F] [--config file.toml] [--trace FILE]
+//!            [--telemetry FILE]
 //!        One discrete-event simulation run at any scale. --layered turns
 //!        on bucketed, overlap-scheduled exchanges; --compression prices
 //!        per-bucket wire compression (δ codec term included) and reports
@@ -30,12 +35,16 @@
 //!        [compress] TOML sections (CLI flags override them). --trace
 //!        emits the analytic timeline in the same Chrome-trace schema as
 //!        the measured paths (and prints the attribution), so simulated
-//!        and measured runs diff component by component.
+//!        and measured runs diff component by component. --telemetry
+//!        writes one analytic telemetry snapshot (same JSON schema as the
+//!        live sampler) built from the simulated timeline.
 //!   bench  [--preset fig4|fig7|fig10|all] [--quick] [--out DIR] [--seed N]
 //!          [--compression none|topk|q8] [--topk-ratio F] [--trace FILE]
 //!          [--check-baseline FILE] [--check-compress-baseline FILE]
 //!          [--check-trace-baseline FILE] [--calibrate]
 //!          [--faults none|crash@mid|crash@N] [--check-faults-baseline FILE]
+//!          [--telemetry FILE] [--metrics-addr HOST:PORT] [--top]
+//!          [--serve-grace SECS] [--check-telemetry-baseline FILE]
 //!        Measured (wall-clock) overlap harness: real compute threads
 //!        against streamed chunk exchanges on the collective engine (with
 //!        and without per-bucket compression — default compressed arm is
@@ -48,7 +57,14 @@
 //!        recorded span/bytes-on-wire accounting (the CI perf smoke job
 //!        runs all three). --trace writes one Chrome trace with a process
 //!        per preset. --calibrate instead runs serial collectives across
-//!        payload sizes and least-squares fits NetworkModel α/β.
+//!        payload sizes and least-squares fits NetworkModel α/β, plus a
+//!        q8-compressed rung that measures the δ codec term.
+//!        --telemetry/--metrics-addr/--top attach the live-telemetry
+//!        sampler to each preset's layered arm; --serve-grace keeps the
+//!        metrics endpoint up after the run until one scrape lands (CI);
+//!        --check-telemetry-baseline gates the deterministic snapshot
+//!        counters (steps, wire bytes) within ±10% of the checked-in
+//!        baseline.
 //!        --faults instead runs the fault-injection smoke: each preset's
 //!        layered schedule with a plan-declared fail-stop, written to
 //!        BENCH_faults.json; --check-faults-baseline gates the
@@ -62,6 +78,11 @@
 //!        (Chrome trace-event format), prints each run's wait-time
 //!        attribution (wait-for-peer / codec / transfer / other), and the
 //!        sim-vs-measured decomposition diff.
+//!   top    (--addr HOST:PORT | --file FILE) [--interval-ms N] [--once]
+//!        Live TTY dashboard over a running instrumented `train`/`bench`:
+//!        --addr polls /snapshot.json from a --metrics-addr endpoint;
+//!        --file follows a --telemetry JSON-lines file. --once renders a
+//!        single frame and exits (scriptable health checks).
 //!   list
 //!        Show available models, algorithms, presets.
 
@@ -88,10 +109,11 @@ fn main() -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("bench") => cmd_bench(&args),
         Some("trace") => cmd_trace(&args),
+        Some("top") => cmd_top(&args),
         Some("list") => cmd_list(),
         _ => {
             eprintln!(
-                "usage: wagma <figure|train|simulate|bench|trace|list> [flags]  (see src/main.rs docs)"
+                "usage: wagma <figure|train|simulate|bench|trace|top|list> [flags]  (see src/main.rs docs)"
             );
             std::process::exit(2);
         }
@@ -166,6 +188,42 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             Box::new(PjrtEngine::new(artifacts, model, rank, seed).expect("load engine"))
         }
     });
+    // Live telemetry: the registry is always attached (atomics only —
+    // engine accounting is bit-identical with it on); the sampler thread
+    // and HTTP endpoint only spin up when a sink asks for them.
+    use wagma::telemetry::{
+        drop_warning, shared_snapshot, JsonLinesSink, MetricsServer, Sampler, SamplerConfig, Sink,
+        TelemetryRegistry, TopSink,
+    };
+    let registry = Arc::new(TelemetryRegistry::new(p));
+    let mut sinks: Vec<Box<dyn Sink>> = Vec::new();
+    if let Some(path) = args.get("telemetry") {
+        sinks.push(Box::new(JsonLinesSink::create(path)?));
+    }
+    if args.has("top") {
+        sinks.push(Box::new(TopSink::default()));
+    }
+    let latest = shared_snapshot();
+    let server = match args.get("metrics-addr") {
+        Some(addr) => {
+            let srv = MetricsServer::serve(addr, Arc::clone(&latest))?;
+            println!("serving telemetry on http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
+    let want_sampler = !sinks.is_empty() || server.is_some();
+    let sampler = if want_sampler {
+        Some(Sampler::spawn(
+            Arc::clone(&registry),
+            SamplerConfig::default(),
+            sinks,
+            Arc::clone(&latest),
+        ))
+    } else {
+        None
+    };
+
     let cfg = TrainConfig {
         algo,
         p,
@@ -181,6 +239,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         fusion: FusionConfig::from_args(args),
         compress: Compression::from_args(args),
         init,
+        telemetry: Some(Arc::clone(&registry)),
     };
     println!(
         "training {model} with {} on P={p} (S={}, tau={}, compression={}) for {steps} steps ...",
@@ -213,6 +272,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, to_chrome(&events, &format!("train {model} {}", algo.name())).to_string())?;
         println!("wrote Chrome trace {path:?} ({} events)", events.len());
         print!("{}", attribute(&events, &NetworkModel::aries()).report(&format!("train {}", algo.name())));
+    }
+    let mut sampler_overruns = 0u64;
+    if let Some(sampler) = sampler {
+        let rep = sampler.stop();
+        sampler_overruns = rep.overruns;
+        if let Some(path) = args.get("telemetry") {
+            println!("wrote telemetry {path:?} ({} windows)", rep.windows);
+        }
+    }
+    drop(server);
+    if let Some(w) = drop_warning(registry.dropped_trace_events(), sampler_overruns) {
+        eprintln!("{w}");
     }
     Ok(())
 }
@@ -259,7 +330,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         seed: args.u64_or("seed", 42),
         fusion,
         compress,
-        trace: args.get("trace").is_some(),
+        // The analytic telemetry snapshot is built from the trace
+        // timeline, so --telemetry forces tracing on.
+        trace: args.get("trace").is_some() || args.get("telemetry").is_some(),
         ..Default::default()
     };
     let b = args.usize_or("batch", 128);
@@ -301,6 +374,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         println!("wrote Chrome trace {path:?} ({} events)", r.trace.len());
         print!("{}", attribute(&r.trace, &cfg.net).report(&format!("simulated {}", r.algo)));
     }
+    if let Some(path) = args.get("telemetry") {
+        use wagma::telemetry::{snapshot_from_events, snapshot_json};
+        let snap = snapshot_from_events(cfg.p, &r.trace);
+        let mut line = snapshot_json(&snap).to_string();
+        line.push('\n');
+        std::fs::write(path, line)?;
+        println!(
+            "wrote analytic telemetry snapshot {path:?} ({} ranks, {} total steps, {} wire B)",
+            snap.p,
+            snap.total_steps(),
+            snap.total_wire_bytes()
+        );
+    }
     Ok(())
 }
 
@@ -315,24 +401,38 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
 
     if args.has("calibrate") {
         // Satellite of the compression PR / follow-up of PR 2: fit α/β
-        // from serial engine collectives across a payload ladder.
-        println!("Calibrating NetworkModel α/β ({} ladder)...", if quick { "quick" } else { "full" });
-        let (model, samples) = calibrate(quick, seed);
-        for sm in &samples {
-            println!("  {:>12.0} B  wait mean {:>10.3} µs", sm.bytes, sm.seconds * 1e6);
+        // from serial engine collectives across a payload ladder, and δ
+        // from a q8-compressed rung of the same ladder.
+        println!(
+            "Calibrating NetworkModel α/β/δ ({} ladder)...",
+            if quick { "quick" } else { "full" }
+        );
+        let cal = calibrate(quick, seed);
+        for sm in &cal.samples {
+            println!("  dense {:>12.0} B  wait mean {:>10.3} µs", sm.bytes, sm.seconds * 1e6);
         }
+        for sm in &cal.compressed {
+            println!(
+                "  q8    {:>12.0} B  ({:>10.0} B wire)  wait mean {:>10.3} µs",
+                sm.raw_bytes,
+                sm.wire_bytes,
+                sm.seconds * 1e6
+            );
+        }
+        let model = &cal.model;
         println!(
             "suggested NetworkModel {{ alpha: {:.3e}, beta: {:.3e}, gamma: {:.3e}, contention: {}, delta: {:.3e} }}",
             model.alpha, model.beta, model.gamma, model.contention, model.delta
         );
         println!(
-            "(α = {:.2} µs, β = 1/{:.1} GB/s; γ/contention/δ keep the Aries defaults)",
+            "(α = {:.2} µs, β = 1/{:.1} GB/s, δ = {:.3e} s/B measured from the q8 rung; γ/contention keep the Aries defaults)",
             model.alpha * 1e6,
-            1.0 / model.beta / 1e9
+            1.0 / model.beta / 1e9,
+            model.delta
         );
         std::fs::create_dir_all(&out_dir)?;
         let path = std::path::Path::new(&out_dir).join("CALIBRATION.json");
-        std::fs::write(&path, calibration_json(&model, &samples).to_string())?;
+        std::fs::write(&path, calibration_json(&cal).to_string())?;
         println!("wrote {path:?}");
         return Ok(());
     }
@@ -391,11 +491,57 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         }
     }
 
+    // Live telemetry over the bench: one JSON-lines file and one metrics
+    // endpoint span the whole run; each preset gets its own registry +
+    // sampler (world size can differ per preset), attached to the
+    // preset's layered arm.
+    use wagma::bench::measured_overlap::{bench_preset_instrumented, preset_case};
+    use wagma::telemetry::{
+        drop_warning, shared_snapshot, JsonLinesSink, MetricsServer, Sampler, SamplerConfig, Sink,
+        TelemetryRegistry, TopSink,
+    };
+    let jsonl = match args.get("telemetry") {
+        Some(path) => Some(JsonLinesSink::create(path)?),
+        None => None,
+    };
+    let latest = shared_snapshot();
+    let server = match args.get("metrics-addr") {
+        Some(addr) => {
+            let srv = MetricsServer::serve(addr, Arc::clone(&latest))?;
+            println!("serving telemetry on http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
+    let telemetry_on = jsonl.is_some() || server.is_some() || args.has("top");
+    let mut sampler_overruns = 0u64;
+
     println!("Measured-overlap bench ({}):", if quick { "quick" } else { "full" });
     let mut cases: Vec<Json> = Vec::with_capacity(names.len());
     let mut traces: Vec<(String, Vec<wagma::trace::TraceEvent>)> = Vec::with_capacity(names.len());
     for n in &names {
-        let (json, trace) = bench_preset_traced(n, quick, seed, comp);
+        let (json, trace) = if telemetry_on {
+            let registry = Arc::new(TelemetryRegistry::new(preset_case(n, quick).p));
+            let mut sinks: Vec<Box<dyn Sink>> = Vec::new();
+            if let Some(sink) = &jsonl {
+                sinks.push(Box::new(sink.clone()));
+            }
+            if args.has("top") {
+                sinks.push(Box::new(TopSink::default()));
+            }
+            let sampler = Sampler::spawn(
+                Arc::clone(&registry),
+                SamplerConfig::default(),
+                sinks,
+                Arc::clone(&latest),
+            );
+            let out = bench_preset_instrumented(n, quick, seed, comp, Some(Arc::clone(&registry)));
+            let rep = sampler.stop();
+            sampler_overruns += rep.overruns;
+            out
+        } else {
+            bench_preset_traced(n, quick, seed, comp)
+        };
         cases.push(json);
         traces.push((n.clone(), trace));
     }
@@ -443,7 +589,113 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if let Some(baseline_path) = args.get("check-trace-baseline") {
         check_trace_baseline(&report, baseline_path)?;
     }
+    if let Some(baseline_path) = args.get("check-telemetry-baseline") {
+        check_telemetry_baseline(&report, baseline_path)?;
+    }
+
+    // --serve-grace N: hold the metrics endpoint open after the
+    // measurements finish until at least one request lands (or the grace
+    // window runs out), so an external scraper racing a quick bench run
+    // still gets its sample.
+    if let Some(srv) = &server {
+        let grace = args.u64_or("serve-grace", 0);
+        if grace > 0 && srv.requests_served() == 0 {
+            println!(
+                "holding metrics endpoint http://{}/metrics for up to {grace}s (waiting for a scrape)...",
+                srv.local_addr()
+            );
+            let t0 = std::time::Instant::now();
+            while t0.elapsed().as_secs() < grace && srv.requests_served() == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            }
+        }
+    }
+    drop(server);
+
+    // Non-silent observability-loss warning (dropped ring events come
+    // from the per-preset trace accounting, so this fires with or
+    // without the telemetry sinks attached).
+    let dropped_events: u64 = report
+        .get("presets")
+        .and_then(|p| p.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|c| c.get("trace").and_then(|t| t.get("dropped_events")).and_then(|v| v.as_f64()))
+        .sum::<f64>() as u64;
+    if let Some(w) = drop_warning(dropped_events, sampler_overruns) {
+        eprintln!("{w}");
+    }
     Ok(())
+}
+
+/// Gate the deterministic telemetry counters of each preset's layered arm
+/// (`steps`, `wire_bytes`) against a checked-in baseline, symmetric ±10%.
+/// Both counters are code-structural — steps is the schedule shape, wire
+/// bytes the schedule × wire format — so drift in *either* direction
+/// means the measured schedule changed, not noise.
+fn check_telemetry_baseline(
+    report: &wagma::util::json::Json,
+    baseline_path: &str,
+) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(baseline_path)?;
+    let baseline = wagma::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+    let base_quick = baseline
+        .get("shape")
+        .and_then(|s| s.get("quick"))
+        .and_then(|v| v.as_bool());
+    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
+    if let Some(bq) = base_quick {
+        if bq != run_quick {
+            anyhow::bail!(
+                "telemetry baseline shape mismatch: {baseline_path} records a {} run but this is a {} run",
+                if bq { "--quick" } else { "full" },
+                if run_quick { "--quick" } else { "full" },
+            );
+        }
+    }
+    const FIELDS: [&str; 2] = ["steps", "wire_bytes"];
+    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+    let mut failures = Vec::new();
+    for case in cases {
+        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+        let Some(base) = baseline.get(name) else {
+            // A missing entry must not silently disable the gate.
+            failures.push(format!(
+                "{name}: no telemetry baseline entry in {baseline_path} — add one"
+            ));
+            continue;
+        };
+        let mut ok = true;
+        for field in FIELDS {
+            let measured = case
+                .get("telemetry")
+                .and_then(|t| t.get(field))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::INFINITY);
+            let Some(b) = base.get(field).and_then(|v| v.as_f64()) else {
+                failures.push(format!(
+                    "{name}.{field}: missing from {baseline_path} (measured {measured:.0})"
+                ));
+                ok = false;
+                continue;
+            };
+            if (measured - b).abs() > b * 0.10 {
+                failures.push(format!(
+                    "{name}.{field}: {measured:.0} deviates >10% from baseline {b:.0}"
+                ));
+                ok = false;
+            }
+        }
+        if ok {
+            println!("telemetry baseline OK for {name} (steps + wire bytes within ±10%)");
+        }
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        anyhow::bail!("telemetry counter regression:\n{}", failures.join("\n"))
+    }
 }
 
 /// `wagma trace` — observability deep-dive for one preset: one traced
@@ -487,8 +739,8 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         compute: compute_matrix(&case, false, seed),
         faults: wagma::fault::FaultPlan::none(),
     });
-    if measured.dropped_trace_events > 0 {
-        println!("note: {} events dropped to ring overflow", measured.dropped_trace_events);
+    if let Some(w) = wagma::telemetry::drop_warning(measured.dropped_trace_events, 0) {
+        eprintln!("{w}");
     }
 
     // Simulated arm: the same shape on the analytic timeline. One schema,
@@ -839,6 +1091,81 @@ fn check_faults_baseline(report: &wagma::util::json::Json, baseline_path: &str) 
     } else {
         anyhow::bail!("fault-smoke regression:\n{}", failures.join("\n"))
     }
+}
+
+/// `wagma top` — live TTY dashboard over a running instrumented
+/// `train`/`bench` (or a finished one's telemetry file). Two sources:
+/// `--addr` polls `/snapshot.json` from a `--metrics-addr` endpoint;
+/// `--file` follows a `--telemetry` JSON-lines file (last line wins).
+fn cmd_top(args: &Args) -> anyhow::Result<()> {
+    use wagma::telemetry::{fetch_snapshot, render_top, snapshot_from_json};
+    use wagma::util::json::Json;
+
+    let once = args.has("once");
+    let interval = std::time::Duration::from_millis(args.u64_or("interval-ms", 1000));
+    let width = args.usize_or("width", 100);
+
+    if let Some(addr) = args.get("addr") {
+        let mut frames = 0u64;
+        let mut failures = 0u32;
+        loop {
+            match fetch_snapshot(addr) {
+                Ok(snap) => {
+                    failures = 0;
+                    if frames > 0 {
+                        print!("\x1b[H\x1b[J");
+                    }
+                    print!("{}", render_top(&snap, width));
+                    frames += 1;
+                    if once {
+                        return Ok(());
+                    }
+                }
+                Err(e) => {
+                    failures += 1;
+                    // A 503 just means the sampler hasn't closed its first
+                    // window yet; keep polling unless asked for one frame
+                    // or the endpoint stays unreachable.
+                    if once || failures >= 10 {
+                        anyhow::bail!("no snapshot from {addr}: {e}");
+                    }
+                    eprintln!("waiting for {addr}: {e}");
+                }
+            }
+            std::thread::sleep(interval);
+        }
+    }
+
+    if let Some(path) = args.get("file") {
+        let render_last = |frames: u64| -> anyhow::Result<bool> {
+            let text = std::fs::read_to_string(path)?;
+            let Some(line) = text.lines().filter(|l| !l.trim().is_empty()).last() else {
+                return Ok(false);
+            };
+            let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let snap = snapshot_from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            if frames > 0 {
+                print!("\x1b[H\x1b[J");
+            }
+            print!("{}", render_top(&snap, width));
+            Ok(true)
+        };
+        if once {
+            if !render_last(0)? {
+                anyhow::bail!("{path}: no telemetry snapshots yet");
+            }
+            return Ok(());
+        }
+        let mut frames = 0u64;
+        loop {
+            if render_last(frames)? {
+                frames += 1;
+            }
+            std::thread::sleep(interval);
+        }
+    }
+
+    anyhow::bail!("wagma top needs --addr HOST:PORT or --file FILE")
 }
 
 fn cmd_list() -> anyhow::Result<()> {

@@ -2,13 +2,16 @@
 //! and merges the per-rank metrics into a [`TrainResult`].
 
 use std::str::FromStr;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::collectives::allreduce::AllreduceAlgo;
 use crate::collectives::engine::{ActivationMode, CollectiveEngine, EngineConfig};
 use crate::comm::world;
 use crate::compress::Compression;
+use crate::fault::FaultPlan;
 use crate::metrics::TrainResult;
+use crate::telemetry::TelemetryRegistry;
 use crate::optim::engine::EngineFactory;
 use crate::optim::{adpsgd, allreduce_sgd, dpsgd, eager_sgd, local_sgd, pair_avg, sgp, wagma};
 use crate::sched::FusionConfig;
@@ -107,6 +110,12 @@ pub struct TrainConfig {
     pub compress: Compression,
     /// Initial model, identical on every rank.
     pub init: Vec<f32>,
+    /// Live-telemetry registry: when set, engine-backed algorithms
+    /// (WAGMA, eager-SGD) publish steps/wait/staleness/wire/membership
+    /// into it at steady state. The direct-mode baselines run
+    /// uninstrumented (they bypass the collective engine). `None` is
+    /// bit-identical to an uninstrumented run.
+    pub telemetry: Option<Arc<TelemetryRegistry>>,
 }
 
 impl Default for TrainConfig {
@@ -126,6 +135,7 @@ impl Default for TrainConfig {
             fusion: FusionConfig::default(),
             compress: Compression::None,
             init: Vec::new(),
+            telemetry: None,
         }
     }
 }
@@ -193,7 +203,13 @@ pub fn run_training(cfg: &TrainConfig, factory: EngineFactory) -> TrainResult {
                 } else {
                     vec![0.0; cfg.init.len()]
                 };
-                let handle = CollectiveEngine::spawn(ep, ecfg, init_buf);
+                let handle = CollectiveEngine::spawn_instrumented(
+                    ep,
+                    ecfg,
+                    init_buf,
+                    Arc::new(FaultPlan::none()),
+                    cfg.telemetry.clone(),
+                );
                 handles.push(std::thread::spawn(move || {
                     let engine = factory(rank);
                     match cfg.algo {

@@ -1,0 +1,171 @@
+//! # Live telemetry: in-run metrics registry, health, and exposition
+//!
+//! The tracing layer ([`crate::trace`]) answers *what happened* after a
+//! run; this module answers *what is happening now*. It has three parts:
+//!
+//! * **Registry** ([`registry`]) — one [`RankTelemetry`] slot per rank,
+//!   atomics only. The engine, app/worker threads, and the fault paths
+//!   publish wait time by attribution class, bytes-on-wire, degraded-mode
+//!   counters, membership verdicts, staleness, and steps with zero
+//!   steady-state allocations. Rolling wait-for-peer distributions use
+//!   [`registry::AtomicHistogram`], which shares the exact log2 buckets
+//!   of [`crate::trace::hist`]. Blocked receive time is attributed to the
+//!   *waited-on* rank's slot, so a slow rank accumulates the fleet's
+//!   wait-for-peer time itself.
+//! * **Sampler** ([`sampler`]) — a thread snapshotting the registry at a
+//!   configurable interval into a deterministic
+//!   [`TelemetrySnapshot`], runs the online straggler detector
+//!   ([`straggler`]: window p99 > k× fleet median for w consecutive
+//!   windows ⇒ [`Health::Straggler`], with `fault::Membership` verdicts
+//!   taking precedence), and fans snapshots out to sinks: JSON lines
+//!   (`--telemetry FILE`), the live TTY dashboard ([`top`], `wagma top`
+//!   / `--top`), and the latest-snapshot slot.
+//! * **Exposition** ([`prometheus`]) — Prometheus text format rendered
+//!   from a snapshot and served from a minimal blocking HTTP listener
+//!   (`--metrics-addr`; also `/snapshot.json` for `wagma top --addr`).
+//!   This listener is the seed of the `wagma serve` ROADMAP direction.
+//!
+//! The simulator emits analytic snapshots on the same schema via
+//! [`snapshot_from_events`], so live and simulated fleets are inspected
+//! with the same tools.
+
+pub mod prometheus;
+pub mod registry;
+pub mod sampler;
+pub mod straggler;
+pub mod top;
+
+pub use prometheus::{fetch_snapshot, lint_exposition, parse_exposition, render, MetricsServer};
+pub use registry::{
+    snapshot_from_json, snapshot_json, AtomicHistogram, RankSnapshot, RankTelemetry,
+    TelemetryRegistry, TelemetrySnapshot,
+};
+pub use sampler::{
+    shared_snapshot, JsonLinesSink, Sampler, SamplerConfig, SamplerReport, SharedSnapshot, Sink,
+    TelemetryHub, TopSink,
+};
+pub use straggler::{StragglerConfig, StragglerDetector};
+pub use top::render_top;
+
+use crate::trace::{Lane, TraceEvent, TraceKind};
+
+/// Folded per-rank health shown in every sink.
+///
+/// Ordering of precedence when folding: `Dead` ≻ `Suspect` (both from
+/// `fault::Membership` verdicts published by the engine) ≻ `Straggler`
+/// (from the wait-distribution detector) ≻ `Healthy`. A straggler is
+/// still *participating* — it answers receives, just slowly — which is
+/// exactly the regime where wait-avoiding group averaging absorbs skew;
+/// a suspect has already missed a bounded-retry receive window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Straggler,
+    Suspect,
+    Dead,
+}
+
+impl Health {
+    pub fn name(self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Straggler => "straggler",
+            Health::Suspect => "suspect",
+            Health::Dead => "dead",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Health> {
+        match s {
+            "healthy" => Some(Health::Healthy),
+            "straggler" => Some(Health::Straggler),
+            "suspect" => Some(Health::Suspect),
+            "dead" => Some(Health::Dead),
+            _ => None,
+        }
+    }
+
+    /// Stable numeric code for the `wagma_health_state` gauge.
+    pub fn code(self) -> u64 {
+        match self {
+            Health::Healthy => 0,
+            Health::Straggler => 1,
+            Health::Suspect => 2,
+            Health::Dead => 3,
+        }
+    }
+}
+
+/// End-of-run observability-loss warning shared by `wagma
+/// train`/`bench`/`trace`. `None` when nothing was lost (silence is only
+/// acceptable when the data is complete). The exact wording is pinned by
+/// a test — update both together.
+pub fn drop_warning(dropped_trace_events: u64, sampler_overruns: u64) -> Option<String> {
+    if dropped_trace_events == 0 && sampler_overruns == 0 {
+        return None;
+    }
+    Some(format!(
+        "warning: observability data lost: {dropped_trace_events} trace event(s) dropped \
+(ring overflow), {sampler_overruns} telemetry sampler overrun(s); timelines and windows \
+are incomplete — raise the trace ring capacity or the sampler interval"
+    ))
+}
+
+/// Build an analytic [`TelemetrySnapshot`] from a trace-event list — the
+/// simulator's (and `wagma trace`'s) path onto the live-telemetry
+/// schema. Aggregation mirrors the live publishers with one documented
+/// difference: trace events carry no waited-on partner, so wait-for-peer
+/// time is self-attributed (each rank's own engine-lane blocked time).
+/// The straggler detector runs over this single window with `w` forced
+/// to 1, so sustained analytic skew still surfaces as
+/// [`Health::Straggler`].
+pub fn snapshot_from_events(p: usize, events: &[TraceEvent]) -> TelemetrySnapshot {
+    let registry = TelemetryRegistry::new(p);
+    for ev in events {
+        if (ev.rank as usize) >= p {
+            continue;
+        }
+        let slot = registry.rank(ev.rank as usize);
+        match (ev.lane, ev.kind) {
+            (Lane::App, TraceKind::Compute) => slot.add_step(),
+            (Lane::App, TraceKind::Wait) => slot.add_wait_app_ns(ev.dur_ns),
+            (Lane::Engine, TraceKind::Wait) => {
+                slot.add_wait_group_ns(ev.dur_ns);
+                slot.record_wait_for_ns(ev.dur_ns);
+            }
+            (Lane::Engine, TraceKind::GroupExchangePhase) => slot.add_wire_bytes(ev.bytes),
+            (Lane::Engine, TraceKind::TauSync) => slot.add_wire_bytes(ev.bytes),
+            (_, TraceKind::Fault) => {
+                if ev.dur_ns > 0 {
+                    slot.add_skipped_phases(1);
+                }
+            }
+            _ => {}
+        }
+    }
+    let cfg = StragglerConfig { w: 1, ..StragglerConfig::default() };
+    let mut hub = TelemetryHub::new(std::sync::Arc::new(registry), cfg);
+    hub.tick()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_warning_silent_only_when_complete() {
+        assert_eq!(drop_warning(0, 0), None);
+        let w = drop_warning(7, 0).expect("warns");
+        assert!(w.contains("7 trace event(s) dropped"), "{w}");
+        let w = drop_warning(0, 2).expect("warns");
+        assert!(w.contains("2 telemetry sampler overrun(s)"), "{w}");
+    }
+
+    #[test]
+    fn health_codes_round_trip() {
+        for h in [Health::Healthy, Health::Straggler, Health::Suspect, Health::Dead] {
+            assert_eq!(Health::from_name(h.name()), Some(h));
+        }
+        assert_eq!(Health::from_name("zombie"), None);
+    }
+}

@@ -1,0 +1,617 @@
+//! Prometheus text exposition (format 0.0.4) and the minimal blocking
+//! HTTP listener behind `--metrics-addr`.
+//!
+//! Everything is hand-rolled over `std::net` — no HTTP or metrics crate.
+//! [`render`] turns a [`TelemetrySnapshot`] into the text format,
+//! [`parse_exposition`]/[`lint_exposition`] parse it back and check
+//! naming/label/HELP/TYPE rules (used by the round-trip tests so the
+//! endpoint stays scrapeable by a real Prometheus), and
+//! [`MetricsServer`] serves `/metrics` (text exposition),
+//! `/snapshot.json` (the JSON-lines record, which `wagma top --addr`
+//! polls), and `/healthz` from the sampler's latest-snapshot slot. This
+//! listener is deliberately tiny: it is the seed of the `wagma serve`
+//! direction in the ROADMAP, not a general HTTP server.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::registry::{snapshot_from_json, snapshot_json, TelemetrySnapshot};
+use super::sampler::SharedSnapshot;
+
+const NS_PER_SEC: f64 = 1e9;
+
+fn family(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, String)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(v);
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&format!("{value}"));
+    out.push('\n');
+}
+
+/// Render one snapshot as Prometheus text exposition.
+pub fn render(snap: &TelemetrySnapshot) -> String {
+    let mut o = String::with_capacity(4096);
+    let rank = |r: usize| vec![("rank", r.to_string())];
+
+    family(&mut o, "wagma_steps_total", "Training steps completed per rank.", "counter");
+    for r in &snap.ranks {
+        sample(&mut o, "wagma_steps_total", &rank(r.rank), r.steps as f64);
+    }
+    family(
+        &mut o,
+        "wagma_wait_app_seconds_total",
+        "App-thread exposed communication wait per rank.",
+        "counter",
+    );
+    for r in &snap.ranks {
+        sample(
+            &mut o,
+            "wagma_wait_app_seconds_total",
+            &rank(r.rank),
+            r.wait_app_ns as f64 / NS_PER_SEC,
+        );
+    }
+    family(
+        &mut o,
+        "wagma_wait_engine_seconds_total",
+        "Engine-thread blocked-receive wait per rank by attribution class.",
+        "counter",
+    );
+    for r in &snap.ranks {
+        sample(
+            &mut o,
+            "wagma_wait_engine_seconds_total",
+            &[("class", "group".into()), ("rank", r.rank.to_string())],
+            r.wait_group_ns as f64 / NS_PER_SEC,
+        );
+        sample(
+            &mut o,
+            "wagma_wait_engine_seconds_total",
+            &[("class", "sync".into()), ("rank", r.rank.to_string())],
+            r.wait_sync_ns as f64 / NS_PER_SEC,
+        );
+    }
+    family(&mut o, "wagma_wire_bytes_total", "Bytes put on the wire per rank.", "counter");
+    for r in &snap.ranks {
+        sample(&mut o, "wagma_wire_bytes_total", &rank(r.rank), r.wire_bytes as f64);
+    }
+    family(
+        &mut o,
+        "wagma_skipped_phases_total",
+        "Group-exchange phases completed as identity after a peer timed out.",
+        "counter",
+    );
+    for r in &snap.ranks {
+        sample(&mut o, "wagma_skipped_phases_total", &rank(r.rank), r.skipped_phases as f64);
+    }
+    family(
+        &mut o,
+        "wagma_degraded_iters_total",
+        "Iterations that took at least one degraded path.",
+        "counter",
+    );
+    for r in &snap.ranks {
+        sample(&mut o, "wagma_degraded_iters_total", &rank(r.rank), r.degraded_iters as f64);
+    }
+    family(
+        &mut o,
+        "wagma_staleness_iters_total",
+        "Sum of contribution staleness (iterations) folded into collectives.",
+        "counter",
+    );
+    for r in &snap.ranks {
+        sample(&mut o, "wagma_staleness_iters_total", &rank(r.rank), r.staleness_sum as f64);
+    }
+    family(
+        &mut o,
+        "wagma_staleness_samples_total",
+        "Number of staleness samples behind wagma_staleness_iters_total.",
+        "counter",
+    );
+    for r in &snap.ranks {
+        sample(&mut o, "wagma_staleness_samples_total", &rank(r.rank), r.staleness_count as f64);
+    }
+    family(
+        &mut o,
+        "wagma_membership_state",
+        "fault::Membership verdict: 0 healthy, 1 suspect, 2 dead.",
+        "gauge",
+    );
+    for r in &snap.ranks {
+        sample(&mut o, "wagma_membership_state", &rank(r.rank), r.membership as f64);
+    }
+    family(
+        &mut o,
+        "wagma_health_state",
+        "Folded health: 0 healthy, 1 straggler, 2 suspect, 3 dead.",
+        "gauge",
+    );
+    for r in &snap.ranks {
+        sample(&mut o, "wagma_health_state", &rank(r.rank), r.health.code() as f64);
+    }
+    family(
+        &mut o,
+        "wagma_straggler",
+        "1 while the straggler detector flags this rank.",
+        "gauge",
+    );
+    for r in &snap.ranks {
+        sample(
+            &mut o,
+            "wagma_straggler",
+            &rank(r.rank),
+            if r.health == super::Health::Straggler { 1.0 } else { 0.0 },
+        );
+    }
+    family(
+        &mut o,
+        "wagma_wait_for_peer_p99_seconds",
+        "Window p99 of time peers spent blocked waiting on this rank.",
+        "gauge",
+    );
+    for r in &snap.ranks {
+        sample(
+            &mut o,
+            "wagma_wait_for_peer_p99_seconds",
+            &rank(r.rank),
+            r.window_wait_for_p99_ns as f64 / NS_PER_SEC,
+        );
+    }
+    family(
+        &mut o,
+        "wagma_window_steps",
+        "Steps completed during the last sampler window (step rate proxy).",
+        "gauge",
+    );
+    for r in &snap.ranks {
+        sample(&mut o, "wagma_window_steps", &rank(r.rank), r.window_steps as f64);
+    }
+    family(
+        &mut o,
+        "wagma_fleet_median_wait_p99_seconds",
+        "Fleet lower-median of the per-rank window wait-for p99s.",
+        "gauge",
+    );
+    sample(
+        &mut o,
+        "wagma_fleet_median_wait_p99_seconds",
+        &[],
+        snap.fleet_median_p99_ns as f64 / NS_PER_SEC,
+    );
+    family(&mut o, "wagma_telemetry_window", "Sampler window sequence number.", "gauge");
+    sample(&mut o, "wagma_telemetry_window", &[], snap.window as f64);
+    family(&mut o, "wagma_ranks", "World size of the instrumented run.", "gauge");
+    sample(&mut o, "wagma_ranks", &[], snap.p as f64);
+    family(
+        &mut o,
+        "wagma_dropped_trace_events_total",
+        "Trace ring overflows across all ranks.",
+        "counter",
+    );
+    sample(&mut o, "wagma_dropped_trace_events_total", &[], snap.dropped_trace_events as f64);
+    family(
+        &mut o,
+        "wagma_sampler_overruns_total",
+        "Sampler ticks that exceeded the sampling interval.",
+        "counter",
+    );
+    sample(&mut o, "wagma_sampler_overruns_total", &[], snap.sampler_overruns as f64);
+    o
+}
+
+/// One parsed exposition sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PromSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_labels(body: &str) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    let body = body.trim();
+    if body.is_empty() {
+        return Ok(out);
+    }
+    for pair in body.split(',') {
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| format!("label pair `{pair}` has no `=`"))?;
+        let v = v.trim();
+        if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
+            return Err(format!("label value `{v}` not quoted"));
+        }
+        out.push((k.trim().to_string(), v[1..v.len() - 1].to_string()));
+    }
+    Ok(out)
+}
+
+/// Parse the text exposition into samples (comments skipped).
+pub fn parse_exposition(text: &str) -> Result<Vec<PromSample>, String> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("sample line `{line}` has no value"))?;
+        let value: f64 = value
+            .parse()
+            .map_err(|_| format!("sample line `{line}`: bad float `{value}`"))?;
+        let (name, labels) = match head.find('{') {
+            Some(i) => {
+                if !head.ends_with('}') {
+                    return Err(format!("sample line `{line}`: unterminated label set"));
+                }
+                (&head[..i], parse_labels(&head[i + 1..head.len() - 1])?)
+            }
+            None => (head, Vec::new()),
+        };
+        out.push(PromSample { name: name.to_string(), labels, value });
+    }
+    Ok(out)
+}
+
+/// Format lint: metric/label naming, HELP+TYPE present before samples,
+/// known TYPE values, counters suffixed `_total` (our convention so the
+/// exposition follows Prometheus best practice).
+pub fn lint_exposition(text: &str) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    let mut helps: BTreeMap<String, bool> = BTreeMap::new();
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            if !valid_metric_name(name) {
+                return Err(format!("HELP for invalid metric name `{name}`"));
+            }
+            helps.insert(name.to_string(), true);
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("metric `{name}` has unknown TYPE `{kind}`"));
+            }
+            if kind == "counter" && !name.ends_with("_total") {
+                return Err(format!("counter `{name}` does not end in _total"));
+            }
+            types.insert(name.to_string(), kind.to_string());
+        } else if line.starts_with('#') {
+            continue;
+        } else {
+            let sample = parse_exposition(line)?
+                .pop()
+                .ok_or_else(|| format!("unparseable sample `{line}`"))?;
+            if !valid_metric_name(&sample.name) {
+                return Err(format!("invalid metric name `{}`", sample.name));
+            }
+            if !helps.contains_key(&sample.name) {
+                return Err(format!("sample `{}` has no preceding HELP", sample.name));
+            }
+            if !types.contains_key(&sample.name) {
+                return Err(format!("sample `{}` has no preceding TYPE", sample.name));
+            }
+            for (k, _) in &sample.labels {
+                if !valid_label_name(k) {
+                    return Err(format!("metric `{}`: invalid label name `{k}`", sample.name));
+                }
+            }
+        }
+    }
+    if helps.is_empty() {
+        return Err("exposition contains no metric families".into());
+    }
+    Ok(())
+}
+
+/// Minimal blocking HTTP listener serving the latest snapshot.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    requests: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 picks an ephemeral
+    /// port, see [`MetricsServer::local_addr`]) and serve until dropped.
+    pub fn serve(addr: &str, latest: SharedSnapshot) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(AtomicU64::new(0));
+        let (stop_t, req_t) = (Arc::clone(&stop), Arc::clone(&requests));
+        let handle = std::thread::Builder::new()
+            .name("wagma-metrics".into())
+            .spawn(move || loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if handle_conn(stream, &latest).is_ok() {
+                            req_t.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if stop_t.load(Ordering::Acquire) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => {
+                        if stop_t.load(Ordering::Acquire) {
+                            return;
+                        }
+                    }
+                }
+            })?;
+        Ok(MetricsServer { addr: local, stop, requests, handle: Some(handle) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Successfully answered requests (any route).
+    pub fn requests_served(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())
+}
+
+fn handle_conn(mut stream: TcpStream, latest: &SharedSnapshot) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Read until the end of the request head (we ignore any body).
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") && buf.len() < 8192 {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return write_response(&mut stream, "405 Method Not Allowed", "text/plain", "GET only\n");
+    }
+    let snap = latest.lock().ok().and_then(|s| s.clone());
+    match path {
+        "/metrics" => match snap {
+            Some(s) => write_response(
+                &mut stream,
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &render(&s),
+            ),
+            None => write_response(
+                &mut stream,
+                "503 Service Unavailable",
+                "text/plain",
+                "no snapshot yet\n",
+            ),
+        },
+        "/snapshot.json" => match snap {
+            Some(s) => write_response(
+                &mut stream,
+                "200 OK",
+                "application/json",
+                &snapshot_json(&s).to_string(),
+            ),
+            None => write_response(
+                &mut stream,
+                "503 Service Unavailable",
+                "application/json",
+                "null",
+            ),
+        },
+        "/healthz" => write_response(&mut stream, "200 OK", "text/plain", "ok\n"),
+        "/" => write_response(
+            &mut stream,
+            "200 OK",
+            "text/plain",
+            "wagma telemetry: /metrics /snapshot.json /healthz\n",
+        ),
+        _ => write_response(&mut stream, "404 Not Found", "text/plain", "not found\n"),
+    }
+}
+
+/// Blocking GET of `/snapshot.json` from a running [`MetricsServer`]
+/// (`wagma top --addr`). `addr` is `host:port`.
+pub fn fetch_snapshot(addr: &str) -> Result<TelemetrySnapshot, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(2)))
+        .map_err(|e| e.to_string())?;
+    let req = format!("GET /snapshot.json HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).map_err(|e| e.to_string())?;
+    let (head, body) = resp
+        .split_once("\r\n\r\n")
+        .ok_or("malformed HTTP response")?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains("200") {
+        return Err(format!("{addr}: {status}"));
+    }
+    let j = Json::parse(body).map_err(|e| format!("snapshot body: {e}"))?;
+    snapshot_from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::RankSnapshot;
+    use super::super::Health;
+    use super::*;
+
+    fn snap() -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            window: 2,
+            p: 2,
+            ranks: (0..2)
+                .map(|r| RankSnapshot {
+                    rank: r,
+                    steps: 7,
+                    window_steps: 3,
+                    wait_app_ns: 1_500_000,
+                    wait_group_ns: 2_000_000,
+                    wait_sync_ns: 500_000,
+                    wire_bytes: 65536,
+                    skipped_phases: 1,
+                    degraded_iters: 1,
+                    staleness_sum: 4,
+                    staleness_count: 7,
+                    membership: 0,
+                    window_wait_for_p99_ns: 900_000,
+                    total_wait_for_ns: 3_000_000,
+                    health: if r == 1 { Health::Straggler } else { Health::Healthy },
+                })
+                .collect(),
+            fleet_median_p99_ns: 450_000,
+            dropped_trace_events: 2,
+            sampler_overruns: 1,
+        }
+    }
+
+    #[test]
+    fn render_lints_and_parses_back() {
+        let text = render(&snap());
+        lint_exposition(&text).expect("lint");
+        let samples = parse_exposition(&text).expect("parse");
+        let find = |name: &str, rank: &str| {
+            samples
+                .iter()
+                .find(|s| {
+                    s.name == name
+                        && s.labels.iter().any(|(k, v)| k == "rank" && v == rank)
+                })
+                .unwrap_or_else(|| panic!("missing {name}{{rank={rank}}}"))
+                .value
+        };
+        assert_eq!(find("wagma_steps_total", "0"), 7.0);
+        assert_eq!(find("wagma_wire_bytes_total", "1"), 65536.0);
+        assert_eq!(find("wagma_straggler", "1"), 1.0);
+        assert_eq!(find("wagma_straggler", "0"), 0.0);
+        assert_eq!(find("wagma_health_state", "1"), Health::Straggler.code() as f64);
+        let windows: Vec<_> =
+            samples.iter().filter(|s| s.name == "wagma_telemetry_window").collect();
+        assert_eq!(windows.len(), 1);
+        assert_eq!(windows[0].value, 2.0);
+    }
+
+    #[test]
+    fn lint_rejects_malformed_expositions() {
+        assert!(lint_exposition("wagma_x 1\n").is_err(), "sample without HELP/TYPE");
+        assert!(
+            lint_exposition("# HELP bad-name x\n# TYPE bad-name gauge\nbad-name 1\n").is_err(),
+            "invalid name"
+        );
+        assert!(
+            lint_exposition("# HELP wagma_c c\n# TYPE wagma_c counter\nwagma_c 1\n").is_err(),
+            "counter without _total"
+        );
+        assert!(lint_exposition("").is_err(), "empty exposition");
+    }
+
+    #[test]
+    fn server_serves_metrics_and_snapshot() {
+        let latest: SharedSnapshot = Arc::new(std::sync::Mutex::new(None));
+        let server = MetricsServer::serve("127.0.0.1:0", Arc::clone(&latest)).expect("bind");
+        let addr = server.local_addr().to_string();
+        // No snapshot yet: snapshot fetch reports the 503.
+        assert!(fetch_snapshot(&addr).is_err());
+        *latest.lock().expect("lock") = Some(snap());
+        let got = fetch_snapshot(&addr).expect("fetch");
+        assert_eq!(got, snap());
+        // Raw /metrics scrape lints.
+        let mut stream = TcpStream::connect(&addr).expect("connect");
+        stream
+            .write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+            .expect("write");
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).expect("read");
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        let body = resp.split_once("\r\n\r\n").expect("body").1;
+        lint_exposition(body).expect("scrape lints");
+        assert!(server.requests_served() >= 2);
+    }
+}

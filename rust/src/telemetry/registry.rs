@@ -1,0 +1,495 @@
+//! Lock-light per-rank metrics registry and the deterministic snapshot
+//! the sampler derives from it.
+//!
+//! Publishers (engine threads, app/worker threads, the fault paths) hold
+//! an `Arc<TelemetryRegistry>` and touch only pre-sized atomics: every
+//! publish is a handful of relaxed `fetch_add`/`fetch_max` calls into
+//! slots allocated once at registry construction, so instrumented runs
+//! stay allocation-free at steady state (pinned by the P=1 bit-identity
+//! test against `EngineStats::pool_allocs`). Rolling wait-for-peer
+//! distributions reuse the exact [`crate::trace::hist`] log2 bucketing
+//! through [`AtomicHistogram`], and snapshots rebuild a
+//! [`LogHistogram`] via `from_parts` so quantile math lives in one place.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::fault::PeerState;
+use crate::trace::{bucket_bounds, bucket_of, LogHistogram, N_BUCKETS};
+use crate::util::json::{self, Json};
+
+use super::Health;
+
+/// Concurrent log2-bucketed histogram sharing [`crate::trace::hist`]'s
+/// bucket semantics. Cumulative: the sampler computes per-window
+/// distributions by differencing consecutive [`AtomicHistogram::counts`]
+/// snapshots, so publishers never carry window state.
+pub struct AtomicHistogram {
+    counts: [AtomicU64; N_BUCKETS],
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> AtomicHistogram {
+        AtomicHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicHistogram {
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.min.fetch_min(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+    }
+
+    /// Cumulative per-bucket counts (the sampler's window-delta input).
+    pub fn counts(&self) -> [u64; N_BUCKETS] {
+        std::array::from_fn(|b| self.counts[b].load(Relaxed))
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    /// Cumulative view as a [`LogHistogram`] (shared quantile math).
+    pub fn load(&self) -> LogHistogram {
+        LogHistogram::from_parts(
+            self.counts(),
+            self.sum.load(Relaxed),
+            self.min.load(Relaxed),
+            self.max.load(Relaxed),
+        )
+    }
+}
+
+/// Build the histogram of one sampler window from two cumulative count
+/// snapshots. Exact min/max are only tracked cumulatively, so the window
+/// histogram synthesizes them from its lowest/highest non-empty bucket
+/// bounds — the same factor-of-2 resolution quantiles already have.
+pub fn window_hist(
+    cur: &[u64; N_BUCKETS],
+    prev: &[u64; N_BUCKETS],
+    sum_delta: u64,
+) -> LogHistogram {
+    let mut delta = [0u64; N_BUCKETS];
+    let mut min = u64::MAX;
+    let mut max = 0u64;
+    for b in 0..N_BUCKETS {
+        let d = cur[b].saturating_sub(prev[b]);
+        delta[b] = d;
+        if d > 0 {
+            let (lo, hi) = bucket_bounds(b);
+            min = min.min(lo);
+            max = max.max(hi);
+        }
+    }
+    LogHistogram::from_parts(delta, sum_delta, min, max)
+}
+
+/// One rank's slot in the registry — atomics only, sized at construction.
+///
+/// `wait_for` holds nanoseconds *other* ranks spent blocked in a receive
+/// waiting on **this** rank (the blocked engine attributes each wait to
+/// the partner it waited on). A slow rank therefore accumulates the high
+/// wait-for-peer distribution itself, which is what the straggler
+/// detector thresholds.
+#[derive(Default)]
+pub struct RankTelemetry {
+    steps: AtomicU64,
+    wait_app_ns: AtomicU64,
+    wait_group_ns: AtomicU64,
+    wait_sync_ns: AtomicU64,
+    wire_bytes: AtomicU64,
+    skipped_phases: AtomicU64,
+    degraded_iters: AtomicU64,
+    staleness_sum: AtomicU64,
+    staleness_count: AtomicU64,
+    /// [`PeerState`] code: 0 healthy, 1 suspect, 2 dead.
+    membership: AtomicU64,
+    wait_for: AtomicHistogram,
+}
+
+impl RankTelemetry {
+    pub fn add_step(&self) {
+        self.steps.fetch_add(1, Relaxed);
+    }
+
+    pub fn add_wait_app_ns(&self, ns: u64) {
+        self.wait_app_ns.fetch_add(ns, Relaxed);
+    }
+
+    pub fn add_wait_group_ns(&self, ns: u64) {
+        self.wait_group_ns.fetch_add(ns, Relaxed);
+    }
+
+    pub fn add_wait_sync_ns(&self, ns: u64) {
+        self.wait_sync_ns.fetch_add(ns, Relaxed);
+    }
+
+    pub fn add_wire_bytes(&self, b: u64) {
+        self.wire_bytes.fetch_add(b, Relaxed);
+    }
+
+    pub fn add_skipped_phases(&self, n: u64) {
+        self.skipped_phases.fetch_add(n, Relaxed);
+    }
+
+    pub fn add_degraded_iter(&self) {
+        self.degraded_iters.fetch_add(1, Relaxed);
+    }
+
+    pub fn add_staleness(&self, s: u64) {
+        self.staleness_sum.fetch_add(s, Relaxed);
+        self.staleness_count.fetch_add(1, Relaxed);
+    }
+
+    /// Record nanoseconds a peer spent blocked waiting on this rank.
+    pub fn record_wait_for_ns(&self, ns: u64) {
+        self.wait_for.record(ns);
+    }
+
+    pub fn wait_for(&self) -> &AtomicHistogram {
+        &self.wait_for
+    }
+
+    /// Dead is sticky; suspect never downgrades it.
+    pub fn mark_suspect(&self) {
+        let _ = self.membership.compare_exchange(0, 1, Relaxed, Relaxed);
+    }
+
+    pub fn mark_dead(&self) {
+        self.membership.store(2, Relaxed);
+    }
+
+    /// Clears a suspect verdict (leaves dead untouched).
+    pub fn heal(&self) {
+        let _ = self.membership.compare_exchange(1, 0, Relaxed, Relaxed);
+    }
+
+    pub fn set_membership(&self, s: PeerState) {
+        match s {
+            PeerState::Healthy => self.heal(),
+            PeerState::Suspect => self.mark_suspect(),
+            PeerState::Dead => self.mark_dead(),
+        }
+    }
+
+    pub fn membership_code(&self) -> u64 {
+        self.membership.load(Relaxed)
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Relaxed)
+    }
+
+    pub fn wait_app_ns(&self) -> u64 {
+        self.wait_app_ns.load(Relaxed)
+    }
+
+    pub fn wait_group_ns(&self) -> u64 {
+        self.wait_group_ns.load(Relaxed)
+    }
+
+    pub fn wait_sync_ns(&self) -> u64 {
+        self.wait_sync_ns.load(Relaxed)
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bytes.load(Relaxed)
+    }
+
+    pub fn skipped_phases(&self) -> u64 {
+        self.skipped_phases.load(Relaxed)
+    }
+
+    pub fn degraded_iters(&self) -> u64 {
+        self.degraded_iters.load(Relaxed)
+    }
+
+    pub fn staleness_sum(&self) -> u64 {
+        self.staleness_sum.load(Relaxed)
+    }
+
+    pub fn staleness_count(&self) -> u64 {
+        self.staleness_count.load(Relaxed)
+    }
+}
+
+/// The per-run registry: one [`RankTelemetry`] per rank plus run-level
+/// loss counters. Shared as `Arc<TelemetryRegistry>`; publishing never
+/// takes a lock or allocates.
+pub struct TelemetryRegistry {
+    ranks: Vec<RankTelemetry>,
+    dropped_trace_events: AtomicU64,
+    sampler_overruns: AtomicU64,
+}
+
+impl std::fmt::Debug for TelemetryRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TelemetryRegistry(p={})", self.ranks.len())
+    }
+}
+
+impl TelemetryRegistry {
+    pub fn new(p: usize) -> TelemetryRegistry {
+        TelemetryRegistry {
+            ranks: (0..p).map(|_| RankTelemetry::default()).collect(),
+            dropped_trace_events: AtomicU64::new(0),
+            sampler_overruns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn rank(&self, r: usize) -> &RankTelemetry {
+        &self.ranks[r]
+    }
+
+    pub fn add_dropped_trace_events(&self, n: u64) {
+        self.dropped_trace_events.fetch_add(n, Relaxed);
+    }
+
+    pub fn dropped_trace_events(&self) -> u64 {
+        self.dropped_trace_events.load(Relaxed)
+    }
+
+    pub fn add_sampler_overrun(&self) {
+        self.sampler_overruns.fetch_add(1, Relaxed);
+    }
+
+    pub fn sampler_overruns(&self) -> u64 {
+        self.sampler_overruns.load(Relaxed)
+    }
+}
+
+/// One rank's row in a [`TelemetrySnapshot`] — plain values, comparable
+/// and JSON-serializable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankSnapshot {
+    pub rank: usize,
+    pub steps: u64,
+    /// Steps completed during this sampler window (step rate × interval).
+    pub window_steps: u64,
+    pub wait_app_ns: u64,
+    pub wait_group_ns: u64,
+    pub wait_sync_ns: u64,
+    pub wire_bytes: u64,
+    pub skipped_phases: u64,
+    pub degraded_iters: u64,
+    pub staleness_sum: u64,
+    pub staleness_count: u64,
+    /// 0 healthy / 1 suspect / 2 dead (mirrors [`PeerState`]).
+    pub membership: u64,
+    /// p99 of the wait-for-peer distribution over this window (ns).
+    pub window_wait_for_p99_ns: u64,
+    /// Cumulative nanoseconds peers spent blocked waiting on this rank.
+    pub total_wait_for_ns: u64,
+    pub health: Health,
+}
+
+/// Deterministic sampler output: everything the sinks (Prometheus, JSON
+/// lines, `wagma top`) render. Counter fields are cumulative and
+/// code-structural, which is what the CI baseline gate compares.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetrySnapshot {
+    /// Sampler window sequence number (1-based).
+    pub window: u64,
+    pub p: usize,
+    pub ranks: Vec<RankSnapshot>,
+    /// Fleet (lower) median of the per-rank window wait-for p99s.
+    pub fleet_median_p99_ns: u64,
+    pub dropped_trace_events: u64,
+    pub sampler_overruns: u64,
+}
+
+impl TelemetrySnapshot {
+    pub fn total_steps(&self) -> u64 {
+        self.ranks.iter().map(|r| r.steps).sum()
+    }
+
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.wire_bytes).sum()
+    }
+}
+
+fn rank_json(r: &RankSnapshot) -> Json {
+    json::obj(vec![
+        ("rank", json::num(r.rank as f64)),
+        ("steps", json::num(r.steps as f64)),
+        ("window_steps", json::num(r.window_steps as f64)),
+        ("wait_app_ns", json::num(r.wait_app_ns as f64)),
+        ("wait_group_ns", json::num(r.wait_group_ns as f64)),
+        ("wait_sync_ns", json::num(r.wait_sync_ns as f64)),
+        ("wire_bytes", json::num(r.wire_bytes as f64)),
+        ("skipped_phases", json::num(r.skipped_phases as f64)),
+        ("degraded_iters", json::num(r.degraded_iters as f64)),
+        ("staleness_sum", json::num(r.staleness_sum as f64)),
+        ("staleness_count", json::num(r.staleness_count as f64)),
+        ("membership", json::num(r.membership as f64)),
+        ("window_wait_for_p99_ns", json::num(r.window_wait_for_p99_ns as f64)),
+        ("total_wait_for_ns", json::num(r.total_wait_for_ns as f64)),
+        ("health", json::s(r.health.name())),
+    ])
+}
+
+/// One JSON-lines record (deterministic key order via the `Json` BTreeMap).
+pub fn snapshot_json(s: &TelemetrySnapshot) -> Json {
+    json::obj(vec![
+        ("window", json::num(s.window as f64)),
+        ("p", json::num(s.p as f64)),
+        ("ranks", json::arr(s.ranks.iter().map(rank_json).collect())),
+        ("fleet_median_p99_ns", json::num(s.fleet_median_p99_ns as f64)),
+        ("dropped_trace_events", json::num(s.dropped_trace_events as f64)),
+        ("sampler_overruns", json::num(s.sampler_overruns as f64)),
+    ])
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .map(|v| v as u64)
+        .ok_or_else(|| format!("snapshot json: missing numeric field `{key}`"))
+}
+
+fn rank_from_json(j: &Json) -> Result<RankSnapshot, String> {
+    let health = j
+        .get("health")
+        .and_then(Json::as_str)
+        .ok_or("snapshot json: missing `health`")?;
+    Ok(RankSnapshot {
+        rank: get_u64(j, "rank")? as usize,
+        steps: get_u64(j, "steps")?,
+        window_steps: get_u64(j, "window_steps")?,
+        wait_app_ns: get_u64(j, "wait_app_ns")?,
+        wait_group_ns: get_u64(j, "wait_group_ns")?,
+        wait_sync_ns: get_u64(j, "wait_sync_ns")?,
+        wire_bytes: get_u64(j, "wire_bytes")?,
+        skipped_phases: get_u64(j, "skipped_phases")?,
+        degraded_iters: get_u64(j, "degraded_iters")?,
+        staleness_sum: get_u64(j, "staleness_sum")?,
+        staleness_count: get_u64(j, "staleness_count")?,
+        membership: get_u64(j, "membership")?,
+        window_wait_for_p99_ns: get_u64(j, "window_wait_for_p99_ns")?,
+        total_wait_for_ns: get_u64(j, "total_wait_for_ns")?,
+        health: Health::from_name(health)
+            .ok_or_else(|| format!("snapshot json: unknown health `{health}`"))?,
+    })
+}
+
+/// Parse one JSON-lines record back into a snapshot (round-trip of
+/// [`snapshot_json`]; used by `wagma top --file` and the tests).
+pub fn snapshot_from_json(j: &Json) -> Result<TelemetrySnapshot, String> {
+    let ranks = j
+        .get("ranks")
+        .and_then(Json::as_arr)
+        .ok_or("snapshot json: missing `ranks` array")?
+        .iter()
+        .map(rank_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(TelemetrySnapshot {
+        window: get_u64(j, "window")?,
+        p: get_u64(j, "p")? as usize,
+        ranks,
+        fleet_median_p99_ns: get_u64(j, "fleet_median_p99_ns")?,
+        dropped_trace_events: get_u64(j, "dropped_trace_events")?,
+        sampler_overruns: get_u64(j, "sampler_overruns")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_histogram_matches_loghistogram() {
+        let a = AtomicHistogram::default();
+        let mut h = LogHistogram::default();
+        for v in [0u64, 1, 3, 17, 1023, 1024, 999_999] {
+            a.record(v);
+            h.record(v);
+        }
+        let loaded = a.load();
+        assert_eq!(loaded.count(), h.count());
+        assert_eq!(loaded.sum(), h.sum());
+        assert_eq!(loaded.min(), h.min());
+        assert_eq!(loaded.max(), h.max());
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(loaded.quantile(q), h.quantile(q));
+        }
+    }
+
+    #[test]
+    fn window_hist_is_count_delta() {
+        let a = AtomicHistogram::default();
+        a.record(10);
+        a.record(20);
+        let prev = a.counts();
+        let prev_sum = a.sum();
+        a.record(1_000_000);
+        a.record(1_000_001);
+        let w = window_hist(&a.counts(), &prev, a.sum() - prev_sum);
+        assert_eq!(w.count(), 2);
+        assert_eq!(w.sum(), 2_000_001);
+        // Window min/max are bucket bounds of the only non-empty bucket.
+        let b = bucket_of(1_000_000);
+        let (lo, hi) = bucket_bounds(b);
+        assert_eq!(w.min(), lo);
+        assert_eq!(w.max(), hi);
+    }
+
+    #[test]
+    fn membership_dead_is_sticky() {
+        let r = RankTelemetry::default();
+        assert_eq!(r.membership_code(), 0);
+        r.mark_suspect();
+        assert_eq!(r.membership_code(), 1);
+        r.heal();
+        assert_eq!(r.membership_code(), 0);
+        r.mark_dead();
+        r.mark_suspect();
+        r.heal();
+        assert_eq!(r.membership_code(), 2);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let snap = TelemetrySnapshot {
+            window: 3,
+            p: 2,
+            ranks: (0..2)
+                .map(|r| RankSnapshot {
+                    rank: r,
+                    steps: 10 + r as u64,
+                    window_steps: 2,
+                    wait_app_ns: 100,
+                    wait_group_ns: 200,
+                    wait_sync_ns: 50,
+                    wire_bytes: 4096,
+                    skipped_phases: 0,
+                    degraded_iters: 0,
+                    staleness_sum: 5,
+                    staleness_count: 9,
+                    membership: 0,
+                    window_wait_for_p99_ns: 777,
+                    total_wait_for_ns: 1234,
+                    health: if r == 1 { Health::Straggler } else { Health::Healthy },
+                })
+                .collect(),
+            fleet_median_p99_ns: 777,
+            dropped_trace_events: 0,
+            sampler_overruns: 0,
+        };
+        let text = snapshot_json(&snap).to_string();
+        let back = snapshot_from_json(&Json::parse(&text).expect("parse")).expect("decode");
+        assert_eq!(back, snap);
+    }
+}

@@ -1,0 +1,336 @@
+//! The sampler: periodically snapshots the registry into a deterministic
+//! [`TelemetrySnapshot`] and fans it out to sinks.
+//!
+//! [`TelemetryHub`] holds the sampler-side state (previous cumulative
+//! histogram counts for window deltas, the straggler detector) and
+//! exposes a synchronous [`TelemetryHub::tick`] so tests and the
+//! simulator can drive windows deterministically without a thread.
+//! [`Sampler`] wraps a hub in a background thread at a configurable
+//! interval; a tick that takes longer than the interval counts as an
+//! overrun (surfaced in the end-of-run warning alongside dropped trace
+//! events). The latest snapshot is also published into a shared slot the
+//! metrics HTTP server and `wagma top` read from.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::trace::N_BUCKETS;
+
+use super::registry::{
+    snapshot_json, window_hist, RankSnapshot, TelemetryRegistry, TelemetrySnapshot,
+};
+use super::straggler::{StragglerConfig, StragglerDetector};
+use super::top::render_top;
+use super::Health;
+
+/// Shared slot holding the most recent snapshot (server/`top` read side).
+pub type SharedSnapshot = Arc<Mutex<Option<TelemetrySnapshot>>>;
+
+pub fn shared_snapshot() -> SharedSnapshot {
+    Arc::new(Mutex::new(None))
+}
+
+/// Sampler-side window state over one [`TelemetryRegistry`].
+pub struct TelemetryHub {
+    registry: Arc<TelemetryRegistry>,
+    detector: StragglerDetector,
+    prev_counts: Vec<[u64; N_BUCKETS]>,
+    prev_sums: Vec<u64>,
+    prev_steps: Vec<u64>,
+    window: u64,
+}
+
+impl TelemetryHub {
+    pub fn new(registry: Arc<TelemetryRegistry>, cfg: StragglerConfig) -> TelemetryHub {
+        let p = registry.p();
+        TelemetryHub {
+            registry,
+            detector: StragglerDetector::new(p, cfg),
+            prev_counts: vec![[0u64; N_BUCKETS]; p],
+            prev_sums: vec![0; p],
+            prev_steps: vec![0; p],
+            window: 0,
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<TelemetryRegistry> {
+        &self.registry
+    }
+
+    /// Close the current window: snapshot every rank, difference the
+    /// wait-for histograms against the previous window, run the straggler
+    /// detector, and fold membership + straggler verdicts into one
+    /// [`Health`] per rank (dead ≻ suspect ≻ straggler ≻ healthy).
+    pub fn tick(&mut self) -> TelemetrySnapshot {
+        self.window += 1;
+        let p = self.registry.p();
+        let mut p99s = vec![0u64; p];
+        let mut rows = Vec::with_capacity(p);
+        for r in 0..p {
+            let slot = self.registry.rank(r);
+            let counts = slot.wait_for().counts();
+            let sum = slot.wait_for().sum();
+            let win = window_hist(&counts, &self.prev_counts[r], sum - self.prev_sums[r]);
+            p99s[r] = win.quantile(0.99) as u64;
+            self.prev_counts[r] = counts;
+            self.prev_sums[r] = sum;
+            rows.push((slot, sum));
+        }
+        let median = self.detector.observe(&p99s);
+        let ranks = rows
+            .into_iter()
+            .enumerate()
+            .map(|(r, (slot, wait_for_sum))| {
+                let steps = slot.steps();
+                let window_steps = steps - self.prev_steps[r];
+                self.prev_steps[r] = steps;
+                let membership = slot.membership_code();
+                let health = match membership {
+                    2 => Health::Dead,
+                    1 => Health::Suspect,
+                    _ if self.detector.is_straggler(r) => Health::Straggler,
+                    _ => Health::Healthy,
+                };
+                RankSnapshot {
+                    rank: r,
+                    steps,
+                    window_steps,
+                    wait_app_ns: slot.wait_app_ns(),
+                    wait_group_ns: slot.wait_group_ns(),
+                    wait_sync_ns: slot.wait_sync_ns(),
+                    wire_bytes: slot.wire_bytes(),
+                    skipped_phases: slot.skipped_phases(),
+                    degraded_iters: slot.degraded_iters(),
+                    staleness_sum: slot.staleness_sum(),
+                    staleness_count: slot.staleness_count(),
+                    membership,
+                    window_wait_for_p99_ns: p99s[r],
+                    total_wait_for_ns: wait_for_sum,
+                    health,
+                }
+            })
+            .collect();
+        TelemetrySnapshot {
+            window: self.window,
+            p,
+            ranks,
+            fleet_median_p99_ns: median,
+            dropped_trace_events: self.registry.dropped_trace_events(),
+            sampler_overruns: self.registry.sampler_overruns(),
+        }
+    }
+}
+
+/// A snapshot consumer. Sinks run on the sampler thread; errors are
+/// counted, not fatal (telemetry must never take the run down).
+pub trait Sink: Send {
+    fn publish(&mut self, snap: &TelemetrySnapshot) -> std::io::Result<()>;
+}
+
+/// Appends one JSON object per snapshot to a file (`--telemetry FILE`).
+/// Clonable around an `Arc<Mutex<File>>` so several samplers (one per
+/// bench preset) can share one output file.
+#[derive(Clone)]
+pub struct JsonLinesSink {
+    file: Arc<Mutex<std::fs::File>>,
+}
+
+impl JsonLinesSink {
+    pub fn create(path: &str) -> std::io::Result<JsonLinesSink> {
+        Ok(JsonLinesSink { file: Arc::new(Mutex::new(std::fs::File::create(path)?)) })
+    }
+}
+
+impl Sink for JsonLinesSink {
+    fn publish(&mut self, snap: &TelemetrySnapshot) -> std::io::Result<()> {
+        let line = snapshot_json(snap).to_string();
+        let mut f = self.file.lock().map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::Other, "telemetry file lock poisoned")
+        })?;
+        writeln!(f, "{line}")
+    }
+}
+
+/// Redraws the `wagma top` dashboard on stderr every window (`--top` on
+/// `train`/`bench`).
+#[derive(Default)]
+pub struct TopSink {
+    frames: u64,
+}
+
+impl Sink for TopSink {
+    fn publish(&mut self, snap: &TelemetrySnapshot) -> std::io::Result<()> {
+        let frame = render_top(snap, 80);
+        // Home + clear-to-end keeps the dashboard in place on a TTY while
+        // staying harmless (plain frames) when stderr is a file.
+        if self.frames > 0 {
+            eprint!("\x1b[H\x1b[J");
+        }
+        eprint!("{frame}");
+        self.frames += 1;
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerConfig {
+    pub interval: Duration,
+    pub straggler: StragglerConfig,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> SamplerConfig {
+        SamplerConfig { interval: Duration::from_millis(250), straggler: StragglerConfig::default() }
+    }
+}
+
+/// What the sampler thread hands back at shutdown.
+#[derive(Debug)]
+pub struct SamplerReport {
+    pub windows: u64,
+    pub overruns: u64,
+    pub sink_errors: u64,
+    pub last: Option<TelemetrySnapshot>,
+}
+
+/// Background sampler thread. [`Sampler::stop`] requests one final tick
+/// (so the run's closing counters always reach the sinks) and joins.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<SamplerReport>,
+}
+
+impl Sampler {
+    pub fn spawn(
+        registry: Arc<TelemetryRegistry>,
+        cfg: SamplerConfig,
+        mut sinks: Vec<Box<dyn Sink>>,
+        latest: SharedSnapshot,
+    ) -> Sampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("telemetry-sampler".into())
+            .spawn(move || {
+                let mut hub = TelemetryHub::new(registry, cfg.straggler);
+                let mut sink_errors = 0u64;
+                loop {
+                    let t0 = Instant::now();
+                    let stopping = stop_t.load(Ordering::Acquire);
+                    let snap = hub.tick();
+                    for s in &mut sinks {
+                        if s.publish(&snap).is_err() {
+                            sink_errors += 1;
+                        }
+                    }
+                    let windows = snap.window;
+                    if let Ok(mut slot) = latest.lock() {
+                        *slot = Some(snap);
+                    }
+                    if stopping {
+                        return SamplerReport {
+                            windows,
+                            overruns: hub.registry().sampler_overruns(),
+                            sink_errors,
+                            last: latest.lock().ok().and_then(|s| s.clone()),
+                        };
+                    }
+                    let spent = t0.elapsed();
+                    if spent >= cfg.interval {
+                        hub.registry().add_sampler_overrun();
+                    } else {
+                        let mut left = cfg.interval - spent;
+                        // Sleep in short slices so stop() latency stays low.
+                        while !left.is_zero() && !stop_t.load(Ordering::Acquire) {
+                            let slice = left.min(Duration::from_millis(10));
+                            std::thread::sleep(slice);
+                            left = left.saturating_sub(slice);
+                        }
+                    }
+                }
+            })
+            .expect("spawn telemetry sampler thread");
+        Sampler { stop, handle }
+    }
+
+    /// Request the final window and join the thread.
+    pub fn stop(self) -> SamplerReport {
+        self.stop.store(true, Ordering::Release);
+        self.handle.join().unwrap_or(SamplerReport {
+            windows: 0,
+            overruns: 0,
+            sink_errors: 0,
+            last: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_windows_are_deltas_and_detector_folds_in() {
+        let reg = Arc::new(TelemetryRegistry::new(2));
+        let scfg = StragglerConfig { k: 2.0, w: 2, min_wait_ns: 1_000 };
+        let mut hub = TelemetryHub::new(Arc::clone(&reg), scfg);
+        for w in 0..3 {
+            for _ in 0..50 {
+                reg.rank(0).record_wait_for_ns(10_000);
+                reg.rank(1).record_wait_for_ns(900_000);
+            }
+            reg.rank(0).add_step();
+            let snap = hub.tick();
+            assert_eq!(snap.window, w + 1);
+            assert_eq!(snap.ranks[0].window_steps, 1);
+            assert!(snap.ranks[1].window_wait_for_p99_ns > snap.ranks[0].window_wait_for_p99_ns);
+            if w >= 1 {
+                assert_eq!(snap.ranks[1].health, Health::Straggler, "window {w}");
+            } else {
+                assert_eq!(snap.ranks[1].health, Health::Healthy);
+            }
+        }
+        // Quiet window: the delta histogram is empty, the flag clears.
+        let snap = hub.tick();
+        assert_eq!(snap.ranks[1].window_wait_for_p99_ns, 0);
+        assert_eq!(snap.ranks[1].health, Health::Healthy);
+        assert_eq!(snap.ranks[0].window_steps, 0);
+    }
+
+    #[test]
+    fn membership_outranks_straggler() {
+        let reg = Arc::new(TelemetryRegistry::new(2));
+        let scfg = StragglerConfig { k: 2.0, w: 1, min_wait_ns: 1_000 };
+        let mut hub = TelemetryHub::new(Arc::clone(&reg), scfg);
+        reg.rank(1).record_wait_for_ns(5_000_000);
+        reg.rank(1).mark_suspect();
+        let snap = hub.tick();
+        assert_eq!(snap.ranks[1].health, Health::Suspect);
+        reg.rank(1).mark_dead();
+        let snap = hub.tick();
+        assert_eq!(snap.ranks[1].health, Health::Dead);
+    }
+
+    #[test]
+    fn sampler_thread_final_tick_reaches_latest() {
+        let reg = Arc::new(TelemetryRegistry::new(1));
+        let latest = shared_snapshot();
+        let sampler = Sampler::spawn(
+            Arc::clone(&reg),
+            SamplerConfig { interval: Duration::from_millis(5), ..Default::default() },
+            vec![],
+            Arc::clone(&latest),
+        );
+        reg.rank(0).add_step();
+        reg.rank(0).add_wire_bytes(4096);
+        std::thread::sleep(Duration::from_millis(20));
+        let report = sampler.stop();
+        assert!(report.windows >= 1);
+        let last = report.last.expect("final snapshot");
+        assert_eq!(last.ranks[0].steps, 1);
+        assert_eq!(last.ranks[0].wire_bytes, 4096);
+        assert_eq!(latest.lock().expect("lock").as_ref().map(|s| s.window), Some(last.window));
+    }
+}

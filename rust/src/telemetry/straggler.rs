@@ -1,0 +1,124 @@
+//! Online straggler detection over sampler windows.
+//!
+//! Each window the sampler hands the detector one wait-for-peer p99 per
+//! rank (nanoseconds peers spent blocked waiting on that rank during the
+//! window). A rank is flagged [`Straggler`](super::Health::Straggler)
+//! once its p99 exceeds `k ×` the fleet (lower) median for `w`
+//! consecutive windows; the flag clears as soon as one window falls back
+//! under the threshold. A `min_wait_ns` floor keeps an idle fleet (median
+//! ≈ 0) from flagging scheduler noise.
+//!
+//! The detector only sees wait distributions; `fault::Membership`
+//! verdicts (suspect/dead) ride alongside in the snapshot and take
+//! precedence when the sampler folds both into a rank's
+//! [`Health`](super::Health).
+
+#[derive(Debug, Clone, Copy)]
+pub struct StragglerConfig {
+    /// Multiple of the fleet median p99 a rank must exceed.
+    pub k: f64,
+    /// Consecutive offending windows before the flag raises.
+    pub w: u32,
+    /// Absolute floor (ns): below this, a p99 never flags.
+    pub min_wait_ns: u64,
+}
+
+impl Default for StragglerConfig {
+    fn default() -> StragglerConfig {
+        StragglerConfig { k: 2.0, w: 3, min_wait_ns: 100_000 }
+    }
+}
+
+#[derive(Debug)]
+pub struct StragglerDetector {
+    cfg: StragglerConfig,
+    consecutive: Vec<u32>,
+    flagged: Vec<bool>,
+}
+
+impl StragglerDetector {
+    pub fn new(p: usize, cfg: StragglerConfig) -> StragglerDetector {
+        StragglerDetector { cfg, consecutive: vec![0; p], flagged: vec![false; p] }
+    }
+
+    pub fn config(&self) -> StragglerConfig {
+        self.cfg
+    }
+
+    /// Feed one window of per-rank p99s; returns the fleet median used.
+    /// Query verdicts through [`StragglerDetector::is_straggler`].
+    pub fn observe(&mut self, window_p99_ns: &[u64]) -> u64 {
+        assert_eq!(window_p99_ns.len(), self.consecutive.len());
+        let median = lower_median(window_p99_ns);
+        let thresh = (self.cfg.k * median as f64).max(self.cfg.min_wait_ns as f64);
+        for (r, &p99) in window_p99_ns.iter().enumerate() {
+            if p99 as f64 > thresh {
+                self.consecutive[r] = self.consecutive[r].saturating_add(1);
+            } else {
+                self.consecutive[r] = 0;
+            }
+            self.flagged[r] = self.consecutive[r] >= self.cfg.w;
+        }
+        median
+    }
+
+    pub fn is_straggler(&self, rank: usize) -> bool {
+        self.flagged[rank]
+    }
+
+    /// Offending-window streak for a rank (diagnostics).
+    pub fn streak(&self, rank: usize) -> u32 {
+        self.consecutive[rank]
+    }
+}
+
+/// Lower median: robust against the straggler's own sample inflating the
+/// fleet baseline in small fleets.
+fn lower_median(xs: &[u64]) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_unstable();
+    sorted[(sorted.len() - 1) / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(k: f64, w: u32) -> StragglerConfig {
+        StragglerConfig { k, w, min_wait_ns: 1_000 }
+    }
+
+    #[test]
+    fn flags_after_w_consecutive_windows_and_clears() {
+        let mut d = StragglerDetector::new(4, cfg(2.0, 3));
+        for i in 0..3 {
+            d.observe(&[10_000, 11_000, 9_000, 100_000]);
+            assert_eq!(d.is_straggler(3), i == 2, "window {i}");
+        }
+        assert!(!d.is_straggler(0));
+        // One quiet window clears the flag and the streak.
+        d.observe(&[10_000, 11_000, 9_000, 12_000]);
+        assert!(!d.is_straggler(3));
+        assert_eq!(d.streak(3), 0);
+    }
+
+    #[test]
+    fn min_wait_floor_suppresses_idle_noise() {
+        let mut d = StragglerDetector::new(2, StragglerConfig { k: 2.0, w: 1, min_wait_ns: 1_000_000 });
+        // Median 0, one rank at 500µs: above k×median but below the floor.
+        d.observe(&[0, 500_000]);
+        assert!(!d.is_straggler(1));
+        d.observe(&[0, 2_000_000]);
+        assert!(d.is_straggler(1));
+    }
+
+    #[test]
+    fn lower_median_is_straggler_robust() {
+        assert_eq!(lower_median(&[1, 2, 3, 1000]), 2);
+        assert_eq!(lower_median(&[5]), 5);
+        assert_eq!(lower_median(&[]), 0);
+    }
+}

@@ -1,0 +1,169 @@
+//! The `wagma top` dashboard: one plain-text frame per snapshot.
+//!
+//! Pure function of the snapshot so the CLI (live loop), the `--top`
+//! sink, and the tests all render identically. ASCII bars show each
+//! rank's window wait-for-peer p99 normalized to the fleet maximum; the
+//! health column carries the straggler/membership verdicts.
+
+use super::registry::TelemetrySnapshot;
+
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+pub fn fmt_ns(ns: u64) -> String {
+    let ns = ns as f64;
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.1}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Render one dashboard frame. `width` bounds the bar column.
+pub fn render_top(snap: &TelemetrySnapshot, width: usize) -> String {
+    let bar_w = width.clamp(40, 160) / 4;
+    let max_p99 = snap
+        .ranks
+        .iter()
+        .map(|r| r.window_wait_for_p99_ns)
+        .max()
+        .unwrap_or(0);
+    let mut out = String::with_capacity(256 + 96 * snap.ranks.len());
+    out.push_str(&format!(
+        "wagma top — window {} · {} ranks · fleet median wait p99 {}\n",
+        snap.window,
+        snap.p,
+        fmt_ns(snap.fleet_median_p99_ns)
+    ));
+    out.push_str(&format!(
+        "{:<5} {:<10} {:>8} {:>8} {:>12}  {:<bar$}  {:>10} {:>10} {:>9}\n",
+        "rank",
+        "health",
+        "steps",
+        "win-st",
+        "win-p99-wait",
+        "wait bar",
+        "wire",
+        "skip/degr",
+        "staleness",
+        bar = bar_w + 2,
+    ));
+    for r in &snap.ranks {
+        let filled = if max_p99 == 0 {
+            0
+        } else {
+            ((r.window_wait_for_p99_ns as f64 / max_p99 as f64) * bar_w as f64).round() as usize
+        };
+        let bar: String = "#".repeat(filled.min(bar_w))
+            + &".".repeat(bar_w - filled.min(bar_w));
+        let stale = if r.staleness_count == 0 {
+            0.0
+        } else {
+            r.staleness_sum as f64 / r.staleness_count as f64
+        };
+        out.push_str(&format!(
+            "r{:<4} {:<10} {:>8} {:>8} {:>12}  |{bar}|  {:>10} {:>6}/{:<3} {:>9.2}\n",
+            r.rank,
+            r.health.name().to_uppercase(),
+            r.steps,
+            r.window_steps,
+            fmt_ns(r.window_wait_for_p99_ns),
+            fmt_bytes(r.wire_bytes),
+            r.skipped_phases,
+            r.degraded_iters,
+            stale,
+        ));
+    }
+    out.push_str(&format!(
+        "dropped trace events: {} · sampler overruns: {}\n",
+        snap.dropped_trace_events, snap.sampler_overruns
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::RankSnapshot;
+    use super::super::Health;
+    use super::*;
+
+    #[test]
+    fn frame_shows_straggler_and_scales_bars() {
+        let snap = TelemetrySnapshot {
+            window: 5,
+            p: 2,
+            ranks: vec![
+                RankSnapshot {
+                    rank: 0,
+                    steps: 40,
+                    window_steps: 8,
+                    wait_app_ns: 0,
+                    wait_group_ns: 0,
+                    wait_sync_ns: 0,
+                    wire_bytes: 1 << 20,
+                    skipped_phases: 0,
+                    degraded_iters: 0,
+                    staleness_sum: 10,
+                    staleness_count: 20,
+                    membership: 0,
+                    window_wait_for_p99_ns: 50_000,
+                    total_wait_for_ns: 100_000,
+                    health: Health::Healthy,
+                },
+                RankSnapshot {
+                    rank: 1,
+                    steps: 22,
+                    window_steps: 3,
+                    wait_app_ns: 0,
+                    wait_group_ns: 0,
+                    wait_sync_ns: 0,
+                    wire_bytes: 1 << 19,
+                    skipped_phases: 2,
+                    degraded_iters: 1,
+                    staleness_sum: 0,
+                    staleness_count: 0,
+                    membership: 0,
+                    window_wait_for_p99_ns: 9_000_000,
+                    total_wait_for_ns: 90_000_000,
+                    health: Health::Straggler,
+                },
+            ],
+            fleet_median_p99_ns: 50_000,
+            dropped_trace_events: 3,
+            sampler_overruns: 0,
+        };
+        let frame = render_top(&snap, 80);
+        assert!(frame.contains("STRAGGLER"), "{frame}");
+        assert!(frame.contains("HEALTHY"), "{frame}");
+        assert!(frame.contains("dropped trace events: 3"), "{frame}");
+        // The straggler's bar is full, the healthy rank's nearly empty.
+        let lines: Vec<&str> = frame.lines().collect();
+        let full = lines[3].matches('#').count();
+        let sparse = lines[2].matches('#').count();
+        assert!(full > sparse, "{frame}");
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_ns(1_500), "1.5µs");
+        assert_eq!(fmt_ns(2_500_000), "2.50ms");
+        assert_eq!(fmt_ns(999), "999ns");
+    }
+}

@@ -27,8 +27,9 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Number of log2 buckets: bucket 0 holds the value 0, bucket `b ≥ 1`
-/// holds values with bit length `b`, i.e. `[2^(b-1), 2^b)`.
-const N_BUCKETS: usize = 65;
+/// holds values with bit length `b`, i.e. `[2^(b-1), 2^b)`. Public so the
+/// live-telemetry registry's atomic histograms share the exact bucketing.
+pub const N_BUCKETS: usize = 65;
 
 /// Fixed-size log2-bucketed histogram of `u64` samples (durations in
 /// nanoseconds, staleness in iterations, ...). Zero allocations; merging
@@ -48,12 +49,13 @@ impl Default for LogHistogram {
     }
 }
 
-fn bucket_of(v: u64) -> usize {
+/// Bucket index of a sample: its bit length (0 for the value 0).
+pub fn bucket_of(v: u64) -> usize {
     (64 - v.leading_zeros()) as usize
 }
 
 /// Inclusive value bounds of bucket `b`.
-fn bucket_bounds(b: usize) -> (u64, u64) {
+pub fn bucket_bounds(b: usize) -> (u64, u64) {
     if b == 0 {
         (0, 0)
     } else {
@@ -62,6 +64,16 @@ fn bucket_bounds(b: usize) -> (u64, u64) {
 }
 
 impl LogHistogram {
+    /// Rebuild a histogram from externally accumulated bucket counts
+    /// (the telemetry registry records into per-bucket atomics with the
+    /// same [`bucket_of`] indexing, then snapshots through here so all
+    /// quantile math stays in one place). `min`/`max` follow the
+    /// [`Default`] convention: `u64::MAX`/`0` when `counts` is all-zero.
+    pub fn from_parts(counts: [u64; N_BUCKETS], sum: u64, min: u64, max: u64) -> LogHistogram {
+        let count: u64 = counts.iter().sum();
+        LogHistogram { counts, count, sum, min, max }
+    }
+
     pub fn record(&mut self, v: u64) {
         self.counts[bucket_of(v)] += 1;
         self.count += 1;

@@ -36,7 +36,9 @@ use std::time::Instant;
 
 pub use attrib::{attribute, diff_json, render_diff, Attribution};
 pub use chrome::{from_chrome, to_chrome, to_chrome_multi, validate_schema};
-pub use hist::{percentile_sorted, HistogramRegistry, LogHistogram};
+pub use hist::{
+    bucket_bounds, bucket_of, percentile_sorted, HistogramRegistry, LogHistogram, N_BUCKETS,
+};
 
 /// Sentinel: event not associated with a collective version.
 pub const NO_VERSION: u64 = u64::MAX;

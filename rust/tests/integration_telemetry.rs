@@ -1,0 +1,292 @@
+//! Integration tests for the live-telemetry layer: registry
+//! accounting-invisibility on the real engine (the P = 1 bit-identity
+//! acceptance criterion), Prometheus exposition round-trip from a real
+//! run, straggler detection under seeded fault-plan compute skew, the
+//! JSON-lines sink `wagma top --file` reads back, and the pinned
+//! end-of-run observability-loss warning.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use wagma::bench::measured_overlap::{run_measured, run_measured_with, MeasuredConfig};
+use wagma::compress::Compression;
+use wagma::fault::FaultPlan;
+use wagma::telemetry::{
+    drop_warning, parse_exposition, render, render_top, shared_snapshot, snapshot_from_json,
+    snapshot_json, Sampler, SamplerConfig, StragglerConfig, TelemetryHub, TelemetryRegistry,
+    TelemetrySnapshot,
+};
+use wagma::telemetry::lint_exposition;
+use wagma::trace::{now_ns, Lane, TraceEvent, TraceKind, TraceRecorder};
+use wagma::util::json::Json;
+
+fn measured_cfg(p: usize, steps: u64, compute: Vec<Vec<f64>>) -> MeasuredConfig {
+    MeasuredConfig {
+        p,
+        group_size: 2.min(p),
+        tau: 3,
+        dim: 256,
+        steps,
+        chunk_elems: 0,
+        compression: Compression::None,
+        compute,
+        faults: FaultPlan::none(),
+    }
+}
+
+/// Acceptance criterion: attaching the registry (and a live sampler at
+/// the default interval) leaves the engine's deterministic counters
+/// bit-identical to a telemetry-off run at P = 1 — publishing is atomics
+/// only, so instrumentation can never change the schedule or the pool.
+#[test]
+fn telemetry_toggle_leaves_engine_accounting_identical() {
+    let cfg = measured_cfg(1, 9, vec![vec![0.0; 1]; 9]);
+    let plain = run_measured(&cfg);
+    let registry = Arc::new(TelemetryRegistry::new(1));
+    let sampler = Sampler::spawn(
+        Arc::clone(&registry),
+        SamplerConfig::default(),
+        vec![],
+        shared_snapshot(),
+    );
+    let telemetered = run_measured_with(&cfg, Some(Arc::clone(&registry)));
+    let report = sampler.stop();
+    assert_eq!(
+        telemetered.copied_bytes_per_iter, plain.copied_bytes_per_iter,
+        "copied_bytes must not depend on telemetry"
+    );
+    assert_eq!(
+        telemetered.pool_allocs, plain.pool_allocs,
+        "pool_allocs must not depend on telemetry"
+    );
+    assert_eq!(telemetered.sent_bytes_total, plain.sent_bytes_total);
+    assert_eq!(telemetered.group_collectives, plain.group_collectives);
+    assert_eq!(telemetered.global_syncs, plain.global_syncs);
+    assert_eq!(telemetered.survivor_steps, plain.survivor_steps);
+    // The registry's deterministic counters agree with the engine's: one
+    // step per application iteration, wire bytes exactly the data payload
+    // the engine accounted (ctrl frames are free on both sides).
+    assert_eq!(registry.rank(0).steps(), telemetered.survivor_steps);
+    assert_eq!(registry.rank(0).wire_bytes(), telemetered.sent_bytes_total);
+    assert_eq!(registry.dropped_trace_events(), telemetered.dropped_trace_events);
+    // The sampler's final tick carried those counters out.
+    let last = report.last.expect("final snapshot");
+    assert_eq!(last.total_steps(), telemetered.survivor_steps);
+    assert_eq!(last.total_wire_bytes(), telemetered.sent_bytes_total);
+}
+
+/// Snapshot of a real multi-rank engine run renders as lint-clean
+/// Prometheus exposition, parses back with the counters intact, and the
+/// JSON-lines record round-trips.
+#[test]
+fn real_run_snapshot_round_trips_through_prometheus_and_json() {
+    let p = 4;
+    let steps = 8u64;
+    let cfg = measured_cfg(p, steps, vec![vec![0.0005; p]; steps as usize]);
+    let registry = Arc::new(TelemetryRegistry::new(p));
+    let run = run_measured_with(&cfg, Some(Arc::clone(&registry)));
+    let mut hub = TelemetryHub::new(Arc::clone(&registry), StragglerConfig::default());
+    let snap = hub.tick();
+    assert_eq!(snap.p, p);
+    assert_eq!(snap.total_steps(), run.survivor_steps);
+    assert_eq!(snap.total_wire_bytes(), run.sent_bytes_total);
+
+    let text = render(&snap);
+    lint_exposition(&text).expect("real-run exposition lints");
+    let samples = parse_exposition(&text).expect("parse");
+    let steps_total: f64 = samples
+        .iter()
+        .filter(|s| s.name == "wagma_steps_total")
+        .map(|s| s.value)
+        .sum();
+    assert_eq!(steps_total, run.survivor_steps as f64);
+    let wire_total: f64 = samples
+        .iter()
+        .filter(|s| s.name == "wagma_wire_bytes_total")
+        .map(|s| s.value)
+        .sum();
+    assert_eq!(wire_total, run.sent_bytes_total as f64);
+    assert!(samples.iter().any(|s| s.name == "wagma_ranks" && s.value == p as f64));
+
+    let line = snapshot_json(&snap).to_string();
+    let back = snapshot_from_json(&Json::parse(&line).expect("parse line")).expect("decode");
+    assert_eq!(back, snap);
+}
+
+/// Straggler detection property, swept over seeds: one rank slowed by a
+/// seeded `FaultPlan` compute-skew multiplier accumulates the fleet's
+/// wait-for-peer time and is flagged `Straggler` within `w` windows —
+/// never earlier, and no healthy rank is flagged. The verdict shows up
+/// in both exposition formats (`wagma top` frame, Prometheus scrape).
+///
+/// P = 2 keeps wait attribution *direct*: in larger fleets a fast rank
+/// that was just delayed by the straggler makes its own next partner
+/// wait, so chained lag smears blame across carriers; with one pair the
+/// blocked receive always names the true culprit, and the healthy rank
+/// structurally cannot flag (its p99 *is* the fleet lower-median, which
+/// can never exceed k × itself).
+#[test]
+fn seeded_fault_plan_skew_flags_the_slow_rank_within_w_windows() {
+    let p = 2;
+    let steps = 6u64;
+    for seed in [1u64, 7, 42] {
+        let slow = (seed % p as u64) as usize;
+        let mut skew = vec![1.0f64; p];
+        skew[slow] = 12.0;
+        let plan = FaultPlan { seed, skew, ..FaultPlan::none() };
+        // The measured harness prices compute through the explicit matrix,
+        // so the plan's skew is applied here the same way the simulator
+        // applies it: the slow rank's compute rows scale by `skew_of`.
+        let base = 0.0008;
+        let compute: Vec<Vec<f64>> = (0..steps)
+            .map(|_| (0..p).map(|r| base * plan.skew_of(r)).collect())
+            .collect();
+        let mut cfg = measured_cfg(p, steps, compute);
+        cfg.faults = plan;
+
+        let scfg = StragglerConfig { k: 2.0, w: 3, min_wait_ns: 100_000 };
+        let registry = Arc::new(TelemetryRegistry::new(p));
+        let mut hub = TelemetryHub::new(Arc::clone(&registry), scfg);
+        let mut flagged_at = None;
+        let mut last: Option<TelemetrySnapshot> = None;
+        // One measured run per sampler window: each tick differences one
+        // run's worth of wait-for activity, giving w consecutive skewed
+        // windows without real-time sampling races.
+        for window in 1..=scfg.w {
+            let _ = run_measured_with(&cfg, Some(Arc::clone(&registry)));
+            let snap = hub.tick();
+            assert_eq!(
+                snap.ranks[slow].membership, 0,
+                "seed {seed}: a straggler participates; membership stays healthy"
+            );
+            let is_straggler = snap.ranks[slow].health
+                == wagma::telemetry::Health::Straggler;
+            if is_straggler && flagged_at.is_none() {
+                flagged_at = Some(window);
+            }
+            for r in 0..p {
+                if r != slow {
+                    assert_eq!(
+                        snap.ranks[r].health,
+                        wagma::telemetry::Health::Healthy,
+                        "seed {seed}: healthy rank {r} misflagged in window {window}"
+                    );
+                }
+            }
+            last = Some(snap);
+        }
+        assert_eq!(
+            flagged_at,
+            Some(scfg.w),
+            "seed {seed}: slow rank {slow} must flag exactly when the streak reaches w"
+        );
+        let snap = last.expect("at least one window");
+        // The slow rank owns the fleet's wait-for-peer time.
+        let max_rank = (0..p)
+            .max_by_key(|&r| snap.ranks[r].total_wait_for_ns)
+            .expect("non-empty fleet");
+        assert_eq!(max_rank, slow, "seed {seed}: wait attribution names the slow rank");
+        // Both human-facing sinks carry the verdict.
+        let frame = render_top(&snap, 100);
+        assert!(frame.contains("STRAGGLER"), "seed {seed}: {frame}");
+        let text = render(&snap);
+        lint_exposition(&text).expect("exposition lints");
+        let samples = parse_exposition(&text).expect("parse");
+        let flag = samples
+            .iter()
+            .find(|s| {
+                s.name == "wagma_straggler"
+                    && s.labels.iter().any(|(k, v)| k == "rank" && *v == slow.to_string())
+            })
+            .expect("straggler gauge present");
+        assert_eq!(flag.value, 1.0, "seed {seed}");
+    }
+}
+
+/// The JSON-lines file written by `--telemetry` reads back the way
+/// `wagma top --file` consumes it: last non-empty line parses into the
+/// final snapshot.
+#[test]
+fn telemetry_jsonl_file_reads_back_like_wagma_top() {
+    use wagma::telemetry::{JsonLinesSink, Sink};
+    let path = std::env::temp_dir().join(format!("wagma_tel_test_{}.jsonl", std::process::id()));
+    let path_s = path.to_str().expect("utf8 temp path").to_string();
+    {
+        let mut sink = JsonLinesSink::create(&path_s).expect("create sink");
+        let registry = Arc::new(TelemetryRegistry::new(2));
+        let mut hub = TelemetryHub::new(Arc::clone(&registry), StragglerConfig::default());
+        for w in 0..3u64 {
+            registry.rank(0).add_step();
+            registry.rank(1).add_wire_bytes(1024 * (w + 1));
+            let snap = hub.tick();
+            sink.publish(&snap).expect("publish");
+        }
+    }
+    let body = std::fs::read_to_string(&path).expect("read back");
+    let line = body
+        .lines()
+        .rev()
+        .find(|l| !l.trim().is_empty())
+        .expect("at least one snapshot line");
+    let snap = snapshot_from_json(&Json::parse(line).expect("parse")).expect("decode");
+    assert_eq!(snap.window, 3);
+    assert_eq!(snap.ranks[0].steps, 3);
+    assert_eq!(snap.ranks[1].wire_bytes, 1024 + 2048 + 3072);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Pins the exact end-of-run warning `wagma train`/`bench`/`trace` print
+/// when observability data was lost, and exercises the real loss path: a
+/// tiny trace ring overflows, the recorder counts the drops, and the
+/// counts surface through the warning. Update the wording here and in
+/// `telemetry::drop_warning` together.
+#[test]
+fn dropped_events_and_overruns_surface_in_the_pinned_warning() {
+    let rec = TraceRecorder::new(0, true, 4);
+    for i in 0..10u64 {
+        rec.record(TraceEvent::new(TraceKind::Compute, Lane::App, now_ns(), i));
+    }
+    let dropped = rec.dropped();
+    assert_eq!(dropped, 6, "ring of 4 keeps 4 of 10");
+    assert_eq!(drop_warning(0, 0), None, "silence only when complete");
+    let w = drop_warning(dropped, 2).expect("losses warn");
+    assert_eq!(
+        w,
+        "warning: observability data lost: 6 trace event(s) dropped (ring overflow), \
+         2 telemetry sampler overrun(s); timelines and windows are incomplete — raise \
+         the trace ring capacity or the sampler interval"
+    );
+    // A sampler overrun alone is enough to break the silence.
+    let sampler_only = drop_warning(0, 1).expect("overruns warn");
+    assert!(sampler_only.contains("1 telemetry sampler overrun(s)"), "{sampler_only}");
+}
+
+/// A sampler pointed at a live measured run publishes windows into the
+/// shared latest-snapshot slot while the run is in flight — the read
+/// side `--metrics-addr` and `wagma top --addr` poll.
+#[test]
+fn live_sampler_publishes_snapshots_during_a_run() {
+    let p = 2;
+    let steps = 12u64;
+    let cfg = measured_cfg(p, steps, vec![vec![0.002; p]; steps as usize]);
+    let registry = Arc::new(TelemetryRegistry::new(p));
+    let latest = shared_snapshot();
+    let sampler = Sampler::spawn(
+        Arc::clone(&registry),
+        SamplerConfig { interval: Duration::from_millis(5), ..Default::default() },
+        vec![],
+        Arc::clone(&latest),
+    );
+    let run = run_measured_with(&cfg, Some(Arc::clone(&registry)));
+    let report = sampler.stop();
+    assert!(report.windows >= 2, "a multi-ms run spans several 5ms windows");
+    assert_eq!(report.sink_errors, 0);
+    let last = report.last.expect("final snapshot");
+    assert_eq!(last.total_steps(), run.survivor_steps);
+    assert_eq!(last.total_wire_bytes(), run.sent_bytes_total);
+    assert_eq!(
+        latest.lock().expect("lock").as_ref().map(|s| s.window),
+        Some(last.window),
+        "the latest slot holds the final window"
+    );
+}
