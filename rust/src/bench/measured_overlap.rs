@@ -46,7 +46,7 @@ use crate::sched::{FusionConfig, FusionPlan, LayerProfile};
 use crate::simulator::{simulated_overlap_fraction, NetworkModel};
 use crate::telemetry::TelemetryRegistry;
 use crate::topology::{log2_exact, Grouping};
-use crate::trace::{attribute, now_ns, HistogramRegistry, Lane, TraceEvent, TraceKind};
+use crate::trace::{attribute, critical_path_events, now_ns, HistogramRegistry, Lane, TraceEvent, TraceKind};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::stats::Summary;
 
@@ -447,6 +447,45 @@ pub fn bench_preset_instrumented(
         crate::simulator::simulate(&c_cfg)
     });
 
+    // Critical-path attribution (trace/critpath). The measured layered
+    // arm is wall-clock (what `wagma critpath --explain` diffs); the two
+    // simulator arms are analytic — deterministic per seed — which is
+    // what `--check-critpath-baseline` gates: the preset-scale mirrored
+    // sim, and the race-free P=1 shape whose class partition is the
+    // bit-exactness pin (compute share is exactly 1 there: no peers, no
+    // wire, no gaps).
+    let crit_steps = 24usize;
+    let sim_crit_cp = {
+        let mut c = sim_cfg.clone();
+        c.trace = true;
+        c.steps = c.steps.min(crit_steps);
+        critical_path_events(&crate::simulator::simulate(&c).trace)
+    };
+    let p1_crit_cp = {
+        let mut c = sim_cfg.clone();
+        c.p = 1;
+        c.trace = true;
+        c.steps = c.steps.min(crit_steps);
+        critical_path_events(&crate::simulator::simulate(&c).trace)
+    };
+    let layered_cp = critical_path_events(&layered.trace);
+    let crit_arm = |cp: &crate::trace::CritPath, p: usize| {
+        let extra = vec![
+            ("p", num(p as f64)),
+            ("steps", num(sim_cfg.steps.min(crit_steps) as f64)),
+            ("partition_exact", Json::Bool(cp.partition_exact())),
+        ];
+        match cp.to_json() {
+            Json::Obj(mut m) => {
+                for (k, v) in extra {
+                    m.insert(k.to_string(), v);
+                }
+                Json::Obj(m)
+            }
+            other => other,
+        }
+    };
+
     println!(
         "{:<6} P{} dim {:>7} chunks {:>3}  wait p50 {:.3} ms (flat {:.3})  overlap {:>5.2} (flat {:>5.2}, sim {:.2})  copied/iter {:>9.0} B (legacy {:>11.0}, {:.0}x)",
         case.name,
@@ -473,6 +512,17 @@ pub fn bench_preset_instrumented(
             layered.sent_bytes_per_iter,
             wire_reduction,
             compressed_overlap,
+        );
+    }
+    {
+        let mk = layered_cp.makespan_ns().max(1) as f64;
+        println!(
+            "       critpath: measured compute {:>4.1}% wait {:>4.1}%  sim {} on-path spans / {} wire B  p1 exact {}",
+            100.0 * layered_cp.class_ns[0] as f64 / mk,
+            100.0 * layered_cp.class_ns[1] as f64 / mk,
+            sim_crit_cp.onpath_spans(),
+            sim_crit_cp.onpath_wire_bytes,
+            p1_crit_cp.partition_exact(),
         );
     }
 
@@ -557,6 +607,16 @@ pub fn bench_preset_instrumented(
             ]),
         ),
         ("trace", trace_json),
+        (
+            "critpath",
+            obj(vec![
+                // Measured (wall-clock) arm — the one the explainer diffs.
+                ("layered", layered_cp.to_json()),
+                // Deterministic analytic arms — the ones the gate checks.
+                ("sim", crit_arm(&sim_crit_cp, 64)),
+                ("p1", crit_arm(&p1_crit_cp, 1)),
+            ]),
+        ),
         (
             "legacy_model",
             obj(vec![
@@ -746,6 +806,39 @@ mod tests {
             .and_then(|v| v.as_f64())
             .unwrap();
         assert!(base / wire >= 4.0, "preset wire reduction {}", base / wire);
+    }
+
+    /// The bench report's `critpath` block: all three arms present, and
+    /// the race-free P=1 analytic arm partitions exactly into pure
+    /// compute (no peers, no wire, no gaps) — the bit-exactness pin the
+    /// baseline gate relies on.
+    #[test]
+    fn bench_report_carries_deterministic_critpath_block() {
+        let j = bench_preset_compressed("fig4", true, 7, Compression::None);
+        let c = j.get("critpath").expect("critpath block");
+        for arm in ["layered", "sim", "p1"] {
+            assert!(
+                c.get(arm).and_then(|a| a.get("makespan_ns")).is_some(),
+                "missing critpath arm {arm}"
+            );
+        }
+        let p1 = c.get("p1").unwrap();
+        assert_eq!(p1.get("partition_exact").and_then(|v| v.as_bool()), Some(true));
+        let share = p1
+            .get("class_share")
+            .and_then(|cs| cs.get("compute"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(share > 0.999, "p1 compute share {share}");
+        assert_eq!(
+            p1.get("onpath_wire_bytes").and_then(|v| v.as_f64()),
+            Some(0.0),
+            "no wire at P=1"
+        );
+        // The preset-scale sim arm is peer-bound, not compute-only.
+        let sim = c.get("sim").unwrap();
+        assert!(sim.get("onpath_wire_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 0.0);
+        assert_eq!(sim.get("partition_exact").and_then(|v| v.as_bool()), Some(true));
     }
 
     #[test]

@@ -357,6 +357,11 @@ pub struct EngineStats {
     pub skipped_phases: u64,
     /// Group collectives in which at least one phase was skipped.
     pub degraded_iters: u64,
+    /// Matched data receives that carried a causal wire
+    /// [`Stamp`](crate::comm::Stamp) (producing span identity) — the
+    /// edges the cross-rank causal DAG is stitched from. On the current transport every matched receive
+    /// is stamped, so this doubles as a receive count.
+    pub stamped_receives: u64,
 }
 
 impl CollectiveEngine {
@@ -628,6 +633,13 @@ struct EngineRun {
     /// Blocked-receive ns accumulated by `recv_with_ctrl` since the last
     /// reset — read out per phase/sync to emit nested `Wait` spans.
     phase_wait_ns: u64,
+    /// Causal cause of the largest single blocked receive since the last
+    /// span reset (from the wire stamp; `NO_PEER` if nothing blocked).
+    /// Pins the `peer` of the nested `Wait` sub-span — and of the τ-sync
+    /// span, whose schedule has no single partner.
+    phase_blocked_peer: u32,
+    /// Duration of that largest single blocked receive.
+    phase_blocked_max_ns: u64,
     /// Codec encode ns accumulated by the compressed exchange paths.
     phase_encode_ns: u64,
     /// Codec decode/decompress-sum ns, likewise.
@@ -653,9 +665,21 @@ impl EngineRun {
     /// Publish blocked-receive time into the *waited-on* rank's slot:
     /// the fleet's wait-for-peer distribution accumulates on the rank
     /// being waited for, which is what the straggler detector thresholds.
+    /// The waiter's own slot records who it blamed (per-peer histogram,
+    /// surfaced as the `wagma top` blames column).
     fn telemetry_wait_for(&self, partner: usize, ns: u64) {
         if let Some(t) = &self.telemetry {
             t.rank(partner).record_wait_for_ns(ns);
+            t.rank(self.shared.trace.rank() as usize).record_blame_ns(partner, ns);
+        }
+    }
+
+    /// Track the largest single blocked receive since the last span reset
+    /// so the enclosing span's wait sub-span can name its causal peer.
+    fn note_blocked(&mut self, peer: u32, waited_ns: u64) {
+        if waited_ns > self.phase_blocked_max_ns {
+            self.phase_blocked_max_ns = waited_ns;
+            self.phase_blocked_peer = peer;
         }
     }
 
@@ -738,6 +762,8 @@ fn engine_main(
         quit: false,
         stats: EngineStats::default(),
         phase_wait_ns: 0,
+        phase_blocked_peer: crate::trace::NO_PEER,
+        phase_blocked_max_ns: 0,
         phase_encode_ns: 0,
         phase_decode_ns: 0,
         faults,
@@ -943,6 +969,10 @@ fn recv_exchange(ep: &mut Endpoint, run: &mut EngineRun, partner: usize, tag: Ta
     let waited = now_ns() - w0;
     run.phase_wait_ns += waited;
     run.telemetry_wait_for(partner, waited);
+    if ep.take_stamp().is_some() {
+        run.stats.stamped_receives += 1;
+    }
+    run.note_blocked(partner as u32, waited);
     match &data {
         Some(_) => {
             run.membership.heal(partner);
@@ -1114,6 +1144,7 @@ fn record_engine_span(
     end: u64,
     wire_bytes: u64,
     passive: bool,
+    peer: u32,
 ) {
     match kind {
         TraceKind::TauSync => run.stats.wait_sync_ns += run.phase_wait_ns,
@@ -1128,11 +1159,17 @@ fn record_engine_span(
         slot.add_wire_bytes(wire_bytes);
     }
     if run.shared.trace.is_enabled() {
+        // The span's causal peer: the schedule partner for butterfly
+        // phases; for τ-syncs (no single partner) the wire-stamped cause
+        // of the window's largest blocked receive.
+        let span_peer =
+            if peer != crate::trace::NO_PEER { peer } else { run.phase_blocked_peer };
         let mut ev = TraceEvent::new(kind, Lane::Engine, t0, end - t0);
         ev.version = v;
         ev.phase = phase;
         ev.bytes = wire_bytes;
         ev.passive = passive;
+        ev.peer = span_peer;
         run.shared.trace.record(ev);
         for (sub, dur) in [
             (TraceKind::Wait, run.phase_wait_ns),
@@ -1144,11 +1181,16 @@ fn record_engine_span(
                 ev.version = v;
                 ev.phase = phase;
                 ev.passive = passive;
+                if sub == TraceKind::Wait {
+                    ev.peer = run.phase_blocked_peer;
+                }
                 run.shared.trace.record(ev);
             }
         }
     }
     run.phase_wait_ns = 0;
+    run.phase_blocked_peer = crate::trace::NO_PEER;
+    run.phase_blocked_max_ns = 0;
     run.phase_encode_ns = 0;
     run.phase_decode_ns = 0;
 }
@@ -1212,6 +1254,7 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
                 ev.version = v;
                 ev.phase = r;
                 ev.passive = passive;
+                ev.peer = partner as u32;
                 run.shared.trace.record(ev);
             }
             continue;
@@ -1248,6 +1291,7 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
                 ev.version = v;
                 ev.phase = r;
                 ev.passive = passive;
+                ev.peer = partner as u32;
                 run.shared.trace.record(ev);
             }
         }
@@ -1260,6 +1304,7 @@ fn execute_group(ep: &mut Endpoint, run: &mut EngineRun, initiate: bool) {
             end,
             ep.sent_bytes - wire0,
             passive,
+            partner as u32,
         );
     }
     if skipped_iter {
@@ -1350,6 +1395,7 @@ fn execute_sync(ep: &mut Endpoint, run: &mut EngineRun, ts: u64) {
         end,
         ep.sent_bytes - wire0,
         false,
+        crate::trace::NO_PEER,
     );
     run.stats.global_syncs += 1;
     // The sync is a barrier: every rank has executed all group versions
@@ -1458,6 +1504,17 @@ fn recv_with_ctrl(ep: &mut Endpoint, run: &mut EngineRun, src: usize, tag: Tag) 
     let waited = now_ns() - w0;
     run.phase_wait_ns += waited;
     run.telemetry_wait_for(src, waited);
+    // The wire stamp names the producing span; it is the causal identity
+    // the receive's wait inherits (src is the fallback — same rank, no
+    // producing-span time).
+    let cause = match ep.take_stamp() {
+        Some(st) => {
+            run.stats.stamped_receives += 1;
+            st.src
+        }
+        None => src as u32,
+    };
+    run.note_blocked(cause, waited);
     data
 }
 

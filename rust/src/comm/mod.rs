@@ -107,6 +107,24 @@ impl Tag {
     }
 }
 
+/// Causal wire stamp: the *producing* side's span identity, carried in
+/// the message header alongside the tag. A receiver's wait span gains a
+/// happens-before edge to the send that satisfied it — this is the
+/// metadata the cross-rank causal DAG ([`crate::trace::causal`]) is
+/// stitched from. `send_ns` is on the sender's trace clock (all ranks
+/// share the process-wide epoch, so it is directly comparable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stamp {
+    /// Sending rank.
+    pub src: u32,
+    /// Collective version (training iteration) of the producing span.
+    pub version: u64,
+    /// Schedule phase of the producing span.
+    pub phase: u32,
+    /// Trace-clock time of the send.
+    pub send_ns: u64,
+}
+
 // ---------------------------------------------------------------------------
 // Buffer pool + shared payloads
 // ---------------------------------------------------------------------------
@@ -398,7 +416,7 @@ pub struct Message {
 
 #[derive(Default)]
 struct Lane {
-    data: VecDeque<(Tag, Chunk)>,
+    data: VecDeque<(Tag, Stamp, Chunk)>,
     ctrl: VecDeque<Message>,
 }
 
@@ -439,8 +457,8 @@ impl MailboxShared {
         }
     }
 
-    fn push_data(&self, src: usize, tag: Tag, chunk: Chunk) {
-        self.lanes[src].lock().unwrap().data.push_back((tag, chunk));
+    fn push_data(&self, src: usize, tag: Tag, stamp: Stamp, chunk: Chunk) {
+        self.lanes[src].lock().unwrap().data.push_back((tag, stamp, chunk));
         self.notify();
     }
 
@@ -455,10 +473,10 @@ impl MailboxShared {
         self.notify();
     }
 
-    fn try_pop_data(&self, src: usize, tag: Tag) -> Option<Chunk> {
+    fn try_pop_data(&self, src: usize, tag: Tag) -> Option<(Stamp, Chunk)> {
         let mut lane = self.lanes[src].lock().unwrap();
-        let pos = lane.data.iter().position(|(t, _)| *t == tag)?;
-        lane.data.remove(pos).map(|(_, c)| c)
+        let pos = lane.data.iter().position(|(t, _, _)| *t == tag)?;
+        lane.data.remove(pos).map(|(_, st, c)| (st, c))
     }
 
     fn try_pop_ctrl(&self) -> Option<Message> {
@@ -534,7 +552,7 @@ impl MailboxShared {
     /// before data — activations and app requests must never queue behind
     /// bulk payloads (the old single-FIFO delivered them in arrival order;
     /// control-first is the conservative refinement).
-    fn try_recv_matched(&self, src: usize, tag: Tag) -> Option<Result<Chunk, Message>> {
+    fn try_recv_matched(&self, src: usize, tag: Tag) -> Option<Result<(Stamp, Chunk), Message>> {
         if let Some(m) = self.try_pop_ctrl() {
             return Some(Err(m));
         }
@@ -543,7 +561,7 @@ impl MailboxShared {
 
     /// Blocking: the data message matching `(src, tag)` (`Ok`), or any
     /// control message (`Err`) so the caller can service it and retry.
-    fn recv_data_or_ctrl_blocking(&self, src: usize, tag: Tag) -> Result<Chunk, Message> {
+    fn recv_data_or_ctrl_blocking(&self, src: usize, tag: Tag) -> Result<(Stamp, Chunk), Message> {
         loop {
             if let Some(r) = self.try_recv_matched(src, tag) {
                 return r;
@@ -572,7 +590,7 @@ impl MailboxShared {
         src: usize,
         tag: Tag,
         deadline: Instant,
-    ) -> Result<Result<Chunk, Message>, RecvTimeout> {
+    ) -> Result<Result<(Stamp, Chunk), Message>, RecvTimeout> {
         loop {
             if let Some(r) = self.try_recv_matched(src, tag) {
                 return Ok(r);
@@ -633,6 +651,10 @@ pub struct Endpoint {
     /// Payload bytes memcpy'd by this endpoint's owner (sends and receives
     /// themselves are refcount bumps; this counts the residual copies).
     pub copied_bytes: u64,
+    /// Causal stamp of the most recent matched data receive; consumed by
+    /// [`Endpoint::take_stamp`] so the engine can pin the happens-before
+    /// edge on the wait span the receive satisfied.
+    last_stamp: Option<Stamp>,
 }
 
 /// Build a fully-connected world of `p` endpoints.
@@ -649,6 +671,7 @@ pub fn world(p: usize) -> Vec<Endpoint> {
             sent_msgs: 0,
             sent_bytes: 0,
             copied_bytes: 0,
+            last_stamp: None,
         })
         .collect()
 }
@@ -679,11 +702,24 @@ impl Endpoint {
         self.send_chunk(dst, tag, Chunk::from_vec(data));
     }
 
-    /// Send a chunk (refcount bump) to `dst`. Never blocks.
+    /// Send a chunk (refcount bump) to `dst`. Never blocks. The message
+    /// header carries a causal [`Stamp`] naming the producing span.
     pub fn send_chunk(&mut self, dst: usize, tag: Tag, chunk: Chunk) {
         self.sent_msgs += 1;
         self.sent_bytes += (chunk.len() * 4) as u64;
-        self.peers[dst].push_data(self.rank, tag, chunk);
+        let stamp = Stamp {
+            src: self.rank as u32,
+            version: tag.version,
+            phase: tag.phase,
+            send_ns: crate::trace::now_ns(),
+        };
+        self.peers[dst].push_data(self.rank, tag, stamp, chunk);
+    }
+
+    /// Causal stamp of the most recent matched data receive, consuming
+    /// it. `None` if no data has arrived since the last call.
+    pub fn take_stamp(&mut self) -> Option<Stamp> {
+        self.last_stamp.take()
     }
 
     /// Send a control payload to `dst`.
@@ -708,7 +744,10 @@ impl Endpoint {
     ) -> Chunk {
         loop {
             match self.inbox.recv_data_or_ctrl_blocking(src, tag) {
-                Ok(chunk) => return chunk,
+                Ok((stamp, chunk)) => {
+                    self.last_stamp = Some(stamp);
+                    return chunk;
+                }
                 Err(msg) => on_ctrl(self, msg),
             }
         }
@@ -726,7 +765,10 @@ impl Endpoint {
         ctrl: &mut Vec<Message>,
     ) -> Option<Chunk> {
         match self.inbox.recv_data_or_ctrl_blocking(src, tag) {
-            Ok(chunk) => Some(chunk),
+            Ok((stamp, chunk)) => {
+                self.last_stamp = Some(stamp);
+                Some(chunk)
+            }
             Err(msg) => {
                 ctrl.push(msg);
                 None
@@ -748,7 +790,10 @@ impl Endpoint {
     ) -> Result<Chunk, RecvTimeout> {
         loop {
             match self.inbox.recv_data_or_ctrl_deadline(src, tag, deadline)? {
-                Ok(chunk) => return Ok(chunk),
+                Ok((stamp, chunk)) => {
+                    self.last_stamp = Some(stamp);
+                    return Ok(chunk);
+                }
                 Err(msg) => on_ctrl(self, msg),
             }
         }
@@ -766,7 +811,10 @@ impl Endpoint {
         ctrl: &mut Vec<Message>,
     ) -> Result<Option<Chunk>, RecvTimeout> {
         match self.inbox.recv_data_or_ctrl_deadline(src, tag, deadline)? {
-            Ok(chunk) => Ok(Some(chunk)),
+            Ok((stamp, chunk)) => {
+                self.last_stamp = Some(stamp);
+                Ok(Some(chunk))
+            }
             Err(msg) => {
                 ctrl.push(msg);
                 Ok(None)
@@ -892,6 +940,24 @@ mod tests {
         e0.send(1, Tag::p2p(0, 0), vec![0.0; 100]);
         assert_eq!(e0.sent_bytes, 400);
         assert_eq!(e0.sent_msgs, 1);
+    }
+
+    #[test]
+    fn receives_surface_the_causal_stamp() {
+        let mut eps = world(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        assert_eq!(e0.take_stamp(), None);
+        let h = thread::spawn(move || {
+            e1.send(0, Tag::exchange(6, 2), vec![1.0]);
+        });
+        let _ = e0.recv_data(1, Tag::exchange(6, 2), |_, _| {});
+        let st = e0.take_stamp().expect("matched receive records a stamp");
+        assert_eq!((st.src, st.version, st.phase), (1, 6, 2));
+        assert!(st.send_ns > 0);
+        // Consumed: a second take is empty until the next receive.
+        assert_eq!(e0.take_stamp(), None);
+        h.join().unwrap();
     }
 
     #[test]

@@ -132,6 +132,7 @@ impl ExperimentPreset {
             fusion: self.fusion,
             compress: self.compress,
             trace: false,
+            faults: crate::fault::FaultPlan::none(),
         }
     }
 }

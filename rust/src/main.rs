@@ -45,6 +45,7 @@
 //!          [--faults none|crash@mid|crash@N] [--check-faults-baseline FILE]
 //!          [--telemetry FILE] [--metrics-addr HOST:PORT] [--top]
 //!          [--serve-grace SECS] [--check-telemetry-baseline FILE]
+//!          [--check-critpath-baseline FILE]
 //!        Measured (wall-clock) overlap harness: real compute threads
 //!        against streamed chunk exchanges on the collective engine (with
 //!        and without per-bucket compression — default compressed arm is
@@ -70,6 +71,10 @@
 //!        BENCH_faults.json; --check-faults-baseline gates the
 //!        membership-structural counters (skipped phases, degraded
 //!        iters, survivor steps) against a checked-in baseline.
+//!        --check-critpath-baseline gates the deterministic critical-path
+//!        counters of the analytic arms (the race-free P=1 arm's on-path
+//!        span count, on-path wire bytes, and compute share) and the
+//!        bit-exact partition invariant of both analytic arms.
 //!   trace  [--preset fig4|fig7|fig10] [--out DIR] [--seed N]
 //!          [--compression none|topk|q8] [--topk-ratio F]
 //!        Observability deep-dive for one preset: a quick-shaped measured
@@ -78,6 +83,22 @@
 //!        (Chrome trace-event format), prints each run's wait-time
 //!        attribution (wait-for-peer / codec / transfer / other), and the
 //!        sim-vs-measured decomposition diff.
+//!   critpath [--preset fig4|fig7|fig10] [--out DIR] [--seed N] [--top K]
+//!            [--compression none|topk|q8] [--topk-ratio F]
+//!            [--trace FILE]... | [--explain OLD.json NEW.json]
+//!        Cross-rank causal critical path. Default mode runs one
+//!        quick-shaped measured run and its mirrored simulation (same
+//!        shapes as `wagma trace`), stitches each trace into the causal
+//!        DAG, prints the top-K on-path segments plus the per-class /
+//!        per-rank share table, writes a Chrome-trace overlay per run
+//!        marking the on-path spans (`on_path` arg — searchable in
+//!        Perfetto), and writes CRITPATH.json (a `runs` array consumable
+//!        by --explain). --trace FILE (repeatable) instead loads
+//!        already-recorded Chrome traces. --explain OLD.json NEW.json
+//!        diffs two critpath-bearing reports (bench outputs, CRITPATH.json
+//!        files, or bare critpath blocks) and names the component that
+//!        moved — CI perf gates invoke this on failure so a red job
+//!        states *why*.
 //!   top    (--addr HOST:PORT | --file FILE) [--interval-ms N] [--once]
 //!        Live TTY dashboard over a running instrumented `train`/`bench`:
 //!        --addr polls /snapshot.json from a --metrics-addr endpoint;
@@ -109,11 +130,12 @@ fn main() -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("bench") => cmd_bench(&args),
         Some("trace") => cmd_trace(&args),
+        Some("critpath") => cmd_critpath(&args),
         Some("top") => cmd_top(&args),
         Some("list") => cmd_list(),
         _ => {
             eprintln!(
-                "usage: wagma <figure|train|simulate|bench|trace|top|list> [flags]  (see src/main.rs docs)"
+                "usage: wagma <figure|train|simulate|bench|trace|critpath|top|list> [flags]  (see src/main.rs docs)"
             );
             std::process::exit(2);
         }
@@ -592,6 +614,31 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if let Some(baseline_path) = args.get("check-telemetry-baseline") {
         check_telemetry_baseline(&report, baseline_path)?;
     }
+    if let Some(baseline_path) = args.get("check-critpath-baseline") {
+        check_critpath_baseline(&report, baseline_path)?;
+    }
+
+    // Critical-path shares are a whole-run property, so live windows
+    // publish none; attach the last preset's layered-run shares to the
+    // final snapshot now, so scrapes landing in the --serve-grace window
+    // serve `wagma_critpath_share{class,rank}` and the closing JSONL line
+    // carries the `critpath` array.
+    if telemetry_on {
+        if let Some((_, trace)) = traces.last() {
+            let shares =
+                wagma::telemetry::critpath_shares(&wagma::trace::critical_path_events(trace));
+            let enriched = match latest.lock() {
+                Ok(mut guard) => guard.as_mut().map(|snap| {
+                    snap.critpath = shares;
+                    snap.clone()
+                }),
+                Err(_) => None,
+            };
+            if let (Some(sink), Some(snap)) = (&jsonl, enriched.as_ref()) {
+                let _ = sink.clone().publish(snap);
+            }
+        }
+    }
 
     // --serve-grace N: hold the metrics endpoint open after the
     // measurements finish until at least one request lands (or the grace
@@ -628,6 +675,56 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The one regeneration recipe every `BENCH_engine.json`-sourced gate
+/// shares (bytes-copied / compress / trace / telemetry / critpath): run
+/// the quick bench and copy the named per-preset block into the baseline.
+const REGEN_BENCH: &str = "cargo run --release -p wagma -- bench --quick --out /tmp/wagma-bench, \
+then copy each preset's block from /tmp/wagma-bench/BENCH_engine.json into the baseline";
+
+/// Shared scaffolding for every `--check-*-baseline` gate: load and
+/// parse the baseline file, enforce the quick-shape match, collect the
+/// gate-specific failures, and on ANY failure — unreadable file, shape
+/// mismatch, or counter drift — print both the baseline file path and
+/// the exact command that regenerates it, so a red gate is actionable
+/// without digging through CI configs.
+fn run_baseline_gate(
+    label: &str,
+    regen: &str,
+    report: &wagma::util::json::Json,
+    baseline_path: &str,
+    check: impl FnOnce(&wagma::util::json::Json, &mut Vec<String>) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    use wagma::util::json::Json;
+    let hint = format!("baseline file: {baseline_path}\n  regenerate:    {regen}");
+    let fail = |msg: String| anyhow::anyhow!("{msg}\n  {hint}");
+    let text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| fail(format!("{label} gate: cannot read {baseline_path}: {e}")))?;
+    let baseline =
+        Json::parse(&text).map_err(|e| fail(format!("{label} gate: {baseline_path}: {e}")))?;
+    // Gated counters usually scale with the bench shape (P, steps), so
+    // refuse to compare a full run against a quick baseline (and vice
+    // versa). Baselines whose counters are shape-independent (critpath:
+    // analytic arms with pinned P and step cap) omit `shape.quick`.
+    let base_quick = baseline.get("shape").and_then(|s| s.get("quick")).and_then(|v| v.as_bool());
+    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
+    if let Some(bq) = base_quick {
+        if bq != run_quick {
+            return Err(fail(format!(
+                "{label} baseline shape mismatch: {baseline_path} records a {} run but this is a {} run",
+                if bq { "--quick" } else { "full" },
+                if run_quick { "--quick" } else { "full" },
+            )));
+        }
+    }
+    let mut failures = Vec::new();
+    check(&baseline, &mut failures).map_err(|e| fail(e.to_string()))?;
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(fail(format!("{label} regression:\n{}", failures.join("\n"))))
+    }
+}
+
 /// Gate the deterministic telemetry counters of each preset's layered arm
 /// (`steps`, `wire_bytes`) against a checked-in baseline, symmetric ±10%.
 /// Both counters are code-structural — steps is the schedule shape, wire
@@ -637,65 +734,140 @@ fn check_telemetry_baseline(
     report: &wagma::util::json::Json,
     baseline_path: &str,
 ) -> anyhow::Result<()> {
-    let text = std::fs::read_to_string(baseline_path)?;
-    let baseline = wagma::util::json::Json::parse(&text)
-        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
-    let base_quick = baseline
-        .get("shape")
-        .and_then(|s| s.get("quick"))
-        .and_then(|v| v.as_bool());
-    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
-    if let Some(bq) = base_quick {
-        if bq != run_quick {
-            anyhow::bail!(
-                "telemetry baseline shape mismatch: {baseline_path} records a {} run but this is a {} run",
-                if bq { "--quick" } else { "full" },
-                if run_quick { "--quick" } else { "full" },
-            );
-        }
-    }
-    const FIELDS: [&str; 2] = ["steps", "wire_bytes"];
-    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
-    let mut failures = Vec::new();
-    for case in cases {
-        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
-        let Some(base) = baseline.get(name) else {
-            // A missing entry must not silently disable the gate.
-            failures.push(format!(
-                "{name}: no telemetry baseline entry in {baseline_path} — add one"
-            ));
-            continue;
-        };
-        let mut ok = true;
-        for field in FIELDS {
-            let measured = case
-                .get("telemetry")
-                .and_then(|t| t.get(field))
-                .and_then(|v| v.as_f64())
-                .unwrap_or(f64::INFINITY);
-            let Some(b) = base.get(field).and_then(|v| v.as_f64()) else {
+    run_baseline_gate("telemetry counter", REGEN_BENCH, report, baseline_path, |baseline, failures| {
+        const FIELDS: [&str; 2] = ["steps", "wire_bytes"];
+        let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+        for case in cases {
+            let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+            let Some(base) = baseline.get(name) else {
+                // A missing entry must not silently disable the gate.
                 failures.push(format!(
-                    "{name}.{field}: missing from {baseline_path} (measured {measured:.0})"
+                    "{name}: no telemetry baseline entry in {baseline_path} — add one"
                 ));
-                ok = false;
                 continue;
             };
-            if (measured - b).abs() > b * 0.10 {
-                failures.push(format!(
-                    "{name}.{field}: {measured:.0} deviates >10% from baseline {b:.0}"
-                ));
-                ok = false;
+            let mut ok = true;
+            for field in FIELDS {
+                let measured = case
+                    .get("telemetry")
+                    .and_then(|t| t.get(field))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(f64::INFINITY);
+                let Some(b) = base.get(field).and_then(|v| v.as_f64()) else {
+                    failures.push(format!(
+                        "{name}.{field}: missing from {baseline_path} (measured {measured:.0})"
+                    ));
+                    ok = false;
+                    continue;
+                };
+                if (measured - b).abs() > b * 0.10 {
+                    failures.push(format!(
+                        "{name}.{field}: {measured:.0} deviates >10% from baseline {b:.0}"
+                    ));
+                    ok = false;
+                }
+            }
+            if ok {
+                println!("telemetry baseline OK for {name} (steps + wire bytes within ±10%)");
             }
         }
-        if ok {
-            println!("telemetry baseline OK for {name} (steps + wire bytes within ±10%)");
-        }
-    }
-    if failures.is_empty() {
         Ok(())
-    } else {
-        anyhow::bail!("telemetry counter regression:\n{}", failures.join("\n"))
-    }
+    })
+}
+
+/// Gate the deterministic critical-path counters of the analytic arms in
+/// each preset's `critpath` block. The race-free P=1 arm's on-path span
+/// count, on-path wire bytes, and compute share are schedule-deterministic
+/// (the acceptance pin: 24 back-to-back compute spans, zero wire bytes on
+/// path, compute share 1); both analytic arms must also satisfy the
+/// bit-exact partition invariant. The measured layered arm is wall-clock
+/// and is *not* gated — `wagma critpath --explain` diffs it instead.
+fn check_critpath_baseline(
+    report: &wagma::util::json::Json,
+    baseline_path: &str,
+) -> anyhow::Result<()> {
+    let regen = format!(
+        "{REGEN_BENCH} (the critpath.p1 arm's onpath_spans / onpath_wire_bytes / \
+         class_share.compute×1e6 as *_ppm)"
+    );
+    run_baseline_gate("critpath counter", &regen, report, baseline_path, |baseline, failures| {
+        let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+        for case in cases {
+            let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+            let Some(crit) = case.get("critpath") else {
+                failures.push(format!(
+                    "{name}: no critpath block in the bench report (regenerate with a \
+                     critpath-aware build)"
+                ));
+                continue;
+            };
+            // Invariant, baseline-independent: both analytic arms must
+            // partition their makespan bit-exactly.
+            for arm in ["sim", "p1"] {
+                let exact = crit
+                    .get(arm)
+                    .and_then(|a| a.get("partition_exact"))
+                    .and_then(|v| v.as_bool());
+                if exact != Some(true) {
+                    failures.push(format!(
+                        "{name}.critpath.{arm}: partition_exact is not true — class shares no \
+                         longer tile the makespan"
+                    ));
+                }
+            }
+            let Some(base) = baseline.get(name) else {
+                // A missing entry must not silently disable the gate.
+                failures.push(format!(
+                    "{name}: no critpath baseline entry in {baseline_path} — add one"
+                ));
+                continue;
+            };
+            let p1 = crit.get("p1");
+            let measured = |key: &str| -> f64 {
+                match key {
+                    "p1_compute_share_ppm" => p1
+                        .and_then(|a| a.get("class_share"))
+                        .and_then(|cs| cs.get("compute"))
+                        .and_then(|v| v.as_f64())
+                        .map_or(f64::INFINITY, |share| (share * 1e6).round()),
+                    "p1_onpath_spans" => p1
+                        .and_then(|a| a.get("onpath_spans"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(f64::INFINITY),
+                    _ => p1
+                        .and_then(|a| a.get("onpath_wire_bytes"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(f64::INFINITY),
+                }
+            };
+            let mut ok = true;
+            for field in ["p1_onpath_spans", "p1_onpath_wire_bytes", "p1_compute_share_ppm"] {
+                let m = measured(field);
+                let Some(b) = base.get(field).and_then(|v| v.as_f64()) else {
+                    failures.push(format!(
+                        "{name}.{field}: missing from {baseline_path} (measured {m:.0})"
+                    ));
+                    ok = false;
+                    continue;
+                };
+                // ±10%, except a zero baseline (wire bytes on the P=1
+                // path) demands exact zero.
+                if (m - b).abs() > b * 0.10 {
+                    failures.push(format!(
+                        "{name}.{field}: {m:.0} deviates >10% from baseline {b:.0}"
+                    ));
+                    ok = false;
+                }
+            }
+            if ok {
+                println!(
+                    "critpath baseline OK for {name} (P=1 arm deterministic counters within \
+                     ±10%, partitions bit-exact)"
+                );
+            }
+        }
+        Ok(())
+    })
 }
 
 /// `wagma trace` — observability deep-dive for one preset: one traced
@@ -780,73 +952,207 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `wagma critpath` — cross-rank causal critical path. Default mode runs
+/// one quick-shaped measured run plus its mirrored simulation (the same
+/// two shapes `wagma trace` produces), stitches each trace into the
+/// causal DAG, prints the top-K on-path segments and the per-class /
+/// per-rank share table, writes a Chrome-trace overlay per run marking
+/// the on-path spans, and writes CRITPATH.json (a `runs` array
+/// consumable by `--explain`). `--trace FILE` (repeatable) loads
+/// already-recorded Chrome traces instead; `--explain OLD.json NEW.json`
+/// diffs two critpath-bearing reports and names the moved component.
+fn cmd_critpath(args: &Args) -> anyhow::Result<()> {
+    use wagma::trace::{
+        critical_path, explain, from_chrome, to_chrome_overlay, validate_schema, CausalGraph,
+    };
+    use wagma::util::json::{num, obj, s, Json};
+
+    // Explainer mode: `wagma critpath --explain OLD.json NEW.json` (the
+    // second file lands in the positionals — see util::cli).
+    if let Some(old_path) = args.get("explain") {
+        let Some(new_path) = args.positional.get(1) else {
+            anyhow::bail!("usage: wagma critpath --explain OLD.json NEW.json");
+        };
+        let load = |path: &str| -> anyhow::Result<Json> {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+        };
+        let old = load(old_path)?;
+        let new = load(new_path)?;
+        let verdict = explain(&old, &new).map_err(|e| anyhow::anyhow!(e))?;
+        print!("{verdict}");
+        return Ok(());
+    }
+
+    let out_dir = args.str_or("out", ".");
+    let k = args.usize_or("top", 10);
+    std::fs::create_dir_all(&out_dir)?;
+    let mut runs: Vec<Json> = Vec::new();
+
+    // Offline mode: attribute already-recorded Chrome trace file(s).
+    let trace_files = args.get_all("trace");
+    if !trace_files.is_empty() {
+        for path in trace_files {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+            let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let events = from_chrome(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let g = CausalGraph::build(&events);
+            let cp = critical_path(&g);
+            print!("{}", cp.render(path, k));
+            let marks = cp.onpath_marks(&g, &events);
+            let overlay = to_chrome_overlay(&events, &marks, &format!("critpath {path}"));
+            let stem = std::path::Path::new(path)
+                .file_stem()
+                .and_then(|x| x.to_str())
+                .unwrap_or("trace");
+            let opath =
+                std::path::Path::new(&out_dir).join(format!("critpath_overlay_{stem}.json"));
+            std::fs::write(&opath, overlay.to_string())?;
+            println!("wrote on-path overlay {opath:?}");
+            // Label by file stem so two CRITPATH.json from the same trace
+            // names pair up under --explain.
+            runs.push(obj(vec![("label", s(stem)), ("critpath", cp.to_json())]));
+        }
+        let report =
+            obj(vec![("generated_by", s("wagma critpath")), ("runs", Json::Arr(runs))]);
+        let rpath = std::path::Path::new(&out_dir).join("CRITPATH.json");
+        std::fs::write(&rpath, report.to_string())?;
+        println!("wrote {rpath:?}");
+        return Ok(());
+    }
+
+    // Default: one measured quick-shape run + its mirrored simulation,
+    // the same shapes as `wagma trace`, so the two decompositions (and
+    // two builds' CRITPATH.json files under --explain) line up.
+    use wagma::bench::measured_overlap::{
+        compute_matrix, preset_case, run_measured, MeasuredConfig,
+    };
+    use wagma::config::preset;
+
+    let name = args.str_or("preset", "fig4");
+    let Some(pre) = preset(&name) else {
+        anyhow::bail!("unknown preset {name:?} (fig4|fig7|fig10)");
+    };
+    let seed = args.u64_or("seed", 42);
+    let comp = Compression::from_args_with(args, Compression::None);
+    let case = preset_case(&name, true);
+    println!(
+        "critical path for {name}: measured P{} dim {} steps {} (layered, compression {}) + mirrored simulation",
+        case.p,
+        case.dim,
+        case.steps,
+        comp.name()
+    );
+    let measured = run_measured(&MeasuredConfig {
+        p: case.p,
+        group_size: case.group_size,
+        tau: case.tau,
+        dim: case.dim,
+        steps: case.steps,
+        chunk_elems: case.chunk_elems,
+        compression: comp,
+        compute: compute_matrix(&case, false, seed),
+        faults: wagma::fault::FaultPlan::none(),
+    });
+    if let Some(w) = wagma::telemetry::drop_warning(measured.dropped_trace_events, 0) {
+        eprintln!("{w}");
+    }
+    let mut fusion = pre.fusion;
+    fusion.layered = true;
+    let sim_cfg = SimConfig {
+        algo: Algorithm::Wagma,
+        p: case.p,
+        steps: case.steps as usize,
+        model_bytes: case.dim * 4,
+        tau: case.tau,
+        group_size: case.group_size,
+        dynamic_groups: true,
+        imbalance: pre.imbalance,
+        seed,
+        fusion,
+        compress: comp,
+        trace: true,
+        ..Default::default()
+    };
+    let sim = simulate(&sim_cfg);
+
+    for (label, events) in [("measured", &measured.trace), ("sim", &sim.trace)] {
+        let g = CausalGraph::build(events);
+        let cp = critical_path(&g);
+        print!("{}", cp.render(&format!("{label} {name}"), k));
+        let marks = cp.onpath_marks(&g, events);
+        let doc = to_chrome_overlay(events, &marks, &format!("{label} {name}"));
+        validate_schema(&doc).map_err(|e| anyhow::anyhow!("{label} overlay schema: {e}"))?;
+        let path =
+            std::path::Path::new(&out_dir).join(format!("critpath_overlay_{label}_{name}.json"));
+        std::fs::write(&path, doc.to_string())?;
+        println!(
+            "wrote on-path overlay {path:?} ({} events, {} on path)",
+            events.len(),
+            marks.iter().filter(|&&m| m).count()
+        );
+        runs.push(obj(vec![("label", s(label)), ("critpath", cp.to_json())]));
+    }
+    let report = obj(vec![
+        ("generated_by", s("wagma critpath")),
+        ("preset", s(&name)),
+        ("seed", num(seed as f64)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let rpath = std::path::Path::new(&out_dir).join("CRITPATH.json");
+    std::fs::write(&rpath, report.to_string())?;
+    println!("wrote {rpath:?} (feed two of these to `wagma critpath --explain OLD NEW`)");
+    Ok(())
+}
+
 /// Trace-accounting gate: fail if any preset's recorded span counts or
 /// bytes-on-wire drift >10% above the checked-in baseline. The gated
 /// fields are code-structural (schedule shape × wire format) — the same
 /// determinism argument as `sent_bytes` — so in practice they reproduce
 /// exactly; the 10% headroom mirrors the other gates.
 fn check_trace_baseline(report: &wagma::util::json::Json, baseline_path: &str) -> anyhow::Result<()> {
-    let text = std::fs::read_to_string(baseline_path)?;
-    let baseline = wagma::util::json::Json::parse(&text)
-        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
-    // Span counts scale with the bench shape (P, steps), so refuse to
-    // compare a full run against a quick baseline (and vice versa).
-    let base_quick = baseline
-        .get("shape")
-        .and_then(|s| s.get("quick"))
-        .and_then(|v| v.as_bool());
-    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
-    if let Some(bq) = base_quick {
-        if bq != run_quick {
-            anyhow::bail!(
-                "trace baseline shape mismatch: {baseline_path} records a {} run but this is a {} run",
-                if bq { "--quick" } else { "full" },
-                if run_quick { "--quick" } else { "full" },
-            );
-        }
-    }
-    const FIELDS: [&str; 4] =
-        ["phase_spans", "tau_sync_spans", "phase_wire_bytes", "sync_wire_bytes"];
-    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
-    let mut failures = Vec::new();
-    for case in cases {
-        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
-        let Some(base) = baseline.get(name) else {
-            // A missing entry must not silently disable the gate.
-            failures.push(format!("{name}: no trace baseline entry in {baseline_path} — add one"));
-            continue;
-        };
-        let mut ok = true;
-        for field in FIELDS {
-            let measured = case
-                .get("trace")
-                .and_then(|t| t.get(field))
-                .and_then(|v| v.as_f64())
-                .unwrap_or(f64::INFINITY);
-            let Some(b) = base.get(field).and_then(|v| v.as_f64()) else {
-                failures.push(format!(
-                    "{name}.{field}: missing from {baseline_path} (measured {measured:.0})"
-                ));
-                ok = false;
+    run_baseline_gate("trace accounting", REGEN_BENCH, report, baseline_path, |baseline, failures| {
+        const FIELDS: [&str; 4] =
+            ["phase_spans", "tau_sync_spans", "phase_wire_bytes", "sync_wire_bytes"];
+        let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+        for case in cases {
+            let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+            let Some(base) = baseline.get(name) else {
+                // A missing entry must not silently disable the gate.
+                failures
+                    .push(format!("{name}: no trace baseline entry in {baseline_path} — add one"));
                 continue;
             };
-            let limit = b * 1.10;
-            if measured > limit {
-                failures.push(format!(
-                    "{name}.{field}: {measured:.0} exceeds baseline {b:.0} (+10% limit {limit:.0})"
-                ));
-                ok = false;
+            let mut ok = true;
+            for field in FIELDS {
+                let measured = case
+                    .get("trace")
+                    .and_then(|t| t.get(field))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(f64::INFINITY);
+                let Some(b) = base.get(field).and_then(|v| v.as_f64()) else {
+                    failures.push(format!(
+                        "{name}.{field}: missing from {baseline_path} (measured {measured:.0})"
+                    ));
+                    ok = false;
+                    continue;
+                };
+                let limit = b * 1.10;
+                if measured > limit {
+                    failures.push(format!(
+                        "{name}.{field}: {measured:.0} exceeds baseline {b:.0} (+10% limit {limit:.0})"
+                    ));
+                    ok = false;
+                }
+            }
+            if ok {
+                println!("trace baseline OK for {name} (spans + wire bytes within limits)");
             }
         }
-        if ok {
-            println!("trace baseline OK for {name} (spans + wire bytes within limits)");
-        }
-    }
-    if failures.is_empty() {
         Ok(())
-    } else {
-        anyhow::bail!("trace accounting regression:\n{}", failures.join("\n"))
-    }
+    })
 }
 
 /// Perf-regression gate for the compression subsystem: fail if any
@@ -857,83 +1163,71 @@ fn check_compress_baseline(
     report: &wagma::util::json::Json,
     baseline_path: &str,
 ) -> anyhow::Result<()> {
-    let text = std::fs::read_to_string(baseline_path)?;
-    let baseline = wagma::util::json::Json::parse(&text)
-        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
-    let base_quick = baseline
-        .get("shape")
-        .and_then(|s| s.get("quick"))
-        .and_then(|v| v.as_bool());
-    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
-    if let Some(bq) = base_quick {
-        if bq != run_quick {
-            anyhow::bail!(
-                "compress baseline shape mismatch: {baseline_path} records a {} run but this is a {} run",
-                if bq { "--quick" } else { "full" },
-                if run_quick { "--quick" } else { "full" },
-            );
-        }
-    }
-    if let (Some(bk), Some(rk)) = (
-        baseline.get("shape").and_then(|s| s.get("compression")).and_then(|v| v.as_str()),
-        report.get("compression").and_then(|v| v.as_str()),
-    ) {
-        if bk != rk {
-            anyhow::bail!(
-                "compress baseline codec mismatch: baseline {bk:?} vs run {rk:?} — rerun with matching --compression"
-            );
-        }
-    }
-    if let (Some(br), Some(rr)) = (
-        baseline.get("shape").and_then(|s| s.get("topk_ratio")).and_then(|v| v.as_f64()),
-        report.get("topk_ratio").and_then(|v| v.as_f64()),
-    ) {
-        // A different keep ratio changes the expected wire volume itself:
-        // comparing across ratios would mask regressions (smaller ratio)
-        // or report spurious ones (larger), so refuse like the other
-        // shape mismatches.
-        if (br - rr).abs() > 1e-9 {
-            anyhow::bail!(
-                "compress baseline ratio mismatch: baseline topk_ratio {br} vs run {rr} — rerun with matching --topk-ratio"
-            );
-        }
-    }
-    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
-    let mut failures = Vec::new();
-    for case in cases {
-        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
-        let measured = case
-            .get("measured_compressed")
-            .and_then(|m| m.get("sent_bytes_per_iter"))
-            .and_then(|v| v.as_f64())
-            .unwrap_or(f64::INFINITY);
-        let Some(base) = baseline
-            .get(name)
-            .and_then(|b| b.get("sent_bytes_per_iter"))
-            .and_then(|v| v.as_f64())
-        else {
-            failures.push(format!(
-                "{name}: no compress baseline entry in {baseline_path} — add one (measured {measured:.0} B/iter)"
-            ));
-            continue;
-        };
-        let limit = base * 1.10;
-        if measured > limit {
-            failures.push(format!(
-                "{name}: compressed wire {measured:.0} B/iter exceeds baseline {base:.0} (+10% limit {limit:.0})"
-            ));
-        } else {
-            println!("compress baseline OK for {name}: {measured:.0} B/iter (baseline {base:.0})");
-            if measured < base * 0.9 {
-                println!("  (improved >10% — consider refreshing the baseline)");
+    run_baseline_gate(
+        "compressed bytes-on-wire",
+        REGEN_BENCH,
+        report,
+        baseline_path,
+        |baseline, failures| {
+            if let (Some(bk), Some(rk)) = (
+                baseline.get("shape").and_then(|s| s.get("compression")).and_then(|v| v.as_str()),
+                report.get("compression").and_then(|v| v.as_str()),
+            ) {
+                if bk != rk {
+                    anyhow::bail!(
+                        "compress baseline codec mismatch: baseline {bk:?} vs run {rk:?} — rerun with matching --compression"
+                    );
+                }
             }
-        }
-    }
-    if failures.is_empty() {
-        Ok(())
-    } else {
-        anyhow::bail!("compressed bytes-on-wire regression:\n{}", failures.join("\n"))
-    }
+            if let (Some(br), Some(rr)) = (
+                baseline.get("shape").and_then(|s| s.get("topk_ratio")).and_then(|v| v.as_f64()),
+                report.get("topk_ratio").and_then(|v| v.as_f64()),
+            ) {
+                // A different keep ratio changes the expected wire volume
+                // itself: comparing across ratios would mask regressions
+                // (smaller ratio) or report spurious ones (larger), so
+                // refuse like the other shape mismatches.
+                if (br - rr).abs() > 1e-9 {
+                    anyhow::bail!(
+                        "compress baseline ratio mismatch: baseline topk_ratio {br} vs run {rr} — rerun with matching --topk-ratio"
+                    );
+                }
+            }
+            let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+            for case in cases {
+                let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+                let measured = case
+                    .get("measured_compressed")
+                    .and_then(|m| m.get("sent_bytes_per_iter"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(f64::INFINITY);
+                let Some(base) = baseline
+                    .get(name)
+                    .and_then(|b| b.get("sent_bytes_per_iter"))
+                    .and_then(|v| v.as_f64())
+                else {
+                    failures.push(format!(
+                        "{name}: no compress baseline entry in {baseline_path} — add one (measured {measured:.0} B/iter)"
+                    ));
+                    continue;
+                };
+                let limit = base * 1.10;
+                if measured > limit {
+                    failures.push(format!(
+                        "{name}: compressed wire {measured:.0} B/iter exceeds baseline {base:.0} (+10% limit {limit:.0})"
+                    ));
+                } else {
+                    println!(
+                        "compress baseline OK for {name}: {measured:.0} B/iter (baseline {base:.0})"
+                    );
+                    if measured < base * 0.9 {
+                        println!("  (improved >10% — consider refreshing the baseline)");
+                    }
+                }
+            }
+            Ok(())
+        },
+    )
 }
 
 /// Perf-regression gate: fail if any preset's measured
@@ -941,64 +1235,40 @@ fn check_compress_baseline(
 /// (The copy counter is deterministic — code-structural, not timing — so
 /// this check is stable in CI.)
 fn check_bench_baseline(report: &wagma::util::json::Json, baseline_path: &str) -> anyhow::Result<()> {
-    let text = std::fs::read_to_string(baseline_path)?;
-    let baseline = wagma::util::json::Json::parse(&text)
-        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
-    // Copied-bytes values depend on the bench shape (P, steps), so a
-    // full-mode run against a quick-shape baseline must not be reported
-    // as a regression.
-    let base_quick = baseline
-        .get("shape")
-        .and_then(|s| s.get("quick"))
-        .and_then(|v| v.as_bool());
-    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
-    if let Some(bq) = base_quick {
-        if bq != run_quick {
-            anyhow::bail!(
-                "baseline shape mismatch: {baseline_path} records a {} run but this is a {} run — \
-                 rerun with matching flags or regenerate the baseline",
-                if bq { "--quick" } else { "full" },
-                if run_quick { "--quick" } else { "full" },
-            );
-        }
-    }
-    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
-    let mut failures = Vec::new();
-    for case in cases {
-        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
-        let measured = case
-            .get("measured_layered")
-            .and_then(|m| m.get("copied_bytes_per_iter"))
-            .and_then(|v| v.as_f64())
-            .unwrap_or(f64::INFINITY);
-        let Some(base) = baseline
-            .get(name)
-            .and_then(|b| b.get("copied_bytes_per_iter"))
-            .and_then(|v| v.as_f64())
-        else {
-            // A missing entry must not silently disable the gate.
-            failures.push(format!(
-                "{name}: no baseline entry in {baseline_path} — add one (measured {measured:.0} B/iter)"
-            ));
-            continue;
-        };
-        let limit = base * 1.10;
-        if measured > limit {
-            failures.push(format!(
-                "{name}: copied {measured:.0} B/iter exceeds baseline {base:.0} (+10% limit {limit:.0})"
-            ));
-        } else {
-            println!("baseline OK for {name}: {measured:.0} B/iter (baseline {base:.0})");
-            if measured < base * 0.9 {
-                println!("  (improved >10% — consider refreshing the baseline)");
+    run_baseline_gate("bytes-copied", REGEN_BENCH, report, baseline_path, |baseline, failures| {
+        let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+        for case in cases {
+            let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+            let measured = case
+                .get("measured_layered")
+                .and_then(|m| m.get("copied_bytes_per_iter"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::INFINITY);
+            let Some(base) = baseline
+                .get(name)
+                .and_then(|b| b.get("copied_bytes_per_iter"))
+                .and_then(|v| v.as_f64())
+            else {
+                // A missing entry must not silently disable the gate.
+                failures.push(format!(
+                    "{name}: no baseline entry in {baseline_path} — add one (measured {measured:.0} B/iter)"
+                ));
+                continue;
+            };
+            let limit = base * 1.10;
+            if measured > limit {
+                failures.push(format!(
+                    "{name}: copied {measured:.0} B/iter exceeds baseline {base:.0} (+10% limit {limit:.0})"
+                ));
+            } else {
+                println!("baseline OK for {name}: {measured:.0} B/iter (baseline {base:.0})");
+                if measured < base * 0.9 {
+                    println!("  (improved >10% — consider refreshing the baseline)");
+                }
             }
         }
-    }
-    if failures.is_empty() {
         Ok(())
-    } else {
-        anyhow::bail!("bytes-copied regression:\n{}", failures.join("\n"))
-    }
+    })
 }
 
 /// Gate `wagma bench --faults` against a checked-in baseline. The gated
@@ -1009,88 +1279,72 @@ fn check_bench_baseline(report: &wagma::util::json::Json, baseline_path: &str) -
 /// on a loaded CI box can only *add* suspect-skips, never remove
 /// plan-mandated ones.
 fn check_faults_baseline(report: &wagma::util::json::Json, baseline_path: &str) -> anyhow::Result<()> {
-    let text = std::fs::read_to_string(baseline_path)?;
-    let baseline = wagma::util::json::Json::parse(&text)
-        .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
-    let shape = baseline.get("shape");
-    let base_quick = shape.and_then(|s| s.get("quick")).and_then(|v| v.as_bool());
-    let run_quick = report.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
-    if let Some(bq) = base_quick {
-        if bq != run_quick {
-            anyhow::bail!(
-                "baseline shape mismatch: {baseline_path} records a {} run but this is a {} run — \
-                 rerun with matching flags or regenerate the baseline",
-                if bq { "--quick" } else { "full" },
-                if run_quick { "--quick" } else { "full" },
-            );
-        }
-    }
-    let base_spec = shape.and_then(|s| s.get("spec")).and_then(|v| v.as_str());
-    let run_spec = report.get("spec").and_then(|v| v.as_str()).unwrap_or("");
-    if let Some(bs) = base_spec {
-        if bs != run_spec {
-            anyhow::bail!(
-                "baseline fault-spec mismatch: {baseline_path} records {bs:?} but this run used {run_spec:?}"
-            );
-        }
-    }
-    let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
-    let mut failures = Vec::new();
-    for case in cases {
-        let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
-        let counter = |key: &str| -> f64 {
-            case.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
-        };
-        let Some(base) = baseline.get(name) else {
-            // A missing entry must not silently disable the gate.
-            failures.push(format!(
-                "{name}: no baseline entry in {baseline_path} — add one (measured skipped_phases {} degraded_iters {} survivor_steps {})",
-                counter("skipped_phases"),
-                counter("degraded_iters"),
-                counter("survivor_steps"),
-            ));
-            continue;
-        };
-        let mut case_failures = Vec::new();
-        for key in ["skipped_phases", "degraded_iters"] {
-            let measured = counter(key);
-            let Some(b) = base.get(key).and_then(|v| v.as_f64()) else {
-                case_failures.push(format!("{name}: baseline entry lacks {key}"));
-                continue;
-            };
-            if measured.is_nan() || measured < b {
-                case_failures.push(format!(
-                    "{name}: {key} {measured} below plan-mandated minimum {b} — degraded paths not taken"
-                ));
-            } else if measured > b * 1.5 {
-                case_failures.push(format!(
-                    "{name}: {key} {measured} exceeds baseline {b} by more than 1.5x — spurious suspects"
-                ));
+    const REGEN_FAULTS: &str =
+        "cargo run --release -p wagma -- bench --quick --faults crash@mid --out /tmp/wagma-faults, \
+         then copy each preset's counters from /tmp/wagma-faults/BENCH_faults.json into the baseline";
+    run_baseline_gate("fault-smoke", REGEN_FAULTS, report, baseline_path, |baseline, failures| {
+        let base_spec =
+            baseline.get("shape").and_then(|s| s.get("spec")).and_then(|v| v.as_str());
+        let run_spec = report.get("spec").and_then(|v| v.as_str()).unwrap_or("");
+        if let Some(bs) = base_spec {
+            if bs != run_spec {
+                anyhow::bail!(
+                    "baseline fault-spec mismatch: {baseline_path} records {bs:?} but this run used {run_spec:?}"
+                );
             }
         }
-        let measured = counter("survivor_steps");
-        match base.get("survivor_steps").and_then(|v| v.as_f64()) {
-            Some(b) if measured == b => {}
-            Some(b) => case_failures.push(format!(
-                "{name}: survivor_steps {measured} != expected {b} (exact: crash iteration is plan-declared)"
-            )),
-            None => case_failures.push(format!("{name}: baseline entry lacks survivor_steps")),
+        let cases = report.get("presets").and_then(|p| p.as_arr()).unwrap_or(&[]);
+        for case in cases {
+            let name = case.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+            let counter =
+                |key: &str| -> f64 { case.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN) };
+            let Some(base) = baseline.get(name) else {
+                // A missing entry must not silently disable the gate.
+                failures.push(format!(
+                    "{name}: no baseline entry in {baseline_path} — add one (measured skipped_phases {} degraded_iters {} survivor_steps {})",
+                    counter("skipped_phases"),
+                    counter("degraded_iters"),
+                    counter("survivor_steps"),
+                ));
+                continue;
+            };
+            let mut case_failures = Vec::new();
+            for key in ["skipped_phases", "degraded_iters"] {
+                let measured = counter(key);
+                let Some(b) = base.get(key).and_then(|v| v.as_f64()) else {
+                    case_failures.push(format!("{name}: baseline entry lacks {key}"));
+                    continue;
+                };
+                if measured.is_nan() || measured < b {
+                    case_failures.push(format!(
+                        "{name}: {key} {measured} below plan-mandated minimum {b} — degraded paths not taken"
+                    ));
+                } else if measured > b * 1.5 {
+                    case_failures.push(format!(
+                        "{name}: {key} {measured} exceeds baseline {b} by more than 1.5x — spurious suspects"
+                    ));
+                }
+            }
+            let measured = counter("survivor_steps");
+            match base.get("survivor_steps").and_then(|v| v.as_f64()) {
+                Some(b) if measured == b => {}
+                Some(b) => case_failures.push(format!(
+                    "{name}: survivor_steps {measured} != expected {b} (exact: crash iteration is plan-declared)"
+                )),
+                None => case_failures.push(format!("{name}: baseline entry lacks survivor_steps")),
+            }
+            if case_failures.is_empty() {
+                println!(
+                    "fault baseline OK for {name}: skipped_phases {} degraded_iters {} survivor_steps {}",
+                    counter("skipped_phases"),
+                    counter("degraded_iters"),
+                    counter("survivor_steps"),
+                );
+            }
+            failures.extend(case_failures);
         }
-        if case_failures.is_empty() {
-            println!(
-                "fault baseline OK for {name}: skipped_phases {} degraded_iters {} survivor_steps {}",
-                counter("skipped_phases"),
-                counter("degraded_iters"),
-                counter("survivor_steps"),
-            );
-        }
-        failures.extend(case_failures);
-    }
-    if failures.is_empty() {
         Ok(())
-    } else {
-        anyhow::bail!("fault-smoke regression:\n{}", failures.join("\n"))
-    }
+    })
 }
 
 /// `wagma top` — live TTY dashboard over a running instrumented

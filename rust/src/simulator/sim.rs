@@ -407,6 +407,16 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                     // layered schedule hid part of it under compute).
                     if cfg.trace {
                         let arrival_max = masked(&arrival, &alive).fold(f64::NEG_INFINITY, f64::max);
+                        // The rank whose late arrival set the barrier — the
+                        // causal peer every other rank's barrier wait points
+                        // at (mirrors the engine's wire-stamped blocked
+                        // receive; first argmax on ties).
+                        let slowest = (0..p)
+                            .filter(|&i| alive[i])
+                            .fold(None::<usize>, |acc, i| match acc {
+                                Some(j) if arrival[j] >= arrival[i] => Some(j),
+                                _ => Some(i),
+                            });
                         let end = (0..p).find(|&i| alive[i]).map_or(app[0], |i| app[i]);
                         let sync_wire =
                             iteration_wire_bytes(cfg, t, group_size, group_plan, engine_comp)
@@ -425,6 +435,11 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                                 );
                                 w.rank = i as u32;
                                 w.version = t as u64;
+                                if let Some(q) = slowest {
+                                    if q != i {
+                                        w.peer = q as u32;
+                                    }
+                                }
                                 trace.push(w);
                             }
                             let mut ts = TraceEvent::new(
@@ -436,6 +451,11 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
                             ts.rank = i as u32;
                             ts.version = t as u64;
                             ts.bytes = sync_wire;
+                            if let Some(q) = slowest {
+                                if q != i {
+                                    ts.peer = q as u32;
+                                }
+                            }
                             trace.push(ts);
                         }
                     }
@@ -725,7 +745,10 @@ fn layered_group_step(
                 if !alive[partner] {
                     // Degraded phase: the exchange with a dead partner
                     // completes as identity (the engine's skipped_phases
-                    // path) — no cost, no progress from that peer.
+                    // path) — no cost, no progress from that peer. The
+                    // dead partner rides in `peer` so the causal graph
+                    // keeps degraded phases attached via the membership
+                    // oracle edge.
                     times[i] = prev[i];
                     if let Some(sink) = tr.as_deref_mut() {
                         let mut ev =
@@ -733,6 +756,7 @@ fn layered_group_step(
                         ev.rank = i as u32;
                         ev.version = t;
                         ev.phase = r;
+                        ev.peer = partner as u32;
                         sink.push(ev);
                     }
                     continue;
@@ -748,6 +772,9 @@ fn layered_group_step(
                         ev.version = t;
                         ev.phase = r;
                         ev.passive = passive;
+                        // Schedule partner = causal peer, exactly what the
+                        // real engine stamps from the wire.
+                        ev.peer = partner as u32;
                         ev
                     };
                     let mut ev = stamp(TraceEvent::new(

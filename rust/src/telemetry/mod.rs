@@ -37,7 +37,7 @@ pub mod top;
 
 pub use prometheus::{fetch_snapshot, lint_exposition, parse_exposition, render, MetricsServer};
 pub use registry::{
-    snapshot_from_json, snapshot_json, AtomicHistogram, RankSnapshot, RankTelemetry,
+    snapshot_from_json, snapshot_json, AtomicHistogram, CritShare, RankSnapshot, RankTelemetry,
     TelemetryRegistry, TelemetrySnapshot,
 };
 pub use sampler::{
@@ -113,12 +113,13 @@ are incomplete — raise the trace ring capacity or the sampler interval"
 
 /// Build an analytic [`TelemetrySnapshot`] from a trace-event list — the
 /// simulator's (and `wagma trace`'s) path onto the live-telemetry
-/// schema. Aggregation mirrors the live publishers with one documented
-/// difference: trace events carry no waited-on partner, so wait-for-peer
-/// time is self-attributed (each rank's own engine-lane blocked time).
-/// The straggler detector runs over this single window with `w` forced
-/// to 1, so sustained analytic skew still surfaces as
-/// [`Health::Straggler`].
+/// schema. Aggregation mirrors the live publishers: engine-lane `Wait`
+/// events carry the waited-on partner in `peer` (the causal wire stamp),
+/// so wait-for-peer time lands on the *waited-on* rank's slot and the
+/// waiter records the blame, exactly as the live engine does.
+/// Peer-less waits fall back to self-attribution. The straggler detector
+/// runs over this single window with `w` forced to 1, so sustained
+/// analytic skew still surfaces as [`Health::Straggler`].
 pub fn snapshot_from_events(p: usize, events: &[TraceEvent]) -> TelemetrySnapshot {
     let registry = TelemetryRegistry::new(p);
     for ev in events {
@@ -131,7 +132,13 @@ pub fn snapshot_from_events(p: usize, events: &[TraceEvent]) -> TelemetrySnapsho
             (Lane::App, TraceKind::Wait) => slot.add_wait_app_ns(ev.dur_ns),
             (Lane::Engine, TraceKind::Wait) => {
                 slot.add_wait_group_ns(ev.dur_ns);
-                slot.record_wait_for_ns(ev.dur_ns);
+                let cause = ev.peer as usize;
+                if ev.peer != crate::trace::NO_PEER && cause < p {
+                    registry.rank(cause).record_wait_for_ns(ev.dur_ns);
+                    slot.record_blame_ns(cause, ev.dur_ns);
+                } else {
+                    slot.record_wait_for_ns(ev.dur_ns);
+                }
             }
             (Lane::Engine, TraceKind::GroupExchangePhase) => slot.add_wire_bytes(ev.bytes),
             (Lane::Engine, TraceKind::TauSync) => slot.add_wire_bytes(ev.bytes),
@@ -148,6 +155,30 @@ pub fn snapshot_from_events(p: usize, events: &[TraceEvent]) -> TelemetrySnapsho
     hub.tick()
 }
 
+/// Fold a computed critical path into the per-class × per-rank
+/// [`CritShare`] rows the sinks expose (`wagma_critpath_share{class,rank}`
+/// in the Prometheus exposition, the `critpath` array in JSONL). Phases
+/// are summed together; shares are parts-per-million of the makespan, so
+/// they stay integer and `Eq`-comparable like every other snapshot field.
+pub fn critpath_shares(cp: &crate::trace::CritPath) -> Vec<CritShare> {
+    let mk = cp.makespan_ns();
+    if mk == 0 {
+        return Vec::new();
+    }
+    let mut per: std::collections::BTreeMap<(u32, &'static str), u64> =
+        std::collections::BTreeMap::new();
+    for (&(rank, _phase, class), &ns) in &cp.cells {
+        *per.entry((rank, class.name())).or_insert(0) += ns;
+    }
+    per.into_iter()
+        .map(|((rank, class), ns)| CritShare {
+            class: class.to_string(),
+            rank,
+            ppm: ns.saturating_mul(1_000_000) / mk,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +190,20 @@ mod tests {
         assert!(w.contains("7 trace event(s) dropped"), "{w}");
         let w = drop_warning(0, 2).expect("warns");
         assert!(w.contains("2 telemetry sampler overrun(s)"), "{w}");
+    }
+
+    #[test]
+    fn critpath_shares_fold_phases_into_ppm_rows() {
+        use crate::trace::{Class, CritPath, NO_PHASE};
+        let mut cp = CritPath { t_start: 0, t_end: 100, ..CritPath::default() };
+        cp.cells.insert((0, NO_PHASE, Class::Compute), 60);
+        cp.cells.insert((1, 0, Class::Transfer), 15);
+        cp.cells.insert((1, 1, Class::Transfer), 25);
+        let shares = critpath_shares(&cp);
+        assert_eq!(shares.len(), 2, "{shares:?}");
+        assert_eq!(shares[0], CritShare { class: "compute".into(), rank: 0, ppm: 600_000 });
+        assert_eq!(shares[1], CritShare { class: "transfer".into(), rank: 1, ppm: 400_000 });
+        assert!(critpath_shares(&CritPath::default()).is_empty());
     }
 
     #[test]

@@ -225,6 +225,20 @@ pub fn render(snap: &TelemetrySnapshot) -> String {
         "counter",
     );
     sample(&mut o, "wagma_sampler_overruns_total", &[], snap.sampler_overruns as f64);
+    family(
+        &mut o,
+        "wagma_critpath_share",
+        "Fraction of the run's critical path per attribution class and rank.",
+        "gauge",
+    );
+    for c in &snap.critpath {
+        sample(
+            &mut o,
+            "wagma_critpath_share",
+            &[("class", c.class.clone()), ("rank", c.rank.to_string())],
+            c.ppm as f64 / 1e6,
+        );
+    }
     o
 }
 
@@ -484,7 +498,21 @@ fn handle_conn(mut stream: TcpStream, latest: &SharedSnapshot) -> std::io::Resul
                 "null",
             ),
         },
-        "/healthz" => write_response(&mut stream, "200 OK", "text/plain", "ok\n"),
+        "/healthz" => {
+            // Health body carries the observability-loss counters so a
+            // probe can alert on silent data loss without parsing the
+            // full exposition.
+            let (dropped, overruns) = snap
+                .as_ref()
+                .map(|s| (s.dropped_trace_events, s.sampler_overruns))
+                .unwrap_or((0, 0));
+            write_response(
+                &mut stream,
+                "200 OK",
+                "text/plain",
+                &format!("ok dropped_trace_events={dropped} sampler_overruns={overruns}\n"),
+            )
+        }
         "/" => write_response(
             &mut stream,
             "200 OK",
@@ -543,12 +571,27 @@ mod tests {
                     membership: 0,
                     window_wait_for_p99_ns: 900_000,
                     total_wait_for_ns: 3_000_000,
+                    blame_peer: if r == 0 { 1 } else { -1 },
+                    blame_p99_ns: if r == 0 { 900_000 } else { 0 },
+                    blame_total_ns: if r == 0 { 3_000_000 } else { 0 },
                     health: if r == 1 { Health::Straggler } else { Health::Healthy },
                 })
                 .collect(),
             fleet_median_p99_ns: 450_000,
             dropped_trace_events: 2,
             sampler_overruns: 1,
+            critpath: vec![
+                super::super::registry::CritShare {
+                    class: "compute".into(),
+                    rank: 0,
+                    ppm: 750_000,
+                },
+                super::super::registry::CritShare {
+                    class: "wait_for_peer".into(),
+                    rank: 1,
+                    ppm: 250_000,
+                },
+            ],
         }
     }
 
@@ -576,6 +619,17 @@ mod tests {
             samples.iter().filter(|s| s.name == "wagma_telemetry_window").collect();
         assert_eq!(windows.len(), 1);
         assert_eq!(windows[0].value, 2.0);
+        // Critical-path share gauges carry class+rank labels, value in
+        // [0,1] (ppm / 1e6).
+        let share = samples
+            .iter()
+            .find(|s| {
+                s.name == "wagma_critpath_share"
+                    && s.labels.iter().any(|(k, v)| k == "class" && v == "compute")
+            })
+            .expect("critpath share gauge");
+        assert_eq!(share.value, 0.75);
+        assert!(share.labels.iter().any(|(k, v)| k == "rank" && v == "0"));
     }
 
     #[test]
@@ -612,6 +666,14 @@ mod tests {
         assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
         let body = resp.split_once("\r\n\r\n").expect("body").1;
         lint_exposition(body).expect("scrape lints");
-        assert!(server.requests_served() >= 2);
+        // /healthz surfaces the observability-loss counters.
+        let mut hz = TcpStream::connect(&addr).expect("connect healthz");
+        hz.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+            .expect("write healthz");
+        let mut hz_resp = String::new();
+        hz.read_to_string(&mut hz_resp).expect("read healthz");
+        let hz_body = hz_resp.split_once("\r\n\r\n").expect("healthz body").1;
+        assert_eq!(hz_body, "ok dropped_trace_events=2 sampler_overruns=1\n", "{hz_resp}");
+        assert!(server.requests_served() >= 3);
     }
 }

@@ -114,9 +114,23 @@ pub struct RankTelemetry {
     /// [`PeerState`] code: 0 healthy, 1 suspect, 2 dead.
     membership: AtomicU64,
     wait_for: AtomicHistogram,
+    /// Per-peer blame: `blame[q]` holds nanoseconds **this** rank spent
+    /// blocked waiting on peer `q` (the mirror of `wait_for`, resolved to
+    /// the waited-on partner). Sized at registry construction; empty under
+    /// `Default` so standalone slots stay allocation-free.
+    blame: Vec<AtomicHistogram>,
 }
 
 impl RankTelemetry {
+    /// A slot that can attribute its own blocked time to each of `p`
+    /// peers ([`TelemetryRegistry::new`] uses this; `Default` keeps the
+    /// blame table empty for contexts without a fixed world size).
+    pub fn with_peers(p: usize) -> RankTelemetry {
+        RankTelemetry {
+            blame: (0..p).map(|_| AtomicHistogram::default()).collect(),
+            ..RankTelemetry::default()
+        }
+    }
     pub fn add_step(&self) {
         self.steps.fetch_add(1, Relaxed);
     }
@@ -157,6 +171,29 @@ impl RankTelemetry {
 
     pub fn wait_for(&self) -> &AtomicHistogram {
         &self.wait_for
+    }
+
+    /// Record nanoseconds **this** rank spent blocked waiting on `peer`
+    /// (the waiter-side mirror of [`RankTelemetry::record_wait_for_ns`]).
+    /// Out-of-range peers (or an unsized blame table) are dropped, not
+    /// panicked on — telemetry must never take the run down.
+    pub fn record_blame_ns(&self, peer: usize, ns: u64) {
+        if let Some(h) = self.blame.get(peer) {
+            h.record(ns);
+        }
+    }
+
+    /// The peer this rank blames the most: `(peer, p99_ns, total_ns)` of
+    /// the per-peer histogram with the largest cumulative blocked time.
+    /// `None` when nothing has been blamed yet.
+    pub fn blame_top(&self) -> Option<(usize, u64, u64)> {
+        self.blame
+            .iter()
+            .enumerate()
+            .map(|(q, h)| (q, h.sum()))
+            .filter(|&(_, total)| total > 0)
+            .max_by_key(|&(_, total)| total)
+            .map(|(q, total)| (q, self.blame[q].load().quantile(0.99) as u64, total))
     }
 
     /// Dead is sticky; suspect never downgrades it.
@@ -240,7 +277,7 @@ impl std::fmt::Debug for TelemetryRegistry {
 impl TelemetryRegistry {
     pub fn new(p: usize) -> TelemetryRegistry {
         TelemetryRegistry {
-            ranks: (0..p).map(|_| RankTelemetry::default()).collect(),
+            ranks: (0..p).map(|_| RankTelemetry::with_peers(p)).collect(),
             dropped_trace_events: AtomicU64::new(0),
             sampler_overruns: AtomicU64::new(0),
         }
@@ -293,12 +330,34 @@ pub struct RankSnapshot {
     pub window_wait_for_p99_ns: u64,
     /// Cumulative nanoseconds peers spent blocked waiting on this rank.
     pub total_wait_for_ns: u64,
+    /// The peer this rank has spent the most blocked time waiting on
+    /// (`-1` when nothing has been blamed yet).
+    pub blame_peer: i64,
+    /// p99 (ns) of the blocked-time distribution against `blame_peer`.
+    pub blame_p99_ns: u64,
+    /// Cumulative nanoseconds this rank spent blocked on `blame_peer`.
+    pub blame_total_ns: u64,
     pub health: Health,
 }
 
 /// Deterministic sampler output: everything the sinks (Prometheus, JSON
 /// lines, `wagma top`) render. Counter fields are cumulative and
 /// code-structural, which is what the CI baseline gate compares.
+/// One critical-path attribution share: the fraction (parts-per-million,
+/// integer so snapshots stay `Eq`-comparable) of the run's critical path
+/// spent in `class` on `rank`. Produced by
+/// [`crate::trace::critical_path_events`] when a traced run ends; empty
+/// for live windows where no trace is attached.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CritShare {
+    /// Attribution class name (`compute`, `wait_for_peer`, `codec`,
+    /// `transfer`, `other`).
+    pub class: String,
+    pub rank: u32,
+    /// Share of the critical path in parts-per-million (1e6 = 100%).
+    pub ppm: u64,
+}
+
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TelemetrySnapshot {
     /// Sampler window sequence number (1-based).
@@ -309,6 +368,9 @@ pub struct TelemetrySnapshot {
     pub fleet_median_p99_ns: u64,
     pub dropped_trace_events: u64,
     pub sampler_overruns: u64,
+    /// Per-class × per-rank critical-path shares (empty until a traced
+    /// run attaches them; see [`CritShare`]).
+    pub critpath: Vec<CritShare>,
 }
 
 impl TelemetrySnapshot {
@@ -337,6 +399,9 @@ fn rank_json(r: &RankSnapshot) -> Json {
         ("membership", json::num(r.membership as f64)),
         ("window_wait_for_p99_ns", json::num(r.window_wait_for_p99_ns as f64)),
         ("total_wait_for_ns", json::num(r.total_wait_for_ns as f64)),
+        ("blame_peer", json::num(r.blame_peer as f64)),
+        ("blame_p99_ns", json::num(r.blame_p99_ns as f64)),
+        ("blame_total_ns", json::num(r.blame_total_ns as f64)),
         ("health", json::s(r.health.name())),
     ])
 }
@@ -350,6 +415,21 @@ pub fn snapshot_json(s: &TelemetrySnapshot) -> Json {
         ("fleet_median_p99_ns", json::num(s.fleet_median_p99_ns as f64)),
         ("dropped_trace_events", json::num(s.dropped_trace_events as f64)),
         ("sampler_overruns", json::num(s.sampler_overruns as f64)),
+        (
+            "critpath",
+            json::arr(
+                s.critpath
+                    .iter()
+                    .map(|c| {
+                        json::obj(vec![
+                            ("class", json::s(&c.class)),
+                            ("rank", json::num(c.rank as f64)),
+                            ("ppm", json::num(c.ppm as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -358,6 +438,13 @@ fn get_u64(j: &Json, key: &str) -> Result<u64, String> {
         .and_then(Json::as_f64)
         .map(|v| v as u64)
         .ok_or_else(|| format!("snapshot json: missing numeric field `{key}`"))
+}
+
+/// Tolerant numeric read for fields added after the first JSONL schema
+/// shipped (`blame_*`, `critpath`): old telemetry files must keep
+/// parsing, so absence falls back to `default` instead of erroring.
+fn opt_f64(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(default)
 }
 
 fn rank_from_json(j: &Json) -> Result<RankSnapshot, String> {
@@ -380,6 +467,9 @@ fn rank_from_json(j: &Json) -> Result<RankSnapshot, String> {
         membership: get_u64(j, "membership")?,
         window_wait_for_p99_ns: get_u64(j, "window_wait_for_p99_ns")?,
         total_wait_for_ns: get_u64(j, "total_wait_for_ns")?,
+        blame_peer: opt_f64(j, "blame_peer", -1.0) as i64,
+        blame_p99_ns: opt_f64(j, "blame_p99_ns", 0.0) as u64,
+        blame_total_ns: opt_f64(j, "blame_total_ns", 0.0) as u64,
         health: Health::from_name(health)
             .ok_or_else(|| format!("snapshot json: unknown health `{health}`"))?,
     })
@@ -395,6 +485,22 @@ pub fn snapshot_from_json(j: &Json) -> Result<TelemetrySnapshot, String> {
         .iter()
         .map(rank_from_json)
         .collect::<Result<Vec<_>, _>>()?;
+    let critpath = j
+        .get("critpath")
+        .and_then(Json::as_arr)
+        .map(|items| {
+            items
+                .iter()
+                .filter_map(|c| {
+                    Some(CritShare {
+                        class: c.get("class")?.as_str()?.to_string(),
+                        rank: c.get("rank")?.as_f64()? as u32,
+                        ppm: c.get("ppm")?.as_f64()? as u64,
+                    })
+                })
+                .collect()
+        })
+        .unwrap_or_default();
     Ok(TelemetrySnapshot {
         window: get_u64(j, "window")?,
         p: get_u64(j, "p")? as usize,
@@ -402,6 +508,7 @@ pub fn snapshot_from_json(j: &Json) -> Result<TelemetrySnapshot, String> {
         fleet_median_p99_ns: get_u64(j, "fleet_median_p99_ns")?,
         dropped_trace_events: get_u64(j, "dropped_trace_events")?,
         sampler_overruns: get_u64(j, "sampler_overruns")?,
+        critpath,
     })
 }
 
@@ -481,15 +588,56 @@ mod tests {
                     membership: 0,
                     window_wait_for_p99_ns: 777,
                     total_wait_for_ns: 1234,
+                    blame_peer: if r == 0 { 1 } else { -1 },
+                    blame_p99_ns: if r == 0 { 512 } else { 0 },
+                    blame_total_ns: if r == 0 { 2048 } else { 0 },
                     health: if r == 1 { Health::Straggler } else { Health::Healthy },
                 })
                 .collect(),
             fleet_median_p99_ns: 777,
             dropped_trace_events: 0,
             sampler_overruns: 0,
+            critpath: vec![
+                CritShare { class: "compute".into(), rank: 0, ppm: 900_000 },
+                CritShare { class: "wait_for_peer".into(), rank: 1, ppm: 100_000 },
+            ],
         };
         let text = snapshot_json(&snap).to_string();
         let back = snapshot_from_json(&Json::parse(&text).expect("parse")).expect("decode");
         assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn old_schema_without_blame_or_critpath_still_parses() {
+        // A pre-blame JSONL record (no blame_* fields, no critpath array)
+        // must decode with the tolerant defaults, not error.
+        let text = r#"{"window":1,"p":1,"ranks":[{"rank":0,"steps":5,"window_steps":5,
+            "wait_app_ns":1,"wait_group_ns":2,"wait_sync_ns":3,"wire_bytes":4,
+            "skipped_phases":0,"degraded_iters":0,"staleness_sum":0,"staleness_count":0,
+            "membership":0,"window_wait_for_p99_ns":0,"total_wait_for_ns":0,
+            "health":"healthy"}],"fleet_median_p99_ns":0,"dropped_trace_events":0,
+            "sampler_overruns":0}"#;
+        let snap = snapshot_from_json(&Json::parse(text).expect("parse")).expect("decode");
+        assert_eq!(snap.ranks[0].blame_peer, -1);
+        assert_eq!(snap.ranks[0].blame_total_ns, 0);
+        assert!(snap.critpath.is_empty());
+    }
+
+    #[test]
+    fn blame_top_names_the_worst_peer() {
+        let r = RankTelemetry::with_peers(4);
+        assert_eq!(r.blame_top(), None);
+        r.record_blame_ns(1, 10_000);
+        r.record_blame_ns(3, 40_000);
+        r.record_blame_ns(3, 50_000);
+        r.record_blame_ns(7, 1_000_000); // out of range: dropped, not a panic
+        let (peer, p99, total) = r.blame_top().expect("some blame recorded");
+        assert_eq!(peer, 3);
+        assert_eq!(total, 90_000);
+        assert!(p99 >= 50_000);
+        // Default-constructed slots have no blame table at all.
+        let bare = RankTelemetry::default();
+        bare.record_blame_ns(0, 5);
+        assert_eq!(bare.blame_top(), None);
     }
 }

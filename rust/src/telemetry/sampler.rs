@@ -93,6 +93,10 @@ impl TelemetryHub {
                     _ if self.detector.is_straggler(r) => Health::Straggler,
                     _ => Health::Healthy,
                 };
+                let (blame_peer, blame_p99_ns, blame_total_ns) = match slot.blame_top() {
+                    Some((q, p99, total)) => (q as i64, p99, total),
+                    None => (-1, 0, 0),
+                };
                 RankSnapshot {
                     rank: r,
                     steps,
@@ -108,6 +112,9 @@ impl TelemetryHub {
                     membership,
                     window_wait_for_p99_ns: p99s[r],
                     total_wait_for_ns: wait_for_sum,
+                    blame_peer,
+                    blame_p99_ns,
+                    blame_total_ns,
                     health,
                 }
             })
@@ -119,6 +126,10 @@ impl TelemetryHub {
             fleet_median_p99_ns: median,
             dropped_trace_events: self.registry.dropped_trace_events(),
             sampler_overruns: self.registry.sampler_overruns(),
+            // Critical-path shares are a whole-run property: the CLI
+            // attaches them post-run (see `wagma critpath`), live windows
+            // publish none.
+            critpath: Vec::new(),
         }
     }
 }
@@ -149,7 +160,11 @@ impl Sink for JsonLinesSink {
         let mut f = self.file.lock().map_err(|_| {
             std::io::Error::new(std::io::ErrorKind::Other, "telemetry file lock poisoned")
         })?;
-        writeln!(f, "{line}")
+        writeln!(f, "{line}")?;
+        // Flush per snapshot so a follower (`wagma top --file`) and a run
+        // killed mid-window both see every published line — the end-of-run
+        // snapshot must never sit in a userspace buffer.
+        f.flush()
     }
 }
 
@@ -311,6 +326,37 @@ mod tests {
         reg.rank(1).mark_dead();
         let snap = hub.tick();
         assert_eq!(snap.ranks[1].health, Health::Dead);
+    }
+
+    #[test]
+    fn jsonl_sink_gets_final_snapshot_even_inside_first_window() {
+        // A run that finishes well inside the first sampler window must
+        // still leave a non-empty JSONL file: stop() forces a final tick
+        // and the sink flushes per line.
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("wagma_jsonl_flush_{}.jsonl", std::process::id()));
+        let path_s = path.to_str().expect("utf8 temp path").to_string();
+        let reg = Arc::new(TelemetryRegistry::new(2));
+        reg.rank(0).add_step();
+        reg.rank(0).record_blame_ns(1, 8_000);
+        let sink = JsonLinesSink::create(&path_s).expect("create sink");
+        let sampler = Sampler::spawn(
+            Arc::clone(&reg),
+            // An hour-long window: only the forced final tick can publish.
+            SamplerConfig { interval: Duration::from_secs(3600), ..Default::default() },
+            vec![Box::new(sink)],
+            shared_snapshot(),
+        );
+        let report = sampler.stop();
+        assert!(report.windows >= 1);
+        let text = std::fs::read_to_string(&path).expect("read jsonl");
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert!(!lines.is_empty(), "final end-of-run snapshot missing from JSONL");
+        let j = crate::util::json::Json::parse(lines[lines.len() - 1]).expect("parse line");
+        let snap = super::super::snapshot_from_json(&j).expect("decode");
+        assert_eq!(snap.ranks[0].steps, 1);
+        assert_eq!(snap.ranks[0].blame_peer, 1);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

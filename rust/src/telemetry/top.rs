@@ -51,7 +51,7 @@ pub fn render_top(snap: &TelemetrySnapshot, width: usize) -> String {
         fmt_ns(snap.fleet_median_p99_ns)
     ));
     out.push_str(&format!(
-        "{:<5} {:<10} {:>8} {:>8} {:>12}  {:<bar$}  {:>10} {:>10} {:>9}\n",
+        "{:<5} {:<10} {:>8} {:>8} {:>12}  {:<bar$}  {:>10} {:>10} {:>9} {:>14}\n",
         "rank",
         "health",
         "steps",
@@ -61,6 +61,7 @@ pub fn render_top(snap: &TelemetrySnapshot, width: usize) -> String {
         "wire",
         "skip/degr",
         "staleness",
+        "blames",
         bar = bar_w + 2,
     ));
     for r in &snap.ranks {
@@ -76,8 +77,15 @@ pub fn render_top(snap: &TelemetrySnapshot, width: usize) -> String {
         } else {
             r.staleness_sum as f64 / r.staleness_count as f64
         };
+        // Who this rank blames: the peer it has spent the most blocked
+        // time waiting on, with the p99 of that per-peer distribution.
+        let blames = if r.blame_peer < 0 {
+            "-".to_string()
+        } else {
+            format!("r{} p99 {}", r.blame_peer, fmt_ns(r.blame_p99_ns))
+        };
         out.push_str(&format!(
-            "r{:<4} {:<10} {:>8} {:>8} {:>12}  |{bar}|  {:>10} {:>6}/{:<3} {:>9.2}\n",
+            "r{:<4} {:<10} {:>8} {:>8} {:>12}  |{bar}|  {:>10} {:>6}/{:<3} {:>9.2} {:>14}\n",
             r.rank,
             r.health.name().to_uppercase(),
             r.steps,
@@ -87,6 +95,7 @@ pub fn render_top(snap: &TelemetrySnapshot, width: usize) -> String {
             r.skipped_phases,
             r.degraded_iters,
             stale,
+            blames,
         ));
     }
     out.push_str(&format!(
@@ -123,6 +132,9 @@ mod tests {
                     membership: 0,
                     window_wait_for_p99_ns: 50_000,
                     total_wait_for_ns: 100_000,
+                    blame_peer: -1,
+                    blame_p99_ns: 0,
+                    blame_total_ns: 0,
                     health: Health::Healthy,
                 },
                 RankSnapshot {
@@ -140,19 +152,28 @@ mod tests {
                     membership: 0,
                     window_wait_for_p99_ns: 9_000_000,
                     total_wait_for_ns: 90_000_000,
+                    blame_peer: 0,
+                    blame_p99_ns: 2_500_000,
+                    blame_total_ns: 80_000_000,
                     health: Health::Straggler,
                 },
             ],
             fleet_median_p99_ns: 50_000,
             dropped_trace_events: 3,
             sampler_overruns: 0,
+            critpath: Vec::new(),
         };
         let frame = render_top(&snap, 80);
         assert!(frame.contains("STRAGGLER"), "{frame}");
         assert!(frame.contains("HEALTHY"), "{frame}");
         assert!(frame.contains("dropped trace events: 3"), "{frame}");
-        // The straggler's bar is full, the healthy rank's nearly empty.
+        // The blames column names the top blamed peer with its p99; a
+        // rank with no blame yet shows a dash.
+        assert!(frame.contains("blames"), "{frame}");
+        assert!(frame.contains("r0 p99 2.50ms"), "{frame}");
         let lines: Vec<&str> = frame.lines().collect();
+        assert!(lines[2].trim_end().ends_with('-'), "{frame}");
+        // The straggler's bar is full, the healthy rank's nearly empty.
         let full = lines[3].matches('#').count();
         let sparse = lines[2].matches('#').count();
         assert!(full > sparse, "{frame}");

@@ -1,0 +1,417 @@
+//! Cross-rank causal graph over the two-lane trace schema.
+//!
+//! [`CausalGraph::build`] stitches the per-rank timelines emitted by the
+//! engine, the workers, the bench, and the simulator into one DAG whose
+//! nodes are *top-level* spans (`Compute`, `Publish`, app-lane `Wait`,
+//! `GroupExchangePhase`, `TauSync`, `Fault`) and whose edges encode
+//! happens-before:
+//!
+//! * **program order** — consecutive spans on the same (rank, lane);
+//! * **publish → engine** — a rank's `Publish` of version *v* precedes
+//!   its engine's first span for *v*;
+//! * **wire** — an exchange span's schedule partner (and, for blocked
+//!   receives, the causal stamp the comm layer carries on the wire — see
+//!   [`crate::comm::Stamp`]) yields an edge from the *producing* side's
+//!   span for the same (version, phase) to the consuming span. This is
+//!   the cross-rank glue: a receive's wait gains a happens-before edge
+//!   to the send that satisfied it;
+//! * **engine → result** — the engine's last span for *v* precedes the
+//!   app-lane `Wait` that consumed the result;
+//! * **membership** — a fault-degraded identity-skip (engine `Fault`
+//!   span with a `peer`) gets an edge from the dead rank's crash marker
+//!   (its peer-less `Fault` span), so degraded runs still yield a
+//!   connected graph: the skip is *caused by* the membership oracle's
+//!   decision, not by an absent message.
+//!
+//! Nested engine sub-spans (`Wait`/`Encode`/`Decode` anchored at their
+//! exchange span's start) are folded into their parent node as class
+//! durations; sub-spans with no enclosing exchange span (e.g. the
+//! simulator's pre-sync barrier waits) stay top-level nodes. The
+//! [`crate::trace::critpath`] walk consumes this graph.
+
+use std::collections::BTreeMap;
+
+use super::{Lane, TraceEvent, TraceKind, NO_PEER};
+
+/// Durations of the sub-spans folded into a top-level engine span.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Nested {
+    /// Blocked-in-receive ns (engine `Wait` sub-span).
+    pub wait_ns: u64,
+    /// Codec encode ns.
+    pub encode_ns: u64,
+    /// Codec decode ns.
+    pub decode_ns: u64,
+}
+
+/// Why an edge exists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Same (rank, lane), consecutive spans.
+    Program,
+    /// Publish of version v → that rank's first engine span for v.
+    Publish,
+    /// Producer's exchange span → consumer's exchange span (same
+    /// version/phase, peer relation carried by the causal wire stamp).
+    Wire,
+    /// Engine's last span for v → the app wait that consumed v's result.
+    Result,
+    /// Crash marker on the dead rank → the degraded identity-skip on the
+    /// survivor (the membership oracle's decision).
+    Membership,
+}
+
+/// One happens-before edge (`from` precedes `to`; indices into
+/// [`CausalGraph::spans`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub from: usize,
+    pub to: usize,
+    pub kind: EdgeKind,
+}
+
+/// The stitched cross-rank DAG.
+#[derive(Debug, Clone, Default)]
+pub struct CausalGraph {
+    /// Top-level spans, sorted by `(t_ns, rank, lane, kind)`.
+    pub spans: Vec<TraceEvent>,
+    /// Folded sub-span durations, parallel to `spans`.
+    pub nested: Vec<Nested>,
+    pub edges: Vec<Edge>,
+    /// Ranks observed (max rank + 1).
+    pub p: usize,
+}
+
+fn is_top_level(ev: &TraceEvent) -> bool {
+    !matches!(
+        (ev.lane, ev.kind),
+        (Lane::Engine, TraceKind::Wait | TraceKind::Encode | TraceKind::Decode)
+    )
+}
+
+impl CausalGraph {
+    /// Build the graph from a merged event stream (any rank order; the
+    /// builder sorts its own copy).
+    pub fn build(events: &[TraceEvent]) -> CausalGraph {
+        let mut evs: Vec<TraceEvent> = events.to_vec();
+        evs.sort_by_key(|e| (e.t_ns, e.rank, e.lane.index(), e.kind.index()));
+        let p = evs.iter().map(|e| e.rank as usize + 1).max().unwrap_or(0);
+
+        // Split top-level spans from nested engine sub-spans.
+        let mut spans: Vec<TraceEvent> = Vec::new();
+        let mut subs: Vec<TraceEvent> = Vec::new();
+        for ev in evs {
+            if is_top_level(&ev) {
+                spans.push(ev);
+            } else {
+                subs.push(ev);
+            }
+        }
+        let mut nested = vec![Nested::default(); spans.len()];
+
+        // Anchor index for sub-span folding: engine exchange/sync spans
+        // keyed by (rank, version, phase, start) — the engine and the
+        // simulator both anchor sub-spans at their parent's start.
+        let mut anchor: BTreeMap<(u32, u64, u32, u64), usize> = BTreeMap::new();
+        // Fallback: per-rank engine exchange spans for interval matching.
+        let mut engine_spans: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for (i, ev) in spans.iter().enumerate() {
+            if ev.lane == Lane::Engine
+                && matches!(ev.kind, TraceKind::GroupExchangePhase | TraceKind::TauSync)
+            {
+                anchor.insert((ev.rank, ev.version, ev.phase, ev.t_ns), i);
+                engine_spans[ev.rank as usize].push(i);
+            }
+        }
+        let mut orphans: Vec<TraceEvent> = Vec::new();
+        for sub in subs {
+            let parent = anchor
+                .get(&(sub.rank, sub.version, sub.phase, sub.t_ns))
+                .copied()
+                .or_else(|| {
+                    // Same version, interval containment (chunked paths
+                    // can re-anchor; simulator barrier waits won't match
+                    // and stay top-level).
+                    engine_spans[sub.rank as usize]
+                        .iter()
+                        .copied()
+                        .find(|&i| {
+                            let s = &spans[i];
+                            s.version == sub.version
+                                && s.t_ns <= sub.t_ns
+                                && sub.t_ns < s.end_ns().max(s.t_ns + 1)
+                        })
+                });
+            match parent {
+                Some(i) => {
+                    let n = &mut nested[i];
+                    match sub.kind {
+                        TraceKind::Wait => n.wait_ns += sub.dur_ns,
+                        TraceKind::Encode => n.encode_ns += sub.dur_ns,
+                        TraceKind::Decode => n.decode_ns += sub.dur_ns,
+                        _ => unreachable!(),
+                    }
+                    // A blocked receive's wire stamp names the true cause;
+                    // prefer it over the schedule partner on sync spans.
+                    if sub.kind == TraceKind::Wait
+                        && sub.peer != NO_PEER
+                        && spans[i].peer == NO_PEER
+                    {
+                        spans[i].peer = sub.peer;
+                    }
+                }
+                None => orphans.push(sub),
+            }
+        }
+        if !orphans.is_empty() {
+            // Unmatched sub-spans become their own nodes (the covering
+            // walk classes them by kind), re-sorted into place.
+            spans.extend(orphans);
+            let mut order: Vec<usize> = (0..spans.len()).collect();
+            order.sort_by_key(|&i| {
+                let e = &spans[i];
+                (e.t_ns, e.rank, e.lane.index(), e.kind.index())
+            });
+            let mut reordered = Vec::with_capacity(spans.len());
+            let mut reordered_nested = Vec::with_capacity(spans.len());
+            for i in order {
+                reordered.push(spans[i]);
+                reordered_nested.push(nested.get(i).copied().unwrap_or_default());
+            }
+            spans = reordered;
+            nested = reordered_nested;
+        }
+
+        let mut g = CausalGraph { spans, nested, edges: Vec::new(), p };
+        g.link();
+        g
+    }
+
+    fn link(&mut self) {
+        let spans = &self.spans;
+        // Program order per (rank, lane).
+        let mut last: BTreeMap<(u32, usize), usize> = BTreeMap::new();
+        for (i, ev) in spans.iter().enumerate() {
+            let key = (ev.rank, ev.lane.index());
+            if let Some(&prev) = last.get(&key) {
+                self.edges.push(Edge { from: prev, to: i, kind: EdgeKind::Program });
+            }
+            last.insert(key, i);
+        }
+        // Publish / Result: per (rank, version), publish span and the
+        // engine's first/last span plus the app wait.
+        let mut publish: BTreeMap<(u32, u64), usize> = BTreeMap::new();
+        let mut first_engine: BTreeMap<(u32, u64), usize> = BTreeMap::new();
+        let mut last_engine: BTreeMap<(u32, u64), usize> = BTreeMap::new();
+        let mut crash_marker: BTreeMap<u32, usize> = BTreeMap::new();
+        // Producer lookup for wire edges: (rank, version, phase, kind).
+        let mut producer: BTreeMap<(u32, u64, u32, usize), usize> = BTreeMap::new();
+        for (i, ev) in spans.iter().enumerate() {
+            match (ev.lane, ev.kind) {
+                (Lane::App, TraceKind::Publish) => {
+                    publish.insert((ev.rank, ev.version), i);
+                }
+                (Lane::Engine, TraceKind::GroupExchangePhase | TraceKind::TauSync) => {
+                    first_engine.entry((ev.rank, ev.version)).or_insert(i);
+                    last_engine.insert((ev.rank, ev.version), i);
+                    producer.insert((ev.rank, ev.version, ev.phase, ev.kind.index()), i);
+                }
+                (Lane::Engine, TraceKind::Fault) if ev.peer == NO_PEER => {
+                    // Peer-less fault span: a crash marker (or deadline
+                    // burn with unknown cause). Keep the earliest as the
+                    // membership decision anchor for this rank.
+                    crash_marker.entry(ev.rank).or_insert(i);
+                }
+                _ => {}
+            }
+        }
+        for (&(rank, version), &eng) in &first_engine {
+            if let Some(&pubi) = publish.get(&(rank, version)) {
+                if pubi != eng {
+                    self.edges.push(Edge { from: pubi, to: eng, kind: EdgeKind::Publish });
+                }
+            }
+        }
+        for (i, ev) in spans.iter().enumerate() {
+            match (ev.lane, ev.kind) {
+                (Lane::App, TraceKind::Wait) => {
+                    if let Some(&eng) = last_engine.get(&(ev.rank, ev.version)) {
+                        self.edges.push(Edge { from: eng, to: i, kind: EdgeKind::Result });
+                    }
+                }
+                (Lane::Engine, TraceKind::GroupExchangePhase | TraceKind::TauSync)
+                    if ev.peer != NO_PEER && ev.peer != ev.rank =>
+                {
+                    if let Some(&from) =
+                        producer.get(&(ev.peer, ev.version, ev.phase, ev.kind.index()))
+                    {
+                        self.edges.push(Edge { from, to: i, kind: EdgeKind::Wire });
+                    }
+                }
+                (Lane::Engine, TraceKind::Fault) if ev.peer != NO_PEER => {
+                    // Degraded identity-skip: caused by the membership
+                    // oracle declaring the peer down.
+                    if let Some(&marker) = crash_marker.get(&ev.peer) {
+                        self.edges.push(Edge { from: marker, to: i, kind: EdgeKind::Membership });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Undirected connectivity from the global sink (the span with the
+    /// latest end): fraction of spans reachable. 1.0 means every recorded
+    /// span — including a crashed rank's pre-crash history and the
+    /// survivors' degraded skips — is causally stitched to the final
+    /// state, which is what makes the critical-path walk meaningful on
+    /// degraded runs.
+    pub fn connected_fraction(&self) -> f64 {
+        if self.spans.is_empty() {
+            return 1.0;
+        }
+        let n = self.spans.len();
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            adj[e.from].push(e.to);
+            adj[e.to].push(e.from);
+        }
+        let sink = (0..n)
+            .max_by_key(|&i| (self.spans[i].end_ns(), std::cmp::Reverse(self.spans[i].rank)))
+            .unwrap_or(0);
+        let mut seen = vec![false; n];
+        let mut stack = vec![sink];
+        seen[sink] = true;
+        let mut count = 0usize;
+        while let Some(i) = stack.pop() {
+            count += 1;
+            for &j in &adj[i] {
+                if !seen[j] {
+                    seen[j] = true;
+                    stack.push(j);
+                }
+            }
+        }
+        count as f64 / n as f64
+    }
+
+    /// Number of edges of each kind (diagnostics / tests).
+    pub fn edge_counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut out = BTreeMap::new();
+        for e in &self.edges {
+            let name = match e.kind {
+                EdgeKind::Program => "program",
+                EdgeKind::Publish => "publish",
+                EdgeKind::Wire => "wire",
+                EdgeKind::Result => "result",
+                EdgeKind::Membership => "membership",
+            };
+            *out.entry(name).or_insert(0) += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{NO_PHASE, NO_VERSION};
+
+    fn ev(kind: TraceKind, lane: Lane, rank: u32, t: u64, dur: u64) -> TraceEvent {
+        let mut e = TraceEvent::new(kind, lane, t, dur);
+        e.rank = rank;
+        e
+    }
+
+    #[test]
+    fn nested_subspans_fold_into_their_exchange_span() {
+        let mut phase = ev(TraceKind::GroupExchangePhase, Lane::Engine, 0, 100, 900);
+        phase.version = 3;
+        phase.phase = 1;
+        phase.peer = 1;
+        let mut wait = ev(TraceKind::Wait, Lane::Engine, 0, 100, 400);
+        wait.version = 3;
+        wait.phase = 1;
+        let mut enc = ev(TraceKind::Encode, Lane::Engine, 0, 100, 50);
+        enc.version = 3;
+        enc.phase = 1;
+        let g = CausalGraph::build(&[phase, wait, enc]);
+        assert_eq!(g.spans.len(), 1);
+        assert_eq!(g.nested[0], Nested { wait_ns: 400, encode_ns: 50, decode_ns: 0 });
+    }
+
+    #[test]
+    fn orphan_subspans_stay_top_level() {
+        // A barrier wait with no enclosing exchange span (the simulator's
+        // pre-sync wait) becomes its own node.
+        let mut w = ev(TraceKind::Wait, Lane::Engine, 0, 100, 400);
+        w.version = 9;
+        let mut sync = ev(TraceKind::TauSync, Lane::Engine, 0, 500, 300);
+        sync.version = 9;
+        sync.phase = NO_PHASE;
+        let g = CausalGraph::build(&[sync, w]);
+        assert_eq!(g.spans.len(), 2);
+        assert_eq!(g.spans[0].kind, TraceKind::Wait);
+        // Program order still chains them.
+        assert_eq!(g.edge_counts().get("program"), Some(&1));
+    }
+
+    #[test]
+    fn wire_edges_connect_producer_to_consumer() {
+        let mk = |rank: u32, peer: u32| {
+            let mut e = ev(TraceKind::GroupExchangePhase, Lane::Engine, rank, 100, 500);
+            e.version = 0;
+            e.phase = 0;
+            e.peer = peer;
+            e
+        };
+        let g = CausalGraph::build(&[mk(0, 1), mk(1, 0)]);
+        assert_eq!(g.edge_counts().get("wire"), Some(&2));
+        assert_eq!(g.connected_fraction(), 1.0);
+    }
+
+    #[test]
+    fn publish_and_result_edges_tie_lanes_together() {
+        let mut p = ev(TraceKind::Publish, Lane::App, 0, 0, 10);
+        p.version = 0;
+        let mut x = ev(TraceKind::GroupExchangePhase, Lane::Engine, 0, 20, 100);
+        x.version = 0;
+        x.phase = 0;
+        let mut w = ev(TraceKind::Wait, Lane::App, 0, 10, 120);
+        w.version = 0;
+        let g = CausalGraph::build(&[p, x, w]);
+        let counts = g.edge_counts();
+        assert_eq!(counts.get("publish"), Some(&1));
+        assert_eq!(counts.get("result"), Some(&1));
+        assert_eq!(g.connected_fraction(), 1.0);
+    }
+
+    #[test]
+    fn membership_edges_keep_degraded_runs_connected() {
+        // Rank 1 crashes (peer-less marker); rank 0's identity-skip names
+        // rank 1 as the down partner. Without the membership edge the two
+        // rank timelines would be disconnected.
+        let mut marker = ev(TraceKind::Fault, Lane::Engine, 1, 50, 0);
+        marker.version = 2;
+        let mut skip = ev(TraceKind::Fault, Lane::Engine, 0, 100, 30);
+        skip.version = 2;
+        skip.phase = 0;
+        skip.peer = 1;
+        let mut comp = ev(TraceKind::Compute, Lane::App, 0, 0, 90);
+        comp.version = 2;
+        let g = CausalGraph::build(&[marker, skip, comp]);
+        assert_eq!(g.edge_counts().get("membership"), Some(&1));
+        assert_eq!(g.connected_fraction(), 1.0);
+    }
+
+    #[test]
+    fn empty_and_versionless_streams_are_fine() {
+        let g = CausalGraph::build(&[]);
+        assert_eq!(g.connected_fraction(), 1.0);
+        assert_eq!(g.p, 0);
+        let lone = ev(TraceKind::Compute, Lane::App, 0, 0, 5);
+        let g = CausalGraph::build(&[lone]);
+        assert_eq!(g.spans[0].version, NO_VERSION);
+        assert_eq!(g.connected_fraction(), 1.0);
+    }
+}

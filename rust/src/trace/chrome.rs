@@ -9,19 +9,25 @@
 
 use crate::util::json::{arr, num, obj, s, Json};
 
-use super::{Lane, TraceEvent, TraceKind, NO_PHASE, NO_VERSION};
+use super::{Lane, TraceEvent, TraceKind, NO_PEER, NO_PHASE, NO_VERSION};
 
 fn tid(ev: &TraceEvent) -> u32 {
     ev.rank * 2 + ev.lane.index() as u32
 }
 
-fn event_json(ev: &TraceEvent, pid: u32) -> Json {
+fn event_json(ev: &TraceEvent, pid: u32, on_path: bool) -> Json {
     let mut args = vec![("bytes", num(ev.bytes as f64)), ("passive", Json::Bool(ev.passive))];
     if ev.version != NO_VERSION {
         args.push(("v", num(ev.version as f64)));
     }
     if ev.phase != NO_PHASE {
         args.push(("phase", num(ev.phase as f64)));
+    }
+    if ev.peer != NO_PEER {
+        args.push(("peer", num(ev.peer as f64)));
+    }
+    if on_path {
+        args.push(("on_path", Json::Bool(true)));
     }
     obj(vec![
         ("name", s(ev.kind.name())),
@@ -56,8 +62,21 @@ pub fn to_chrome(events: &[TraceEvent], process: &str) -> Json {
 /// Export several event streams (one `pid` each) into one document —
 /// used by `wagma bench --trace` to put every preset in the same file.
 pub fn to_chrome_multi(processes: &[(&str, &[TraceEvent])]) -> Json {
+    to_chrome_multi_marked(&processes.iter().map(|&(n, e)| (n, e, None)).collect::<Vec<_>>())
+}
+
+/// [`to_chrome`] with a critical-path overlay: events whose index is in
+/// `on_path` gain an `"on_path": true` arg, so Perfetto can highlight the
+/// spans that determined the makespan (select-by-arg, or just search for
+/// `on_path`). Schema-compatible with [`validate_schema`]/[`from_chrome`]
+/// (extra args are tolerated / ignored).
+pub fn to_chrome_overlay(events: &[TraceEvent], on_path: &[bool], process: &str) -> Json {
+    to_chrome_multi_marked(&[(process, events, Some(on_path))])
+}
+
+fn to_chrome_multi_marked(processes: &[(&str, &[TraceEvent], Option<&[bool]>)]) -> Json {
     let mut out: Vec<Json> = Vec::new();
-    for (pid, (name, events)) in processes.iter().enumerate() {
+    for (pid, (name, events, marks)) in processes.iter().enumerate() {
         let pid = pid as u32;
         out.push(metadata("process_name", pid, None, name));
         let mut tids: Vec<(u32, u32, Lane)> = Vec::new();
@@ -70,7 +89,10 @@ pub fn to_chrome_multi(processes: &[(&str, &[TraceEvent])]) -> Json {
         for (t, rank, lane) in tids {
             out.push(metadata("thread_name", pid, Some(t), &format!("rank {rank} {}", lane.name())));
         }
-        out.extend(events.iter().map(|ev| event_json(ev, pid)));
+        out.extend(events.iter().enumerate().map(|(i, ev)| {
+            let on = marks.map(|m| m.get(i).copied().unwrap_or(false)).unwrap_or(false);
+            event_json(ev, pid, on)
+        }));
     }
     obj(vec![("traceEvents", arr(out)), ("displayTimeUnit", s("ms"))])
 }
@@ -120,6 +142,9 @@ pub fn from_chrome(doc: &Json) -> Result<Vec<TraceEvent>, String> {
         }
         if let Some(p) = args.get("phase").and_then(Json::as_f64) {
             e.phase = p as u32;
+        }
+        if let Some(p) = args.get("peer").and_then(Json::as_f64) {
+            e.peer = p as u32;
         }
         out.push(e);
     }
@@ -191,6 +216,7 @@ mod tests {
         b.phase = 2;
         b.bytes = 65536;
         b.passive = true;
+        b.peer = 3;
         let mut c = TraceEvent::new(TraceKind::Wait, Lane::App, 2_001_000, 400_123);
         c.rank = 1;
         vec![a, b, c]
@@ -253,8 +279,40 @@ mod tests {
         let doc = to_chrome(&[ev], "t");
         let txt = doc.to_string();
         assert!(!txt.contains("18446744073709"), "NO_VERSION must not leak into JSON");
+        assert!(!txt.contains("4294967295"), "NO_PEER/NO_PHASE must not leak into JSON");
         let back = from_chrome(&Json::parse(&txt).unwrap()).unwrap();
         assert_eq!(back[0].version, NO_VERSION);
         assert_eq!(back[0].phase, NO_PHASE);
+        assert_eq!(back[0].peer, super::super::NO_PEER);
+    }
+
+    #[test]
+    fn overlay_marks_survive_schema_and_parse() {
+        let events = sample_events();
+        let marks = vec![false, true, false];
+        let doc = to_chrome_overlay(&events, &marks, "overlay");
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        validate_schema(&reparsed).unwrap();
+        // on_path is an overlay annotation: parsing ignores it, so the
+        // events round-trip unchanged.
+        assert_eq!(from_chrome(&reparsed).unwrap(), events);
+        let spans: Vec<&Json> = reparsed
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        let marked: Vec<bool> = spans
+            .iter()
+            .map(|e| {
+                e.get("args")
+                    .and_then(|a| a.get("on_path"))
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false)
+            })
+            .collect();
+        assert_eq!(marked, marks);
     }
 }

@@ -1,0 +1,814 @@
+//! Iteration-by-iteration critical path over the causal DAG, partitioned
+//! exactly into the attribution classes × rank × phase — plus the
+//! automated regression explainer (`wagma critpath --explain`).
+//!
+//! The walk is a *backward timeline cover*: starting from the global sink
+//! (the span with the latest end), it repeatedly finds the span covering
+//! the current instant on the current rank and consumes time down to that
+//! span's start, emitting one contiguous [`Segment`] per covered stretch.
+//! Cover preference per instant is app-lane work (`Compute`/`Publish`,
+//! real local progress) over engine spans (which explain blocked time)
+//! over app-lane `Wait` (engine idle — waiting on a remote activation).
+//! When a consumed stretch dips into an exchange span's blocked-receive
+//! zone and the span names its causal peer (the wire stamp), the walk
+//! *jumps* to that peer's timeline — the producing side's work is what
+//! the wait was really made of — so the path crosses ranks exactly where
+//! the happens-before edges do. Gaps (no span at all) become `other`.
+//!
+//! Because consecutive segments share endpoints by construction, the
+//! segments tile `[t_start, t_end]` exactly: the per-class nanosecond
+//! totals partition the makespan **bit-exactly, at every P** (the P=1
+//! acceptance pin is just the race-free special case where the walk is
+//! also schedule-deterministic). That is the property that makes the
+//! shares gateable and the explainer's diffs trustworthy: a regression
+//! must show up in a named (rank, phase, class) cell.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::causal::CausalGraph;
+use super::{Lane, TraceEvent, TraceKind, NO_PEER, NO_PHASE, NO_VERSION};
+
+/// Critical-path attribution classes — the trace attribution taxonomy
+/// ([`super::attrib`]) plus `compute` (on-path local work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Class {
+    Compute,
+    WaitForPeer,
+    Codec,
+    Transfer,
+    Other,
+}
+
+/// Number of classes (array-indexed totals).
+pub const N_CLASSES: usize = 5;
+
+impl Class {
+    pub const ALL: [Class; N_CLASSES] =
+        [Class::Compute, Class::WaitForPeer, Class::Codec, Class::Transfer, Class::Other];
+
+    pub fn index(self) -> usize {
+        match self {
+            Class::Compute => 0,
+            Class::WaitForPeer => 1,
+            Class::Codec => 2,
+            Class::Transfer => 3,
+            Class::Other => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Compute => "compute",
+            Class::WaitForPeer => "wait_for_peer",
+            Class::Codec => "codec",
+            Class::Transfer => "transfer",
+            Class::Other => "other",
+        }
+    }
+}
+
+/// One contiguous stretch of the critical path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub rank: u32,
+    pub class: Class,
+    /// Version of the covering span ([`NO_VERSION`] for gaps).
+    pub version: u64,
+    /// Phase of the covering span ([`NO_PHASE`] if none).
+    pub phase: u32,
+    pub t0: u64,
+    pub t1: u64,
+    /// Covering span (index into [`CausalGraph::spans`]); `None` for gaps.
+    pub span: Option<usize>,
+}
+
+impl Segment {
+    pub fn dur_ns(&self) -> u64 {
+        self.t1 - self.t0
+    }
+}
+
+/// The computed critical path and its exact partition.
+#[derive(Debug, Clone, Default)]
+pub struct CritPath {
+    pub t_start: u64,
+    pub t_end: u64,
+    /// Forward time order; consecutive segments share endpoints, so the
+    /// segments tile `[t_start, t_end]` exactly.
+    pub segments: Vec<Segment>,
+    /// Nanoseconds per class ([`Class::index`]); sums to the makespan.
+    pub class_ns: [u64; N_CLASSES],
+    /// Nanoseconds per rank; sums to the makespan.
+    pub rank_ns: Vec<u64>,
+    /// (rank, phase, class) → on-path ns. Phase is [`NO_PHASE`] for
+    /// compute/sync/gap stretches.
+    pub cells: BTreeMap<(u32, u32, Class), u64>,
+    /// version → on-path ns (the iteration-by-iteration view).
+    pub iter_ns: BTreeMap<u64, u64>,
+    /// Distinct spans the path ran through, sorted (overlay input).
+    pub onpath_span_idx: Vec<usize>,
+    /// Bytes-on-wire of the distinct on-path exchange/sync spans.
+    pub onpath_wire_bytes: u64,
+}
+
+/// Per-(rank, priority-lane) cover index: spans sorted by start with
+/// prefix-max ends, so "best span starting before t" is a binary search.
+#[derive(Debug, Default)]
+struct LaneIdx {
+    starts: Vec<u64>,
+    idx: Vec<usize>,
+    pref_end: Vec<u64>,
+    pref_arg: Vec<usize>,
+}
+
+impl LaneIdx {
+    fn push(&mut self, span_idx: usize, t_ns: u64, end_ns: u64) {
+        match (self.pref_end.last().copied(), self.pref_arg.last().copied()) {
+            (Some(e), Some(a)) if end_ns <= e => {
+                self.pref_end.push(e);
+                self.pref_arg.push(a);
+            }
+            _ => {
+                self.pref_end.push(end_ns);
+                self.pref_arg.push(self.idx.len());
+            }
+        }
+        self.starts.push(t_ns);
+        self.idx.push(span_idx);
+    }
+
+    /// Max-end span among those starting strictly before `t`.
+    fn best_before(&self, t: u64) -> Option<(usize, u64)> {
+        let k = self.starts.partition_point(|&x| x < t);
+        if k == 0 {
+            None
+        } else {
+            Some((self.idx[self.pref_arg[k - 1]], self.pref_end[k - 1]))
+        }
+    }
+}
+
+/// Work (app compute/publish) > engine > app wait.
+const N_PRI: usize = 3;
+
+fn priority_of(ev: &TraceEvent) -> usize {
+    match (ev.lane, ev.kind) {
+        (Lane::App, TraceKind::Compute | TraceKind::Publish) => 0,
+        (Lane::Engine, _) => 1,
+        (Lane::App, _) => 2,
+    }
+}
+
+/// Convenience: graph construction + walk in one call.
+pub fn critical_path_events(events: &[TraceEvent]) -> CritPath {
+    critical_path(&CausalGraph::build(events))
+}
+
+/// Compute the critical path of a causal graph (see module docs for the
+/// walk). Deterministic given the events; at P=1 the events themselves
+/// are schedule-deterministic, which is what the bench gates.
+pub fn critical_path(g: &CausalGraph) -> CritPath {
+    let mut cp = CritPath { rank_ns: vec![0; g.p], ..CritPath::default() };
+    if g.spans.is_empty() {
+        return cp;
+    }
+    let mut lanes: Vec<[LaneIdx; N_PRI]> = (0..g.p).map(|_| Default::default()).collect();
+    for (i, ev) in g.spans.iter().enumerate() {
+        lanes[ev.rank as usize][priority_of(ev)].push(i, ev.t_ns, ev.end_ns());
+    }
+    let t_min = g.spans.iter().map(|e| e.t_ns).min().unwrap_or(0);
+    let (mut t, mut rank, _) = g
+        .spans
+        .iter()
+        .map(|e| (e.end_ns(), e.rank, ()))
+        .max_by_key(|&(end, r, _)| (end, std::cmp::Reverse(r)))
+        .unwrap_or((0, 0, ()));
+    cp.t_start = t_min;
+    cp.t_end = t;
+
+    let mut rev_segments: Vec<Segment> = Vec::new();
+    let mut onpath: BTreeSet<usize> = BTreeSet::new();
+    while t > t_min {
+        // Find the covering span at instant t on `rank`, in priority
+        // order; clamp its consumed stretch at any higher-priority
+        // span's end so local work always wins the overlap.
+        let mut cover: Option<(usize, usize)> = None; // (span idx, priority)
+        for (pri, lane) in lanes[rank as usize].iter().enumerate() {
+            if let Some((i, end)) = lane.best_before(t) {
+                if end >= t {
+                    cover = Some((i, pri));
+                    break;
+                }
+            }
+        }
+        match cover {
+            None => {
+                // Gap: no span covers t. Fall to the latest end below t
+                // (or the global start) as `other` time.
+                let bottom = lanes[rank as usize]
+                    .iter()
+                    .filter_map(|l| l.best_before(t).map(|(_, e)| e))
+                    .max()
+                    .unwrap_or(t_min)
+                    .min(t)
+                    .max(t_min);
+                rev_segments.push(Segment {
+                    rank,
+                    class: Class::Other,
+                    version: NO_VERSION,
+                    phase: NO_PHASE,
+                    t0: bottom,
+                    t1: t,
+                    span: None,
+                });
+                t = bottom;
+            }
+            Some((i, pri)) => {
+                let sp = &g.spans[i];
+                let mut bottom = sp.t_ns;
+                for higher in lanes[rank as usize].iter().take(pri) {
+                    if let Some((_, e)) = higher.best_before(t) {
+                        // e < t here, else `higher` would have covered t.
+                        bottom = bottom.max(e);
+                    }
+                }
+                onpath.insert(i);
+                let consumed_wait =
+                    emit_span_segments(&mut rev_segments, g, i, bottom, t, rank);
+                t = bottom;
+                // Cross-rank jump: the blocked stretch was made of the
+                // causal peer's concurrent work — continue on its
+                // timeline if it has history before this instant.
+                if consumed_wait && sp.peer != NO_PEER && sp.peer != sp.rank {
+                    let q = sp.peer as usize;
+                    if q < g.p
+                        && lanes[q].iter().any(|l| l.best_before(t).is_some())
+                    {
+                        rank = sp.peer;
+                    }
+                }
+            }
+        }
+    }
+
+    rev_segments.reverse();
+    for seg in &rev_segments {
+        let d = seg.dur_ns();
+        cp.class_ns[seg.class.index()] += d;
+        if (seg.rank as usize) < cp.rank_ns.len() {
+            cp.rank_ns[seg.rank as usize] += d;
+        }
+        *cp.cells.entry((seg.rank, seg.phase, seg.class)).or_insert(0) += d;
+        if seg.version != NO_VERSION {
+            *cp.iter_ns.entry(seg.version).or_insert(0) += d;
+        }
+    }
+    for &i in &onpath {
+        let sp = &g.spans[i];
+        if sp.lane == Lane::Engine
+            && matches!(sp.kind, TraceKind::GroupExchangePhase | TraceKind::TauSync)
+        {
+            cp.onpath_wire_bytes += sp.bytes;
+        }
+    }
+    cp.onpath_span_idx = onpath.into_iter().collect();
+    cp.segments = rev_segments;
+    debug_assert!(cp.partition_exact(), "segments must tile the makespan");
+    cp
+}
+
+/// Emit the class segments for consuming `[bottom, t]` of span `i`
+/// (top-down, reverse time order). Returns whether the consumed stretch
+/// dipped into the span's blocked-receive zone (jump trigger).
+fn emit_span_segments(
+    out: &mut Vec<Segment>,
+    g: &CausalGraph,
+    i: usize,
+    bottom: u64,
+    t: u64,
+    rank: u32,
+) -> bool {
+    let sp = &g.spans[i];
+    let seg = |class: Class, t0: u64, t1: u64| Segment {
+        rank,
+        class,
+        version: sp.version,
+        phase: sp.phase,
+        t0,
+        t1,
+        span: Some(i),
+    };
+    match (sp.lane, sp.kind) {
+        (Lane::App, TraceKind::Compute) => {
+            out.push(seg(Class::Compute, bottom, t));
+            false
+        }
+        (Lane::App, TraceKind::Publish) => {
+            out.push(seg(Class::Other, bottom, t));
+            false
+        }
+        (Lane::App, _) => {
+            // App-lane wait with no engine span under it: the engine was
+            // idle — at P>1 that is waiting on a remote activation; at
+            // P=1 there are no peers, it is dispatch latency.
+            let class = if g.p > 1 { Class::WaitForPeer } else { Class::Other };
+            out.push(seg(class, bottom, t));
+            false
+        }
+        (Lane::Engine, TraceKind::GroupExchangePhase | TraceKind::TauSync) => {
+            // Subtractive zones anchored at the span start: blocked
+            // receive at the bottom, then codec, then transfer — the
+            // same split `attrib` makes, localized to this span.
+            let n = &g.nested[i];
+            let dur = sp.dur_ns;
+            let wait = n.wait_ns.min(dur);
+            let codec = (n.encode_ns + n.decode_ns).min(dur - wait);
+            let z1 = sp.t_ns + wait;
+            let z2 = z1 + codec;
+            let mut push_zone = |class: Class, lo: u64, hi: u64| {
+                let a = lo.max(bottom);
+                let b = hi.min(t);
+                if b > a {
+                    out.push(seg(class, a, b));
+                }
+            };
+            push_zone(Class::Transfer, z2, t.max(z2));
+            push_zone(Class::Codec, z1, z2);
+            push_zone(Class::WaitForPeer, sp.t_ns, z1);
+            wait > 0 && bottom < z1
+        }
+        (Lane::Engine, TraceKind::Fault) => {
+            // Deadline burned on a missing peer.
+            out.push(seg(Class::WaitForPeer, bottom, t));
+            true
+        }
+        (Lane::Engine, TraceKind::Wait) => {
+            out.push(seg(Class::WaitForPeer, bottom, t));
+            true
+        }
+        (Lane::Engine, TraceKind::Encode | TraceKind::Decode) => {
+            out.push(seg(Class::Codec, bottom, t));
+            false
+        }
+        (Lane::Engine, _) => {
+            out.push(seg(Class::Other, bottom, t));
+            false
+        }
+    }
+}
+
+impl CritPath {
+    pub fn makespan_ns(&self) -> u64 {
+        self.t_end - self.t_start
+    }
+
+    /// The exactness property: class totals partition the makespan
+    /// bit-exactly (true by construction; pinned by tests at P=1).
+    pub fn partition_exact(&self) -> bool {
+        self.class_ns.iter().sum::<u64>() == self.makespan_ns()
+    }
+
+    pub fn onpath_spans(&self) -> usize {
+        self.onpath_span_idx.len()
+    }
+
+    /// Per-event on-path marks for a Chrome overlay over the *original*
+    /// event stream the graph was built from. Top-level on-path spans are
+    /// matched by identity; nested engine sub-spans are marked when their
+    /// enclosing exchange span is on the path.
+    pub fn onpath_marks(&self, g: &CausalGraph, events: &[TraceEvent]) -> Vec<bool> {
+        type Key = (usize, usize, u32, u64, u64, u64, u32);
+        let key = |e: &TraceEvent| -> Key {
+            (e.kind.index(), e.lane.index(), e.rank, e.t_ns, e.dur_ns, e.version, e.phase)
+        };
+        let mut tops: BTreeSet<Key> = BTreeSet::new();
+        let mut nested_keys: BTreeSet<(u32, u64, u32)> = BTreeSet::new();
+        for &i in &self.onpath_span_idx {
+            let sp = &g.spans[i];
+            tops.insert(key(sp));
+            if sp.lane == Lane::Engine
+                && matches!(sp.kind, TraceKind::GroupExchangePhase | TraceKind::TauSync)
+            {
+                nested_keys.insert((sp.rank, sp.version, sp.phase));
+            }
+        }
+        events
+            .iter()
+            .map(|e| {
+                tops.contains(&key(e))
+                    || (e.lane == Lane::Engine
+                        && matches!(
+                            e.kind,
+                            TraceKind::Wait | TraceKind::Encode | TraceKind::Decode
+                        )
+                        && nested_keys.contains(&(e.rank, e.version, e.phase)))
+            })
+            .collect()
+    }
+
+    /// Report JSON — the `critpath` block shape shared by `BENCH_engine.json`
+    /// and `wagma critpath` outputs; [`explain`] diffs two of these.
+    pub fn to_json(&self) -> Json {
+        let makespan = self.makespan_ns().max(1) as f64;
+        let class_obj = |scale: f64| {
+            obj(Class::ALL
+                .iter()
+                .map(|c| (c.name(), num(self.class_ns[c.index()] as f64 * scale)))
+                .collect())
+        };
+        let mut cells: Vec<(&(u32, u32, Class), &u64)> = self.cells.iter().collect();
+        cells.sort_by_key(|&(k, ns)| (std::cmp::Reverse(*ns), *k));
+        let cells_json: Vec<Json> = cells
+            .iter()
+            .take(64)
+            .map(|&(&(rank, phase, class), &ns)| {
+                obj(vec![
+                    ("rank", num(rank as f64)),
+                    ("phase", if phase == NO_PHASE { Json::Null } else { num(phase as f64) }),
+                    ("class", s(class.name())),
+                    ("ns", num(ns as f64)),
+                ])
+            })
+            .collect();
+        let iters: Vec<Json> = self
+            .iter_ns
+            .iter()
+            .map(|(&v, &ns)| obj(vec![("v", num(v as f64)), ("ns", num(ns as f64))]))
+            .collect();
+        obj(vec![
+            ("makespan_ns", num(self.makespan_ns() as f64)),
+            ("onpath_spans", num(self.onpath_spans() as f64)),
+            ("onpath_wire_bytes", num(self.onpath_wire_bytes as f64)),
+            ("class_ns", class_obj(1.0)),
+            ("class_share", class_obj(1.0 / makespan)),
+            ("rank_ns", arr(self.rank_ns.iter().map(|&n| num(n as f64)).collect())),
+            ("cells", arr(cells_json)),
+            ("iters", arr(iters)),
+        ])
+    }
+
+    /// Terminal report: top-k segments + per-class/per-rank share table.
+    pub fn render(&self, label: &str, k: usize) -> String {
+        let makespan = self.makespan_ns();
+        let pct = |ns: u64| {
+            if makespan > 0 { 100.0 * ns as f64 / makespan as f64 } else { 0.0 }
+        };
+        let mut out = format!(
+            "critical path [{label}] — makespan {:.3} ms, {} on-path spans, {} wire bytes on path\n",
+            makespan as f64 * 1e-6,
+            self.onpath_spans(),
+            self.onpath_wire_bytes,
+        );
+        out.push_str("  class shares:");
+        for c in Class::ALL {
+            out.push_str(&format!(" {} {:.1}%", c.name(), pct(self.class_ns[c.index()])));
+        }
+        out.push('\n');
+        out.push_str("  rank shares: ");
+        for (r, &ns) in self.rank_ns.iter().enumerate() {
+            out.push_str(&format!(" r{r} {:.1}%", pct(ns)));
+        }
+        out.push('\n');
+        let mut top: Vec<&Segment> = self.segments.iter().collect();
+        top.sort_by_key(|seg| std::cmp::Reverse(seg.dur_ns()));
+        out.push_str(&format!("  top {} segments:\n", k.min(top.len())));
+        for seg in top.iter().take(k) {
+            let phase = if seg.phase == NO_PHASE {
+                "-".to_string()
+            } else {
+                seg.phase.to_string()
+            };
+            let version = if seg.version == NO_VERSION {
+                "-".to_string()
+            } else {
+                seg.version.to_string()
+            };
+            out.push_str(&format!(
+                "    rank {:>2}  v {:>4}  phase {:>2}  {:<13} {:>10.3} ms ({:4.1}%)\n",
+                seg.rank,
+                version,
+                phase,
+                seg.class.name(),
+                seg.dur_ns() as f64 * 1e-6,
+                pct(seg.dur_ns()),
+            ));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Regression explainer
+// ---------------------------------------------------------------------------
+
+/// One comparable critpath report pulled out of a JSON document.
+struct Extracted<'a> {
+    label: String,
+    crit: &'a Json,
+}
+
+/// Accepts either a bare critpath report (has `makespan_ns`), a bench
+/// report (`presets` array with per-preset `critpath` blocks), or a
+/// critpath-CLI output (`runs` array). The bench block nests arms
+/// (`layered` / `p1`); the layered arm is the one diffed.
+fn extract<'a>(doc: &'a Json, which: &str) -> Result<Vec<Extracted<'a>>, String> {
+    fn arm(block: &Json) -> Option<&Json> {
+        if block.get("makespan_ns").is_some() {
+            return Some(block);
+        }
+        block.get("layered").filter(|b| b.get("makespan_ns").is_some())
+    }
+    if doc.get("makespan_ns").is_some() {
+        return Ok(vec![Extracted { label: "trace".into(), crit: doc }]);
+    }
+    for key in ["presets", "runs"] {
+        if let Some(cases) = doc.get(key).and_then(Json::as_arr) {
+            let mut out = Vec::new();
+            for case in cases {
+                let label = case
+                    .get("preset")
+                    .or_else(|| case.get("label"))
+                    .and_then(Json::as_str)
+                    .unwrap_or("run")
+                    .to_string();
+                if let Some(crit) = case.get("critpath").and_then(arm) {
+                    out.push(Extracted { label, crit });
+                }
+            }
+            if out.is_empty() {
+                return Err(format!(
+                    "{which}: no critpath block in any {key} entry (regenerate with a \
+                     critpath-aware build)"
+                ));
+            }
+            return Ok(out);
+        }
+    }
+    if let Some(crit) = doc.get("critpath").and_then(arm) {
+        return Ok(vec![Extracted { label: "trace".into(), crit }]);
+    }
+    Err(format!("{which}: not a critpath report or bench output (no makespan_ns/presets)"))
+}
+
+fn cell_map(crit: &Json) -> BTreeMap<(i64, i64, String), f64> {
+    let mut out = BTreeMap::new();
+    if let Some(cells) = crit.get("cells").and_then(Json::as_arr) {
+        for c in cells {
+            let rank = c.get("rank").and_then(Json::as_f64).unwrap_or(-1.0) as i64;
+            let phase = c.get("phase").and_then(Json::as_f64).map_or(-1, |p| p as i64);
+            let class = c.get("class").and_then(Json::as_str).unwrap_or("?").to_string();
+            let ns = c.get("ns").and_then(Json::as_f64).unwrap_or(0.0);
+            *out.entry((rank, phase, class)).or_insert(0.0) += ns;
+        }
+    }
+    out
+}
+
+fn f(crit: &Json, key: &str) -> f64 {
+    crit.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// Diff two bench/trace outputs and name the component that moved. The
+/// first output line is the verdict, e.g.
+/// `critical path grew 18%: rank 2 phase 1 transfer, wire bytes +2.1x`.
+/// CI perf gates invoke this on failure so a red job states *why*.
+pub fn explain(old: &Json, new: &Json) -> Result<String, String> {
+    let olds = extract(old, "OLD")?;
+    let news = extract(new, "NEW")?;
+    // Pair by label; diff every pair, lead with the biggest mover.
+    struct Delta {
+        label: String,
+        old_ms: f64,
+        new_ms: f64,
+        growth_pct: f64,
+        culprit: String,
+        wire_ratio: f64,
+        detail: Vec<String>,
+    }
+    let mut deltas: Vec<Delta> = Vec::new();
+    for o in &olds {
+        let Some(n) = news.iter().find(|n| n.label == o.label) else { continue };
+        let old_make = f(o.crit, "makespan_ns");
+        let new_make = f(n.crit, "makespan_ns");
+        if old_make <= 0.0 {
+            continue;
+        }
+        let growth_pct = 100.0 * (new_make - old_make) / old_make;
+        let oc = cell_map(o.crit);
+        let nc = cell_map(n.crit);
+        // The moved component: the (rank, phase, class) cell whose
+        // on-path time grew the most.
+        let mut culprit = String::from("no cell attribution");
+        let mut best = f64::NEG_INFINITY;
+        let mut detail: Vec<String> = Vec::new();
+        let keys: BTreeSet<_> = oc.keys().chain(nc.keys()).cloned().collect();
+        let mut moves: Vec<(f64, String)> = Vec::new();
+        for k in keys {
+            let d = nc.get(&k).unwrap_or(&0.0) - oc.get(&k).unwrap_or(&0.0);
+            let (rank, phase, class) = &k;
+            let name = if *phase < 0 {
+                format!("rank {rank} {class}")
+            } else {
+                format!("rank {rank} phase {phase} {class}")
+            };
+            if d > best {
+                best = d;
+                culprit = name.clone();
+            }
+            moves.push((d, name));
+        }
+        moves.sort_by(|a, b| b.0.abs().partial_cmp(&a.0.abs()).unwrap_or(std::cmp::Ordering::Equal));
+        for (d, name) in moves.iter().take(3) {
+            detail.push(format!("    {name}: {:+.3} ms on-path", d * 1e-6));
+        }
+        let old_wire = f(o.crit, "onpath_wire_bytes");
+        let new_wire = f(n.crit, "onpath_wire_bytes");
+        let wire_ratio = if old_wire > 0.0 { new_wire / old_wire } else { 1.0 };
+        deltas.push(Delta {
+            label: o.label.clone(),
+            old_ms: old_make * 1e-6,
+            new_ms: new_make * 1e-6,
+            growth_pct,
+            culprit,
+            wire_ratio,
+            detail,
+        });
+    }
+    if deltas.is_empty() {
+        return Err("no comparable critpath reports between OLD and NEW (label mismatch?)".into());
+    }
+    deltas.sort_by(|a, b| {
+        b.growth_pct.abs().partial_cmp(&a.growth_pct.abs()).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let lead = &deltas[0];
+    let verb = if lead.growth_pct >= 1.0 {
+        format!("grew {:.0}%", lead.growth_pct)
+    } else if lead.growth_pct <= -1.0 {
+        format!("shrank {:.0}%", -lead.growth_pct)
+    } else {
+        format!("unchanged ({:+.1}%)", lead.growth_pct)
+    };
+    let wire = if lead.wire_ratio >= 1.0 {
+        format!("+{:.1}x", lead.wire_ratio)
+    } else {
+        format!("{:.1}x", lead.wire_ratio)
+    };
+    let mut out =
+        format!("critical path {verb}: {}, wire bytes {wire}\n", lead.culprit);
+    for d in &deltas {
+        out.push_str(&format!(
+            "  [{}] makespan {:.3} ms -> {:.3} ms ({:+.1}%), on-path wire bytes x{:.2}\n",
+            d.label, d.old_ms, d.new_ms, d.growth_pct, d.wire_ratio,
+        ));
+        for line in &d.detail {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: TraceKind, lane: Lane, rank: u32, t: u64, dur: u64) -> TraceEvent {
+        let mut e = TraceEvent::new(kind, lane, t, dur);
+        e.rank = rank;
+        e
+    }
+
+    /// Serial single-rank timeline: compute [0,100), publish [100,110),
+    /// app wait [110,300) containing a sync span [150,250).
+    fn p1_events() -> Vec<TraceEvent> {
+        let mut c = ev(TraceKind::Compute, Lane::App, 0, 0, 100);
+        c.version = 0;
+        let mut p = ev(TraceKind::Publish, Lane::App, 0, 100, 10);
+        p.version = 0;
+        let mut w = ev(TraceKind::Wait, Lane::App, 0, 110, 190);
+        w.version = 0;
+        let mut ts = ev(TraceKind::TauSync, Lane::Engine, 0, 150, 100);
+        ts.version = 0;
+        ts.bytes = 0;
+        vec![c, p, w, ts]
+    }
+
+    #[test]
+    fn p1_partition_is_bit_exact() {
+        let cp = critical_path_events(&p1_events());
+        assert_eq!(cp.makespan_ns(), 300);
+        assert!(cp.partition_exact());
+        assert_eq!(cp.class_ns.iter().sum::<u64>(), 300);
+        // Compute 100, publish (other) 10, transfer 100 (sync span with
+        // no nested waits), and the app-wait remainder is dispatch
+        // latency (`other` at P=1): 40 + 50.
+        assert_eq!(cp.class_ns[Class::Compute.index()], 100);
+        assert_eq!(cp.class_ns[Class::Transfer.index()], 100);
+        assert_eq!(cp.class_ns[Class::Other.index()], 100);
+        assert_eq!(cp.class_ns[Class::WaitForPeer.index()], 0, "no peers at P=1");
+        assert_eq!(cp.onpath_spans(), 4);
+    }
+
+    #[test]
+    fn blocked_receive_jumps_to_the_causal_peer() {
+        // Rank 0 computes late; rank 1's exchange span blocks on rank 0
+        // (wire-stamped peer). The path must cross from rank 1's wait to
+        // rank 0's compute.
+        let mut c0 = ev(TraceKind::Compute, Lane::App, 0, 0, 500);
+        c0.version = 0;
+        let mut x0 = ev(TraceKind::GroupExchangePhase, Lane::Engine, 0, 500, 100);
+        x0.version = 0;
+        x0.phase = 0;
+        x0.peer = 1;
+        let mut c1 = ev(TraceKind::Compute, Lane::App, 1, 0, 100);
+        c1.version = 0;
+        let mut x1 = ev(TraceKind::GroupExchangePhase, Lane::Engine, 1, 100, 520);
+        x1.version = 0;
+        x1.phase = 0;
+        x1.peer = 0;
+        let mut w1 = ev(TraceKind::Wait, Lane::Engine, 1, 100, 400);
+        w1.version = 0;
+        w1.phase = 0;
+        w1.peer = 0;
+        let cp = critical_path_events(&[c0, x0, c1, x1, w1]);
+        assert!(cp.partition_exact());
+        // Rank 0's compute dominates the path via the jump.
+        assert!(cp.class_ns[Class::Compute.index()] >= 500);
+        assert!(cp.rank_ns[0] >= 500, "rank 0 drives the path: {:?}", cp.rank_ns);
+        // The blocked stretch that remains on rank 1 is wait-for-peer or
+        // transfer, never compute.
+        assert!(cp.cells.keys().all(|&(r, _, c)| r != 1 || c != Class::Compute));
+    }
+
+    #[test]
+    fn segments_tile_without_gaps_or_overlap() {
+        let cp = critical_path_events(&p1_events());
+        let mut prev = cp.t_start;
+        for seg in &cp.segments {
+            assert_eq!(seg.t0, prev, "segments must share endpoints");
+            assert!(seg.t1 > seg.t0);
+            prev = seg.t1;
+        }
+        assert_eq!(prev, cp.t_end);
+    }
+
+    #[test]
+    fn report_json_round_trips_into_explainer() {
+        let cp = critical_path_events(&p1_events());
+        let j = cp.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let msg = explain(&parsed, &parsed).unwrap();
+        assert!(msg.starts_with("critical path unchanged"), "{msg}");
+    }
+
+    #[test]
+    fn explainer_names_the_grown_cell() {
+        let mk = |makespan: f64, transfer_ns: f64, wire: f64| {
+            obj(vec![
+                ("makespan_ns", num(makespan)),
+                ("onpath_wire_bytes", num(wire)),
+                (
+                    "cells",
+                    arr(vec![
+                        obj(vec![
+                            ("rank", num(2.0)),
+                            ("phase", num(1.0)),
+                            ("class", s("transfer")),
+                            ("ns", num(transfer_ns)),
+                        ]),
+                        obj(vec![
+                            ("rank", num(0.0)),
+                            ("phase", Json::Null),
+                            ("class", s("compute")),
+                            ("ns", num(makespan - transfer_ns)),
+                        ]),
+                    ]),
+                ),
+            ])
+        };
+        let old = mk(100_000_000.0, 10_000_000.0, 1_000_000.0);
+        let new = mk(118_000_000.0, 28_000_000.0, 2_100_000.0);
+        let msg = explain(&old, &new).unwrap();
+        let first = msg.lines().next().unwrap();
+        assert_eq!(
+            first,
+            "critical path grew 18%: rank 2 phase 1 transfer, wire bytes +2.1x"
+        );
+    }
+
+    #[test]
+    fn explainer_rejects_foreign_documents() {
+        let bad = obj(vec![("hello", num(1.0))]);
+        assert!(explain(&bad, &bad).is_err());
+    }
+
+    #[test]
+    fn empty_stream_yields_empty_path() {
+        let cp = critical_path_events(&[]);
+        assert_eq!(cp.makespan_ns(), 0);
+        assert!(cp.partition_exact());
+        assert!(cp.segments.is_empty());
+    }
+}

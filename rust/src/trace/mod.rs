@@ -28,14 +28,18 @@
 //! histogram registry that replaces ad-hoc percentile math in the bench.
 
 pub mod attrib;
+pub mod causal;
 pub mod chrome;
+pub mod critpath;
 pub mod hist;
 
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 pub use attrib::{attribute, diff_json, render_diff, Attribution};
-pub use chrome::{from_chrome, to_chrome, to_chrome_multi, validate_schema};
+pub use causal::CausalGraph;
+pub use chrome::{from_chrome, to_chrome, to_chrome_multi, to_chrome_overlay, validate_schema};
+pub use critpath::{critical_path, critical_path_events, explain, Class, CritPath};
 pub use hist::{
     bucket_bounds, bucket_of, percentile_sorted, HistogramRegistry, LogHistogram, N_BUCKETS,
 };
@@ -44,6 +48,8 @@ pub use hist::{
 pub const NO_VERSION: u64 = u64::MAX;
 /// Sentinel: event not associated with a butterfly phase / ring segment.
 pub const NO_PHASE: u32 = u32::MAX;
+/// Sentinel: event not associated with (or caused by) a peer rank.
+pub const NO_PEER: u32 = u32::MAX;
 
 /// Per-lane ring capacity (events). At the bench/train scales in this
 /// repo a rank records a handful of events per iteration, so 8 Ki events
@@ -181,6 +187,13 @@ pub struct TraceEvent {
     /// stale buffer after a peer's activation) rather than as activator
     /// or fresh participant.
     pub passive: bool,
+    /// Causal peer ([`NO_PEER`] if none): the schedule partner for
+    /// exchange-phase spans, the rank whose send satisfied the blocked
+    /// receive for engine `Wait` spans (carried on the wire by the comm
+    /// layer's causal stamp), and the dead/suspect partner for degraded
+    /// `Fault` spans — the edge anchors [`causal::CausalGraph`] stitches
+    /// per-rank timelines together with.
+    pub peer: u32,
 }
 
 impl TraceEvent {
@@ -197,6 +210,7 @@ impl TraceEvent {
             phase: NO_PHASE,
             bytes: 0,
             passive: false,
+            peer: NO_PEER,
         }
     }
 
