@@ -12,7 +12,6 @@ use crate::optim::engine::EngineFactory;
 use crate::optim::pjrt_engine::{PjrtEngine, RlEngine};
 use crate::optim::{run_training, Algorithm, SleepEngine, TrainConfig};
 use crate::runtime::ModelRuntime;
-use crate::simulator::simulate;
 use crate::util::stats::{ascii_histogram, Summary};
 
 /// Scale factor applied to paper-seconds in the real-thread convergence
@@ -77,8 +76,16 @@ impl SweepTelemetry {
 }
 
 /// Throughput figures (Fig. 4 / 7 / 10): simulator sweep over
-/// (algorithm × node count).
-pub fn fig_throughput(name: &str, out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
+/// (algorithm × node count). Cells run through `client` — in-process by
+/// default, a `wagma serve` daemon under `--addr` (identical output
+/// either way: the canonical result codec is exact).
+pub fn fig_throughput(
+    name: &str,
+    out_dir: &str,
+    quick: bool,
+    force: bool,
+    client: &crate::serve::Client,
+) -> anyhow::Result<()> {
     let p = preset(name).ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
     println!("== {} — {} ==", p.name, p.description);
     println!(
@@ -100,7 +107,7 @@ pub fn fig_throughput(name: &str, out_dir: &str, quick: bool, force: bool) -> an
             if quick {
                 cfg.steps = 50;
             }
-            let r = simulate(&cfg);
+            let r = client.simulate(&cfg)?;
             tele.record(&r);
             let thr = r.throughput(p.batch);
             let ideal = r.ideal_throughput(p.batch);
@@ -402,7 +409,12 @@ pub fn ablation(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
 /// makespan of flat vs layered exchanges on the fig4 preset, across fusion
 /// modes and bucket thresholds. Quantifies how much communication the
 /// bucket timeline hides under backprop.
-pub fn fig_fusion(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
+pub fn fig_fusion(
+    out_dir: &str,
+    quick: bool,
+    force: bool,
+    client: &crate::serve::Client,
+) -> anyhow::Result<()> {
     use crate::sched::{FusionConfig, FusionMode, FusionPlan, LayerProfile};
 
     let pre = preset("fig4").ok_or_else(|| anyhow::anyhow!("fig4 preset missing"))?;
@@ -427,7 +439,7 @@ pub fn fig_fusion(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()>
         if quick {
             flat_cfg.steps = 50;
         }
-        let flat = simulate(&flat_cfg).makespan;
+        let flat = client.simulate(&flat_cfg)?.makespan;
         for mode in [FusionMode::Threshold, FusionMode::MgWfbp] {
             for &threshold in thresholds {
                 let fusion = FusionConfig { layered: true, mode, threshold_bytes: threshold };
@@ -441,7 +453,7 @@ pub fn fig_fusion(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()>
                     cfg.imbalance.mean(),
                 )
                 .num_buckets();
-                let r = simulate(&cfg);
+                let r = client.simulate(&cfg)?;
                 tele.record(&r);
                 let makespan = r.makespan;
                 let speedup = flat / makespan;
@@ -477,7 +489,12 @@ pub fn fig_fusion(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()>
 /// WAGMA's scope lever: how much wire traffic the per-bucket codecs
 /// remove, at what makespan effect, as the sync period and group size
 /// vary.
-pub fn fig_compression(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
+pub fn fig_compression(
+    out_dir: &str,
+    quick: bool,
+    force: bool,
+    client: &crate::serve::Client,
+) -> anyhow::Result<()> {
     use crate::compress::Compression;
 
     let p = if quick { 16usize } else { 64 };
@@ -525,7 +542,7 @@ pub fn fig_compression(out_dir: &str, quick: bool, force: bool) -> anyhow::Resul
         let groups: Vec<usize> = if quick { vec![8] } else { vec![4, 8, 16] };
         for &tau in &taus {
             for &s in &groups {
-                let cell = |comp: Compression| -> crate::simulator::SimResult {
+                let cell = |comp: Compression| -> anyhow::Result<crate::simulator::SimResult> {
                     let mut cfg = pre.sim_config(Algorithm::Wagma, p, 42);
                     cfg.tau = tau;
                     cfg.group_size = s.min(p);
@@ -533,12 +550,12 @@ pub fn fig_compression(out_dir: &str, quick: bool, force: bool) -> anyhow::Resul
                     if quick {
                         cfg.steps = 50;
                     }
-                    simulate(&cfg)
+                    client.simulate(&cfg)
                 };
-                let baseline = cell(Compression::None);
+                let baseline = cell(Compression::None)?;
                 for &comp in &codecs {
                     // The None row IS the baseline — don't simulate it twice.
-                    let r = if comp.is_none() { baseline.clone() } else { cell(comp) };
+                    let r = if comp.is_none() { baseline.clone() } else { cell(comp)? };
                     tele.record(&r);
                     let reduction = baseline.wire_bytes_per_iter / r.wire_bytes_per_iter;
                     // Only top-k rows have a keep ratio; fabricating one
@@ -586,7 +603,12 @@ pub fn fig_compression(out_dir: &str, quick: bool, force: bool) -> anyhow::Resul
 /// synchronous baseline stalls at least one full detection deadline per
 /// remaining iteration, while WAGMA's deterministic membership re-forms
 /// groups without a detection stall.
-pub fn fig_elastic(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()> {
+pub fn fig_elastic(
+    out_dir: &str,
+    quick: bool,
+    force: bool,
+    client: &crate::serve::Client,
+) -> anyhow::Result<()> {
     use crate::fault::{Crash, FaultPlan, LinkFaults, DEFAULT_DEADLINE_S};
 
     let p = 16usize;
@@ -635,9 +657,9 @@ pub fn fig_elastic(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()
                 let mut cfg = pre.sim_config(algo, p, 42);
                 cfg.steps = steps;
                 cfg.faults = plan;
-                simulate(&cfg)
+                client.simulate(&cfg)
             };
-            let clean = run(FaultPlan::none());
+            let clean = run(FaultPlan::none())?;
             for &crash in crashes {
                 for &skew in skews {
                     for &jitter in jitters {
@@ -659,7 +681,7 @@ pub fn fig_elastic(out_dir: &str, quick: bool, force: bool) -> anyhow::Result<()
                         }
                         let scenario =
                             if labels.is_empty() { "clean".to_string() } else { labels.join("+") };
-                        let r = if plan.is_empty() { clean.clone() } else { run(plan) };
+                        let r = if plan.is_empty() { clean.clone() } else { run(plan)? };
                         tele.record(&r);
                         let loss = r.makespan - clean.makespan;
                         let post_iters = crash.map(|at| steps as f64 - at as f64);

@@ -18,7 +18,9 @@
 //!   seeded crash/stall/skew/jitter plans consumed by both the engine
 //!   and the simulator), a discrete-event cluster
 //!   simulator for at-scale experiments ([`simulator`], with a layered mode
-//!   that consumes the bucket timeline instead of one flat payload), and
+//!   that consumes the bucket timeline instead of one flat payload), a
+//!   long-running sweep service that shards simulator grids across a
+//!   worker pool behind a caching HTTP API ([`serve`]), and
 //!   the PJRT runtime that executes AOT-compiled models ([`runtime`]).
 //!   [`coordinator`] gathers the scheduler-facing coordination API behind
 //!   one import path.
@@ -45,6 +47,7 @@ pub mod optim;
 pub mod rl;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod simulator;
 pub mod telemetry;
 pub mod topology;

@@ -2,13 +2,16 @@
 //!
 //! Subcommands:
 //!   figure <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|ablation|fusion|compress|elastic|all>
-//!          [--out results] [--quick] [--force]
+//!          [--out results] [--quick] [--force] [--addr HOST:PORT]
 //!        Regenerate the paper's figures (simulator sweeps, real training
 //!        convergence runs, distribution plots) plus the fusion/overlap
 //!        makespan study, the compression ratio × τ × group-size sweep,
 //!        and the elastic-membership fault study (crash × skew × jitter;
 //!        WAGMA vs Allreduce-SGD vs PairAveraging). Existing CSV outputs
-//!        are never overwritten unless --force is passed.
+//!        are never overwritten unless --force is passed. --addr routes
+//!        the simulator-backed figures' cells through a running `wagma
+//!        serve` daemon (bit-identical output; repeated sweeps hit its
+//!        cell cache); without it cells run in-process as always.
 //!   train  --model <name> --algo <name> --p N --steps N [--lr F] [--tau N]
 //!          [--group-size N] [--static-groups] [--eval-every N] [--out results]
 //!          [--compression none|topk|q8] [--topk-ratio F] [--trace FILE]
@@ -99,11 +102,35 @@
 //!        files, or bare critpath blocks) and names the component that
 //!        moved — CI perf gates invoke this on failure so a red job
 //!        states *why*.
+//!   serve  --addr HOST:PORT [--workers N] [--cache N]
+//!          | --smoke [--addr HOST:PORT] [--out DIR]
+//!            [--check-serve-baseline FILE]
+//!        The simulator as a long-running sweep service. Daemon mode
+//!        binds HOST:PORT and serves: POST /v1/simulate (one canonical
+//!        SimConfig JSON, one cell back), POST /v1/sweep (a preset × p ×
+//!        τ × group-size × compression × faults grid sharded across
+//!        --workers simulator threads, streamed incrementally as JSON
+//!        lines with a closing summary record), GET /v1/cells/<hash>
+//!        (replay one cached cell), GET /v1/presets, /healthz, plus the
+//!        shared /metrics + /snapshot.json telemetry routes (so `wagma
+//!        top --addr` and Prometheus scrape the daemon like a training
+//!        run). Completed cells live in an in-memory LRU (--cache
+//!        entries) keyed by the canonical config hash: repeated or
+//!        overlapping sweeps only pay for new cells, and a replayed cell
+//!        is bit-identical to a fresh one. --smoke instead drives the
+//!        serve acceptance check: a small sweep submitted twice (second
+//!        pass must be all cache hits), every streamed cell compared
+//!        bit-for-bit against an inline simulate and a /v1/cells replay,
+//!        the JSONL stream written to --out; --check-serve-baseline
+//!        gates the structural counters via the checked-in baseline
+//!        (CI's serve-smoke job). --smoke without --addr starts its own
+//!        in-process daemon on an ephemeral port.
 //!   top    (--addr HOST:PORT | --file FILE) [--interval-ms N] [--once]
-//!        Live TTY dashboard over a running instrumented `train`/`bench`:
-//!        --addr polls /snapshot.json from a --metrics-addr endpoint;
-//!        --file follows a --telemetry JSON-lines file. --once renders a
-//!        single frame and exits (scriptable health checks).
+//!        Live TTY dashboard over a running instrumented `train`/`bench`
+//!        or a `wagma serve` daemon: --addr polls /snapshot.json from a
+//!        --metrics-addr endpoint or the daemon; --file follows a
+//!        --telemetry JSON-lines file. --once renders a single frame and
+//!        exits (scriptable health checks).
 //!   list
 //!        Show available models, algorithms, presets.
 
@@ -131,11 +158,12 @@ fn main() -> anyhow::Result<()> {
         Some("bench") => cmd_bench(&args),
         Some("trace") => cmd_trace(&args),
         Some("critpath") => cmd_critpath(&args),
+        Some("serve") => cmd_serve(&args),
         Some("top") => cmd_top(&args),
         Some("list") => cmd_list(),
         _ => {
             eprintln!(
-                "usage: wagma <figure|train|simulate|bench|trace|critpath|top|list> [flags]  (see src/main.rs docs)"
+                "usage: wagma <figure|train|simulate|bench|trace|critpath|serve|top|list> [flags]  (see src/main.rs docs)"
             );
             std::process::exit(2);
         }
@@ -152,6 +180,9 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     let out = args.str_or("out", "results");
     let quick = args.has("quick");
     let force = args.has("force");
+    // --addr routes simulator cells through a running `wagma serve`
+    // daemon (cache-warm sweeps are free); default is in-process.
+    let client = wagma::serve::Client::from_addr(args.get("addr"));
     std::fs::create_dir_all(&out)?;
     let run = |name: &str| -> anyhow::Result<()> {
         match name {
@@ -159,11 +190,11 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
                 figures::fig_protocol_demos();
                 Ok(())
             }
-            "fig4" | "fig7" | "fig10" => figures::fig_throughput(name, &out, quick, force),
+            "fig4" | "fig7" | "fig10" => figures::fig_throughput(name, &out, quick, force, &client),
             "fig6" | "fig9" => figures::fig_distribution(name, &out, force),
-            "fusion" => figures::fig_fusion(&out, quick, force),
-            "compress" => figures::fig_compression(&out, quick, force),
-            "elastic" => figures::fig_elastic(&out, quick, force),
+            "fusion" => figures::fig_fusion(&out, quick, force, &client),
+            "compress" => figures::fig_compression(&out, quick, force, &client),
+            "elastic" => figures::fig_elastic(&out, quick, force, &client),
             "fig5" => figures::fig5(&out, quick, force),
             "fig8" => figures::fig8(&out, quick, force),
             "fig11" => figures::fig11(&out, quick, force),
@@ -1351,6 +1382,222 @@ fn check_faults_baseline(report: &wagma::util::json::Json, baseline_path: &str) 
 /// `train`/`bench` (or a finished one's telemetry file). Two sources:
 /// `--addr` polls `/snapshot.json` from a `--metrics-addr` endpoint;
 /// `--file` follows a `--telemetry` JSON-lines file (last line wins).
+/// How to regenerate `rust/benches/baseline_serve.json`: run the smoke
+/// and copy the structural blocks from the written report.
+const REGEN_SERVE: &str = "cargo run --release -p wagma -- serve --smoke --out /tmp/wagma-serve, \
+then copy the `sweep` and `identity` blocks from /tmp/wagma-serve/SERVE_report.json";
+
+/// The serve-smoke sweep: small, deterministic, and wide enough to cross
+/// every canonical-codec branch that matters (two algorithms, a top-k
+/// compressed arm, a seeded crash plan). 2 × 2 × 2 = 8 unique cells.
+const SERVE_SMOKE_SWEEP: &str = r#"{"preset":"fig4","algos":["wagma","allreduce_sgd"],"p":[4],"tau":[10],"steps":12,"compression":["none","topk:0.25"],"faults":["none","crash@mid"]}"#;
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.has("smoke") {
+        return cmd_serve_smoke(args);
+    }
+    let Some(addr) = args.get("addr") else {
+        anyhow::bail!("wagma serve needs --addr HOST:PORT (or --smoke; see src/main.rs docs)");
+    };
+    let workers = args.usize_or(
+        "workers",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    );
+    let cache = args.usize_or("cache", 4096);
+    let daemon = wagma::serve::Daemon::start(addr, workers, cache)?;
+    println!(
+        "wagma serve listening on {} ({workers} workers, cache {cache} cells)",
+        daemon.local_addr()
+    );
+    println!(
+        "routes: POST /v1/simulate  POST /v1/sweep  GET /v1/cells/<hash>  GET /v1/presets  \
+         /metrics  /snapshot.json  /healthz"
+    );
+    // The daemon runs on its own threads; this thread just keeps the
+    // process alive until the operator kills it.
+    loop {
+        std::thread::park();
+    }
+}
+
+/// The serve acceptance check, end to end over real HTTP: submit the
+/// smoke sweep twice (the second pass must compute nothing), compare
+/// every streamed cell bit-for-bit against an inline simulation and a
+/// `/v1/cells/<hash>` cache replay, and verify the daemon publishes
+/// telemetry snapshots. Writes the pass-1 JSONL stream and a structural
+/// report under --out; --check-serve-baseline gates the report against
+/// the checked-in baseline.
+fn cmd_serve_smoke(args: &Args) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    use wagma::serve::{canonical, client, sweep_stream, Daemon};
+    use wagma::util::json::{num, obj, s as jstr, Json};
+
+    let out = args.str_or("out", "results");
+    std::fs::create_dir_all(&out)?;
+    // Drive a daemon the caller started (--addr, the CI path) or our
+    // own in-process one on an ephemeral port.
+    let _own: Option<Daemon>;
+    let addr = match args.get("addr") {
+        Some(a) => {
+            _own = None;
+            a.to_string()
+        }
+        None => {
+            let d = Daemon::start("127.0.0.1:0", 2, 256)?;
+            let a = d.local_addr().to_string();
+            _own = Some(d);
+            a
+        }
+    };
+    println!("== serve smoke against {addr} ==");
+
+    // Pass 1: stream the sweep, persist the JSONL exactly as received.
+    let jsonl_path = std::path::Path::new(&out).join("serve_sweep.jsonl");
+    let mut jsonl = std::fs::File::create(&jsonl_path)?;
+    let mut records: Vec<Json> = Vec::new();
+    let summary1 = sweep_stream(&addr, SERVE_SMOKE_SWEEP, |rec| {
+        let _ = writeln!(jsonl, "{}", rec.to_string());
+        records.push(rec.clone());
+    })?;
+    writeln!(jsonl, "{}", summary1.to_string())?;
+    let sfield = |sm: &Json, k: &str| {
+        sm.get("summary").and_then(|x| x.get(k)).and_then(|v| v.as_f64()).unwrap_or(-1.0)
+    };
+    println!(
+        "pass 1: {} cells streamed ({} computed, {} cache hits) -> {}",
+        sfield(&summary1, "cells"),
+        sfield(&summary1, "computed"),
+        sfield(&summary1, "cache_hits"),
+        jsonl_path.display()
+    );
+
+    // Pass 2: the same sweep must compute nothing — the cache-hit
+    // counters are the proof each cell was computed exactly once.
+    let summary2 = sweep_stream(&addr, SERVE_SMOKE_SWEEP, |_| {})?;
+    println!(
+        "pass 2: {} cells streamed ({} computed, {} cache hits)",
+        sfield(&summary2, "cells"),
+        sfield(&summary2, "computed"),
+        sfield(&summary2, "cache_hits"),
+    );
+
+    // Bit-identity: every streamed cell vs an inline simulation of its
+    // own config, and vs the daemon's cache-replay route.
+    let mut inline_match = true;
+    let mut replay_match = true;
+    for rec in &records {
+        let cell = rec.get("cell").ok_or_else(|| anyhow::anyhow!("record without cell"))?;
+        let cfg_json =
+            cell.get("config").ok_or_else(|| anyhow::anyhow!("cell without config"))?;
+        let cfg = canonical::decode_config(cfg_json).map_err(|e| anyhow::anyhow!(e))?;
+        let inline = canonical::encode_result(&simulate(&cfg)).to_string();
+        let streamed =
+            cell.get("result").ok_or_else(|| anyhow::anyhow!("cell without result"))?.to_string();
+        if inline != streamed {
+            inline_match = false;
+            eprintln!("inline mismatch for cell {:?}", cell.get("hash"));
+        }
+        let hash = cell
+            .get("hash")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("cell without hash"))?;
+        let (status, body) = client::get(&addr, &format!("/v1/cells/{hash}"))?;
+        if !status.contains("200") || String::from_utf8_lossy(&body) != cell.to_string() {
+            replay_match = false;
+            eprintln!("replay mismatch for cell {hash} ({status})");
+        }
+    }
+    println!("cell identity: inline_match={inline_match} replay_match={replay_match}");
+
+    // The daemon publishes worker telemetry like a training run.
+    let telemetry_ok = wagma::telemetry::fetch_snapshot(&addr).is_ok();
+    println!("telemetry snapshot after sweep: {telemetry_ok}");
+
+    let report = obj(vec![
+        ("quick", Json::Bool(true)),
+        ("addr", jstr(&addr)),
+        (
+            "sweep",
+            obj(vec![
+                ("cells", num(sfield(&summary1, "cells"))),
+                ("pass1_computed", num(sfield(&summary1, "computed"))),
+                ("pass1_cache_hits", num(sfield(&summary1, "cache_hits"))),
+                ("pass2_computed", num(sfield(&summary2, "computed"))),
+                ("pass2_cache_hits", num(sfield(&summary2, "cache_hits"))),
+                ("streamed_records", num(records.len() as f64)),
+            ]),
+        ),
+        (
+            "identity",
+            obj(vec![
+                ("inline_match", Json::Bool(inline_match)),
+                ("replay_match", Json::Bool(replay_match)),
+                ("telemetry_snapshot", Json::Bool(telemetry_ok)),
+            ]),
+        ),
+    ]);
+    let report_path = std::path::Path::new(&out).join("SERVE_report.json");
+    std::fs::write(&report_path, report.to_string() + "\n")?;
+    println!("report -> {}", report_path.display());
+
+    // The smoke is self-checking even without a baseline file.
+    let cells = sfield(&summary1, "cells");
+    anyhow::ensure!(cells > 0.0, "sweep streamed no cells");
+    anyhow::ensure!(
+        records.len() as f64 == cells,
+        "streamed {} records but summary says {cells} cells",
+        records.len()
+    );
+    anyhow::ensure!(
+        sfield(&summary2, "computed") == 0.0 && sfield(&summary2, "cache_hits") == cells,
+        "second pass recomputed cells: computed={} hits={} (want 0/{cells})",
+        sfield(&summary2, "computed"),
+        sfield(&summary2, "cache_hits"),
+    );
+    anyhow::ensure!(inline_match, "streamed cells diverge from inline simulation");
+    anyhow::ensure!(replay_match, "cache-replayed cells diverge from streamed cells");
+    anyhow::ensure!(telemetry_ok, "daemon served no telemetry snapshot after a sweep");
+
+    if let Some(baseline) = args.get("check-serve-baseline") {
+        check_serve_baseline(&report, baseline)?;
+        println!("serve baseline gate OK ({baseline})");
+    }
+    println!("serve smoke OK");
+    Ok(())
+}
+
+/// Gate the smoke report's structural counters against the checked-in
+/// baseline, exact equality: every field is grid arithmetic or a
+/// determinism invariant, so any drift means the serve contract changed.
+fn check_serve_baseline(
+    report: &wagma::util::json::Json,
+    baseline_path: &str,
+) -> anyhow::Result<()> {
+    run_baseline_gate("serve", REGEN_SERVE, report, baseline_path, |baseline, failures| {
+        for field in
+            ["cells", "pass1_computed", "pass1_cache_hits", "pass2_computed", "pass2_cache_hits"]
+        {
+            let want = baseline.get("sweep").and_then(|x| x.get(field)).and_then(|v| v.as_f64());
+            let got = report.get("sweep").and_then(|x| x.get(field)).and_then(|v| v.as_f64());
+            let Some(want) = want else {
+                failures.push(format!("sweep.{field}: missing from {baseline_path} — add it"));
+                continue;
+            };
+            if got != Some(want) {
+                failures.push(format!("sweep.{field}: measured {got:?}, baseline {want}"));
+            }
+        }
+        for field in ["inline_match", "replay_match", "telemetry_snapshot"] {
+            let got =
+                report.get("identity").and_then(|x| x.get(field)).and_then(|v| v.as_bool());
+            if got != Some(true) {
+                failures.push(format!("identity.{field}: {got:?}, must be true"));
+            }
+        }
+        Ok(())
+    })
+}
+
 fn cmd_top(args: &Args) -> anyhow::Result<()> {
     use wagma::telemetry::{fetch_snapshot, render_top, snapshot_from_json};
     use wagma::util::json::Json;

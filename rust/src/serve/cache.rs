@@ -1,0 +1,170 @@
+//! In-memory LRU cache of completed sweep cells, keyed by the canonical
+//! config hash ([`super::canonical::config_hash`]).
+//!
+//! Entries store the already-encoded canonical config and result JSON,
+//! so a cache replay serves the *same bytes* a fresh computation would
+//! — bit-identity across inline / daemon / replay paths is a property
+//! of storing the encoding, not re-deriving it. Hit/miss counters are
+//! monotonic for the daemon's `/healthz` line and the per-sweep summary
+//! record (they are how a client proves a repeated sweep computed
+//! nothing). Eviction is exact LRU via a monotonic use tick; the O(n)
+//! min-scan on insert is fine at the few-thousand-entry capacities the
+//! daemon runs with.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// One completed cell: canonical config + result encodings.
+#[derive(Debug)]
+pub struct CachedCell {
+    pub hash: u64,
+    pub config_json: Json,
+    pub result_json: Json,
+}
+
+struct Entry {
+    last_used: u64,
+    cell: Arc<CachedCell>,
+}
+
+struct Inner {
+    cap: usize,
+    tick: u64,
+    map: HashMap<u64, Entry>,
+}
+
+/// Thread-safe LRU keyed by config hash.
+pub struct CellCache {
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CellCache {
+    /// `cap` = maximum resident cells (≥ 1).
+    pub fn new(cap: usize) -> CellCache {
+        CellCache {
+            inner: Mutex::new(Inner { cap: cap.max(1), tick: 0, map: HashMap::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a cell, bumping its recency. Counts a hit or a miss.
+    pub fn get(&self, hash: u64) -> Option<Arc<CachedCell>> {
+        let mut inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&hash) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.cell))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a cell, evicting the least-recently-used
+    /// entry when over capacity. Returns the shared handle.
+    pub fn insert(&self, cell: CachedCell) -> Arc<CachedCell> {
+        let mut inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        inner.tick += 1;
+        let tick = inner.tick;
+        let hash = cell.hash;
+        let arc = Arc::new(cell);
+        inner.map.insert(hash, Entry { last_used: tick, cell: Arc::clone(&arc) });
+        while inner.map.len() > inner.cap {
+            if let Some(&oldest) =
+                inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(h, _)| h)
+            {
+                inner.map.remove(&oldest);
+            } else {
+                break;
+            }
+        }
+        arc
+    }
+
+    pub fn len(&self) -> usize {
+        match self.inner.lock() {
+            Ok(g) => g.map.len(),
+            Err(p) => p.into_inner().map.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    fn cell(hash: u64) -> CachedCell {
+        CachedCell {
+            hash,
+            config_json: obj(vec![("seed", num(hash as f64))]),
+            result_json: obj(vec![("makespan", num(1.5))]),
+        }
+    }
+
+    #[test]
+    fn hit_and_miss_counters_track_lookups() {
+        let c = CellCache::new(8);
+        assert!(c.get(1).is_none());
+        c.insert(cell(1));
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_none());
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 2);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let c = CellCache::new(2);
+        c.insert(cell(1));
+        c.insert(cell(2));
+        assert!(c.get(1).is_some()); // 1 is now fresher than 2
+        c.insert(cell(3)); // evicts 2
+        assert!(c.get(2).is_none());
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn replay_serves_the_same_object() {
+        let c = CellCache::new(4);
+        let inserted = c.insert(cell(9));
+        let replayed = c.get(9).expect("hit");
+        assert!(Arc::ptr_eq(&inserted, &replayed));
+        assert_eq!(
+            inserted.result_json.to_string(),
+            replayed.result_json.to_string()
+        );
+    }
+}

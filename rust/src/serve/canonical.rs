@@ -1,0 +1,470 @@
+//! The one canonical [`SimConfig`] encoding: JSON with sorted keys,
+//! shared by the cache key, the HTTP API, and round-trip tests.
+//!
+//! [`Json`] objects are `BTreeMap`-backed, so [`Json::to_string`] emits
+//! keys in sorted order no matter how a request spelled them — parsing
+//! any field ordering and re-encoding yields the identical byte string.
+//! That string is the canonical form; [`config_hash`] is a splitmix64
+//! chain over it (the same mixer the fault plans use for per-link
+//! hashes). Floats round-trip exactly: Rust's `f64` `Display` prints
+//! the shortest string that parses back to the same bits, which is what
+//! makes daemon-computed and cache-replayed cells bit-identical to
+//! inline ones.
+//!
+//! Decoding is strict — every field must be present with the right type
+//! — so a canonical string is total: two configs hash equal iff they
+//! are equal. (`Json` numbers are f64-backed, so integer fields above
+//! 2^53 are not representable; seeds and sizes in practice are far
+//! below that.)
+
+use crate::compress::Compression;
+use crate::data::ImbalanceModel;
+use crate::fault::{Crash, FaultPlan, LinkFaults, Stall};
+use crate::optim::Algorithm;
+use crate::sched::{FusionConfig, FusionMode};
+use crate::simulator::{NetworkModel, SimConfig, SimResult};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Canonical JSON string of a config: sorted keys, shortest-round-trip
+/// floats. This exact string is hashed for the cache key.
+pub fn canonical_string(cfg: &SimConfig) -> String {
+    encode_config(cfg).to_string()
+}
+
+/// 64-bit hash of the canonical string (splitmix64 chain over bytes).
+pub fn config_hash(cfg: &SimConfig) -> u64 {
+    hash_bytes(canonical_string(cfg).as_bytes())
+}
+
+/// Lower-hex form used in `/v1/cells/<hash>` URLs and cell records.
+pub fn hash_hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+pub fn parse_hash_hex(text: &str) -> Result<u64, String> {
+    u64::from_str_radix(text, 16).map_err(|_| format!("bad cell hash `{text}`"))
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h = 0x5157_4147_4d41_0001u64; // "WAGMA" tag: domain-separates this hash family.
+    for chunk in bytes.chunks(8) {
+        let mut word = [0u8; 8];
+        word[..chunk.len()].copy_from_slice(chunk);
+        h = splitmix64(h ^ u64::from_le_bytes(word));
+    }
+    splitmix64(h ^ bytes.len() as u64)
+}
+
+/// Encode one config as a [`Json`] object (sorted keys by construction).
+pub fn encode_config(cfg: &SimConfig) -> Json {
+    obj(vec![
+        ("algo", s(cfg.algo.name())),
+        ("p", num(cfg.p as f64)),
+        ("steps", num(cfg.steps as f64)),
+        ("model_bytes", num(cfg.model_bytes as f64)),
+        ("tau", num(cfg.tau as f64)),
+        ("group_size", num(cfg.group_size as f64)),
+        ("dynamic_groups", Json::Bool(cfg.dynamic_groups)),
+        ("local_sgd_h", num(cfg.local_sgd_h as f64)),
+        ("sgp_neighbors", num(cfg.sgp_neighbors as f64)),
+        ("imbalance", encode_imbalance(&cfg.imbalance)),
+        ("net", encode_net(&cfg.net)),
+        ("seed", num(cfg.seed as f64)),
+        ("fusion", encode_fusion(&cfg.fusion)),
+        ("compress", encode_compress(&cfg.compress)),
+        ("trace", Json::Bool(cfg.trace)),
+        ("faults", encode_faults(&cfg.faults)),
+    ])
+}
+
+/// Strict decode: every field required, unknown enum kinds rejected.
+pub fn decode_config(j: &Json) -> Result<SimConfig, String> {
+    let algo: Algorithm = req_str(j, "algo")?.parse()?;
+    Ok(SimConfig {
+        algo,
+        p: req_usize(j, "p")?,
+        steps: req_usize(j, "steps")?,
+        model_bytes: req_usize(j, "model_bytes")?,
+        tau: req_u64(j, "tau")?,
+        group_size: req_usize(j, "group_size")?,
+        dynamic_groups: req_bool(j, "dynamic_groups")?,
+        local_sgd_h: req_u64(j, "local_sgd_h")?,
+        sgp_neighbors: req_usize(j, "sgp_neighbors")?,
+        imbalance: decode_imbalance(req(j, "imbalance")?)?,
+        net: decode_net(req(j, "net")?)?,
+        seed: req_u64(j, "seed")?,
+        fusion: decode_fusion(req(j, "fusion")?)?,
+        compress: decode_compress(req(j, "compress")?)?,
+        trace: req_bool(j, "trace")?,
+        faults: decode_faults(req(j, "faults")?)?,
+    })
+}
+
+/// Encode a result for the wire and the cell cache. The trace event
+/// list is intentionally excluded: cells are priced timings, not
+/// timelines (the daemon rejects `trace: true` configs).
+pub fn encode_result(r: &SimResult) -> Json {
+    obj(vec![
+        ("algo", s(&r.algo)),
+        ("p", num(r.p as f64)),
+        ("steps", num(r.steps as f64)),
+        ("makespan", num(r.makespan)),
+        ("ideal_makespan", num(r.ideal_makespan)),
+        ("iter_times", arr(r.iter_times.iter().map(|&t| num(t)))),
+        ("mean_skew", num(r.mean_skew)),
+        ("wire_bytes_per_iter", num(r.wire_bytes_per_iter)),
+    ])
+}
+
+pub fn decode_result(j: &Json) -> Result<SimResult, String> {
+    let iter_times = req(j, "iter_times")?
+        .as_arr()
+        .ok_or("result.iter_times: not an array")?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "result.iter_times: non-number entry".to_string()))
+        .collect::<Result<Vec<f64>, String>>()?;
+    Ok(SimResult {
+        algo: req_str(j, "algo")?.to_string(),
+        p: req_usize(j, "p")?,
+        steps: req_usize(j, "steps")?,
+        makespan: req_f64(j, "makespan")?,
+        ideal_makespan: req_f64(j, "ideal_makespan")?,
+        iter_times,
+        mean_skew: req_f64(j, "mean_skew")?,
+        wire_bytes_per_iter: req_f64(j, "wire_bytes_per_iter")?,
+        trace: Vec::new(),
+    })
+}
+
+fn encode_imbalance(m: &ImbalanceModel) -> Json {
+    match *m {
+        ImbalanceModel::Balanced { base, jitter } => obj(vec![
+            ("kind", s("balanced")),
+            ("base", num(base)),
+            ("jitter", num(jitter)),
+        ]),
+        ImbalanceModel::RandomStragglers { base, jitter, delay, count } => obj(vec![
+            ("kind", s("random_stragglers")),
+            ("base", num(base)),
+            ("jitter", num(jitter)),
+            ("delay", num(delay)),
+            ("count", num(count as f64)),
+        ]),
+        ImbalanceModel::BucketedLognormal { scale, mu, sigma, buckets } => obj(vec![
+            ("kind", s("bucketed_lognormal")),
+            ("scale", num(scale)),
+            ("mu", num(mu)),
+            ("sigma", num(sigma)),
+            ("buckets", num(buckets as f64)),
+        ]),
+        ImbalanceModel::HeavyTail { median, sigma, min, max } => obj(vec![
+            ("kind", s("heavy_tail")),
+            ("median", num(median)),
+            ("sigma", num(sigma)),
+            ("min", num(min)),
+            ("max", num(max)),
+        ]),
+    }
+}
+
+fn decode_imbalance(j: &Json) -> Result<ImbalanceModel, String> {
+    match req_str(j, "kind")? {
+        "balanced" => Ok(ImbalanceModel::Balanced {
+            base: req_f64(j, "base")?,
+            jitter: req_f64(j, "jitter")?,
+        }),
+        "random_stragglers" => Ok(ImbalanceModel::RandomStragglers {
+            base: req_f64(j, "base")?,
+            jitter: req_f64(j, "jitter")?,
+            delay: req_f64(j, "delay")?,
+            count: req_usize(j, "count")?,
+        }),
+        "bucketed_lognormal" => Ok(ImbalanceModel::BucketedLognormal {
+            scale: req_f64(j, "scale")?,
+            mu: req_f64(j, "mu")?,
+            sigma: req_f64(j, "sigma")?,
+            buckets: req_usize(j, "buckets")?,
+        }),
+        "heavy_tail" => Ok(ImbalanceModel::HeavyTail {
+            median: req_f64(j, "median")?,
+            sigma: req_f64(j, "sigma")?,
+            min: req_f64(j, "min")?,
+            max: req_f64(j, "max")?,
+        }),
+        other => Err(format!("imbalance.kind: unknown `{other}`")),
+    }
+}
+
+fn encode_net(n: &NetworkModel) -> Json {
+    obj(vec![
+        ("alpha", num(n.alpha)),
+        ("beta", num(n.beta)),
+        ("gamma", num(n.gamma)),
+        ("contention", num(n.contention)),
+        ("delta", num(n.delta)),
+    ])
+}
+
+fn decode_net(j: &Json) -> Result<NetworkModel, String> {
+    Ok(NetworkModel {
+        alpha: req_f64(j, "alpha")?,
+        beta: req_f64(j, "beta")?,
+        gamma: req_f64(j, "gamma")?,
+        contention: req_f64(j, "contention")?,
+        delta: req_f64(j, "delta")?,
+    })
+}
+
+fn encode_fusion(f: &FusionConfig) -> Json {
+    obj(vec![
+        ("layered", Json::Bool(f.layered)),
+        ("mode", s(f.mode.name())),
+        ("threshold_bytes", num(f.threshold_bytes as f64)),
+    ])
+}
+
+fn decode_fusion(j: &Json) -> Result<FusionConfig, String> {
+    let mode: FusionMode = req_str(j, "mode")?.parse()?;
+    Ok(FusionConfig {
+        layered: req_bool(j, "layered")?,
+        mode,
+        threshold_bytes: req_usize(j, "threshold_bytes")?,
+    })
+}
+
+fn encode_compress(c: &Compression) -> Json {
+    match *c {
+        Compression::TopK { ratio } => obj(vec![("kind", s("topk")), ("ratio", num(ratio))]),
+        _ => obj(vec![("kind", s(c.name()))]),
+    }
+}
+
+fn decode_compress(j: &Json) -> Result<Compression, String> {
+    match req_str(j, "kind")? {
+        "none" => Ok(Compression::None),
+        "q8" => Ok(Compression::QuantizeQ8),
+        "topk" => {
+            let ratio = req_f64(j, "ratio")?;
+            if !(ratio > 0.0 && ratio <= 1.0) {
+                return Err(format!("compress.ratio must be in (0, 1], got {ratio}"));
+            }
+            Ok(Compression::TopK { ratio })
+        }
+        other => Err(format!("compress.kind: unknown `{other}` (none|topk|q8)")),
+    }
+}
+
+fn encode_faults(f: &FaultPlan) -> Json {
+    obj(vec![
+        ("seed", num(f.seed as f64)),
+        (
+            "crashes",
+            arr(f.crashes.iter().map(|c| {
+                obj(vec![("rank", num(c.rank as f64)), ("at_iter", num(c.at_iter as f64))])
+            })),
+        ),
+        (
+            "stalls",
+            arr(f.stalls.iter().map(|st| {
+                obj(vec![
+                    ("rank", num(st.rank as f64)),
+                    ("from", num(st.from as f64)),
+                    ("to", num(st.to as f64)),
+                    ("seconds", num(st.seconds)),
+                ])
+            })),
+        ),
+        ("skew", arr(f.skew.iter().map(|&x| num(x)))),
+        ("jitter_s", num(f.link.jitter_s)),
+        ("drop_prob", num(f.link.drop_prob)),
+        ("deadline_s", num(f.deadline_s)),
+    ])
+}
+
+fn decode_faults(j: &Json) -> Result<FaultPlan, String> {
+    let crashes = req(j, "crashes")?
+        .as_arr()
+        .ok_or("faults.crashes: not an array")?
+        .iter()
+        .map(|c| {
+            Ok(Crash { rank: req_usize(c, "rank")?, at_iter: req_u64(c, "at_iter")? })
+        })
+        .collect::<Result<Vec<Crash>, String>>()?;
+    let stalls = req(j, "stalls")?
+        .as_arr()
+        .ok_or("faults.stalls: not an array")?
+        .iter()
+        .map(|st| {
+            Ok(Stall {
+                rank: req_usize(st, "rank")?,
+                from: req_u64(st, "from")?,
+                to: req_u64(st, "to")?,
+                seconds: req_f64(st, "seconds")?,
+            })
+        })
+        .collect::<Result<Vec<Stall>, String>>()?;
+    let skew = req(j, "skew")?
+        .as_arr()
+        .ok_or("faults.skew: not an array")?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "faults.skew: non-number entry".to_string()))
+        .collect::<Result<Vec<f64>, String>>()?;
+    Ok(FaultPlan {
+        seed: req_u64(j, "seed")?,
+        crashes,
+        stalls,
+        skew,
+        link: LinkFaults { jitter_s: req_f64(j, "jitter_s")?, drop_prob: req_f64(j, "drop_prob")? },
+        deadline_s: req_f64(j, "deadline_s")?,
+    })
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("missing field `{key}`"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, String> {
+    req(j, key)?.as_f64().ok_or_else(|| format!("field `{key}`: not a number"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+    req(j, key)?.as_usize().ok_or_else(|| format!("field `{key}`: not a non-negative integer"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
+    let v = req_f64(j, key)?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(format!("field `{key}`: not a non-negative integer"));
+    }
+    Ok(v as u64)
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool, String> {
+    req(j, key)?.as_bool().ok_or_else(|| format!("field `{key}`: not a boolean"))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    req(j, key)?.as_str().ok_or_else(|| format!("field `{key}`: not a string"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::DEFAULT_DEADLINE_S;
+
+    /// A config exercising every nested structure: faults (crashes,
+    /// stalls, skew, link), top-k compression, layered fusion, and a
+    /// non-default imbalance model.
+    pub(crate) fn busy_config() -> SimConfig {
+        SimConfig {
+            algo: Algorithm::Wagma,
+            p: 16,
+            steps: 40,
+            model_bytes: 1 << 20,
+            tau: 8,
+            group_size: 4,
+            dynamic_groups: true,
+            local_sgd_h: 2,
+            sgp_neighbors: 3,
+            imbalance: ImbalanceModel::HeavyTail { median: 1.9, sigma: 0.75, min: 1.7, max: 43.5 },
+            net: NetworkModel::aries(),
+            seed: 7,
+            fusion: FusionConfig { layered: true, mode: FusionMode::MgWfbp, threshold_bytes: 4096 },
+            compress: Compression::TopK { ratio: 0.25 },
+            trace: false,
+            faults: FaultPlan {
+                seed: 11,
+                crashes: vec![Crash { rank: 5, at_iter: 20 }],
+                stalls: vec![Stall { rank: 2, from: 3, to: 9, seconds: 0.125 }],
+                skew: vec![1.0, 1.5, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0],
+                link: LinkFaults { jitter_s: 0.002, drop_prob: 0.01 },
+                deadline_s: DEFAULT_DEADLINE_S,
+            },
+        }
+    }
+
+    #[test]
+    fn round_trips_every_field() {
+        let cfg = busy_config();
+        let decoded = decode_config(&encode_config(&cfg)).expect("decode");
+        assert_eq!(decoded, cfg);
+        // Defaults round-trip too (empty fault plan, no compression).
+        let plain = SimConfig::default();
+        assert_eq!(decode_config(&encode_config(&plain)).expect("decode"), plain);
+    }
+
+    #[test]
+    fn canonical_string_is_field_order_independent() {
+        let cfg = busy_config();
+        let canonical = canonical_string(&cfg);
+        // Parse and re-serialize: the BTreeMap normalizes key order.
+        let reparsed = Json::parse(&canonical).expect("parse").to_string();
+        assert_eq!(reparsed, canonical);
+        // A hostile field ordering — top-level keys reversed by hand —
+        // still decodes to the same config and the same hash.
+        let Json::Obj(map) = Json::parse(&canonical).expect("parse") else { panic!("not an object") };
+        let mut scrambled = String::from("{");
+        for (i, (k, v)) in map.iter().rev().enumerate() {
+            if i > 0 {
+                scrambled.push(',');
+            }
+            scrambled.push_str(&format!("\"{k}\":{}", v.to_string()));
+        }
+        scrambled.push('}');
+        assert_ne!(scrambled, canonical, "scramble should reorder keys");
+        let from_scrambled = decode_config(&Json::parse(&scrambled).expect("parse")).expect("decode");
+        assert_eq!(from_scrambled, cfg);
+        assert_eq!(config_hash(&from_scrambled), config_hash(&cfg));
+        assert_eq!(canonical_string(&from_scrambled), canonical);
+    }
+
+    #[test]
+    fn hash_separates_configs_and_hex_round_trips() {
+        let a = busy_config();
+        let mut b = a.clone();
+        b.seed += 1;
+        assert_ne!(config_hash(&a), config_hash(&b));
+        let mut c = a.clone();
+        c.compress = Compression::TopK { ratio: 0.250001 };
+        assert_ne!(config_hash(&a), config_hash(&c));
+        let h = config_hash(&a);
+        assert_eq!(parse_hash_hex(&hash_hex(h)).expect("hex"), h);
+    }
+
+    #[test]
+    fn strict_decode_rejects_missing_and_unknown() {
+        let mut j = encode_config(&SimConfig::default());
+        if let Json::Obj(map) = &mut j {
+            map.remove("tau");
+        }
+        assert!(decode_config(&j).unwrap_err().contains("tau"));
+        let bad = Json::parse(r#"{"kind":"warp_drive"}"#).expect("parse");
+        assert!(decode_imbalance(&bad).unwrap_err().contains("warp_drive"));
+    }
+
+    #[test]
+    fn result_codec_round_trips_bitwise() {
+        let r = crate::simulator::simulate(&SimConfig {
+            p: 4,
+            steps: 10,
+            ..SimConfig::default()
+        });
+        let encoded = encode_result(&r);
+        let decoded = decode_result(&encoded).expect("decode");
+        // Bit-identity through the text form: f64 Display is shortest
+        // round-trip, so encode(decode(encode(r))) == encode(r).
+        assert_eq!(encode_result(&decoded).to_string(), encoded.to_string());
+        assert_eq!(decoded.makespan.to_bits(), r.makespan.to_bits());
+        assert_eq!(decoded.iter_times.len(), r.iter_times.len());
+        for (a, b) in decoded.iter_times.iter().zip(&r.iter_times) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Client side of the serve API.
+//!
+//! [`Client`] is the seam the figure harnesses run through: in local
+//! mode `simulate` calls the simulator in-process (the historical
+//! behaviour, bit-for-bit); in remote mode it POSTs the canonical
+//! config to a `wagma serve` daemon and decodes the canonical result.
+//! Because both paths round-trip through the same canonical codec is
+//! *not* needed for identity — the local path never encodes at all —
+//! identity instead falls out of the simulator being deterministic and
+//! the codec being exact (f64s print as shortest round-trip strings).
+//!
+//! [`sweep_stream`] consumes `POST /v1/sweep`'s chunked JSON-lines
+//! incrementally: each record invokes the callback as soon as its line
+//! is complete on the wire, so callers observe streaming (and can log
+//! progress) rather than a single end-of-sweep buffer.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::simulator::{simulate, SimConfig, SimResult};
+use crate::util::json::Json;
+
+use super::canonical::{canonical_string, decode_result};
+use super::http::parse_response;
+
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+const IO_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Where simulation requests go: in-process, or a serve daemon.
+#[derive(Debug, Clone)]
+pub struct Client {
+    addr: Option<String>,
+}
+
+impl Client {
+    /// In-process simulation — the default, and the fallback when no
+    /// `--addr` is given.
+    pub fn local() -> Client {
+        Client { addr: None }
+    }
+
+    /// Route every `simulate` through the daemon at `addr`.
+    pub fn remote(addr: &str) -> Client {
+        Client { addr: Some(addr.to_string()) }
+    }
+
+    /// `--addr` plumbing: `Some(addr)` → remote, `None` → local.
+    pub fn from_addr(addr: Option<&str>) -> Client {
+        match addr {
+            Some(a) => Client::remote(a),
+            None => Client::local(),
+        }
+    }
+
+    pub fn is_remote(&self) -> bool {
+        self.addr.is_some()
+    }
+
+    /// Run one cell. Remote mode POSTs `/v1/simulate`; the daemon's
+    /// cache makes repeated figure sweeps over the same grid free.
+    pub fn simulate(&self, cfg: &SimConfig) -> Result<SimResult> {
+        let Some(addr) = &self.addr else {
+            return Ok(simulate(cfg));
+        };
+        let (status, body) = post(addr, "/v1/simulate", &canonical_string(cfg))
+            .with_context(|| format!("POST /v1/simulate to {addr}"))?;
+        if !status.contains("200") {
+            bail!("daemon {addr} answered {status}: {}", String::from_utf8_lossy(&body));
+        }
+        let j = Json::parse(&String::from_utf8_lossy(&body))
+            .map_err(|e| anyhow!("daemon response: {e}"))?;
+        let result = j
+            .get("cell")
+            .and_then(|c| c.get("result"))
+            .ok_or_else(|| anyhow!("daemon response missing cell.result"))?;
+        decode_result(result).map_err(|e| anyhow!("decode result: {e}"))
+    }
+}
+
+fn connect(addr: &str) -> Result<TcpStream> {
+    let sockaddr = addr
+        .parse::<std::net::SocketAddr>()
+        .or_else(|_| {
+            use std::net::ToSocketAddrs;
+            addr.to_socket_addrs()
+                .map_err(|e| anyhow!("resolve {addr}: {e}"))?
+                .next()
+                .ok_or_else(|| anyhow!("resolve {addr}: no addresses"))
+        })
+        .with_context(|| format!("bad address {addr}"))?;
+    let stream = TcpStream::connect_timeout(&sockaddr, CONNECT_TIMEOUT)
+        .with_context(|| format!("connect to {addr}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).context("set read timeout")?;
+    stream.set_write_timeout(Some(IO_TIMEOUT)).context("set write timeout")?;
+    Ok(stream)
+}
+
+fn write_request(stream: &mut TcpStream, method: &str, path: &str, body: &str) -> Result<()> {
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: wagma\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).context("write request head")?;
+    stream.write_all(body.as_bytes()).context("write request body")?;
+    Ok(())
+}
+
+/// Buffered POST: returns (status line, body bytes). Chunked responses
+/// are decoded whole — use [`sweep_stream`] to observe records early.
+pub fn post(addr: &str, path: &str, body: &str) -> Result<(String, Vec<u8>)> {
+    let mut stream = connect(addr)?;
+    write_request(&mut stream, "POST", path, body)?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("read response")?;
+    let (status, _ctype, body) = parse_response(&raw).map_err(|e| anyhow!("{e}"))?;
+    Ok((status, body))
+}
+
+/// Buffered GET.
+pub fn get(addr: &str, path: &str) -> Result<(String, Vec<u8>)> {
+    let mut stream = connect(addr)?;
+    write_request(&mut stream, "GET", path, "")?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("read response")?;
+    let (status, _ctype, body) = parse_response(&raw).map_err(|e| anyhow!("{e}"))?;
+    Ok((status, body))
+}
+
+/// Drive `POST /v1/sweep` and surface each JSONL record *as it lands
+/// on the wire* — cache hits arrive before the first computed cell
+/// finishes, which is the observable proof the stream is incremental.
+/// Returns the final `{"summary":...}` record.
+pub fn sweep_stream(
+    addr: &str,
+    request_body: &str,
+    mut on_record: impl FnMut(&Json),
+) -> Result<Json> {
+    let mut stream = connect(addr)?;
+    write_request(&mut stream, "POST", "/v1/sweep", request_body)?;
+    let mut reader = BufReader::new(stream);
+
+    // Status line + headers.
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read status line")?;
+    let status = line.trim().to_string();
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("read header")?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        let lower = h.to_ascii_lowercase();
+        if lower.starts_with("transfer-encoding:") && lower.contains("chunked") {
+            chunked = true;
+        }
+    }
+    if !status.contains("200") {
+        let mut rest = Vec::new();
+        let _ = reader.read_to_end(&mut rest);
+        let body = if chunked {
+            super::http::decode_chunked(&rest).unwrap_or(rest)
+        } else {
+            rest
+        };
+        bail!("sweep to {addr} answered {status}: {}", String::from_utf8_lossy(&body));
+    }
+    if !chunked {
+        bail!("sweep response was not chunked — daemon too old?");
+    }
+
+    // Chunk loop: records are newline-terminated JSON objects; a chunk
+    // boundary need not align with a record boundary, so buffer.
+    let mut pending = String::new();
+    let mut summary: Option<Json> = None;
+    loop {
+        let mut size_line = String::new();
+        reader.read_line(&mut size_line).context("read chunk size")?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| anyhow!("bad chunk size line {size_line:?}"))?;
+        let mut chunk = vec![0u8; size + 2]; // payload + trailing \r\n
+        reader.read_exact(&mut chunk).context("read chunk")?;
+        if size == 0 {
+            break;
+        }
+        pending.push_str(&String::from_utf8_lossy(&chunk[..size]));
+        while let Some(nl) = pending.find('\n') {
+            let record_line: String = pending.drain(..=nl).collect();
+            let record_line = record_line.trim();
+            if record_line.is_empty() {
+                continue;
+            }
+            let record =
+                Json::parse(record_line).map_err(|e| anyhow!("bad sweep record: {e}"))?;
+            if record.get("summary").is_some() {
+                summary = Some(record);
+            } else {
+                on_record(&record);
+            }
+        }
+    }
+    summary.ok_or_else(|| anyhow!("sweep stream ended without a summary record"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::daemon::Daemon;
+
+    fn cfg() -> SimConfig {
+        SimConfig { p: 4, steps: 10, model_bytes: 1 << 16, ..SimConfig::default() }
+    }
+
+    #[test]
+    fn local_client_matches_direct_simulate_bitwise() {
+        let c = Client::local();
+        let direct = simulate(&cfg());
+        let via = c.simulate(&cfg()).expect("local simulate");
+        assert_eq!(
+            crate::serve::canonical::encode_result(&direct).to_string(),
+            crate::serve::canonical::encode_result(&via).to_string()
+        );
+    }
+
+    #[test]
+    fn remote_client_round_trips_the_result_bitwise() {
+        let d = Daemon::start("127.0.0.1:0", 2, 16).expect("daemon");
+        let addr = d.local_addr().to_string();
+        let c = Client::remote(&addr);
+        let remote = c.simulate(&cfg()).expect("remote simulate");
+        let inline = simulate(&cfg());
+        assert_eq!(
+            crate::serve::canonical::encode_result(&remote).to_string(),
+            crate::serve::canonical::encode_result(&inline).to_string()
+        );
+    }
+
+    #[test]
+    fn sweep_stream_yields_records_then_summary() {
+        let d = Daemon::start("127.0.0.1:0", 2, 16).expect("daemon");
+        let addr = d.local_addr().to_string();
+        let body = r#"{"p":[4],"algos":["wagma","local"],"steps":8,"model_bytes":65536}"#;
+        let mut seen = 0usize;
+        let summary = sweep_stream(&addr, body, |rec| {
+            assert!(rec.get("cell").is_some());
+            seen += 1;
+        })
+        .expect("sweep");
+        assert_eq!(seen, 2);
+        let cells = summary
+            .get("summary")
+            .and_then(|x| x.get("cells"))
+            .and_then(|v| v.as_f64());
+        assert_eq!(cells, Some(2.0));
+    }
+}

@@ -1,0 +1,807 @@
+//! The `wagma serve` daemon: the discrete-event simulator behind a
+//! long-running HTTP API with a worker pool and a cell cache.
+//!
+//! Routes (all served through the shared [`super::http::Router`]):
+//!
+//! * `POST /v1/simulate` — one canonical [`SimConfig`] JSON body, one
+//!   cell back (`{"cache":"hit"|"miss","cell":{config,hash,result}}`).
+//! * `POST /v1/sweep` — a grid spec (preset × algos × p × τ × group
+//!   size × compression × faults); cells are sharded across the worker
+//!   pool and streamed back incrementally as JSON-lines (cache hits
+//!   first, computed cells in completion order), closed by one
+//!   `{"summary":...}` record carrying the cache-hit/computed counters.
+//! * `GET /v1/cells/<hash>` — replay one cached cell by canonical hash.
+//! * `GET /v1/presets` — the experiment presets a sweep can start from.
+//! * `GET /healthz` — liveness plus worker/cache/cell counters.
+//! * `GET /metrics`, `GET /snapshot.json` — the telemetry exposition
+//!   re-exported from the shared router: workers publish per-cell
+//!   progress into a [`TelemetryRegistry`] slot each (steps = cells
+//!   computed, wire bytes = modelled bytes-on-wire), so `wagma top
+//!   --addr` and a Prometheus scraper work against the daemon exactly
+//!   as against a training run's `--metrics-addr` listener.
+//!
+//! Determinism: the simulator is re-entrant and seed-deterministic, so
+//! a cell is bit-identical whether computed inline, by any worker
+//! thread, or replayed from the cache — the cache stores the canonical
+//! encodings, and [`cell_json`] serves the same bytes on every path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::config::{preset, preset_names};
+use crate::fault::FaultPlan;
+use crate::optim::Algorithm;
+use crate::compress::Compression;
+use crate::simulator::{simulate, SimConfig, SimResult};
+use crate::telemetry::{
+    shared_snapshot, snapshot_json, SharedSnapshot, StragglerConfig, TelemetryHub,
+    TelemetryRegistry,
+};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::cache::{CachedCell, CellCache};
+use super::canonical::{
+    config_hash, decode_config, encode_config, encode_result, hash_hex, parse_hash_hex,
+};
+use super::http::{Request, ResponseWriter, Router, Server};
+
+/// Hard ceiling on one sweep's grid (after dedup) — a request-shape
+/// guard, not a throughput limit; overlapping sweeps pay only for new
+/// cells anyway.
+const MAX_SWEEP_CELLS: usize = 4096;
+/// How long a submitted cell may take before the request errors out.
+const CELL_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(600);
+
+struct Job {
+    hash: u64,
+    cfg: SimConfig,
+    reply: mpsc::Sender<JobDone>,
+}
+
+struct JobDone {
+    hash: u64,
+    cfg: SimConfig,
+    result: SimResult,
+}
+
+/// Worker-side telemetry: one registry slot per worker thread, ticked
+/// into the shared latest-snapshot slot after every computed cell.
+struct PoolTelemetry {
+    registry: Arc<TelemetryRegistry>,
+    hub: Mutex<TelemetryHub>,
+    latest: SharedSnapshot,
+}
+
+impl PoolTelemetry {
+    fn new(workers: usize, latest: SharedSnapshot) -> PoolTelemetry {
+        let registry = Arc::new(TelemetryRegistry::new(workers));
+        // One analytic window per tick; w=1 so the detector never waits
+        // for consecutive windows that a request-driven daemon may not
+        // produce.
+        let cfg = StragglerConfig { w: 1, ..StragglerConfig::default() };
+        let hub = Mutex::new(TelemetryHub::new(Arc::clone(&registry), cfg));
+        PoolTelemetry { registry, hub, latest }
+    }
+
+    fn record_cell(&self, worker: usize, r: &SimResult) {
+        let slot = self.registry.rank(worker);
+        slot.add_step();
+        let total_wire = r.wire_bytes_per_iter * r.p as f64 * r.steps as f64;
+        slot.add_wire_bytes(total_wire.max(0.0) as u64);
+        if let (Ok(mut hub), Ok(mut latest)) = (self.hub.lock(), self.latest.lock()) {
+            *latest = Some(hub.tick());
+        }
+    }
+}
+
+/// Fixed worker-thread pool draining one shared job queue.
+struct WorkerPool {
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    fn spawn(workers: usize, telemetry: Arc<PoolTelemetry>) -> std::io::Result<WorkerPool> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = Arc::clone(&rx);
+            let tel = Arc::clone(&telemetry);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("wagma-serve-worker-{w}"))
+                    .spawn(move || loop {
+                        // Hold the lock only across the dequeue; compute
+                        // runs unlocked so workers shard the grid.
+                        let job = {
+                            let guard = match rx.lock() {
+                                Ok(g) => g,
+                                Err(p) => p.into_inner(),
+                            };
+                            guard.recv()
+                        };
+                        let Ok(job) = job else {
+                            return; // queue closed: daemon shutting down
+                        };
+                        let result = simulate(&job.cfg);
+                        tel.record_cell(w, &result);
+                        // A dead reply channel just means the client hung
+                        // up mid-sweep; the cell still entered telemetry.
+                        let _ = job.reply.send(JobDone { hash: job.hash, cfg: job.cfg, result });
+                    })?,
+            );
+        }
+        Ok(WorkerPool { tx: Mutex::new(Some(tx)), handles: Mutex::new(handles) })
+    }
+
+    fn submit(&self, job: Job) -> Result<(), String> {
+        let guard = match self.tx.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        guard
+            .as_ref()
+            .ok_or("worker pool is shut down")?
+            .send(job)
+            .map_err(|_| "worker pool is shut down".to_string())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Ok(mut guard) = self.tx.lock() {
+            guard.take(); // close the queue; workers drain and exit
+        }
+        if let Ok(mut handles) = self.handles.lock() {
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Shared daemon state behind the route closures. (Worker threads each
+/// hold their own `Arc<PoolTelemetry>`; the state only carries what the
+/// routes read.)
+pub struct DaemonState {
+    cache: CellCache,
+    pool: WorkerPool,
+    workers: usize,
+    cells_computed: AtomicU64,
+    sweeps: AtomicU64,
+}
+
+impl DaemonState {
+    pub fn cells_computed(&self) -> u64 {
+        self.cells_computed.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.cache.hits()
+    }
+
+    pub fn cache_misses(&self) -> u64 {
+        self.cache.misses()
+    }
+}
+
+/// The long-running serve daemon (HTTP listener + worker pool + cache).
+pub struct Daemon {
+    server: Server,
+    state: Arc<DaemonState>,
+}
+
+impl Daemon {
+    /// Bind `addr` (port 0 picks an ephemeral port) with a fixed pool
+    /// of `workers` simulator threads and an LRU of `cache_cap` cells.
+    pub fn start(addr: &str, workers: usize, cache_cap: usize) -> std::io::Result<Daemon> {
+        let workers = workers.max(1);
+        let latest = shared_snapshot();
+        let telemetry = Arc::new(PoolTelemetry::new(workers, Arc::clone(&latest)));
+        let pool = WorkerPool::spawn(workers, telemetry)?;
+        let state = Arc::new(DaemonState {
+            cache: CellCache::new(cache_cap),
+            pool,
+            workers,
+            cells_computed: AtomicU64::new(0),
+            sweeps: AtomicU64::new(0),
+        });
+        let router = Arc::new(build_router(Arc::clone(&state), latest));
+        let server = Server::serve(addr, "wagma-serve", router)?;
+        Ok(Daemon { server, state })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.server.local_addr()
+    }
+
+    pub fn requests_served(&self) -> u64 {
+        self.server.requests_served()
+    }
+
+    pub fn state(&self) -> &Arc<DaemonState> {
+        &self.state
+    }
+
+    /// Every route the daemon's router serves (the lint sweep walks
+    /// this list so no route can dodge the exposition checks).
+    pub fn served_routes(&self) -> Vec<(&'static str, &'static str)> {
+        self.server.router().served_routes()
+    }
+
+    /// The router itself, for socketless [`Router::dispatch`] tests.
+    pub fn router(&self) -> &Arc<Router> {
+        self.server.router()
+    }
+}
+
+/// Mount `/metrics` and `/snapshot.json` over a latest-snapshot slot —
+/// the exact exposition routes the training-run listener serves,
+/// shared here so `wagma top --addr` works against either endpoint.
+pub fn add_metrics_routes(router: Router, latest: SharedSnapshot) -> Router {
+    let latest_m = Arc::clone(&latest);
+    router
+        .get("/metrics", move |_req, resp| {
+            match latest_m.lock().ok().and_then(|g| g.clone()) {
+                Some(snap) => resp.full(
+                    "200 OK",
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    &crate::telemetry::render(&snap),
+                ),
+                None => resp.full("503 Service Unavailable", "text/plain", "no snapshot yet\n"),
+            }
+        })
+        .get("/snapshot.json", move |_req, resp| {
+            match latest.lock().ok().and_then(|g| g.clone()) {
+                Some(snap) => {
+                    resp.full("200 OK", "application/json", &snapshot_json(&snap).to_string())
+                }
+                None => resp.full("503 Service Unavailable", "application/json", "null"),
+            }
+        })
+}
+
+fn build_router(state: Arc<DaemonState>, latest: SharedSnapshot) -> Router {
+    let router = Router::new().get("/", |_req, resp| {
+        resp.full(
+            "200 OK",
+            "text/plain",
+            "wagma serve: POST /v1/simulate  POST /v1/sweep  GET /v1/cells/<hash>  \
+             GET /v1/presets  /metrics  /snapshot.json  /healthz\n",
+        )
+    });
+    let router = add_metrics_routes(router, latest);
+    let st = Arc::clone(&state);
+    let router = router.get("/healthz", move |_req, resp| {
+        resp.full(
+            "200 OK",
+            "text/plain",
+            &format!(
+                "ok workers={} cells_computed={} cache_hits={} cache_misses={} cache_entries={} sweeps={}\n",
+                st.workers,
+                st.cells_computed(),
+                st.cache_hits(),
+                st.cache_misses(),
+                st.cache.len(),
+                st.sweeps.load(Ordering::Relaxed),
+            ),
+        )
+    });
+    let router = router.get("/v1/presets", move |_req, resp| {
+        let list: Vec<Json> = preset_names()
+            .iter()
+            .filter_map(|name| preset(name))
+            .map(|p| {
+                obj(vec![
+                    ("name", s(p.name)),
+                    ("description", s(p.description)),
+                    ("node_counts", arr(p.node_counts.iter().map(|&n| num(n as f64)))),
+                    ("batch", num(p.batch as f64)),
+                    ("model_params", num(p.model_params as f64)),
+                    ("tau", num(p.tau as f64)),
+                    ("steps", num(p.steps as f64)),
+                    ("algos", arr(p.algos.iter().map(|a| s(a.name())))),
+                ])
+            })
+            .collect();
+        resp.full("200 OK", "application/json", &Json::Arr(list).to_string())
+    });
+    let st = Arc::clone(&state);
+    let router = router.post("/v1/simulate", move |req, resp| {
+        let cfg = match parse_simulate_body(req) {
+            Ok(cfg) => cfg,
+            Err(e) => return bad_request(resp, &e),
+        };
+        match compute_or_replay(&st, cfg) {
+            Ok((cell, hit)) => resp.full(
+                "200 OK",
+                "application/json",
+                &obj(vec![
+                    ("cache", s(if hit { "hit" } else { "miss" })),
+                    ("cell", cell_json(&cell)),
+                ])
+                .to_string(),
+            ),
+            Err(e) => resp.full(
+                "500 Internal Server Error",
+                "application/json",
+                &obj(vec![("error", s(&e))]).to_string(),
+            ),
+        }
+    });
+    let st = Arc::clone(&state);
+    let router = router.get("/v1/cells/*", move |req, resp| {
+        let Some(hex) = req.wildcard("/v1/cells/*") else {
+            return bad_request(resp, "missing cell hash");
+        };
+        let hash = match parse_hash_hex(hex) {
+            Ok(h) => h,
+            Err(e) => return bad_request(resp, &e),
+        };
+        match st.cache.get(hash) {
+            Some(cell) => resp.full("200 OK", "application/json", &cell_json(&cell).to_string()),
+            None => resp.full(
+                "404 Not Found",
+                "application/json",
+                &obj(vec![("error", s("unknown cell (expired from the LRU or never computed)"))])
+                    .to_string(),
+            ),
+        }
+    });
+    let st = Arc::clone(&state);
+    router.post("/v1/sweep", move |req, resp| handle_sweep(&st, req, resp))
+}
+
+fn bad_request(resp: &mut ResponseWriter, msg: &str) -> std::io::Result<()> {
+    resp.full("400 Bad Request", "application/json", &obj(vec![("error", s(msg))]).to_string())
+}
+
+fn parse_simulate_body(req: &Request) -> Result<SimConfig, String> {
+    let j = Json::parse(&req.body_str()).map_err(|e| format!("body: {e}"))?;
+    let cfg = decode_config(&j)?;
+    validate_config(&cfg)?;
+    Ok(cfg)
+}
+
+/// The daemon's admission checks mirror the simulator's own asserts so
+/// a bad request is a 400, not a worker panic.
+fn validate_config(cfg: &SimConfig) -> Result<(), String> {
+    if cfg.p == 0 || !cfg.p.is_power_of_two() {
+        return Err(format!("p must be a power of two, got {}", cfg.p));
+    }
+    if cfg.steps == 0 {
+        return Err("steps must be > 0".into());
+    }
+    if cfg.trace {
+        return Err("trace: true is not served (cells are priced timings, not timelines); \
+                    run `wagma simulate --trace` inline instead"
+            .into());
+    }
+    Ok(())
+}
+
+/// The canonical cell body — identical bytes whether the cell was just
+/// computed, served from `/v1/simulate`, streamed by `/v1/sweep`, or
+/// replayed from `/v1/cells/<hash>`.
+fn cell_json(cell: &CachedCell) -> Json {
+    obj(vec![
+        ("config", cell.config_json.clone()),
+        ("hash", s(&hash_hex(cell.hash))),
+        ("result", cell.result_json.clone()),
+    ])
+}
+
+fn compute_or_replay(state: &DaemonState, cfg: SimConfig) -> Result<(Arc<CachedCell>, bool), String> {
+    let hash = config_hash(&cfg);
+    if let Some(cell) = state.cache.get(hash) {
+        return Ok((cell, true));
+    }
+    let (tx, rx) = mpsc::channel();
+    state.pool.submit(Job { hash, cfg, reply: tx })?;
+    let done = rx
+        .recv_timeout(CELL_TIMEOUT)
+        .map_err(|_| "cell computation timed out or the pool died".to_string())?;
+    Ok((finish_cell(state, done), false))
+}
+
+fn finish_cell(state: &DaemonState, done: JobDone) -> Arc<CachedCell> {
+    state.cells_computed.fetch_add(1, Ordering::Relaxed);
+    state.cache.insert(CachedCell {
+        hash: done.hash,
+        config_json: encode_config(&done.cfg),
+        result_json: encode_result(&done.result),
+    })
+}
+
+/// One axis of the sweep grid: either values from the request or a
+/// default derived from the preset/base config.
+fn axis_strings(j: &Json, key: &str) -> Result<Option<Vec<String>>, String> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let items = v.as_arr().ok_or_else(|| format!("{key}: expected an array"))?;
+            items
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .or_else(|| x.as_f64().map(|n| format!("{n}")))
+                        .ok_or_else(|| format!("{key}: entries must be strings or numbers"))
+                })
+                .collect::<Result<Vec<String>, String>>()
+                .map(Some)
+        }
+    }
+}
+
+fn axis_numbers(j: &Json, key: &str) -> Result<Option<Vec<u64>>, String> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let items = v.as_arr().ok_or_else(|| format!("{key}: expected an array"))?;
+            items
+                .iter()
+                .map(|x| {
+                    let n = x.as_f64().ok_or_else(|| format!("{key}: non-number entry"))?;
+                    if n < 0.0 || n.fract() != 0.0 {
+                        return Err(format!("{key}: {n} is not a non-negative integer"));
+                    }
+                    Ok(n as u64)
+                })
+                .collect::<Result<Vec<u64>, String>>()
+                .map(Some)
+        }
+    }
+}
+
+fn parse_compression_spec(spec: &str) -> Result<Compression, String> {
+    let (kind, ratio) = match spec.split_once(':') {
+        Some((k, r)) => {
+            let ratio: f64 =
+                r.parse().map_err(|_| format!("compression `{spec}`: bad ratio `{r}`"))?;
+            (k, Some(ratio))
+        }
+        None => (spec, None),
+    };
+    match kind {
+        "none" => Ok(Compression::None),
+        "q8" => Ok(Compression::QuantizeQ8),
+        "topk" => {
+            let ratio = ratio.unwrap_or(crate::compress::DEFAULT_TOPK_RATIO);
+            if !(ratio > 0.0 && ratio <= 1.0) {
+                return Err(format!("compression `{spec}`: ratio must be in (0, 1]"));
+            }
+            Ok(Compression::TopK { ratio })
+        }
+        other => Err(format!("compression `{spec}`: unknown kind `{other}` (none|topk|q8)")),
+    }
+}
+
+/// Expand one sweep request into deduped `SimConfig` cells.
+fn expand_sweep(j: &Json) -> Result<(Vec<(u64, SimConfig)>, usize), String> {
+    let preset_cfg = match j.get("preset").and_then(|v| v.as_str()) {
+        Some(name) => {
+            Some(preset(name).ok_or_else(|| format!("unknown preset `{name}` (fig4|fig7|fig10)"))?)
+        }
+        None => None,
+    };
+    let base = SimConfig::default();
+    let seed = j.get("seed").and_then(|v| v.as_f64()).map(|n| n as u64).unwrap_or(base.seed);
+
+    let algos: Vec<Algorithm> = match axis_strings(j, "algos")? {
+        Some(names) => names
+            .iter()
+            .map(|n| n.parse::<Algorithm>())
+            .collect::<Result<Vec<Algorithm>, String>>()?,
+        None => match preset_cfg {
+            Some(p) => p.algos.to_vec(),
+            None => vec![base.algo],
+        },
+    };
+    let ps: Vec<usize> = match axis_numbers(j, "p")? {
+        Some(v) => v.into_iter().map(|n| n as usize).collect(),
+        None => match preset_cfg {
+            Some(p) => p.node_counts.to_vec(),
+            None => vec![base.p],
+        },
+    };
+    let taus: Vec<u64> = match axis_numbers(j, "tau")? {
+        Some(v) => v,
+        None => vec![preset_cfg.map_or(base.tau, |p| p.tau)],
+    };
+    let groups: Vec<usize> = match axis_numbers(j, "group_size")? {
+        Some(v) => v.into_iter().map(|n| n as usize).collect(),
+        None => vec![0],
+    };
+    let compressions: Vec<(String, Compression)> = match axis_strings(j, "compression")? {
+        Some(specs) => specs
+            .iter()
+            .map(|sp| parse_compression_spec(sp).map(|c| (sp.clone(), c)))
+            .collect::<Result<Vec<(String, Compression)>, String>>()?,
+        None => vec![("none".to_string(), Compression::None)],
+    };
+    let fault_specs: Vec<String> =
+        axis_strings(j, "faults")?.unwrap_or_else(|| vec!["none".to_string()]);
+    let steps_override = j.get("steps").and_then(|v| v.as_usize());
+    let model_bytes_override = j.get("model_bytes").and_then(|v| v.as_usize());
+
+    let mut cells: Vec<(u64, SimConfig)> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    let mut duplicates = 0usize;
+    for &algo in &algos {
+        for &p in &ps {
+            let template = match preset_cfg {
+                Some(pre) => pre.sim_config(algo, p, seed),
+                None => SimConfig { algo, p, seed, ..SimConfig::default() },
+            };
+            for &tau in &taus {
+                for &group_size in &groups {
+                    for (_, compress) in &compressions {
+                        for fspec in &fault_specs {
+                            let mut cfg = template.clone();
+                            cfg.tau = tau;
+                            cfg.group_size = group_size;
+                            cfg.compress = *compress;
+                            if let Some(st) = steps_override {
+                                cfg.steps = st;
+                            }
+                            if let Some(mb) = model_bytes_override {
+                                cfg.model_bytes = mb;
+                            }
+                            cfg.faults =
+                                FaultPlan::parse(fspec, cfg.p, cfg.steps as u64, cfg.seed)?;
+                            cfg.trace = false;
+                            validate_config(&cfg)?;
+                            let hash = config_hash(&cfg);
+                            if seen.insert(hash) {
+                                cells.push((hash, cfg));
+                            } else {
+                                duplicates += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if cells.is_empty() {
+        return Err("sweep grid is empty".into());
+    }
+    if cells.len() > MAX_SWEEP_CELLS {
+        return Err(format!(
+            "sweep grid has {} cells; the per-request ceiling is {MAX_SWEEP_CELLS} — split the sweep \
+             (overlapping cells are cached, so split sweeps pay nothing twice)",
+            cells.len()
+        ));
+    }
+    Ok((cells, duplicates))
+}
+
+fn handle_sweep(state: &DaemonState, req: &Request, resp: &mut ResponseWriter) -> std::io::Result<()> {
+    let parsed = Json::parse(&req.body_str())
+        .map_err(|e| format!("body: {e}"))
+        .and_then(|j| expand_sweep(&j));
+    let (cells, duplicates) = match parsed {
+        Ok(x) => x,
+        Err(e) => return bad_request(resp, &e),
+    };
+    state.sweeps.fetch_add(1, Ordering::Relaxed);
+
+    resp.start_chunked("200 OK", "application/jsonl")?;
+    let total = cells.len();
+    let mut hits = 0usize;
+    let mut computed = 0usize;
+    let mut errors = 0usize;
+    let (tx, rx) = mpsc::channel();
+    let mut pending = 0usize;
+    // Cache hits stream immediately; misses go to the pool and stream
+    // in completion order — the client sees progress, not a barrier.
+    for (hash, cfg) in cells {
+        if let Some(cell) = state.cache.get(hash) {
+            hits += 1;
+            stream_cell(resp, &cell, "hit")?;
+        } else if state.pool.submit(Job { hash, cfg, reply: tx.clone() }).is_ok() {
+            pending += 1;
+        } else {
+            errors += 1;
+        }
+    }
+    drop(tx);
+    for _ in 0..pending {
+        match rx.recv_timeout(CELL_TIMEOUT) {
+            Ok(done) => {
+                let cell = finish_cell(state, done);
+                computed += 1;
+                stream_cell(resp, &cell, "miss")?;
+            }
+            Err(_) => {
+                errors += 1;
+                break;
+            }
+        }
+    }
+    let summary = obj(vec![(
+        "summary",
+        obj(vec![
+            ("cells", num(total as f64)),
+            ("cache_hits", num(hits as f64)),
+            ("computed", num(computed as f64)),
+            ("errors", num(errors as f64)),
+            ("duplicates_collapsed", num(duplicates as f64)),
+            ("daemon_cache_hits_total", num(state.cache_hits() as f64)),
+            ("daemon_cache_misses_total", num(state.cache_misses() as f64)),
+            ("daemon_cells_computed_total", num(state.cells_computed() as f64)),
+        ]),
+    )]);
+    resp.chunk(&format!("{}\n", summary.to_string()))?;
+    resp.finish()
+}
+
+fn stream_cell(resp: &mut ResponseWriter, cell: &CachedCell, cache: &str) -> std::io::Result<()> {
+    let record = obj(vec![("cache", s(cache)), ("cell", cell_json(cell))]);
+    resp.chunk(&format!("{}\n", record.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::canonical::canonical_string;
+    use crate::serve::http::parse_response;
+
+    fn small_cfg() -> SimConfig {
+        SimConfig { p: 4, steps: 12, model_bytes: 1 << 16, ..SimConfig::default() }
+    }
+
+    fn daemon() -> Daemon {
+        Daemon::start("127.0.0.1:0", 2, 64).expect("start daemon")
+    }
+
+    fn post(d: &Daemon, path: &str, body: &str) -> (String, String) {
+        let raw = http_roundtrip(d, "POST", path, body);
+        let (status, _, body) = parse_response(&raw).expect("parse");
+        (status, String::from_utf8_lossy(&body).to_string())
+    }
+
+    fn get(d: &Daemon, path: &str) -> (String, String) {
+        let raw = http_roundtrip(d, "GET", path, "");
+        let (status, _, body) = parse_response(&raw).expect("parse");
+        (status, String::from_utf8_lossy(&body).to_string())
+    }
+
+    fn http_roundtrip(d: &Daemon, method: &str, path: &str, body: &str) -> Vec<u8> {
+        use std::io::{Read, Write};
+        let mut stream = std::net::TcpStream::connect(d.local_addr()).expect("connect");
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(60)))
+            .expect("timeout");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        stream.write_all(head.as_bytes()).expect("write");
+        stream.write_all(body.as_bytes()).expect("write body");
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).expect("read");
+        raw
+    }
+
+    #[test]
+    fn simulate_twice_hits_cache_with_identical_cell_bytes() {
+        let d = daemon();
+        let body = canonical_string(&small_cfg());
+        let (s1, b1) = post(&d, "/v1/simulate", &body);
+        let (s2, b2) = post(&d, "/v1/simulate", &body);
+        assert!(s1.contains("200"), "{s1}: {b1}");
+        assert!(s2.contains("200"), "{s2}: {b2}");
+        let j1 = Json::parse(&b1).expect("json1");
+        let j2 = Json::parse(&b2).expect("json2");
+        assert_eq!(j1.get("cache").and_then(|v| v.as_str()), Some("miss"));
+        assert_eq!(j2.get("cache").and_then(|v| v.as_str()), Some("hit"));
+        // The cell body is bit-identical across compute and replay.
+        assert_eq!(
+            j1.get("cell").expect("cell").to_string(),
+            j2.get("cell").expect("cell").to_string()
+        );
+        assert_eq!(d.state().cells_computed(), 1);
+        // ...and /v1/cells/<hash> replays the very same bytes.
+        let hash = j1.get("cell").and_then(|c| c.get("hash")).and_then(|v| v.as_str()).expect("hash");
+        let (s3, b3) = get(&d, &format!("/v1/cells/{hash}"));
+        assert!(s3.contains("200"), "{s3}");
+        assert_eq!(b3, j1.get("cell").expect("cell").to_string());
+    }
+
+    #[test]
+    fn simulate_rejects_bad_configs() {
+        let d = daemon();
+        let mut cfg = small_cfg();
+        cfg.p = 3;
+        let (status, body) = post(&d, "/v1/simulate", &canonical_string(&cfg));
+        assert!(status.contains("400"), "{status}: {body}");
+        assert!(body.contains("power of two"), "{body}");
+        let mut cfg = small_cfg();
+        cfg.trace = true;
+        let (status, body) = post(&d, "/v1/simulate", &canonical_string(&cfg));
+        assert!(status.contains("400"), "{status}: {body}");
+        let (status, body) = post(&d, "/v1/simulate", "{not json");
+        assert!(status.contains("400"), "{status}: {body}");
+    }
+
+    #[test]
+    fn sweep_streams_cells_then_summary_and_second_pass_is_all_hits() {
+        let d = daemon();
+        let sweep = r#"{"preset":"fig4","algos":["wagma","allreduce"],"p":[4],"tau":[10],"steps":10,"model_bytes":65536,"compression":["none","topk:0.5"]}"#;
+        let (status, body) = post(&d, "/v1/sweep", sweep);
+        assert!(status.contains("200"), "{status}: {body}");
+        let lines: Vec<&str> = body.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(lines.len(), 5, "4 cells + summary: {body}");
+        let summary = Json::parse(lines[4]).expect("summary json");
+        let sget = |k: &str| {
+            summary
+                .get("summary")
+                .and_then(|x| x.get(k))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(-1.0)
+        };
+        assert_eq!(sget("cells"), 4.0);
+        assert_eq!(sget("computed"), 4.0);
+        assert_eq!(sget("cache_hits"), 0.0);
+        // Same sweep again: nothing computed, every cell a cache hit.
+        let (_, body2) = post(&d, "/v1/sweep", sweep);
+        let lines2: Vec<&str> = body2.lines().filter(|l| !l.trim().is_empty()).collect();
+        let summary2 = Json::parse(lines2[4]).expect("summary json");
+        let sget2 = |k: &str| {
+            summary2
+                .get("summary")
+                .and_then(|x| x.get(k))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(-1.0)
+        };
+        assert_eq!(sget2("computed"), 0.0, "{body2}");
+        assert_eq!(sget2("cache_hits"), 4.0, "{body2}");
+        assert_eq!(d.state().cells_computed(), 4);
+        // Cell records are bit-identical across the two passes (stream
+        // order may differ: hits stream immediately, misses in
+        // completion order — compare as sorted sets).
+        let mut cells1: Vec<String> = lines[..4]
+            .iter()
+            .map(|l| Json::parse(l).expect("cell").get("cell").expect("cell").to_string())
+            .collect();
+        let mut cells2: Vec<String> = lines2[..4]
+            .iter()
+            .map(|l| Json::parse(l).expect("cell").get("cell").expect("cell").to_string())
+            .collect();
+        cells1.sort();
+        cells2.sort();
+        assert_eq!(cells1, cells2);
+    }
+
+    #[test]
+    fn presets_and_healthz_routes_answer() {
+        let d = daemon();
+        let (status, body) = get(&d, "/v1/presets");
+        assert!(status.contains("200"), "{status}");
+        for name in preset_names() {
+            assert!(body.contains(name), "{body}");
+        }
+        let (status, body) = get(&d, "/healthz");
+        assert!(status.contains("200"), "{status}");
+        assert!(body.starts_with("ok workers=2 "), "{body}");
+        let (status, _) = get(&d, "/v1/cells/deadbeefdeadbeef");
+        assert!(status.contains("404"), "{status}");
+    }
+
+    #[test]
+    fn sweep_grid_respects_faults_axis_and_rejects_unknowns() {
+        let d = daemon();
+        let sweep = r#"{"p":[4],"steps":8,"model_bytes":65536,"faults":["none","crash@mid"]}"#;
+        let (status, body) = post(&d, "/v1/sweep", sweep);
+        assert!(status.contains("200"), "{status}: {body}");
+        let lines: Vec<&str> = body.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(lines.len(), 3, "2 cells + summary: {body}");
+        let (status, body) = post(&d, "/v1/sweep", r#"{"preset":"fig99"}"#);
+        assert!(status.contains("400"), "{status}: {body}");
+        let (status, body) = post(&d, "/v1/sweep", r#"{"p":[4],"compression":["zip"]}"#);
+        assert!(status.contains("400"), "{status}: {body}");
+    }
+}

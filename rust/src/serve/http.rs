@@ -1,0 +1,483 @@
+//! Shared hand-rolled HTTP mini-router (offline environment: no HTTP
+//! crate), factored out of the `--metrics-addr` listener that seeded it
+//! (`telemetry::prometheus::MetricsServer`).
+//!
+//! One [`Router`] maps `(method, path)` pairs to handlers; one
+//! [`Server`] runs the nonblocking accept loop (20 ms stop-flag poll,
+//! request counter, joined on drop) that the seed used. On top of the
+//! seed the router adds what the serve daemon needs: `POST` with
+//! `Content-Length` body reading, a trailing-wildcard path segment
+//! (`/v1/cells/*`), and `Transfer-Encoding: chunked` streaming so the
+//! sweep endpoint can push JSON-lines records as worker threads finish
+//! cells. Handlers write through a [`ResponseWriter`] over any
+//! `io::Write`, so tests can dispatch a request into a byte buffer
+//! without a socket ([`Router::dispatch`]).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Request head cap (the seed's 8 KiB) and body cap (1 MiB — a sweep
+/// grid spec, not a bulk upload channel).
+const MAX_HEAD: usize = 8192;
+const MAX_BODY: usize = 1 << 20;
+
+/// One parsed HTTP request: method, path (query string stripped), body.
+#[derive(Debug, Clone, Default)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+
+    /// The path segment matched by a trailing `/*` wildcard, if any.
+    /// `/v1/cells/abc` against pattern `/v1/cells/*` yields `"abc"`.
+    pub fn wildcard<'a>(&'a self, pattern: &str) -> Option<&'a str> {
+        let prefix = pattern.strip_suffix('*')?;
+        self.path.strip_prefix(prefix).filter(|rest| !rest.is_empty() && !rest.contains('/'))
+    }
+}
+
+/// Response sink handed to handlers. Exactly one of [`full`] or
+/// [`start_chunked`]+[`chunk`]...+[`finish`] per request.
+///
+/// [`full`]: ResponseWriter::full
+/// [`start_chunked`]: ResponseWriter::start_chunked
+/// [`chunk`]: ResponseWriter::chunk
+/// [`finish`]: ResponseWriter::finish
+pub struct ResponseWriter<'a> {
+    w: &'a mut dyn Write,
+    started: bool,
+    chunked: bool,
+}
+
+impl<'a> ResponseWriter<'a> {
+    pub fn new(w: &'a mut dyn Write) -> ResponseWriter<'a> {
+        ResponseWriter { w, started: false, chunked: false }
+    }
+
+    /// The seed's `write_response`: status + Content-Type +
+    /// Content-Length + `Connection: close`, then the whole body.
+    pub fn full(&mut self, status: &str, content_type: &str, body: &str) -> std::io::Result<()> {
+        debug_assert!(!self.started, "response already started");
+        self.started = true;
+        let head = format!(
+            "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        self.w.write_all(head.as_bytes())?;
+        self.w.write_all(body.as_bytes())
+    }
+
+    /// Begin a `Transfer-Encoding: chunked` response (the JSONL stream).
+    pub fn start_chunked(&mut self, status: &str, content_type: &str) -> std::io::Result<()> {
+        debug_assert!(!self.started, "response already started");
+        self.started = true;
+        self.chunked = true;
+        let head = format!(
+            "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+        );
+        self.w.write_all(head.as_bytes())
+    }
+
+    /// One chunk, flushed immediately so clients see records as they
+    /// are produced, not when the sweep completes.
+    pub fn chunk(&mut self, data: &str) -> std::io::Result<()> {
+        debug_assert!(self.chunked, "chunk() outside a chunked response");
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data.as_bytes())?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminal zero-length chunk.
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        debug_assert!(self.chunked, "finish() outside a chunked response");
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+
+    fn responded(&self) -> bool {
+        self.started
+    }
+}
+
+type Handler = Box<dyn Fn(&Request, &mut ResponseWriter) -> std::io::Result<()> + Send + Sync>;
+
+struct Route {
+    method: &'static str,
+    pattern: &'static str,
+    handler: Handler,
+}
+
+fn pattern_matches(pattern: &str, path: &str) -> bool {
+    match pattern.strip_suffix('*') {
+        Some(prefix) => path
+            .strip_prefix(prefix)
+            .is_some_and(|rest| !rest.is_empty() && !rest.contains('/')),
+        None => pattern == path,
+    }
+}
+
+/// Method+path router. Unknown path → 404; known path, wrong method →
+/// 405 (the seed's behaviour for non-GET, now per-route).
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn get(
+        self,
+        pattern: &'static str,
+        f: impl Fn(&Request, &mut ResponseWriter) -> std::io::Result<()> + Send + Sync + 'static,
+    ) -> Router {
+        self.route("GET", pattern, f)
+    }
+
+    pub fn post(
+        self,
+        pattern: &'static str,
+        f: impl Fn(&Request, &mut ResponseWriter) -> std::io::Result<()> + Send + Sync + 'static,
+    ) -> Router {
+        self.route("POST", pattern, f)
+    }
+
+    pub fn route(
+        mut self,
+        method: &'static str,
+        pattern: &'static str,
+        f: impl Fn(&Request, &mut ResponseWriter) -> std::io::Result<()> + Send + Sync + 'static,
+    ) -> Router {
+        self.routes.push(Route { method, pattern, handler: Box::new(f) });
+        self
+    }
+
+    /// Every `(method, pattern)` pair this router serves — the surface
+    /// the exposition-lint sweep walks so a new route cannot dodge it.
+    pub fn served_routes(&self) -> Vec<(&'static str, &'static str)> {
+        self.routes.iter().map(|r| (r.method, r.pattern)).collect()
+    }
+
+    /// Route one request into `resp`.
+    pub fn handle(&self, req: &Request, resp: &mut ResponseWriter) -> std::io::Result<()> {
+        let mut path_known = false;
+        for r in &self.routes {
+            if pattern_matches(r.pattern, &req.path) {
+                path_known = true;
+                if r.method == req.method {
+                    (r.handler)(req, resp)?;
+                    if !resp.responded() {
+                        return resp.full(
+                            "500 Internal Server Error",
+                            "text/plain",
+                            "handler wrote no response\n",
+                        );
+                    }
+                    return Ok(());
+                }
+            }
+        }
+        if path_known {
+            resp.full("405 Method Not Allowed", "text/plain", "method not allowed\n")
+        } else {
+            resp.full("404 Not Found", "text/plain", "not found\n")
+        }
+    }
+
+    /// In-process dispatch for tests and the exposition-lint sweep: run
+    /// a request through the router into a buffer and return the raw
+    /// HTTP response bytes.
+    pub fn dispatch(&self, method: &str, path: &str, body: &[u8]) -> std::io::Result<Vec<u8>> {
+        let req = Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            body: body.to_vec(),
+        };
+        let mut buf = Vec::new();
+        {
+            let mut resp = ResponseWriter::new(&mut buf);
+            self.handle(&req, &mut resp)?;
+        }
+        Ok(buf)
+    }
+}
+
+/// Split a raw HTTP response into `(status_line, content_type, body)`,
+/// decoding chunked transfer encoding. Shared by the serve client and
+/// the tests.
+pub fn parse_response(raw: &[u8]) -> Result<(String, String, Vec<u8>), String> {
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or("malformed HTTP response (no header terminator)")?;
+    let head = String::from_utf8_lossy(&raw[..split]).to_string();
+    let payload = &raw[split + 4..];
+    let status = head.lines().next().unwrap_or("").to_string();
+    let header = |name: &str| -> Option<String> {
+        head.lines().skip(1).find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.trim().eq_ignore_ascii_case(name).then(|| v.trim().to_string())
+        })
+    };
+    let content_type = header("Content-Type").unwrap_or_default();
+    let chunked = header("Transfer-Encoding").is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+    let body = if chunked { decode_chunked(payload)? } else { payload.to_vec() };
+    Ok((status, content_type, body))
+}
+
+pub fn decode_chunked(mut rest: &[u8]) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    loop {
+        let line_end = rest
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .ok_or("chunked body: missing size line")?;
+        let size_line = std::str::from_utf8(&rest[..line_end])
+            .map_err(|_| "chunked body: non-utf8 size line".to_string())?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| format!("chunked body: bad chunk size `{size_line}`"))?;
+        rest = &rest[line_end + 2..];
+        if size == 0 {
+            return Ok(out);
+        }
+        if rest.len() < size + 2 {
+            return Err("chunked body: truncated chunk".into());
+        }
+        out.extend_from_slice(&rest[..size]);
+        rest = &rest[size + 2..];
+    }
+}
+
+/// The accept loop from the seed: nonblocking listener polled every
+/// 20 ms against a stop flag, one counted request per connection,
+/// thread joined on drop.
+pub struct Server {
+    addr: SocketAddr,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    requests: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (port 0 picks an ephemeral port) and serve `router`
+    /// from a named thread until dropped.
+    pub fn serve(addr: &str, thread_name: &str, router: Arc<Router>) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(AtomicU64::new(0));
+        let (stop_t, req_t, router_t) = (Arc::clone(&stop), Arc::clone(&requests), Arc::clone(&router));
+        let handle = std::thread::Builder::new()
+            .name(thread_name.to_string())
+            .spawn(move || loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if handle_conn(stream, &router_t).is_ok() {
+                            req_t.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if stop_t.load(Ordering::Acquire) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => {
+                        if stop_t.load(Ordering::Acquire) {
+                            return;
+                        }
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, router, stop, requests, handle: Some(handle) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Successfully answered requests (any route).
+    pub fn requests_served(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, router: &Router) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    // Read the request head (and whatever body bytes rode along).
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i;
+        }
+        if buf.len() >= MAX_HEAD {
+            let mut resp = ResponseWriter::new(&mut stream);
+            return resp.full("431 Request Header Fields Too Large", "text/plain", "head too large\n");
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before request head",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let (method, raw_path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let path = raw_path.split('?').next().unwrap_or("");
+    let content_length = head
+        .lines()
+        .skip(1)
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.trim().eq_ignore_ascii_case("Content-Length").then(|| v.trim().parse::<usize>().ok())?
+        })
+        .unwrap_or(0);
+    if content_length > MAX_BODY {
+        let mut resp = ResponseWriter::new(&mut stream);
+        return resp.full("413 Payload Too Large", "text/plain", "body too large\n");
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let req = Request { method: method.to_string(), path: path.to_string(), body };
+    let mut resp = ResponseWriter::new(&mut stream);
+    router.handle(&req, &mut resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn text_router() -> Router {
+        Router::new()
+            .get("/hello", |_req, resp| resp.full("200 OK", "text/plain", "hi\n"))
+            .post("/echo", |req, resp| {
+                resp.full("200 OK", "text/plain", &req.body_str())
+            })
+            .get("/v1/cells/*", |req, resp| {
+                let id = req.wildcard("/v1/cells/*").unwrap_or("?");
+                resp.full("200 OK", "text/plain", &format!("cell {id}\n"))
+            })
+            .get("/stream", |_req, resp| {
+                resp.start_chunked("200 OK", "application/jsonl")?;
+                resp.chunk("{\"a\":1}\n")?;
+                resp.chunk("{\"a\":2}\n")?;
+                resp.finish()
+            })
+    }
+
+    fn status_of(raw: &[u8]) -> String {
+        parse_response(raw).expect("parse").0
+    }
+
+    #[test]
+    fn routes_match_method_and_path() {
+        let r = text_router();
+        assert!(status_of(&r.dispatch("GET", "/hello", b"").unwrap()).contains("200"));
+        assert!(status_of(&r.dispatch("POST", "/hello", b"").unwrap()).contains("405"));
+        assert!(status_of(&r.dispatch("GET", "/nope", b"").unwrap()).contains("404"));
+        let (_, _, body) = parse_response(&r.dispatch("POST", "/echo", b"payload").unwrap()).unwrap();
+        assert_eq!(body, b"payload");
+    }
+
+    #[test]
+    fn wildcard_matches_one_trailing_segment() {
+        let r = text_router();
+        let (_, _, body) = parse_response(&r.dispatch("GET", "/v1/cells/abc123", b"").unwrap()).unwrap();
+        assert_eq!(body, b"cell abc123\n");
+        // No segment or nested segments do not match.
+        assert!(status_of(&r.dispatch("GET", "/v1/cells/", b"").unwrap()).contains("404"));
+        assert!(status_of(&r.dispatch("GET", "/v1/cells/a/b", b"").unwrap()).contains("404"));
+    }
+
+    #[test]
+    fn chunked_stream_round_trips() {
+        let r = text_router();
+        let raw = r.dispatch("GET", "/stream", b"").unwrap();
+        let (status, ctype, body) = parse_response(&raw).expect("parse");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(ctype, "application/jsonl");
+        assert_eq!(body, b"{\"a\":1}\n{\"a\":2}\n");
+    }
+
+    #[test]
+    fn served_routes_lists_every_route() {
+        let r = text_router();
+        let routes = r.served_routes();
+        assert!(routes.contains(&("GET", "/hello")));
+        assert!(routes.contains(&("POST", "/echo")));
+        assert!(routes.contains(&("GET", "/v1/cells/*")));
+        assert_eq!(routes.len(), 4);
+    }
+
+    #[test]
+    fn server_serves_over_tcp_with_post_body() {
+        let server =
+            Server::serve("127.0.0.1:0", "wagma-http-test", Arc::new(text_router())).expect("bind");
+        let addr = server.local_addr().to_string();
+        let mut stream = TcpStream::connect(&addr).expect("connect");
+        let body = b"over the wire";
+        let req = format!(
+            "POST /echo HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        stream.write_all(req.as_bytes()).expect("write head");
+        stream.write_all(body).expect("write body");
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).expect("read");
+        let (status, _, got) = parse_response(&raw).expect("parse");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(got, body);
+        // The counter increments just after the connection closes; give
+        // the accept thread a moment rather than racing it.
+        for _ in 0..100 {
+            if server.requests_served() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(server.requests_served(), 1);
+    }
+}

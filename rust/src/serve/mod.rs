@@ -1,0 +1,36 @@
+//! `wagma serve` — the discrete-event simulator as a long-running,
+//! sharded, caching sweep service.
+//!
+//! Layers, bottom-up:
+//!
+//! * [`http`] — the hand-rolled `std::net` mini-router factored out of
+//!   the telemetry metrics listener: request parsing, method+path
+//!   routes with one trailing wildcard, full and chunked responses,
+//!   and a socketless [`http::Router::dispatch`] for tests.
+//! * [`canonical`] — the one canonical [`crate::simulator::SimConfig`]
+//!   encoding (sorted-key JSON, exact f64 text) shared by the cache
+//!   key, the API wire format, and replay comparison; plus the
+//!   splitmix64 [`canonical::config_hash`] over that encoding.
+//! * [`cache`] — the in-memory LRU of completed cells, storing the
+//!   canonical encodings so replays are bit-identical by construction.
+//! * [`daemon`] — `/v1/simulate`, `/v1/sweep` (worker-pool sharding +
+//!   incremental JSONL streaming), `/v1/cells/<hash>`, `/v1/presets`,
+//!   `/healthz`, and the re-exported `/metrics` + `/snapshot.json`
+//!   telemetry routes.
+//! * [`client`] — the figure harnesses' seam: local in-process
+//!   simulation by default, `--addr` routes through a daemon.
+
+pub mod cache;
+pub mod canonical;
+pub mod client;
+pub mod daemon;
+pub mod http;
+
+pub use cache::{CachedCell, CellCache};
+pub use canonical::{
+    canonical_string, config_hash, decode_config, decode_result, encode_config, encode_result,
+    hash_hex,
+};
+pub use client::{sweep_stream, Client};
+pub use daemon::{add_metrics_routes, Daemon};
+pub use http::{Request, ResponseWriter, Router, Server};

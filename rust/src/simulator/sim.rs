@@ -17,7 +17,7 @@ use crate::trace::{Lane, TraceEvent, TraceKind};
 use crate::util::stats::Summary;
 
 /// Simulation configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
     pub algo: Algorithm,
     pub p: usize,
@@ -270,8 +270,14 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
         let arrival: Vec<f64> = (0..p).map(|i| app[i] + compute[i]).collect();
         // Failure-detection penalty the *synchronous* baselines pay every
         // iteration once any rank is dead: without wait-avoidance the
-        // collective blocks a full deadline before re-forming.
-        let penalty = if any_dead { cfg.faults.deadline_s.max(0.0) } else { 0.0 };
+        // collective blocks on a detection deadline before re-forming.
+        // Priced per suspect rank — each dead peer is a separate timeout
+        // the membership protocol must confirm, so losing k ranks costs
+        // k deadlines per iteration, not one flat charge. The `any_dead`
+        // guard keeps empty fault plans bitwise neutral.
+        let dead_count = alive.iter().filter(|&&a| !a).count();
+        let penalty =
+            if any_dead { cfg.faults.deadline_s.max(0.0) * dead_count as f64 } else { 0.0 };
         if cfg.trace {
             for i in 0..p {
                 if cfg.faults.crash_iter(i) == Some(t as u64) {
@@ -1152,6 +1158,53 @@ mod tests {
         assert!(
             pa_loss < ar_loss,
             "pair averaging ({pa_loss}) should lose less than full-barrier allreduce ({ar_loss})"
+        );
+    }
+
+    /// Detection latency is priced per suspect rank: losing two ranks
+    /// costs the synchronous baselines two deadlines per iteration, not
+    /// the old flat one — each dead peer is a separate timeout the
+    /// membership protocol confirms (ROADMAP elastic follow-up).
+    #[test]
+    fn detection_deadline_is_charged_per_suspect_rank() {
+        use crate::fault::{Crash, FaultPlan};
+        let p = 16;
+        let steps = 60;
+        let crash_at = 30u64;
+        let deadline = 0.25;
+        let post_crash_iters = (steps as u64 - crash_at) as f64;
+        let run = |faults: FaultPlan| {
+            simulate(&SimConfig {
+                imbalance: ImbalanceModel::Balanced { base: 0.4, jitter: 0.0 },
+                steps,
+                faults,
+                ..base(Algorithm::AllreduceSgd, p)
+            })
+        };
+        let plain = run(FaultPlan::none());
+        let one = run(FaultPlan {
+            crashes: vec![Crash { rank: 5, at_iter: crash_at }],
+            deadline_s: deadline,
+            ..FaultPlan::none()
+        });
+        let two = run(FaultPlan {
+            crashes: vec![
+                Crash { rank: 5, at_iter: crash_at },
+                Crash { rank: 9, at_iter: crash_at },
+            ],
+            deadline_s: deadline,
+            ..FaultPlan::none()
+        });
+        let one_loss = one.makespan - plain.makespan;
+        let two_loss = two.makespan - plain.makespan;
+        assert!(
+            two_loss >= 2.0 * deadline * post_crash_iters - 1e-6,
+            "two suspects must price two deadlines per iter, lost only {two_loss}"
+        );
+        assert!(
+            two_loss >= one_loss + deadline * post_crash_iters - 1e-6,
+            "second suspect added only {} over the first's {one_loss}",
+            two_loss - one_loss
         );
     }
 

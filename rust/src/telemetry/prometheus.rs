@@ -8,19 +8,21 @@
 //! endpoint stays scrapeable by a real Prometheus), and
 //! [`MetricsServer`] serves `/metrics` (text exposition),
 //! `/snapshot.json` (the JSON-lines record, which `wagma top --addr`
-//! polls), and `/healthz` from the sampler's latest-snapshot slot. This
-//! listener is deliberately tiny: it is the seed of the `wagma serve`
-//! direction in the ROADMAP, not a general HTTP server.
+//! polls), and `/healthz` from the sampler's latest-snapshot slot. The
+//! listener itself now runs on the [`crate::serve::http`] mini-router
+//! (which was factored out of this file's original hand-rolled accept
+//! loop); the metrics routes are mounted through
+//! [`crate::serve::add_metrics_routes`], shared with the `wagma serve`
+//! daemon.
 
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::util::json::Json;
 
-use super::registry::{snapshot_from_json, snapshot_json, TelemetrySnapshot};
+use super::registry::{snapshot_from_json, TelemetrySnapshot};
 use super::sampler::SharedSnapshot;
 
 const NS_PER_SEC: f64 = 1e9;
@@ -372,154 +374,65 @@ pub fn lint_exposition(text: &str) -> Result<(), String> {
     Ok(())
 }
 
-/// Minimal blocking HTTP listener serving the latest snapshot.
+/// Minimal HTTP listener serving the latest snapshot, built on the
+/// shared [`crate::serve::http`] router (this listener was the seed
+/// that router was factored out of). `/metrics` + `/snapshot.json`
+/// come from [`crate::serve::add_metrics_routes`] — the same builder
+/// the `wagma serve` daemon mounts, so `wagma top --addr` and a
+/// Prometheus scraper work identically against either endpoint.
 pub struct MetricsServer {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    requests: Arc<AtomicU64>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    server: crate::serve::http::Server,
 }
 
 impl MetricsServer {
     /// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 picks an ephemeral
     /// port, see [`MetricsServer::local_addr`]) and serve until dropped.
     pub fn serve(addr: &str, latest: SharedSnapshot) -> std::io::Result<MetricsServer> {
-        let listener = TcpListener::bind(addr)?;
-        listener.set_nonblocking(true)?;
-        let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let requests = Arc::new(AtomicU64::new(0));
-        let (stop_t, req_t) = (Arc::clone(&stop), Arc::clone(&requests));
-        let handle = std::thread::Builder::new()
-            .name("wagma-metrics".into())
-            .spawn(move || loop {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        if handle_conn(stream, &latest).is_ok() {
-                            req_t.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        if stop_t.load(Ordering::Acquire) {
-                            return;
-                        }
-                        std::thread::sleep(Duration::from_millis(20));
-                    }
-                    Err(_) => {
-                        if stop_t.load(Ordering::Acquire) {
-                            return;
-                        }
-                    }
-                }
-            })?;
-        Ok(MetricsServer { addr: local, stop, requests, handle: Some(handle) })
-    }
-
-    pub fn local_addr(&self) -> SocketAddr {
-        self.addr
-    }
-
-    /// Successfully answered requests (any route).
-    pub fn requests_served(&self) -> u64 {
-        self.requests.load(Ordering::Relaxed)
-    }
-}
-
-impl Drop for MetricsServer {
-    fn drop(&mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn write_response(
-    stream: &mut TcpStream,
-    status: &str,
-    content_type: &str,
-    body: &str,
-) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
-    );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())
-}
-
-fn handle_conn(mut stream: TcpStream, latest: &SharedSnapshot) -> std::io::Result<()> {
-    stream.set_nonblocking(false)?;
-    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
-    // Read until the end of the request head (we ignore any body).
-    let mut buf = Vec::with_capacity(512);
-    let mut chunk = [0u8; 512];
-    while !buf.windows(4).any(|w| w == b"\r\n\r\n") && buf.len() < 8192 {
-        let n = stream.read(&mut chunk)?;
-        if n == 0 {
-            break;
-        }
-        buf.extend_from_slice(&chunk[..n]);
-    }
-    let head = String::from_utf8_lossy(&buf);
-    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
-    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
-    if method != "GET" {
-        return write_response(&mut stream, "405 Method Not Allowed", "text/plain", "GET only\n");
-    }
-    let snap = latest.lock().ok().and_then(|s| s.clone());
-    match path {
-        "/metrics" => match snap {
-            Some(s) => write_response(
-                &mut stream,
-                "200 OK",
-                "text/plain; version=0.0.4; charset=utf-8",
-                &render(&s),
-            ),
-            None => write_response(
-                &mut stream,
-                "503 Service Unavailable",
-                "text/plain",
-                "no snapshot yet\n",
-            ),
-        },
-        "/snapshot.json" => match snap {
-            Some(s) => write_response(
-                &mut stream,
-                "200 OK",
-                "application/json",
-                &snapshot_json(&s).to_string(),
-            ),
-            None => write_response(
-                &mut stream,
-                "503 Service Unavailable",
-                "application/json",
-                "null",
-            ),
-        },
-        "/healthz" => {
+        let hz = Arc::clone(&latest);
+        let router = crate::serve::add_metrics_routes(
+            crate::serve::http::Router::new().get("/", |_req, resp| {
+                resp.full(
+                    "200 OK",
+                    "text/plain",
+                    "wagma telemetry: /metrics /snapshot.json /healthz\n",
+                )
+            }),
+            latest,
+        )
+        .get("/healthz", move |_req, resp| {
             // Health body carries the observability-loss counters so a
             // probe can alert on silent data loss without parsing the
             // full exposition.
-            let (dropped, overruns) = snap
-                .as_ref()
+            let (dropped, overruns) = hz
+                .lock()
+                .ok()
+                .and_then(|s| s.clone())
                 .map(|s| (s.dropped_trace_events, s.sampler_overruns))
                 .unwrap_or((0, 0));
-            write_response(
-                &mut stream,
+            resp.full(
                 "200 OK",
                 "text/plain",
                 &format!("ok dropped_trace_events={dropped} sampler_overruns={overruns}\n"),
             )
-        }
-        "/" => write_response(
-            &mut stream,
-            "200 OK",
-            "text/plain",
-            "wagma telemetry: /metrics /snapshot.json /healthz\n",
-        ),
-        _ => write_response(&mut stream, "404 Not Found", "text/plain", "not found\n"),
+        });
+        let server =
+            crate::serve::http::Server::serve(addr, "wagma-metrics", Arc::new(router))?;
+        Ok(MetricsServer { server })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.server.local_addr()
+    }
+
+    /// Successfully answered requests (any route).
+    pub fn requests_served(&self) -> u64 {
+        self.server.requests_served()
+    }
+
+    /// The underlying router (the lint-every-served-route test sweeps
+    /// [`crate::serve::http::Router::served_routes`] through this).
+    pub fn router(&self) -> &Arc<crate::serve::http::Router> {
+        self.server.router()
     }
 }
 

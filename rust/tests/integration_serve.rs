@@ -1,0 +1,234 @@
+//! Integration tests for the `wagma serve` subsystem: canonical-hash
+//! stability as a property over hostile field orderings, cache-replay
+//! bit-identity against fresh inline compute (including fault-plan and
+//! compression configs), simulator re-entrancy under concurrent sweeps,
+//! the `wagma top --addr` snapshot path against a live daemon, and an
+//! exposition-lint sweep over every route the shared router serves —
+//! for both the daemon and the training-run metrics listener.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use wagma::compress::Compression;
+use wagma::fault::FaultPlan;
+use wagma::serve::http::parse_response;
+use wagma::serve::{
+    canonical_string, config_hash, decode_config, encode_result, hash_hex, sweep_stream, Client,
+    Daemon, Router,
+};
+use wagma::simulator::{simulate, SimConfig};
+use wagma::telemetry::{
+    fetch_snapshot, lint_exposition, render_top, shared_snapshot, MetricsServer, StragglerConfig,
+    TelemetryHub, TelemetryRegistry,
+};
+use wagma::util::json::Json;
+
+/// A cell small enough that a test grid finishes in well under a second.
+fn small_cfg(seed: u64) -> SimConfig {
+    SimConfig { p: 4, steps: 8, model_bytes: 65536, seed, ..SimConfig::default() }
+}
+
+/// Configs spanning the cache-identity surface: plain, quantized, and
+/// top-k compressed with a mid-run crash in the fault plan.
+fn identity_configs() -> Vec<SimConfig> {
+    let plain = small_cfg(11);
+    let mut quantized = small_cfg(12);
+    quantized.compress = Compression::QuantizeQ8;
+    let mut faulted = small_cfg(13);
+    faulted.compress = Compression::TopK { ratio: 0.25 };
+    faulted.faults = FaultPlan::parse("crash@mid", 4, 8, 13).expect("fault plan");
+    vec![plain, quantized, faulted]
+}
+
+/// Reverse the top-level key order of a canonical JSON object by hand —
+/// a hostile-but-valid spelling of the same config.
+fn scramble_keys(canonical: &str) -> String {
+    let Json::Obj(map) = Json::parse(canonical).expect("parse canonical") else {
+        panic!("canonical form is not an object")
+    };
+    let mut out = String::from("{");
+    for (i, (k, v)) in map.iter().rev().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{k}\":{}", v.to_string()));
+    }
+    out.push('}');
+    out
+}
+
+/// Property: the canonical hash is a function of the config, not of the
+/// field order a request happened to use — across compression kinds and
+/// a non-empty fault plan.
+#[test]
+fn canonical_hash_is_stable_across_field_orderings() {
+    for cfg in &identity_configs() {
+        let canonical = canonical_string(cfg);
+        let scrambled = scramble_keys(&canonical);
+        assert_ne!(scrambled, canonical, "scramble must actually reorder keys");
+        let decoded =
+            decode_config(&Json::parse(&scrambled).expect("parse scrambled")).expect("decode");
+        assert_eq!(&decoded, cfg);
+        assert_eq!(config_hash(&decoded), config_hash(cfg));
+        assert_eq!(canonical_string(&decoded), canonical);
+    }
+}
+
+/// Property: a cache-replayed cell is bit-identical to fresh compute —
+/// the POST miss, the POST hit, and the `GET /v1/cells/<hash>` replay
+/// all serve the same bytes, and the embedded result matches an inline
+/// `simulate` encoding exactly.
+#[test]
+fn cache_replay_is_bit_identical_to_fresh_compute() {
+    let daemon = Daemon::start("127.0.0.1:0", 2, 64).expect("daemon");
+    for cfg in &identity_configs() {
+        let body = canonical_string(cfg);
+        let miss = request(daemon.router(), "POST", "/v1/simulate", body.as_bytes());
+        assert_eq!(miss.get("cache").and_then(|v| v.as_str()), Some("miss"));
+        let cell = miss.get("cell").expect("cell").to_string();
+
+        let hit = request(daemon.router(), "POST", "/v1/simulate", body.as_bytes());
+        assert_eq!(hit.get("cache").and_then(|v| v.as_str()), Some("hit"));
+        assert_eq!(hit.get("cell").expect("cell").to_string(), cell);
+
+        let path = format!("/v1/cells/{}", hash_hex(config_hash(cfg)));
+        let raw = daemon.router().dispatch("GET", &path, b"").expect("dispatch");
+        let (status, _, replay) = parse_response(&raw).expect("parse response");
+        assert!(status.contains("200"), "GET {path}: {status}");
+        assert_eq!(std::str::from_utf8(&replay).expect("utf8"), cell);
+
+        let inline = encode_result(&simulate(cfg)).to_string();
+        let served = Json::parse(&cell).expect("parse cell");
+        assert_eq!(
+            served.get("result").expect("result").to_string(),
+            inline,
+            "daemon-computed result must be bit-identical to inline compute"
+        );
+    }
+}
+
+/// Dispatch a request expecting a 200 JSON response.
+fn request(router: &Arc<Router>, method: &str, path: &str, body: &[u8]) -> Json {
+    let raw = router.dispatch(method, path, body).expect("dispatch");
+    let (status, _, payload) = parse_response(&raw).expect("parse response");
+    assert!(status.contains("200"), "{method} {path}: {status}");
+    Json::parse(std::str::from_utf8(&payload).expect("utf8")).expect("parse json")
+}
+
+/// The simulator is re-entrant and `Send`: three clients sweeping the
+/// same grid concurrently all stream the same cell bytes, and a follow-up
+/// sweep is served entirely from the cache.
+#[test]
+fn concurrent_sweeps_stream_identical_cells_and_warm_the_cache() {
+    let daemon = Daemon::start("127.0.0.1:0", 2, 64).expect("daemon");
+    let addr = daemon.local_addr().to_string();
+    let body = r#"{"p":[4],"algos":["wagma","local"],"tau":[4,8],"steps":8,"model_bytes":65536}"#;
+
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut cells = BTreeSet::new();
+            sweep_stream(&addr, body, |rec| {
+                // Strip the hit/miss marker: which client computed a cell
+                // is racy, the cell bytes must not be.
+                cells.insert(rec.get("cell").expect("cell").to_string());
+            })
+            .expect("sweep");
+            cells
+        }));
+    }
+    let seen: Vec<BTreeSet<String>> =
+        handles.into_iter().map(|h| h.join().expect("join")).collect();
+    assert_eq!(seen[0].len(), 4, "2 algos x 2 taus = 4 cells");
+    assert!(
+        seen.windows(2).all(|w| w[0] == w[1]),
+        "concurrent sweeps must stream bit-identical cell sets"
+    );
+
+    // Everything is cached now: a fourth sweep computes nothing.
+    let record = sweep_stream(&addr, body, |_| {}).expect("sweep");
+    let summary = record.get("summary").expect("summary");
+    assert_eq!(summary.get("computed").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(summary.get("cache_hits").and_then(|v| v.as_usize()), Some(4));
+}
+
+/// `wagma top --addr` against the daemon: after one computed cell the
+/// worker slots publish a snapshot that `fetch_snapshot` parses and
+/// `render_top` can draw — the same path `cmd_top` polls.
+#[test]
+fn top_snapshot_parses_against_a_live_daemon() {
+    let daemon = Daemon::start("127.0.0.1:0", 2, 16).expect("daemon");
+    let addr = daemon.local_addr().to_string();
+    let result = Client::remote(&addr).simulate(&small_cfg(21)).expect("remote simulate");
+    assert_eq!(result.p, 4);
+
+    let snap = fetch_snapshot(&addr).expect("snapshot");
+    assert_eq!(snap.p, 2, "one telemetry slot per worker thread");
+    assert!(snap.total_steps() >= 1, "computed cell must appear as a step");
+    assert!(!render_top(&snap, 80).is_empty());
+}
+
+/// Walk every route a router serves, dispatch each GET, and lint any
+/// response that claims the Prometheus exposition content type. Returns
+/// how many routes were linted so callers can assert `/metrics` was hit.
+fn lint_served_routes(router: &Router, wildcard_fill: Option<&str>) -> usize {
+    let mut linted = 0;
+    for (method, pattern) in router.served_routes() {
+        if method != "GET" {
+            continue;
+        }
+        let path = if pattern.contains('*') {
+            match wildcard_fill {
+                Some(fill) => pattern.replace('*', fill),
+                None => continue,
+            }
+        } else {
+            pattern.to_string()
+        };
+        let raw = router.dispatch("GET", &path, b"").expect("dispatch");
+        let (status, content_type, body) = parse_response(&raw).expect("parse response");
+        assert!(status.contains("200"), "GET {path}: {status}");
+        if content_type.starts_with("text/plain; version=0.0.4") {
+            lint_exposition(std::str::from_utf8(&body).expect("utf8"))
+                .unwrap_or_else(|e| panic!("lint GET {path}: {e}"));
+            linted += 1;
+        }
+    }
+    linted
+}
+
+/// Every route the daemon serves answers 200 and the exposition route
+/// passes the lint — no route can dodge the checks by being new.
+#[test]
+fn exposition_lint_covers_every_daemon_route() {
+    let daemon = Daemon::start("127.0.0.1:0", 1, 16).expect("daemon");
+    let cfg = small_cfg(31);
+    // Compute one cell so /metrics has a snapshot and /v1/cells/<hash>
+    // has something to replay.
+    let body = canonical_string(&cfg);
+    let first = request(daemon.router(), "POST", "/v1/simulate", body.as_bytes());
+    assert_eq!(first.get("cache").and_then(|v| v.as_str()), Some("miss"));
+
+    let fill = hash_hex(config_hash(&cfg));
+    let linted = lint_served_routes(daemon.router(), Some(&fill));
+    assert_eq!(linted, 1, "exactly /metrics must carry the exposition content type");
+}
+
+/// The training-run metrics listener serves through the same shared
+/// router, so the identical sweep covers its routes too.
+#[test]
+fn exposition_lint_covers_every_metrics_listener_route() {
+    let latest = shared_snapshot();
+    let registry = Arc::new(TelemetryRegistry::new(2));
+    registry.rank(0).add_step();
+    let mut hub = TelemetryHub::new(
+        Arc::clone(&registry),
+        StragglerConfig { w: 1, ..StragglerConfig::default() },
+    );
+    *latest.lock().expect("lock") = Some(hub.tick());
+
+    let server = MetricsServer::serve("127.0.0.1:0", latest).expect("metrics server");
+    let linted = lint_served_routes(server.router(), None);
+    assert_eq!(linted, 1, "exactly /metrics must carry the exposition content type");
+}
